@@ -1,0 +1,111 @@
+//! Quickstart — the end-to-end driver proving all layers compose:
+//!
+//! 1. load the JAX-AOT HLO artifacts and execute them through PJRT (the
+//!    Layer-2/Layer-1 compile path feeding the Layer-3 runtime);
+//! 2. build the same 2fcNet training workload in the Rust IR, train it on
+//!    the synthetic digit corpus, and report accuracy;
+//! 3. run a short GEVO-ML search over the training graph and print the
+//!    runtime/error Pareto front;
+//! 4. cross-validate one Pareto survivor on real XLA via the IR→HLO
+//!    emitter.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gevo_ml::coordinator::{self, report, ExperimentConfig, WorkloadKind};
+use gevo_ml::data::digits;
+use gevo_ml::evo::search::SearchConfig;
+use gevo_ml::models::twofc;
+use gevo_ml::runtime::{artifact::ArtifactDir, PjrtRuntime};
+use gevo_ml::tensor::Tensor;
+use gevo_ml::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== GEVO-ML quickstart ==\n");
+
+    // ---- 1. AOT artifacts through PJRT --------------------------------------
+    let rt = PjrtRuntime::cpu()?;
+    println!("[1] PJRT platform: {}", rt.platform());
+    match ArtifactDir::load("artifacts") {
+        Ok(art) => {
+            let e = art.get("twofc_predict")?;
+            let exe = rt.compile_file(e.hlo_path.to_str().unwrap(), e.num_outputs)?;
+            let mut rng = Rng::new(1);
+            let inputs: Vec<Tensor> = e
+                .input_shapes
+                .iter()
+                .map(|s| Tensor::rand_uniform(s, 0.0, 1.0, &mut rng))
+                .collect();
+            let out = exe.run(&inputs)?;
+            println!(
+                "    twofc_predict artifact: executed, output {:?} (rows sum to {:.4})",
+                out[0].dims(),
+                (0..10).map(|c| out[0].at(&[0, c])).sum::<f32>()
+            );
+        }
+        Err(e) => println!("    (no artifacts: {e:#}; run `make artifacts` first)"),
+    }
+
+    // ---- 2. the training workload in the Rust IR ----------------------------
+    let spec = twofc::TwoFcSpec::default();
+    let step = twofc::train_step_graph(&spec);
+    let predict = twofc::predict_graph(&spec);
+    println!(
+        "\n[2] 2fcNet train-step graph: {} instructions, {:.2} MFLOP/step",
+        step.len(),
+        step.total_flops() as f64 / 1e6
+    );
+    let data = digits::generate(1024, spec.side(), 7);
+    let (train, test) = data.split(768);
+    let init = twofc::TwoFcWeights::init(&spec, 1);
+    let batches = train.batches(spec.batch);
+    let (w, loss) = twofc::run_training(&step, &init, &batches, 2).expect("training runs");
+    println!(
+        "    trained 2 epochs: loss {loss:.4}, train acc {:.4}, test acc {:.4}",
+        twofc::accuracy_on(&predict, &spec, &w, &train),
+        twofc::accuracy_on(&predict, &spec, &w, &test)
+    );
+
+    // ---- 3. a short GEVO-ML search -------------------------------------------
+    println!("\n[3] GEVO-ML search (small budget — see evolve_2fcnet for the real run)");
+    let cfg = ExperimentConfig {
+        kind: WorkloadKind::TwoFcTraining,
+        search: SearchConfig {
+            pop_size: 12,
+            generations: 4,
+            elites: 6,
+            seed: 42,
+            verbose: false,
+            ..Default::default()
+        },
+        fit_samples: 256,
+        test_samples: 96,
+        epochs: 1,
+        ..Default::default()
+    };
+    let r = coordinator::run_experiment(&cfg);
+    println!("{}", report::ascii_scatter(&r, 56, 12));
+    println!("{}", report::front_markdown(&r));
+
+    // ---- 4. cross-validate a survivor on real XLA ---------------------------
+    let base = twofc::train_step_graph(&spec);
+    if let Some((ind, obj)) = r.search.pareto.first() {
+        let g = ind.materialize(&base).expect("front survivor materializes");
+        let mut rng = Rng::new(5);
+        let inputs: Vec<Tensor> = g
+            .param_types()
+            .iter()
+            .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, &mut rng))
+            .collect();
+        let want = gevo_ml::interp::eval(&g, &inputs)?;
+        let got = rt.compile_graph(&g)?.run(&inputs)?;
+        let agree = want.iter().zip(got.iter()).all(|(a, b)| a.allclose(b, 1e-3));
+        println!(
+            "[4] Pareto survivor (runtime {:.4}, error {:.4}): XLA {} interpreter",
+            obj.0,
+            obj.1,
+            if agree { "==" } else { "!=" }
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""AOT pipeline: lower the Layer-2 JAX computations (which call the
+Layer-1 Pallas kernels) to HLO **text** artifacts that the Rust runtime
+loads via PJRT, plus the pretrained MobileNet-lite weights and a manifest.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos and NOT
+``.serialize()`` — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the
+published ``xla`` crate binds) rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import MOBILENET, TWOFC
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_twofc_predict():
+    s = TWOFC
+    specs = [
+        f32((s["batch"], s["input"])),
+        f32((s["input"], s["hidden"])),
+        f32((s["hidden"],)),
+        f32((s["hidden"], s["classes"])),
+        f32((s["classes"],)),
+    ]
+    lowered = jax.jit(model.twofc_predict).lower(*specs)
+    return to_hlo_text(lowered), [list(x.shape) for x in specs], 1
+
+
+def lower_twofc_train_step():
+    s = TWOFC
+    specs = [
+        f32((s["batch"], s["input"])),
+        f32((s["batch"], s["classes"])),
+        f32((s["input"], s["hidden"])),
+        f32((s["hidden"],)),
+        f32((s["hidden"], s["classes"])),
+        f32((s["classes"],)),
+        f32((1,)),  # lr
+    ]
+    lowered = jax.jit(model.twofc_train_step).lower(*specs)
+    return to_hlo_text(lowered), [list(x.shape) for x in specs], 5
+
+
+def lower_mobilenet_predict():
+    s = MOBILENET
+    params, _ = model.mobilenet_init(jax.random.PRNGKey(0), s)
+    names = model._param_names(s)
+    specs = [f32((s["batch"], s["side"], s["side"], 3))]
+    specs += [f32(params[n].shape) for n in names]
+    lowered = jax.jit(model.mobilenet_predict).lower(*specs)
+    return to_hlo_text(lowered), [list(x.shape) for x in specs], 1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--pretrain-steps", type=int, default=700)
+    ap.add_argument("--skip-pretrain", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    computations = []
+    for name, (hlo, shapes, nout), desc in [
+        ("twofc_predict", lower_twofc_predict(),
+         "2fcNet forward pass (Fig. 1 program; Pallas fused_dense)"),
+        ("twofc_train_step", lower_twofc_train_step(),
+         "2fcNet SGD step (Fig. 5 program; Pallas sgd_update)"),
+        ("mobilenet_predict", lower_mobilenet_predict(),
+         "MobileNet-lite forward pass (Pallas fused_dense head)"),
+    ]:
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(hlo)
+        computations.append(
+            {"name": name, "hlo": fname, "num_outputs": nout,
+             "input_shapes": shapes, "description": desc}
+        )
+        print(f"[aot] wrote {fname} ({len(hlo)} chars)")
+
+    meta = {"pretrain": None}
+    if not args.skip_pretrain:
+        from .pretrain import export_weights, pretrain
+
+        params, acc = pretrain(steps=args.pretrain_steps)
+        export_weights(params, os.path.join(args.out_dir, "mobilenet_weights.json"))
+        meta["pretrain"] = {"steps": args.pretrain_steps, "test_accuracy": acc}
+        print(f"[aot] wrote mobilenet_weights.json (acc {acc:.4f})")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"computations": computations, "meta": meta}, f, indent=2)
+    print(f"[aot] wrote manifest.json ({len(computations)} computations)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Synthetic pattern dataset for MobileNet-lite pretraining — the same
+texture-class family as the Rust generator (rust/src/data/patterns.rs):
+class = (orientation, spatial frequency, per-channel phase), samples add
+phase jitter, gain, and pixel noise. Distributions match in family (not
+bit-for-bit), which is what transfer of the pretrained weights needs."""
+
+import math
+
+import numpy as np
+
+TAU = 2.0 * math.pi
+
+
+def class_params(c: int):
+    angle = (c % 5) * math.pi / 5.0
+    freq = 1.5 if c < 5 else 3.0
+    phase = (c * 0.7, c * 1.3 + 1.0, c * 2.1 + 2.0)
+    return angle, freq, phase
+
+
+def generate(n: int, s: int, seed: int):
+    """Returns (images [n,s,s,3] float32 in [0,1], labels [n] int32)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    images = np.zeros((n, s, s, 3), np.float32)
+    ys, xs = np.meshgrid(np.arange(s), np.arange(s), indexing="ij")
+    for i in range(n):
+        angle, freq, phase = class_params(int(labels[i]))
+        # full random global phase: pixel-space class means are then
+        # uninformative, so classification requires oriented-edge (conv)
+        # features — the role CIFAR plays for MobileNet in the paper
+        angle = angle + rng.normal(0.0, 0.28)
+        jitter = rng.random() * TAU
+        gain = 0.5 + rng.random() * 0.5
+        u = (xs / s - 0.5) * math.cos(angle) + (ys / s - 0.5) * math.sin(angle)
+        for ch in range(3):
+            v = np.sin(u * freq * TAU + phase[ch] + jitter)
+            img = 0.5 + 0.5 * v * gain + rng.normal(0.0, 0.45, size=(s, s))
+            images[i, :, :, ch] = np.clip(img, 0.0, 1.0)
+    return images, labels

@@ -1,0 +1,113 @@
+"""Layer-1 Pallas kernel: fused dense layer  relu(x @ w + b)  (or linear).
+
+This is the compute hot-spot of both paper workloads (2fcNet's two dense
+layers; MobileNet-lite's classifier head). The kernel fuses matmul, bias
+add and activation into one pass so the intermediate (x@w) never round-
+trips through HBM.
+
+TPU mapping (DESIGN.md §6): the grid tiles M×N output blocks held in VMEM;
+the K reduction streams A- and B-tiles through VMEM with an f32 VMEM
+accumulator, targeting MXU-shaped (multiple-of-8 × 128-lane) tiles when
+the problem is large enough. On this image Pallas must run with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls), so
+correctness is validated against ``ref.py`` and performance is assessed
+structurally (VMEM footprint, §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, activation: str):
+    """One (m-block, n-block, k-step) grid cell."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-friendly f32 accumulate of one K-tile.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        out = acc_ref[...] + b_ref[...][None, :]
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``want`` (keeps the grid
+    exact without masking; fine for the model shapes we lower)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fused_dense_core(x, w, b, activation, bm, bn, bk):
+    """Forward through the Pallas kernel; differentiable via the explicit
+    VJP below (interpret-mode pallas_call has no JVP rule, and a custom
+    VJP is the production pattern anyway — backward reuses XLA matmuls)."""
+    return _fused_dense_fwd_only(x, w, b, activation, bm, bn, bk)
+
+
+def _fused_dense_fwd(x, w, b, activation, bm, bn, bk):
+    out = _fused_dense_fwd_only(x, w, b, activation, bm, bn, bk)
+    return out, (x, w, out)
+
+
+def _fused_dense_bwd(activation, bm, bn, bk, res, g):
+    x, w, out = res
+    dz = g * (out > 0.0) if activation == "relu" else g
+    dx = jnp.dot(dz, w.T)
+    dw = jnp.dot(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+_fused_dense_core.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+def fused_dense(x, w, b, *, activation: str = "relu", bm: int = 32, bn: int = 128, bk: int = 128):
+    """``relu(x @ w + b)`` (``activation='relu'``) or ``x @ w + b``
+    (``activation='none'``) for ``x:[M,K] w:[K,N] b:[N]`` in f32."""
+    return _fused_dense_core(x, w, b, activation, bm, bn, bk)
+
+
+def _fused_dense_fwd_only(x, w, b, activation, bm, bn, bk):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contract {k} vs {k2}"
+    assert b.shape == (n,)
+    bm_, bn_, bk_ = _block(m, bm), _block(n, bn), _block(k, bk)
+    n_k = k // bk_
+    grid = (m // bm_, n // bn_, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn_,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pl.MemorySpace.ANY((bm_, bn_), jnp.float32)],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(m: int, n: int, k: int, bm: int = 32, bn: int = 128, bk: int = 128) -> int:
+    """Estimated VMEM working set per grid cell (f32): x-tile + w-tile +
+    bias-tile + accumulator + out-tile. Used by the §Perf structural
+    analysis in DESIGN.md."""
+    bm_, bn_, bk_ = _block(m, bm), _block(n, bn), _block(k, bk)
+    return 4 * (bm_ * bk_ + bk_ * bn_ + bn_ + 2 * bm_ * bn_)

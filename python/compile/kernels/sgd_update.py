@@ -1,0 +1,47 @@
+"""Layer-1 Pallas kernel: fused SGD update  w_new = w - lr * g.
+
+The paper's Fig. 5 lines 15-18 (apply learning rate, update weights) as a
+single elementwise VPU stream: one read of w, one read of g, one write —
+no intermediate lr*g buffer in HBM. Flattened-1D blocking keeps the grid
+shape-agnostic. interpret=True for CPU PJRT (DESIGN.md §6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = w_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def _block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def sgd_update(w, g, lr, *, bs: int = 1024):
+    """``w - lr * g`` elementwise; ``lr`` is a shape-(1,) f32 array."""
+    assert w.shape == g.shape, f"{w.shape} vs {g.shape}"
+    flat_w = w.reshape(-1)
+    flat_g = g.reshape(-1)
+    n = flat_w.shape[0]
+    b = _block(n, bs)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), w.dtype),
+        interpret=True,
+    )(flat_w, flat_g, lr)
+    return out.reshape(w.shape)

@@ -1,0 +1,214 @@
+"""Layer-2 JAX models — the paper's two workloads, calling the Layer-1
+Pallas kernels, lowered once by aot.py and never run at serving time.
+
+Mirrors the Rust IR builders in ``rust/src/models/`` (same shapes, same
+layer plan) so JAX-side pretrained weights drop into the Rust graphs and
+the AOT HLO artifacts are baselines for the same computations.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_dense import fused_dense
+from .kernels.sgd_update import sgd_update
+
+# ---------------------------------------------------------------------------
+# 2fcNet (training workload; paper §5, Fig. 5)
+# ---------------------------------------------------------------------------
+
+TWOFC = dict(batch=32, input=196, hidden=32, classes=10, lr=0.01)
+
+
+def twofc_init(key, spec=None):
+    spec = spec or TWOFC
+    k1, k2 = jax.random.split(key)
+    glorot = jax.nn.initializers.glorot_uniform()
+    return {
+        "w1": glorot(k1, (spec["input"], spec["hidden"]), jnp.float32),
+        "b1": jnp.zeros((spec["hidden"],), jnp.float32),
+        "w2": glorot(k2, (spec["hidden"], spec["classes"]), jnp.float32),
+        "b2": jnp.zeros((spec["classes"],), jnp.float32),
+    }
+
+
+def twofc_predict(x, w1, b1, w2, b2):
+    """Forward pass (the Fig. 1 program): dense+relu → dense → softmax.
+    Dense layers run through the Pallas fused kernel."""
+    h = fused_dense(x, w1, b1, activation="relu")
+    logits = fused_dense(h, w2, b2, activation="none")
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=1, keepdims=True)
+
+
+def twofc_train_step(x, y, w1, b1, w2, b2, lr):
+    """One SGD step (the Fig. 5 program): forward, softmax-xent gradient
+    scaled by 1/batch, backprop, update via the Pallas sgd_update kernel.
+
+    Returns (new_w1, new_b1, new_w2, new_b2, mean_loss)."""
+    batch = x.shape[0]
+    # forward (keep intermediates for backprop)
+    z1 = jnp.dot(x, w1) + b1[None, :]
+    a1 = jnp.maximum(z1, 0.0)
+    z2 = jnp.dot(a1, w2) + b2[None, :]
+    zs = z2 - jnp.max(z2, axis=1, keepdims=True)
+    e = jnp.exp(zs)
+    p = e / jnp.sum(e, axis=1, keepdims=True)
+    loss = -jnp.sum(y * jnp.log(p)) / batch
+    # gradient (Fig. 5 lines 6-14)
+    d2 = (p - y) * (1.0 / batch)  # the 0.03125 of Fig. 5
+    dw2 = jnp.dot(a1.T, d2)
+    db2 = jnp.sum(d2, axis=0)
+    da1 = jnp.dot(d2, w2.T)
+    dz1 = da1 * (z1 > 0.0)
+    dw1 = jnp.dot(x.T, dz1)
+    db1 = jnp.sum(dz1, axis=0)
+    # update (Fig. 5 lines 15-18) through the Pallas kernel
+    return (
+        sgd_update(w1, dw1, lr),
+        sgd_update(b1, db1, lr),
+        sgd_update(w2, dw2, lr),
+        sgd_update(b2, db2, lr),
+        loss,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MobileNet-lite (prediction workload; paper §5, Table 1)
+# ---------------------------------------------------------------------------
+
+MOBILENET = dict(batch=8, side=16, classes=10, width=8, blocks=5)
+
+
+def mobilenet_plan(spec=None):
+    """(stride, out_channels) per separable block — must match
+    rust/src/models/mobilenet.rs::plan."""
+    spec = spec or MOBILENET
+    out = []
+    for i in range(spec["blocks"]):
+        stride = 2 if i % 2 == 0 else 1
+        # channels double on stride-2 blocks, constant on stride-1 blocks
+        # (shape-preserving, like real MobileNet's stride-1 blocks)
+        ch = spec["width"] << min(i // 2 + 1, 3)
+        out.append((stride, ch))
+    return out
+
+
+def mobilenet_init(key, spec=None):
+    """Random init for all weights + identity BN statistics. Keys match
+    the Rust weight names exactly."""
+    spec = spec or MOBILENET
+    glorot = jax.nn.initializers.glorot_uniform()
+    params = {}
+    bn_keys = []
+
+    def bn(name, c):
+        params[f"{name}_gamma"] = jnp.ones((c,), jnp.float32)
+        params[f"{name}_beta"] = jnp.zeros((c,), jnp.float32)
+        params[f"{name}_mean"] = jnp.zeros((c,), jnp.float32)
+        params[f"{name}_var"] = jnp.ones((c,), jnp.float32)
+        bn_keys.append(name)
+
+    keys = jax.random.split(key, 3 + 2 * spec["blocks"])
+    params["conv1_w"] = glorot(keys[0], (3, 3, 3, spec["width"]), jnp.float32)
+    bn("bn1", spec["width"])
+    cin = spec["width"]
+    for i, (_, cout) in enumerate(mobilenet_plan(spec)):
+        params[f"dw{i}_w"] = glorot(keys[1 + 2 * i], (3, 3, 1, cin), jnp.float32).reshape(3, 3, cin)
+        bn(f"bn_dw{i}", cin)
+        params[f"pw{i}_w"] = glorot(keys[2 + 2 * i], (1, 1, cin, cout), jnp.float32)
+        bn(f"bn_pw{i}", cout)
+        cin = cout
+    params["fc_w"] = glorot(keys[-1], (cin, spec["classes"]), jnp.float32)
+    params["fc_b"] = jnp.zeros((spec["classes"],), jnp.float32)
+    return params, bn_keys
+
+
+def _bn_apply(x, p, name, training: bool):
+    """Batch norm; in training mode returns batch statistics for the EMA."""
+    if training:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+    else:
+        mean, var = p[f"{name}_mean"], p[f"{name}_var"]
+    inv = p[f"{name}_gamma"] / jnp.sqrt(var + 1e-5)
+    out = (x - mean) * inv + p[f"{name}_beta"]
+    return (out, mean, var) if training else (out, None, None)
+
+
+def mobilenet_forward(params, x, spec=None, training: bool = False, skip=()):
+    """NHWC forward pass. Returns (probs, batch_stats dict when training).
+
+    ``skip`` lists separable-block indices to bypass entirely (identity).
+    Only shape-preserving (stride-1, cin==cout) blocks are skippable.
+    Pretraining samples random skips (stochastic depth), which gives the
+    network the layer-drop robustness the paper's over-provisioned
+    MobileNet has on CIFAR10 — the property GEVO-ML's Delete mutations
+    exploit in Fig. 4a (DESIGN.md §3)."""
+    spec = spec or MOBILENET
+    stats = {}
+
+    def bn(h, name):
+        out, m, v = _bn_apply(h, params, name, training)
+        if training:
+            stats[name] = (m, v)
+        return out
+
+    h = jax.lax.conv_general_dilated(
+        x, params["conv1_w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    h = jnp.maximum(bn(h, "bn1"), 0.0)
+    cin = spec["width"]
+    for i, (stride, cout) in enumerate(mobilenet_plan(spec)):
+        if i in skip:
+            assert stride == 1 and cin == cout, "only identity-shaped blocks are skippable"
+            continue
+        dw = params[f"dw{i}_w"].reshape(3, 3, 1, cin)
+        # depthwise: feature_group_count = cin, filter HWIO with I=1
+        h = jax.lax.conv_general_dilated(
+            h, dw, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=cin,
+        )
+        h = jnp.maximum(bn(h, f"bn_dw{i}"), 0.0)
+        h = jax.lax.conv_general_dilated(
+            h, params[f"pw{i}_w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = jnp.maximum(bn(h, f"bn_pw{i}"), 0.0)
+        cin = cout
+    pooled = jnp.mean(h, axis=(1, 2))
+    # classifier head through the Pallas fused-dense kernel
+    logits = fused_dense(pooled, params["fc_w"], params["fc_b"], activation="none")
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(z)
+    probs = e / jnp.sum(e, axis=1, keepdims=True)
+    return (probs, stats) if training else probs
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mobilenet_predict(x, *flat_params):
+    """jit/AOT entry point: positional params (lowering-friendly)."""
+    names = _param_names()
+    params = dict(zip(names, flat_params))
+    return mobilenet_forward(params, x, training=False)
+
+
+def _param_names(spec=None):
+    """Canonical parameter order for the AOT entry point."""
+    spec = spec or MOBILENET
+    names = ["conv1_w"]
+    for part in ("gamma", "beta", "mean", "var"):
+        names.append(f"bn1_{part}")
+    for i in range(spec["blocks"]):
+        names.append(f"dw{i}_w")
+        for part in ("gamma", "beta", "mean", "var"):
+            names.append(f"bn_dw{i}_{part}")
+        names.append(f"pw{i}_w")
+        for part in ("gamma", "beta", "mean", "var"):
+            names.append(f"bn_pw{i}_{part}")
+    names += ["fc_w", "fc_b"]
+    return names

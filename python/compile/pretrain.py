@@ -1,0 +1,97 @@
+"""Pretrain MobileNet-lite on the synthetic pattern dataset and export
+weights for the Rust model builder (artifacts/mobilenet_weights.json).
+
+The paper uses an ImageNet-pretrained MobileNet evaluated on CIFAR10; we
+pretrain the scaled model on the synthetic stand-in (DESIGN.md §3). Batch
+statistics are folded into the BN inference parameters via EMA during
+training, so the exported (γ, β, μ, σ²) are meaningful mutation targets
+for the §6.1 analysis."""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen
+from .model import MOBILENET, mobilenet_forward, mobilenet_init
+
+
+def cross_entropy(probs, labels):
+    onehot = jax.nn.one_hot(labels, probs.shape[1])
+    return -jnp.mean(jnp.sum(onehot * jnp.log(probs + 1e-9), axis=1))
+
+
+def pretrain(steps: int = 400, batch: int = 64, lr: float = 0.08, seed: int = 0,
+             n_train: int = 4096, momentum: float = 0.9, verbose: bool = True):
+    spec = MOBILENET
+    params, bn_names = mobilenet_init(jax.random.PRNGKey(seed), spec)
+    images, labels = datagen.generate(n_train, spec["side"], seed=seed + 1)
+    images = jnp.asarray(images)
+    labels = jnp.asarray(labels)
+
+    trainable = [k for k in params if not any(k.endswith(s) for s in ("_mean", "_var"))]
+
+    # shape-preserving blocks eligible for stochastic depth
+    from .model import mobilenet_plan
+
+    plan = mobilenet_plan(spec)
+    skippable = []
+    cin = spec["width"]
+    for i, (stride, cout) in enumerate(plan):
+        if stride == 1 and cin == cout:
+            skippable.append(i)
+        cin = cout
+
+    def loss_fn(tp, x, y, skip):
+        p = dict(params)
+        p.update(tp)
+        probs, stats = mobilenet_forward(p, x, spec, training=True, skip=skip)
+        return cross_entropy(probs, y), stats
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True), static_argnames=("skip",))
+
+    tp = {k: params[k] for k in trainable}
+    vel = {k: jnp.zeros_like(v) for k, v in tp.items()}
+    rng = np.random.default_rng(seed + 2)
+    ema = 0.9
+    for step in range(steps):
+        idx = rng.integers(0, n_train, size=batch)
+        x, y = images[idx], labels[idx]
+        # stochastic depth: drop each skippable block with p=0.15 so the
+        # network learns layer-drop robustness (see mobilenet_forward)
+        skip = tuple(i for i in skippable if rng.random() < 0.15)
+        (loss, stats), grads = grad_fn(tp, x, y, skip)
+        for k in tp:
+            vel[k] = momentum * vel[k] - lr * grads[k]
+            tp[k] = tp[k] + vel[k]
+        for name, (m, v) in stats.items():
+            params[f"{name}_mean"] = ema * params[f"{name}_mean"] + (1 - ema) * m
+            params[f"{name}_var"] = ema * params[f"{name}_var"] + (1 - ema) * v
+        if verbose and step % 100 == 0:
+            print(f"[pretrain] step {step:4d} loss {float(loss):.4f}")
+    params.update(tp)
+
+    # held-out accuracy with inference-mode BN
+    test_x, test_y = datagen.generate(1024, spec["side"], seed=seed + 99)
+    probs = mobilenet_forward(params, jnp.asarray(test_x), spec, training=False)
+    acc = float(jnp.mean(jnp.argmax(probs, axis=1) == jnp.asarray(test_y)))
+    if verbose:
+        print(f"[pretrain] held-out accuracy: {acc:.4f}")
+    return params, acc
+
+
+def export_weights(params, path: str):
+    out = {}
+    for k, v in params.items():
+        arr = np.asarray(v, dtype=np.float32)
+        out[k] = {"shape": list(arr.shape), "data": [float(x) for x in arr.reshape(-1)]}
+    with open(path, "w") as f:
+        json.dump(out, f)
+
+
+if __name__ == "__main__":
+    p, acc = pretrain()
+    export_weights(p, "../artifacts/mobilenet_weights.json")

@@ -1,0 +1,99 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles — the core
+build-time signal. Hypothesis sweeps shapes and values."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.fused_dense import fused_dense, vmem_footprint_bytes
+from compile.kernels.ref import fused_dense_ref, sgd_update_ref, softmax_ref
+from compile.kernels.sgd_update import sgd_update
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+class TestFusedDense:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 48),
+        k=st.integers(1, 64),
+        n=st.integers(1, 48),
+        act=st.sampled_from(["relu", "none"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, m, k, n, act, seed):
+        x = rand(seed, (m, k))
+        w = rand(seed + 1, (k, n))
+        b = rand(seed + 2, (n,))
+        got = fused_dense(x, w, b, activation=act)
+        want = fused_dense_ref(x, w, b, activation=act)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_paper_shapes(self):
+        # the 2fcNet layer shapes (batch 32)
+        for (m, k, n) in [(32, 196, 32), (32, 32, 10), (8, 16, 10)]:
+            x, w, b = rand(1, (m, k)), rand(2, (k, n)), rand(3, (n,))
+            np.testing.assert_allclose(
+                fused_dense(x, w, b), fused_dense_ref(x, w, b), atol=1e-4
+            )
+
+    def test_relu_clamps(self):
+        x = -jnp.ones((4, 8))
+        w = jnp.ones((8, 4))
+        b = jnp.zeros((4,))
+        out = fused_dense(x, w, b, activation="relu")
+        assert float(jnp.min(out)) == 0.0
+
+    def test_block_sizes_do_not_change_result(self):
+        x, w, b = rand(5, (24, 36)), rand(6, (36, 20)), rand(7, (20,))
+        base = fused_dense(x, w, b)
+        for bm, bn, bk in [(8, 4, 12), (24, 20, 36), (3, 5, 6)]:
+            np.testing.assert_allclose(
+                fused_dense(x, w, b, bm=bm, bn=bn, bk=bk), base, atol=1e-4
+            )
+
+    def test_vmem_footprint_reasonable(self):
+        # default blocking for the 2fcNet hidden layer must fit well under
+        # a 16 MiB VMEM budget (DESIGN.md §6)
+        assert vmem_footprint_bytes(32, 32, 196) < 16 * 2**20
+
+
+class TestSgdUpdate:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 2000),
+        lr=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_flat(self, n, lr, seed):
+        w = rand(seed, (n,))
+        g = rand(seed + 1, (n,))
+        lr_arr = jnp.array([lr], jnp.float32)
+        np.testing.assert_allclose(
+            sgd_update(w, g, lr_arr), sgd_update_ref(w, g, lr_arr), atol=1e-5
+        )
+
+    def test_nd_shapes(self):
+        for shape in [(196, 32), (32,), (3, 3, 8), (1, 1, 8, 16)]:
+            w, g = rand(1, shape), rand(2, shape)
+            lr = jnp.array([0.05], jnp.float32)
+            np.testing.assert_allclose(
+                sgd_update(w, g, lr), sgd_update_ref(w, g, lr), atol=1e-5
+            )
+
+    def test_zero_lr_is_identity(self):
+        w, g = rand(3, (17,)), rand(4, (17,))
+        out = sgd_update(w, g, jnp.array([0.0], jnp.float32))
+        np.testing.assert_allclose(out, w, atol=0)
+
+
+class TestSoftmaxRef:
+    def test_rows_sum_to_one(self):
+        z = rand(9, (6, 10), -5, 5)
+        p = softmax_ref(z)
+        np.testing.assert_allclose(jnp.sum(p, axis=1), jnp.ones(6), atol=1e-5)

@@ -1,0 +1,104 @@
+"""Layer-2 correctness: model shapes, training dynamics, and parity with
+the Rust model builders' conventions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datagen, model
+from compile.model import MOBILENET, TWOFC
+
+
+class TestTwoFc:
+    def setup_method(self):
+        self.params = model.twofc_init(jax.random.PRNGKey(0))
+        self.x = jax.random.uniform(
+            jax.random.PRNGKey(1), (TWOFC["batch"], TWOFC["input"]), jnp.float32
+        )
+
+    def test_predict_shape_and_simplex(self):
+        p = model.twofc_predict(self.x, **self.params)
+        assert p.shape == (TWOFC["batch"], TWOFC["classes"])
+        np.testing.assert_allclose(jnp.sum(p, axis=1), 1.0, atol=1e-5)
+        assert float(jnp.min(p)) >= 0.0
+
+    def test_train_step_reduces_loss(self):
+        y = jax.nn.one_hot(
+            jnp.arange(TWOFC["batch"]) % TWOFC["classes"], TWOFC["classes"]
+        )
+        lr = jnp.array([0.2], jnp.float32)
+        p = dict(self.params)
+        losses = []
+        for _ in range(25):
+            w1, b1, w2, b2, loss = model.twofc_train_step(
+                self.x, y, p["w1"], p["b1"], p["w2"], p["b2"], lr
+            )
+            p = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.7, f"loss not decreasing: {losses}"
+
+    def test_train_step_matches_autodiff(self):
+        """The hand-written Fig.-5 backward pass equals jax.grad."""
+        y = jax.nn.one_hot(jnp.arange(TWOFC["batch"]) % 10, 10)
+        lr = jnp.array([1.0], jnp.float32)
+
+        def loss_fn(w1, b1, w2, b2):
+            p = model.twofc_predict(self.x, w1, b1, w2, b2)
+            return -jnp.sum(y * jnp.log(p + 1e-12)) / TWOFC["batch"]
+
+        g = jax.grad(loss_fn, argnums=(0, 1, 2, 3))(
+            self.params["w1"], self.params["b1"], self.params["w2"], self.params["b2"]
+        )
+        nw1, nb1, nw2, nb2, _ = model.twofc_train_step(
+            self.x, y, self.params["w1"], self.params["b1"],
+            self.params["w2"], self.params["b2"], lr,
+        )
+        np.testing.assert_allclose(self.params["w1"] - nw1, g[0], atol=2e-4)
+        np.testing.assert_allclose(self.params["b2"] - nb2, g[3], atol=2e-4)
+
+
+class TestMobileNet:
+    def test_plan_matches_rust(self):
+        # rust/src/models/mobilenet.rs::plan for width=8, blocks=5
+        assert model.mobilenet_plan() == [(2, 16), (1, 16), (2, 32), (1, 32), (2, 64)]
+
+    def test_forward_shape(self):
+        params, _ = model.mobilenet_init(jax.random.PRNGKey(0))
+        x = jax.random.uniform(
+            jax.random.PRNGKey(1),
+            (MOBILENET["batch"], MOBILENET["side"], MOBILENET["side"], 3),
+        )
+        p = model.mobilenet_forward(params, x)
+        assert p.shape == (MOBILENET["batch"], MOBILENET["classes"])
+        np.testing.assert_allclose(jnp.sum(p, axis=1), 1.0, atol=1e-4)
+
+    def test_param_names_cover_init(self):
+        params, _ = model.mobilenet_init(jax.random.PRNGKey(0))
+        names = model._param_names()
+        assert sorted(names) == sorted(params.keys())
+
+    def test_entrypoint_positional(self):
+        params, _ = model.mobilenet_init(jax.random.PRNGKey(0))
+        names = model._param_names()
+        x = jnp.zeros((MOBILENET["batch"], MOBILENET["side"], MOBILENET["side"], 3))
+        p = model.mobilenet_predict(x, *[params[n] for n in names])
+        assert p.shape == (MOBILENET["batch"], MOBILENET["classes"])
+
+
+class TestDatagen:
+    def test_shapes_bounds_determinism(self):
+        a_img, a_lbl = datagen.generate(16, 16, seed=3)
+        b_img, b_lbl = datagen.generate(16, 16, seed=3)
+        assert a_img.shape == (16, 16, 16, 3)
+        assert a_img.min() >= 0.0 and a_img.max() <= 1.0
+        np.testing.assert_array_equal(a_img, b_img)
+        np.testing.assert_array_equal(a_lbl, b_lbl)
+
+    def test_short_pretrain_learns(self):
+        """A few dozen steps must already beat chance clearly — the full
+        pretraining (400 steps) is exercised by `make artifacts`."""
+        from compile.pretrain import pretrain
+
+        _, acc = pretrain(steps=120, batch=32, n_train=768, verbose=False)
+        assert acc > 0.25, f"pretrain stuck at chance: {acc}"

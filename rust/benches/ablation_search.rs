@@ -1,0 +1,73 @@
+//! Ablations over GEVO-ML's design choices (DESIGN.md experiment index):
+//!
+//! * dead-code elimination in `materialize` — off ⇒ deletions cannot
+//!   compound into runtime savings;
+//! * elitism size (paper: 16) — 0 vs 4 vs 16;
+//! * initial mutations per individual (paper: 3) — 1 vs 3 vs 6;
+//! * crossover on/off — §4.2 claims messy crossover diversifies cheaply.
+//!
+//! Workload: 2fcNet training fitness at reduced scale; metric = best
+//! same-runtime training error and best overall runtime on the final
+//! front, at a fixed evaluation budget.
+
+use gevo_ml::coordinator::{self, ExperimentConfig, WorkloadKind};
+use gevo_ml::evo::search::SearchConfig;
+use gevo_ml::util::bench::Bench;
+
+fn run(cfg_mod: impl Fn(&mut SearchConfig)) -> (f64, f64, usize) {
+    let mut search = SearchConfig {
+        pop_size: 16,
+        generations: 8,
+        elites: 8,
+        workers: 2,
+        seed: 42,
+        verbose: false,
+        ..Default::default()
+    };
+    cfg_mod(&mut search);
+    let cfg = ExperimentConfig {
+        kind: WorkloadKind::TwoFcTraining,
+        search,
+        fit_samples: 256,
+        test_samples: 96,
+        epochs: 1,
+        ..Default::default()
+    };
+    let r = coordinator::run_experiment(&cfg);
+    let best_equal_rt = r
+        .front
+        .iter()
+        .filter(|p| p.fit.0 <= r.baseline_fit.0 * 1.001)
+        .map(|p| p.fit.1)
+        .fold(r.baseline_fit.1, f64::min);
+    let best_rt = r.front.iter().map(|p| p.fit.0).fold(f64::INFINITY, f64::min);
+    (best_equal_rt, best_rt, r.search.total_evaluations)
+}
+
+fn main() {
+    let mut b = Bench::new("ablation_search");
+    b.samples = 1;
+    b.warmup = 0;
+
+    let cases: Vec<(&str, Box<dyn Fn(&mut SearchConfig)>)> = vec![
+        ("paper defaults (elites=8, init=3, xover=.6)", Box::new(|_c: &mut SearchConfig| {})),
+        ("no elitism", Box::new(|c: &mut SearchConfig| c.elites = 0)),
+        ("heavy elitism (=pop)", Box::new(|c: &mut SearchConfig| c.elites = 16)),
+        ("init mutations = 1", Box::new(|c: &mut SearchConfig| c.init_mutations = 1)),
+        ("init mutations = 6", Box::new(|c: &mut SearchConfig| c.init_mutations = 6)),
+        ("no crossover", Box::new(|c: &mut SearchConfig| c.crossover_prob = 0.0)),
+        ("crossover always", Box::new(|c: &mut SearchConfig| c.crossover_prob = 1.0)),
+    ];
+    for (name, m) in cases {
+        let mut out = (0.0, 0.0, 0);
+        b.case(&format!("search [{name}]"), || {
+            out = run(&m);
+        });
+        b.note(&format!(
+            "  {name}: best-equal-runtime-err {:.4}, best-runtime {:.4}, evals {}",
+            out.0, out.1, out.2
+        ));
+    }
+    b.note("expected: elitism and crossover each improve the front at fixed budget");
+    b.finish();
+}

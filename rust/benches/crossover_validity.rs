@@ -1,0 +1,59 @@
+//! §4.2 statistic regeneration: "about 80% of the time" messy-crossover
+//! offspring are valid. We measure the validity rate over random
+//! populations of mutated individuals on the 2fcNet train graph.
+
+use gevo_ml::evo::crossover::messy_one_point;
+use gevo_ml::evo::mutate::valid_random_edit;
+use gevo_ml::evo::patch::Individual;
+use gevo_ml::models::twofc;
+use gevo_ml::util::bench::Bench;
+use gevo_ml::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("crossover_validity");
+    b.samples = 1;
+    b.warmup = 0;
+
+    let spec = twofc::TwoFcSpec { batch: 8, input: 36, hidden: 12, classes: 10, lr: 0.05 };
+    let base = twofc::train_step_graph(&spec);
+    let mut rng = Rng::new(17);
+
+    // build a pool of individuals with 1-4 valid edits each
+    let mut pool: Vec<Individual> = Vec::new();
+    for _ in 0..24 {
+        let mut ind = Individual::original();
+        let mut g = base.clone();
+        let k = rng.range(1, 5);
+        for _ in 0..k {
+            if let Some((e, ng)) = valid_random_edit(&g, &mut rng, 25) {
+                ind.edits.push(e);
+                g = ng;
+            }
+        }
+        pool.push(ind);
+    }
+
+    let mut valid = 0usize;
+    let mut total = 0usize;
+    b.case("1000 messy crossovers + materialize", || {
+        valid = 0;
+        total = 0;
+        let mut r = Rng::new(99);
+        for _ in 0..500 {
+            let a = &pool[r.below(pool.len())];
+            let bb = &pool[r.below(pool.len())];
+            let (c, d) = messy_one_point(a, bb, &mut r);
+            for child in [c, d] {
+                total += 1;
+                if child.materialize(&base).is_ok() {
+                    valid += 1;
+                }
+            }
+        }
+    });
+    b.note(&format!(
+        "validity: {valid}/{total} = {:.1}%   (paper §4.2: ~80%)",
+        100.0 * valid as f64 / total as f64
+    ));
+    b.finish();
+}

@@ -1,0 +1,63 @@
+//! Fig. 4a regeneration (scaled): Pareto front for MobileNet prediction.
+//! The full-budget run is `cargo run --release --example evolve_mobilenet`;
+//! this bench runs a reduced budget so `cargo bench` completes quickly,
+//! and prints the front rows the figure plots.
+
+use gevo_ml::coordinator::{self, report, ExperimentConfig, WorkloadKind};
+use gevo_ml::evo::search::SearchConfig;
+use gevo_ml::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig4a_mobilenet_prediction");
+    b.samples = 1;
+    b.warmup = 0;
+
+    let cfg = ExperimentConfig {
+        kind: WorkloadKind::MobilenetPrediction,
+        search: SearchConfig {
+            pop_size: 16,
+            generations: 8,
+            elites: 8,
+            seed: 42,
+            verbose: false,
+            ..Default::default()
+        },
+        fit_samples: 256,
+        test_samples: 96,
+        epochs: 1,
+        ..Default::default()
+    };
+    let mut result = None;
+    b.case("search pop=16 gens=8 (scaled Fig. 4a)", || {
+        result = Some(coordinator::run_experiment(&cfg));
+    });
+    let r = result.unwrap();
+    b.note(&format!(
+        "baseline: runtime {:.4} error {:.4} (orange diamond)",
+        r.baseline_fit.0, r.baseline_fit.1
+    ));
+    for (i, p) in r.front.iter().enumerate() {
+        b.note(&format!(
+            "front[{i}]: runtime {:.4} error {:.4} (edits {})",
+            p.fit.0, p.fit.1, p.edits
+        ));
+    }
+    let base_err = r.baseline_post_hoc.map(|o| o.1).unwrap_or(r.baseline_fit.1);
+    let best_rt = r
+        .front
+        .iter()
+        .filter(|p| p.post_hoc.map(|o| o.1 <= base_err + 0.02).unwrap_or(false))
+        .map(|p| p.fit.0)
+        .fold(f64::INFINITY, f64::min);
+    b.note(&format!(
+        "headline: paper 1.90x speedup @2% accuracy budget; ours {}",
+        if best_rt.is_finite() && best_rt > 0.0 {
+            format!("{:.2}x (ratio {best_rt:.4})", 1.0 / best_rt)
+        } else {
+            "none within budget at this reduced bench scale".into()
+        }
+    ));
+    b.note(&format!("evaluations: {}", r.search.total_evaluations));
+    let _ = report::front_csv(&r);
+    b.finish();
+}

@@ -1,0 +1,56 @@
+//! Fig. 4b regeneration (scaled): Pareto front for 2fcNet training.
+//! Full-budget run: `cargo run --release --example evolve_2fcnet`.
+
+use gevo_ml::coordinator::{self, ExperimentConfig, WorkloadKind};
+use gevo_ml::evo::search::SearchConfig;
+use gevo_ml::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig4b_2fcnet_training");
+    b.samples = 1;
+    b.warmup = 0;
+
+    let cfg = ExperimentConfig {
+        kind: WorkloadKind::TwoFcTraining,
+        search: SearchConfig {
+            pop_size: 16,
+            generations: 8,
+            elites: 8,
+            seed: 42,
+            verbose: false,
+            ..Default::default()
+        },
+        fit_samples: 384,
+        test_samples: 128,
+        epochs: 1,
+        ..Default::default()
+    };
+    let mut result = None;
+    b.case("search pop=16 gens=8 (scaled Fig. 4b)", || {
+        result = Some(coordinator::run_experiment(&cfg));
+    });
+    let r = result.unwrap();
+    b.note(&format!(
+        "baseline: runtime {:.4} error {:.4} (orange diamond)",
+        r.baseline_fit.0, r.baseline_fit.1
+    ));
+    for (i, p) in r.front.iter().enumerate() {
+        b.note(&format!(
+            "front[{i}]: runtime {:.4} error {:.4} (edits {})",
+            p.fit.0, p.fit.1, p.edits
+        ));
+    }
+    let best = r
+        .front
+        .iter()
+        .filter(|p| p.fit.0 <= r.baseline_fit.0 * 1.001)
+        .map(|p| p.fit.1)
+        .fold(f64::INFINITY, f64::min);
+    b.note(&format!(
+        "headline: paper error 8.62%->3.74% at equal runtime; ours {:.2}%->{:.2}%",
+        r.baseline_fit.1 * 100.0,
+        best * 100.0
+    ));
+    b.note(&format!("evaluations: {}", r.search.total_evaluations));
+    b.finish();
+}

@@ -1,0 +1,79 @@
+//! §Perf L3: evolutionary-machinery micro-benchmarks — mutation+repair
+//! throughput, crossover, NSGA-II sorting, and a full evaluated
+//! generation (the end-to-end unit of search cost).
+
+use gevo_ml::evo::crossover::messy_one_point;
+use gevo_ml::evo::mutate::valid_random_edit;
+use gevo_ml::evo::nsga2;
+use gevo_ml::evo::patch::Individual;
+use gevo_ml::evo::search::{self, SearchConfig};
+use gevo_ml::models::twofc;
+use gevo_ml::util::bench::{black_box, Bench};
+use gevo_ml::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("perf_evo");
+    let spec = twofc::TwoFcSpec { batch: 8, input: 36, hidden: 12, classes: 10, lr: 0.05 };
+    let base = twofc::train_step_graph(&spec);
+
+    // --- mutation + repair throughput ----------------------------------------
+    let mut rng = Rng::new(3);
+    b.case_with_work("valid_random_edit (x20)", Some(20.0), || {
+        for _ in 0..20 {
+            black_box(valid_random_edit(&base, &mut rng, 25));
+        }
+    });
+
+    // --- crossover -------------------------------------------------------------
+    let mut pool: Vec<Individual> = Vec::new();
+    let mut prng = Rng::new(7);
+    for _ in 0..16 {
+        let mut ind = Individual::original();
+        let mut g = base.clone();
+        for _ in 0..3 {
+            if let Some((e, ng)) = valid_random_edit(&g, &mut prng, 25) {
+                ind.edits.push(e);
+                g = ng;
+            }
+        }
+        pool.push(ind);
+    }
+    b.case_with_work("messy crossover + materialize (x20)", Some(20.0), || {
+        let mut r = Rng::new(11);
+        for _ in 0..20 {
+            let (c, _) = messy_one_point(&pool[r.below(16)], &pool[r.below(16)], &mut r);
+            black_box(c.materialize(&base).ok());
+        }
+    });
+
+    // --- NSGA-II --------------------------------------------------------------
+    for n in [100usize, 1000] {
+        let mut r = Rng::new(13);
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (r.f64(), r.f64())).collect();
+        b.case(&format!("non_dominated_sort n={n}"), || {
+            black_box(nsga2::non_dominated_sort(&pts));
+        });
+        b.case(&format!("select_best n={n} k={}", n / 2), || {
+            black_box(nsga2::select_best(&pts, n / 2));
+        });
+    }
+
+    // --- a full generation ------------------------------------------------------
+    let flops = base.total_flops() as f64;
+    let eval = move |g: &gevo_ml::ir::Graph| -> Option<(f64, f64)> {
+        Some((g.total_flops() as f64 / flops, 0.1))
+    };
+    let cfg = SearchConfig {
+        pop_size: 16,
+        generations: 1,
+        elites: 8,
+        workers: 2,
+        seed: 5,
+        verbose: false,
+        ..Default::default()
+    };
+    b.case("one full generation (pop=16, flops-only eval)", || {
+        black_box(search::run(&base, &eval, &cfg));
+    });
+    b.finish();
+}

@@ -1,0 +1,73 @@
+//! §Perf L3: interpreter hot-path micro-benchmarks — GEMM roofline, conv
+//! kernels, and the two workload inner loops whose wall-clock dominates
+//! every fitness evaluation.
+
+use gevo_ml::coordinator;
+use gevo_ml::data::{digits, patterns};
+use gevo_ml::models::{mobilenet, twofc};
+use gevo_ml::tensor::{ops, Tensor};
+use gevo_ml::util::bench::{black_box, Bench};
+use gevo_ml::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("perf_interp");
+    let mut rng = Rng::new(1);
+
+    // --- GEMM roofline -----------------------------------------------------
+    for (m, k, n) in [(32, 196, 32), (32, 32, 10), (128, 128, 128), (256, 256, 256)] {
+        let a = Tensor::rand_uniform(&[m, k], -1.0, 1.0, &mut rng);
+        let w = Tensor::rand_uniform(&[k, n], -1.0, 1.0, &mut rng);
+        let flops = (2 * m * k * n) as f64;
+        b.case_with_work(&format!("matmul {m}x{k}x{n}"), Some(flops), || {
+            black_box(ops::matmul(&a, &w));
+        });
+    }
+
+    // --- convolutions ---------------------------------------------------------
+    let x = Tensor::rand_uniform(&[8, 16, 16, 8], -1.0, 1.0, &mut rng);
+    let w = Tensor::rand_uniform(&[3, 3, 8, 16], -0.5, 0.5, &mut rng);
+    let conv_flops = (8 * 16 * 16 * 16 * 2 * 3 * 3 * 8) as f64;
+    b.case_with_work("conv2d 8x16x16x8 -> 16ch", Some(conv_flops), || {
+        black_box(ops::conv2d(&x, &w, 1, true));
+    });
+    let dwf = Tensor::rand_uniform(&[3, 3, 8], -0.5, 0.5, &mut rng);
+    b.case_with_work(
+        "depthwise 8x16x16x8",
+        Some((8 * 16 * 16 * 8 * 2 * 9) as f64),
+        || {
+            black_box(ops::depthwise_conv2d(&x, &dwf, 1, true));
+        },
+    );
+
+    // --- workload inner loops -----------------------------------------------
+    let tspec = twofc::TwoFcSpec::default();
+    let step = twofc::train_step_graph(&tspec);
+    let data = digits::generate(64, tspec.side(), 3);
+    let batches = data.batches(tspec.batch);
+    let init = twofc::TwoFcWeights::init(&tspec, 1);
+    let step_flops = step.total_flops() as f64 * batches.len() as f64;
+    b.case_with_work("2fcnet train 2 batches (graph interp)", Some(step_flops), || {
+        black_box(twofc::run_training(&step, &init, &batches, 1));
+    });
+
+    let mspec = mobilenet::MobileNetSpec::default();
+    let weights = coordinator::load_or_random_weights(&mspec, 1);
+    let g = mobilenet::predict_graph(&mspec, &weights);
+    let pdata = patterns::generate(32, mspec.side, 4);
+    let fwd_flops = g.total_flops() as f64 * (32 / mspec.batch) as f64;
+    b.case_with_work("mobilenet predict 32 samples (graph interp)", Some(fwd_flops), || {
+        black_box(mobilenet::accuracy_on(&g, &mspec, &pdata));
+    });
+
+    // --- graph overheads ---------------------------------------------------------
+    b.case("graph clone (train-step)", || {
+        black_box(step.clone());
+    });
+    b.case("graph verify (train-step)", || {
+        black_box(gevo_ml::ir::verify::verify(&step).unwrap());
+    });
+    b.case("total_flops (train-step)", || {
+        black_box(step.total_flops());
+    });
+    b.finish();
+}

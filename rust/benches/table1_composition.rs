@@ -1,0 +1,49 @@
+//! Table 1 regeneration: model layer composition of both workloads, plus
+//! graph-construction/census timing.
+
+use gevo_ml::models::{mobilenet, twofc};
+use gevo_ml::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("table1_composition");
+
+    let mspec = mobilenet::MobileNetSpec::default();
+    let weights = mobilenet::random_weights(&mspec, 1);
+    let tspec = twofc::TwoFcSpec::default();
+
+    b.case("build mobilenet predict graph", || {
+        black_box(mobilenet::predict_graph(&mspec, &weights));
+    });
+    b.case("build 2fcnet train-step graph", || {
+        black_box(twofc::train_step_graph(&tspec));
+    });
+
+    let mg = mobilenet::predict_graph(&mspec, &weights);
+    let tg = twofc::predict_graph(&tspec);
+    b.case("census (table-1 rows)", || {
+        black_box(mobilenet::table1_census(&mg));
+        black_box(tg.census());
+    });
+
+    b.note("--- Table 1 (paper layout; reproduction-scale models) ---");
+    b.note(&format!("{:<28} {:>10} {:>8}", "Layer", "MobileNet", "2fcNet"));
+    let t_census = tg.census();
+    for (name, count) in mobilenet::table1_census(&mg) {
+        let t = if name == "Fully-connected Layer" {
+            *t_census.get("dot").unwrap_or(&0)
+        } else {
+            0
+        };
+        b.note(&format!("{name:<28} {count:>9}x {t:>7}x"));
+    }
+    b.note(&format!(
+        "paper reference (full scale): 17x dw-conv, 35x std-conv, 52x BN, 1x pool, 2x fc / 2x fc"
+    ));
+    b.note(&format!(
+        "flops/batch: mobilenet {:.2}M, 2fcnet(predict) {:.2}M, 2fcnet(train-step) {:.2}M",
+        mg.total_flops() as f64 / 1e6,
+        tg.total_flops() as f64 / 1e6,
+        twofc::train_step_graph(&tspec).total_flops() as f64 / 1e6
+    ));
+    b.finish();
+}

@@ -1,0 +1,228 @@
+//! The experiment coordinator — builds a workload, runs the GEVO-ML
+//! search, post-hoc-validates the Pareto front on held-out data, and
+//! writes reports. This is what `gevo-ml search …` and the Fig. 4
+//! examples drive.
+
+pub mod report;
+pub mod metrics;
+
+use crate::data::{digits, patterns};
+use crate::evo::nsga2::Objectives;
+use crate::evo::search::{self, SearchConfig, SearchResult};
+use crate::fitness::prediction::PredictionWorkload;
+use crate::fitness::training::TrainingWorkload;
+use crate::fitness::RuntimeMetric;
+use crate::ir::Graph;
+use crate::models::{mobilenet, twofc};
+
+/// Which paper workload to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// MobileNet-lite prediction on synthetic CIFAR (Fig. 4a).
+    MobilenetPrediction,
+    /// 2fcNet training on synthetic MNIST (Fig. 4b).
+    TwoFcTraining,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        match s {
+            "mobilenet" | "prediction" => Some(WorkloadKind::MobilenetPrediction),
+            "2fcnet" | "training" => Some(WorkloadKind::TwoFcTraining),
+            _ => None,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub kind: WorkloadKind,
+    pub search: SearchConfig,
+    pub metric: RuntimeMetric,
+    /// Dataset sizes (fitness split / held-out split).
+    pub fit_samples: usize,
+    pub test_samples: usize,
+    /// Training workload: epochs per fitness evaluation.
+    pub epochs: usize,
+    pub data_seed: u64,
+    pub weight_seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            kind: WorkloadKind::TwoFcTraining,
+            search: SearchConfig::default(),
+            metric: RuntimeMetric::Flops,
+            fit_samples: 512,
+            test_samples: 128,
+            epochs: 1,
+            data_seed: 7,
+            weight_seed: 1,
+        }
+    }
+}
+
+/// One Pareto-front row after post-hoc validation.
+#[derive(Debug, Clone)]
+pub struct FrontPoint {
+    pub edits: usize,
+    pub fit: Objectives,
+    /// Post-hoc objectives on the held-out split (None if the variant
+    /// failed there — reported, as the paper reports test-set movement).
+    pub post_hoc: Option<Objectives>,
+}
+
+/// Experiment outcome.
+pub struct ExperimentResult {
+    pub baseline_fit: Objectives,
+    pub baseline_post_hoc: Option<Objectives>,
+    pub front: Vec<FrontPoint>,
+    pub search: SearchResult,
+    pub wall_seconds: f64,
+}
+
+/// Run a full experiment (the paper's §5 protocol, scaled).
+pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
+    let t0 = std::time::Instant::now();
+    match cfg.kind {
+        WorkloadKind::MobilenetPrediction => {
+            let spec = mobilenet::MobileNetSpec::default();
+            let weights = load_or_random_weights(&spec, cfg.weight_seed);
+            let baseline = mobilenet::predict_graph(&spec, &weights);
+            let data = patterns::generate(
+                cfg.fit_samples + cfg.test_samples,
+                spec.side,
+                cfg.data_seed,
+            );
+            let (fit, test) = data.split(cfg.fit_samples);
+            let wl = PredictionWorkload::new(
+                &baseline,
+                spec.batch,
+                &fit,
+                &test,
+                (cfg.fit_samples / spec.batch).min(32),
+                cfg.metric,
+            );
+            let res = search::run(&baseline, &wl, &cfg.search);
+            finish(t0, &baseline, res, |g| wl.evaluate_pair(g))
+        }
+        WorkloadKind::TwoFcTraining => {
+            let spec = twofc::TwoFcSpec::default();
+            let baseline = twofc::train_step_graph(&spec);
+            let data = digits::generate(
+                cfg.fit_samples + cfg.test_samples,
+                spec.side(),
+                cfg.data_seed,
+            );
+            let (fit, test) = data.split(cfg.fit_samples);
+            let wl = TrainingWorkload::new(
+                spec,
+                &baseline,
+                fit,
+                test,
+                cfg.epochs,
+                cfg.weight_seed,
+                cfg.metric,
+            );
+            let res = search::run(&baseline, &wl, &cfg.search);
+            finish(t0, &baseline, res, |g| {
+                use crate::evo::search::Evaluator;
+                (wl.evaluate(g), wl.post_hoc(g))
+            })
+        }
+    }
+}
+
+impl PredictionWorkload {
+    fn evaluate_pair(&self, g: &Graph) -> (Option<Objectives>, Option<Objectives>) {
+        use crate::evo::search::Evaluator;
+        (self.evaluate(g), self.post_hoc(g))
+    }
+}
+
+fn finish(
+    t0: std::time::Instant,
+    baseline: &Graph,
+    res: SearchResult,
+    eval_pair: impl Fn(&Graph) -> (Option<Objectives>, Option<Objectives>),
+) -> ExperimentResult {
+    let (bf, bp) = eval_pair(baseline);
+    // Dedup front rows by quantized objective point — corners of the
+    // front are often reached by many distinct genomes.
+    let mut seen = std::collections::HashSet::new();
+    let pareto: Vec<_> = res
+        .pareto
+        .iter()
+        .filter(|(_, o)| seen.insert(((o.0 * 1e4) as i64, (o.1 * 1e4) as i64)))
+        .cloned()
+        .collect();
+    let mut front = Vec::new();
+    for (ind, fit) in &pareto {
+        let post_hoc = ind
+            .materialize(baseline)
+            .ok()
+            .and_then(|g| eval_pair(&g).1);
+        front.push(FrontPoint { edits: ind.edits.len(), fit: *fit, post_hoc });
+    }
+    ExperimentResult {
+        baseline_fit: bf.expect("baseline evaluates"),
+        baseline_post_hoc: bp,
+        front,
+        search: res,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// MobileNet weights: prefer the pretrained artifact, fall back to seeded
+/// random (tests / artifact-less builds).
+pub fn load_or_random_weights(
+    spec: &mobilenet::MobileNetSpec,
+    seed: u64,
+) -> mobilenet::Weights {
+    if let Ok(art) = crate::runtime::artifact::ArtifactDir::load("artifacts") {
+        if let Ok(w) = art.load_weights("mobilenet_weights.json") {
+            // sanity: shape of the stem conv must match the spec
+            if w.get("conv1_w").map(|t| t.dims() == [3, 3, 3, spec.width]).unwrap_or(false) {
+                return w;
+            }
+        }
+    }
+    mobilenet::random_weights(spec, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_training_experiment_end_to_end() {
+        let cfg = ExperimentConfig {
+            kind: WorkloadKind::TwoFcTraining,
+            search: SearchConfig {
+                pop_size: 6,
+                generations: 2,
+                elites: 3,
+                workers: 2,
+                seed: 5,
+                ..Default::default()
+            },
+            fit_samples: 64,
+            test_samples: 32,
+            epochs: 1,
+            ..Default::default()
+        };
+        let r = run_experiment(&cfg);
+        assert!(!r.front.is_empty());
+        assert!((r.baseline_fit.0 - 1.0).abs() < 1e-9, "flops baseline = 1");
+        assert!(r.search.total_evaluations > 0);
+    }
+
+    #[test]
+    fn workload_kind_parses() {
+        assert_eq!(WorkloadKind::parse("mobilenet"), Some(WorkloadKind::MobilenetPrediction));
+        assert_eq!(WorkloadKind::parse("2fcnet"), Some(WorkloadKind::TwoFcTraining));
+        assert_eq!(WorkloadKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,170 @@
+//! Experiment reporting: Pareto-front tables (markdown / CSV), the
+//! terminal scatter plot used to eyeball Fig. 4, and JSON dumps for
+//! downstream tooling.
+
+use super::{ExperimentResult, FrontPoint};
+use crate::evo::nsga2::Objectives;
+use crate::util::json::Json;
+
+/// Markdown table of the front (the Fig. 4 data, in rows).
+pub fn front_markdown(r: &ExperimentResult) -> String {
+    let mut s = String::new();
+    s.push_str("| variant | edits | runtime (fit) | error (fit) | runtime (held-out) | error (held-out) |\n");
+    s.push_str("|---|---|---|---|---|---|\n");
+    s.push_str(&format!(
+        "| original | 0 | {:.4} | {:.4} | {} | {} |\n",
+        r.baseline_fit.0,
+        r.baseline_fit.1,
+        r.baseline_post_hoc.map_or("-".into(), |o| format!("{:.4}", o.0)),
+        r.baseline_post_hoc.map_or("-".into(), |o| format!("{:.4}", o.1)),
+    ));
+    for (i, p) in r.front.iter().enumerate() {
+        s.push_str(&format!(
+            "| pareto-{i} | {} | {:.4} | {:.4} | {} | {} |\n",
+            p.edits,
+            p.fit.0,
+            p.fit.1,
+            p.post_hoc.map_or("-".into(), |o| format!("{:.4}", o.0)),
+            p.post_hoc.map_or("-".into(), |o| format!("{:.4}", o.1)),
+        ));
+    }
+    s
+}
+
+/// CSV (runtime,error,edits,split) rows for plotting.
+pub fn front_csv(r: &ExperimentResult) -> String {
+    let mut s = String::from("runtime,error,edits,split\n");
+    s.push_str(&format!("{},{},0,baseline\n", r.baseline_fit.0, r.baseline_fit.1));
+    for p in &r.front {
+        s.push_str(&format!("{},{},{},fit\n", p.fit.0, p.fit.1, p.edits));
+        if let Some(o) = p.post_hoc {
+            s.push_str(&format!("{},{},{},heldout\n", o.0, o.1, p.edits));
+        }
+    }
+    s
+}
+
+/// JSON dump of the whole experiment.
+pub fn to_json(r: &ExperimentResult) -> Json {
+    let pt = |o: Objectives| Json::arr([Json::num(o.0), Json::num(o.1)]);
+    Json::obj(vec![
+        ("baseline_fit", pt(r.baseline_fit)),
+        (
+            "baseline_post_hoc",
+            r.baseline_post_hoc.map_or(Json::Null, pt),
+        ),
+        (
+            "front",
+            Json::Arr(
+                r.front
+                    .iter()
+                    .map(|p: &FrontPoint| {
+                        Json::obj(vec![
+                            ("edits", Json::num(p.edits as f64)),
+                            ("fit", pt(p.fit)),
+                            ("post_hoc", p.post_hoc.map_or(Json::Null, pt)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("evaluations", Json::num(r.search.total_evaluations as f64)),
+        ("cache_hits", Json::num(r.search.cache_hits as f64)),
+        ("wall_seconds", Json::num(r.wall_seconds)),
+    ])
+}
+
+/// ASCII scatter of the Fig. 4 plane: runtime (x) vs error (y). The
+/// baseline renders as `◆`, front points as `●`.
+pub fn ascii_scatter(r: &ExperimentResult, width: usize, height: usize) -> String {
+    let mut pts: Vec<(f64, f64, char)> = vec![(r.baseline_fit.0, r.baseline_fit.1, '#')];
+    for p in &r.front {
+        pts.push((p.fit.0, p.fit.1, 'o'));
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y, _) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if !(x1 - x0).is_normal() {
+        x1 = x0 + 1.0;
+    }
+    if !(y1 - y0).is_normal() {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for &(x, y, c) in &pts {
+        let col = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+        let row = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+        let row = height - 1 - row; // y grows upward
+        grid[row][col.min(width - 1)] = c;
+    }
+    let mut s = format!("  error {y1:.3} ┐\n");
+    for row in grid {
+        s.push_str("         │");
+        s.extend(row);
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "  error {y0:.3} └{}\n           runtime {x0:.3} … {x1:.3}   (# = original, o = Pareto)\n",
+        "─".repeat(width)
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evo::search::SearchResult;
+
+    fn fake() -> ExperimentResult {
+        ExperimentResult {
+            baseline_fit: (1.0, 0.1),
+            baseline_post_hoc: Some((1.0, 0.12)),
+            front: vec![
+                FrontPoint { edits: 2, fit: (0.5, 0.2), post_hoc: Some((0.5, 0.22)) },
+                FrontPoint { edits: 1, fit: (1.0, 0.05), post_hoc: None },
+            ],
+            search: SearchResult {
+                pareto: vec![],
+                history: vec![],
+                total_evaluations: 42,
+                cache_hits: 7,
+            },
+            wall_seconds: 1.5,
+        }
+    }
+
+    #[test]
+    fn markdown_has_all_rows() {
+        let md = front_markdown(&fake());
+        assert!(md.contains("| original | 0 | 1.0000 | 0.1000 |"));
+        assert!(md.contains("pareto-0"));
+        assert!(md.contains("pareto-1"));
+        assert!(md.lines().count() >= 5);
+    }
+
+    #[test]
+    fn csv_parses_back() {
+        let csv = front_csv(&fake());
+        assert_eq!(csv.lines().count(), 1 + 1 + 3); // header + baseline + 2 fit + 1 heldout
+        assert!(csv.contains("0.5,0.2,2,fit"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = to_json(&fake());
+        let j2 = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(j2.get("evaluations").unwrap().as_usize().unwrap(), 42);
+    }
+
+    #[test]
+    fn scatter_renders_marks() {
+        let s = ascii_scatter(&fake(), 40, 10);
+        assert!(s.contains('#'));
+        assert!(s.contains('o'));
+    }
+}

@@ -1,0 +1,72 @@
+//! One-point *messy* crossover (paper §4.2).
+//!
+//! "GEVO-ML begins with two randomly selected individuals, concatenates
+//! the two lists of mutations (edits) in the patch representation;
+//! shuffles the sequence; and then randomly selects a location to cut the
+//! list back into two." The offspring are then re-applied to the original
+//! program; about 80% of recombinations are valid (we regenerate that
+//! statistic in `cargo bench --bench crossover_validity`).
+
+use super::patch::{Edit, Individual};
+use crate::util::rng::Rng;
+
+/// Recombine two edit lists into two children (unvalidated).
+pub fn messy_one_point(a: &Individual, b: &Individual, rng: &mut Rng) -> (Individual, Individual) {
+    let mut pool: Vec<Edit> = a.edits.iter().chain(b.edits.iter()).copied().collect();
+    rng.shuffle(&mut pool);
+    let cut = if pool.is_empty() { 0 } else { rng.below(pool.len() + 1) };
+    let (left, right) = pool.split_at(cut);
+    (Individual::new(left.to_vec()), Individual::new(right.to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evo::patch::EditKind;
+    use crate::ir::types::ValueId;
+
+    fn ind(ids: &[u32]) -> Individual {
+        Individual::new(
+            ids.iter()
+                .map(|&i| Edit {
+                    kind: EditKind::Delete { target: ValueId(i) },
+                    seed: i as u64,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn children_partition_the_pool() {
+        let mut rng = Rng::new(1);
+        let a = ind(&[1, 2, 3]);
+        let b = ind(&[4, 5]);
+        for _ in 0..50 {
+            let (c, d) = messy_one_point(&a, &b, &mut rng);
+            assert_eq!(c.edits.len() + d.edits.len(), 5);
+            let mut all: Vec<u64> = c.edits.iter().chain(d.edits.iter()).map(|e| e.seed).collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![1, 2, 3, 4, 5]);
+        }
+    }
+
+    #[test]
+    fn empty_parents_give_empty_children() {
+        let mut rng = Rng::new(2);
+        let (c, d) = messy_one_point(&Individual::original(), &Individual::original(), &mut rng);
+        assert!(c.edits.is_empty() && d.edits.is_empty());
+    }
+
+    #[test]
+    fn cut_point_varies() {
+        let mut rng = Rng::new(3);
+        let a = ind(&[1, 2, 3, 4]);
+        let b = ind(&[5, 6, 7, 8]);
+        let mut lens = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            let (c, _) = messy_one_point(&a, &b, &mut rng);
+            lens.insert(c.edits.len());
+        }
+        assert!(lens.len() > 3, "cut point should vary, saw {lens:?}");
+    }
+}

@@ -1,0 +1,22 @@
+//! The evolutionary machinery — GEVO-ML's contribution (paper §4).
+//!
+//! * [`patch`] — the patch genome: an individual is a list of edits
+//!   applied to the original program (§4.2), each replayable from its
+//!   recorded seed.
+//! * [`mutate`] — the two mutation operators, `Copy` and `Delete`, with
+//!   use-def repair and tensor-resize repair (§4.1, Fig. 3).
+//! * [`crossover`] — one-point *messy* crossover (§4.2).
+//! * [`nsga2`] — NSGA-II: fast non-dominated sort, crowding distance,
+//!   crowded-comparison operator (§4.4, citing Deb et al.).
+//! * [`search`] — the generation loop: init population with 3 mutations
+//!   per individual, rank, recombine, mutate, elitism (top 16),
+//!   tournament selection.
+
+pub mod patch;
+pub mod mutate;
+pub mod crossover;
+pub mod nsga2;
+pub mod search;
+
+pub use patch::{Edit, EditKind, Individual};
+pub use search::{SearchConfig, SearchResult};

@@ -1,0 +1,448 @@
+//! Mutation operators (paper §4.1).
+//!
+//! Two operators, exactly as in GEVO-ML:
+//!
+//! * **Copy** — clone an existing operation, insert it elsewhere, repair
+//!   its operands with random type-compatible values (falling back to the
+//!   tensor-resize chain of Fig. 3 when no compatible value exists), and
+//!   connect its result into a downstream use — the Fig. 5 pattern, where
+//!   a copied `broadcast` replaced the `0.03125` gradient-scale operand.
+//! * **Delete** — remove an operation and repair every dangling use with
+//!   a random substitute of the same type (resized if necessary).
+//!
+//! All randomness is drawn from the edit's recorded seed, so edits replay
+//! deterministically when a patch is re-applied after crossover.
+
+use super::patch::{Edit, EditKind};
+use crate::ir::graph::Use;
+use crate::ir::resize::resize_chain;
+use crate::ir::types::{IrError, TType, ValueId};
+use crate::ir::Graph;
+use crate::util::rng::Rng;
+
+/// Why an edit failed to apply.
+#[derive(Debug, thiserror::Error)]
+pub enum MutateError {
+    #[error("edit references value {0} which is not in the graph")]
+    MissingValue(ValueId),
+    #[error("no mutable target available")]
+    NoTarget,
+    #[error("could not repair: {0}")]
+    CannotRepair(String),
+    #[error("resulting graph invalid: {0}")]
+    Invalid(#[from] IrError),
+}
+
+/// Apply one edit to `g` in place. On error the graph may be partially
+/// modified — callers apply edits to a clone (see `Individual::materialize`).
+pub fn apply_edit(g: &mut Graph, e: &Edit) -> Result<(), MutateError> {
+    let mut rng = Rng::new(e.seed);
+    match e.kind {
+        EditKind::Copy { src, after } => apply_copy(g, src, after, &mut rng),
+        EditKind::Delete { target } => apply_delete(g, target, &mut rng),
+    }
+}
+
+fn pick<T: Copy>(rng: &mut Rng, xs: &[T]) -> Option<T> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(xs[rng.below(xs.len())])
+    }
+}
+
+/// The Copy mutation.
+fn apply_copy(g: &mut Graph, src: ValueId, after: ValueId, rng: &mut Rng) -> Result<(), MutateError> {
+    let src_inst = g.inst(src).ok_or(MutateError::MissingValue(src))?.clone();
+    if !src_inst.kind.is_mutable() {
+        return Err(MutateError::CannotRepair("cannot copy a parameter".into()));
+    }
+    let after_pos = g.index_of(after).ok_or(MutateError::MissingValue(after))?;
+    let mut pos = after_pos + 1;
+
+    // Repair operands: for each operand of the source op, find a value of
+    // the same type defined before the insertion point; fall back to a
+    // resize chain on a random earlier value (§4.1).
+    let mut new_args = Vec::with_capacity(src_inst.args.len());
+    for &a in &src_inst.args {
+        let want = g.ty(a).ok_or(MutateError::MissingValue(a))?.clone();
+        let exact = g.values_before(pos, Some(&want));
+        if let Some(v) = pick(rng, &exact) {
+            new_args.push(v);
+        } else {
+            let any = g.values_before(pos, None);
+            let donor = pick(rng, &any)
+                .ok_or_else(|| MutateError::CannotRepair("no values before insertion".into()))?;
+            let (v, npos, _) = resize_chain(g, pos, donor, &want)?;
+            pos = npos;
+            new_args.push(v);
+        }
+    }
+    let new_val = g.insert_at(pos, src_inst.kind.clone(), &new_args)?;
+    let new_ty = g.ty(new_val).unwrap().clone();
+    let new_pos = g.index_of(new_val).unwrap();
+
+    // Connect the copy's result into the program: prefer an exact-type
+    // downstream operand slot; otherwise adapt the result to a random
+    // downstream slot with a resize chain; otherwise retarget an output.
+    let mut exact_sites = Vec::new();
+    let mut any_sites = Vec::new();
+    for (p, inst) in g.insts().iter().enumerate().skip(new_pos + 1) {
+        for (slot, &arg) in inst.args.iter().enumerate() {
+            if arg == new_val {
+                continue;
+            }
+            let slot_ty = g.ty(arg).unwrap();
+            if *slot_ty == new_ty {
+                exact_sites.push((p, slot));
+            }
+            any_sites.push((p, slot, slot_ty.clone()));
+        }
+    }
+    if let Some((p, slot)) = pick(rng, &exact_sites) {
+        // Same-type replacement may still fail for shape-coupled ops
+        // (e.g. dot); fall through to other sites if so.
+        if g.replace_arg(p, slot, new_val).is_ok() {
+            return Ok(());
+        }
+    }
+    // exact-type output slot?
+    let out_slots: Vec<usize> = g
+        .outputs()
+        .iter()
+        .enumerate()
+        .filter(|(_, &o)| g.ty(o).unwrap() == &new_ty && o != new_val)
+        .map(|(s, _)| s)
+        .collect();
+    if !any_sites.is_empty() {
+        // Adapt the result to a random downstream slot via a resize chain
+        // (the Fig. 5 pad/slice repair), trying a few sites before giving
+        // up. Sites are tracked by the *id* of the consuming instruction
+        // because chain insertion shifts positions.
+        let id_sites: Vec<(ValueId, usize, TType)> = any_sites
+            .iter()
+            .map(|(p, slot, ty)| (g.inst_at(*p).id, *slot, ty.clone()))
+            .collect();
+        for _ in 0..4 {
+            let (site_id, slot, want) = id_sites[rng.below(id_sites.len())].clone();
+            let site_pos = g.index_of(site_id).expect("site still present");
+            let (adapted, _, inserted) = resize_chain(g, site_pos, new_val, &want)?;
+            let site_pos = site_pos + inserted;
+            debug_assert_eq!(g.inst_at(site_pos).id, site_id);
+            if g.replace_arg(site_pos, slot, adapted).is_ok() {
+                return Ok(());
+            }
+        }
+    }
+    if let Some(slot) = pick(rng, &out_slots) {
+        g.replace_output(slot, new_val)
+            .map_err(MutateError::Invalid)?;
+        return Ok(());
+    }
+    Err(MutateError::CannotRepair("no connection site for copied op".into()))
+}
+
+/// The Delete mutation.
+fn apply_delete(g: &mut Graph, target: ValueId, rng: &mut Rng) -> Result<(), MutateError> {
+    let pos = g.index_of(target).ok_or(MutateError::MissingValue(target))?;
+    if !g.inst_at(pos).kind.is_mutable() {
+        return Err(MutateError::CannotRepair("cannot delete a parameter".into()));
+    }
+    let ty = g.ty(target).unwrap().clone();
+    g.remove_at(pos);
+
+    // Repair dangling uses instruction-by-instruction: all dangling
+    // operand slots of one instruction are fixed together (an instruction
+    // may reference the deleted value in several slots). Each repair may
+    // insert resize ops, shifting positions, so re-scan after every fix.
+    loop {
+        let uses = dangling_uses(g, target);
+        let Some(u) = uses.first().copied() else { break };
+        match u {
+            Use::Arg { pos: upos, slot: _ } => {
+                let inst_id = g.inst_at(upos).id;
+                let mut fixed = false;
+                'attempt: for attempt in 0..4 {
+                    let upos_now = g.index_of(inst_id).unwrap();
+                    let mut new_args = g.inst_at(upos_now).args.clone();
+                    for s in 0..new_args.len() {
+                        if new_args[s] != target {
+                            continue;
+                        }
+                        let exact: Vec<ValueId> = g
+                            .values_before(upos_now, Some(&ty))
+                            .into_iter()
+                            .filter(|&v| v != target)
+                            .collect();
+                        if let (Some(v), true) = (pick(rng, &exact), attempt < 3) {
+                            new_args[s] = v;
+                        } else {
+                            // final attempt (or no exact match): resize a
+                            // random donor to the required type
+                            let donors: Vec<ValueId> = g
+                                .values_before(upos_now, None)
+                                .into_iter()
+                                .filter(|&v| v != target)
+                                .collect();
+                            let Some(donor) = pick(rng, &donors) else {
+                                continue 'attempt;
+                            };
+                            let (adapted, _, _) = resize_chain(g, upos_now, donor, &ty)?;
+                            // the chain shifted our instruction; re-read
+                            let upos_shift = g.index_of(inst_id).unwrap();
+                            let _ = upos_shift;
+                            new_args[s] = adapted;
+                        }
+                    }
+                    let upos_now = g.index_of(inst_id).unwrap();
+                    if g.try_set_args(upos_now, &new_args).is_ok() {
+                        fixed = true;
+                        break 'attempt;
+                    }
+                }
+                if !fixed {
+                    return Err(MutateError::CannotRepair(
+                        "no substitute for deleted operand".into(),
+                    ));
+                }
+            }
+            Use::Output { slot } => {
+                let exact: Vec<ValueId> = g
+                    .values_before(g.len(), Some(&ty))
+                    .into_iter()
+                    .filter(|&v| v != target)
+                    .collect();
+                if let Some(v) = pick(rng, &exact) {
+                    g.replace_output(slot, v)?;
+                } else {
+                    let donors: Vec<ValueId> = g
+                        .values_before(g.len(), None)
+                        .into_iter()
+                        .filter(|&v| v != target)
+                        .collect();
+                    let donor = pick(rng, &donors)
+                        .ok_or_else(|| MutateError::CannotRepair("no donor value".into()))?;
+                    let (adapted, _, _) = resize_chain(g, g.len(), donor, &ty)?;
+                    g.replace_output(slot, adapted)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn dangling_uses(g: &Graph, missing: ValueId) -> Vec<Use> {
+    let mut out = Vec::new();
+    for (pos, inst) in g.insts().iter().enumerate() {
+        for (slot, &a) in inst.args.iter().enumerate() {
+            if a == missing {
+                out.push(Use::Arg { pos, slot });
+            }
+        }
+    }
+    for (slot, &o) in g.outputs().iter().enumerate() {
+        if o == missing {
+            out.push(Use::Output { slot });
+        }
+    }
+    out
+}
+
+/// Propose a random edit against the materialized graph `g` (referencing
+/// its value ids). The caller applies it to a clone and checks validity —
+/// the paper's mutate-until-valid loop lives in [`super::search`].
+pub fn random_edit(g: &Graph, rng: &mut Rng) -> Option<Edit> {
+    let mutable: Vec<ValueId> = g
+        .insts()
+        .iter()
+        .filter(|i| i.kind.is_mutable())
+        .map(|i| i.id)
+        .collect();
+    let all: Vec<ValueId> = g.insts().iter().map(|i| i.id).collect();
+    if mutable.is_empty() || all.is_empty() {
+        return None;
+    }
+    let seed = rng.next_u64();
+    let kind = if rng.chance(0.5) {
+        EditKind::Copy {
+            src: *rng.choose(&mutable),
+            after: *rng.choose(&all),
+        }
+    } else {
+        EditKind::Delete {
+            target: *rng.choose(&mutable),
+        }
+    };
+    Some(Edit { kind, seed })
+}
+
+/// Keep proposing random edits until one applies and verifies (§4.1:
+/// "If it fails, the mutation operator selects another mutation until it
+/// finds a valid MLIR variant"). Returns the edit and the mutated graph.
+pub fn valid_random_edit(
+    base: &Graph,
+    rng: &mut Rng,
+    max_tries: usize,
+) -> Option<(Edit, Graph)> {
+    for _ in 0..max_tries {
+        let Some(edit) = random_edit(base, rng) else {
+            return None;
+        };
+        let mut candidate = base.clone();
+        if apply_edit(&mut candidate, &edit).is_ok()
+            && crate::ir::verify::verify(&candidate).is_ok()
+        {
+            return Some((edit, candidate));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{OpKind, ReduceKind};
+    use crate::ir::verify::verify;
+    use crate::util::prop::run_prop;
+
+    /// A graph shaped like the paper's Fig. 5 SGD tail: big enough for
+    /// interesting mutations, with mixed types.
+    fn testbed() -> Graph {
+        let mut g = Graph::new("tb");
+        let x = g.param(TType::of(&[4, 6]));
+        let w = g.param(TType::of(&[6, 3]));
+        let lbl = g.param(TType::of(&[4, 3]));
+        let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+        let sub = g.push(OpKind::Subtract, &[d, lbl]).unwrap();
+        let c = g.constant_scalar(0.25);
+        let cb = g
+            .push(OpKind::Broadcast { dims: vec![4, 3], mapping: vec![] }, &[c])
+            .unwrap();
+        let scaled = g.push(OpKind::Multiply, &[sub, cb]).unwrap();
+        let r = g
+            .push(OpKind::Reduce { dims: vec![0], kind: ReduceKind::Sum }, &[scaled])
+            .unwrap();
+        let e = g.push(OpKind::Exponential, &[r]).unwrap();
+        g.set_outputs(&[scaled, e]);
+        g
+    }
+
+    #[test]
+    fn delete_repairs_uses() {
+        let g = testbed();
+        let mut rng = Rng::new(42);
+        let mut successes = 0;
+        for seed in 0..40u64 {
+            let mut cand = g.clone();
+            // pick random deletable target
+            let t = {
+                let m: Vec<ValueId> = g
+                    .insts()
+                    .iter()
+                    .filter(|i| i.kind.is_mutable())
+                    .map(|i| i.id)
+                    .collect();
+                m[rng.below(m.len())]
+            };
+            let e = Edit { kind: EditKind::Delete { target: t }, seed };
+            if apply_edit(&mut cand, &e).is_ok() {
+                verify(&cand).unwrap_or_else(|err| panic!("delete {t} seed {seed}: {err}"));
+                assert!(cand.index_of(t).is_none(), "target still present");
+                successes += 1;
+            }
+        }
+        assert!(successes > 10, "deletes almost never apply ({successes}/40)");
+    }
+
+    #[test]
+    fn copy_inserts_and_connects() {
+        let g = testbed();
+        let mut rng = Rng::new(43);
+        let mut successes = 0;
+        for _ in 0..60 {
+            if let Some(edit) = random_edit(&g, &mut rng) {
+                if !matches!(edit.kind, EditKind::Copy { .. }) {
+                    continue;
+                }
+                let mut cand = g.clone();
+                if apply_edit(&mut cand, &edit).is_ok() {
+                    verify(&cand).unwrap_or_else(|err| panic!("{edit}: {err}"));
+                    assert!(cand.len() > g.len(), "copy must grow the graph");
+                    successes += 1;
+                }
+            }
+        }
+        assert!(successes > 5, "copies almost never apply ({successes})");
+    }
+
+    #[test]
+    fn edits_replay_deterministically() {
+        let g = testbed();
+        let mut rng = Rng::new(7);
+        let (edit, mutated) = valid_random_edit(&g, &mut rng, 50).expect("finds valid edit");
+        let mut replay = g.clone();
+        apply_edit(&mut replay, &edit).unwrap();
+        assert_eq!(
+            crate::ir::printer::print(&mutated),
+            crate::ir::printer::print(&replay),
+            "same edit+seed must produce the same graph"
+        );
+    }
+
+    #[test]
+    fn valid_random_edit_always_verifies() {
+        run_prop(60, 0xBEEF, |rng| {
+            let g = testbed();
+            match valid_random_edit(&g, rng, 30) {
+                Some((_, cand)) => {
+                    verify(&cand).map_err(|e| format!("invalid: {e}"))?;
+                    // outputs keep their types (fitness contract)
+                    if cand.output_types() != g.output_types() {
+                        return Err("output signature changed".into());
+                    }
+                    Ok(())
+                }
+                None => Ok(()), // acceptable: no valid edit found in budget
+            }
+        });
+    }
+
+    #[test]
+    fn mutated_graphs_still_execute() {
+        use crate::interp::eval;
+        use crate::tensor::Tensor;
+        let g = testbed();
+        let mut rng = Rng::new(11);
+        let mut checked = 0;
+        for _ in 0..20 {
+            if let Some((_, cand)) = valid_random_edit(&g, &mut rng, 30) {
+                let ins = vec![
+                    Tensor::rand_uniform(&[4, 6], -1.0, 1.0, &mut rng),
+                    Tensor::rand_uniform(&[6, 3], -1.0, 1.0, &mut rng),
+                    Tensor::rand_uniform(&[4, 3], 0.0, 1.0, &mut rng),
+                ];
+                let out = eval(&cand, &ins).expect("mutated graph executes");
+                assert_eq!(out.len(), 2);
+                checked += 1;
+            }
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn delete_parameter_rejected() {
+        let g = testbed();
+        let pid = g.insts()[0].id;
+        let mut cand = g.clone();
+        let e = Edit { kind: EditKind::Delete { target: pid }, seed: 1 };
+        assert!(apply_edit(&mut cand, &e).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let g = testbed();
+        let mut cand = g.clone();
+        let e = Edit { kind: EditKind::Delete { target: ValueId(9999) }, seed: 1 };
+        assert!(matches!(apply_edit(&mut cand, &e), Err(MutateError::MissingValue(_))));
+    }
+}

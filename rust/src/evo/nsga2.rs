@@ -1,0 +1,224 @@
+//! NSGA-II primitives (paper §4.4, citing Deb et al. 2002): fast
+//! non-dominated sorting, crowding distance, the crowded-comparison
+//! operator, and environmental selection.
+//!
+//! Objectives are minimized: for GEVO-ML, `(runtime, model error)` —
+//! `argmin(time, error)` per §4.3.
+
+/// A point in objective space (all objectives minimized).
+pub type Objectives = (f64, f64);
+
+/// True if `a` dominates `b` (no worse in all objectives, strictly better
+/// in at least one).
+pub fn dominates(a: Objectives, b: Objectives) -> bool {
+    a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1)
+}
+
+/// Fast non-dominated sort: partition indices into fronts; front 0 is the
+/// Pareto set.
+pub fn non_dominated_sort(points: &[Objectives]) -> Vec<Vec<usize>> {
+    let n = points.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut count = vec![0usize; n]; // how many dominate i
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(points[i], points[j]) {
+                dominated_by[i].push(j);
+                count[j] += 1;
+            } else if dominates(points[j], points[i]) {
+                dominated_by[j].push(i);
+                count[i] += 1;
+            }
+        }
+    }
+    let mut fronts = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                count[j] -= 1;
+                if count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance of each member of a front (Deb et al. §III-B).
+/// Boundary points get `f64::INFINITY`.
+pub fn crowding_distance(points: &[Objectives], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    for obj in 0..2usize {
+        let key = |i: usize| if obj == 0 { points[i].0 } else { points[i].1 };
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| key(front[a]).partial_cmp(&key(front[b])).unwrap());
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = key(front[order[m - 1]]) - key(front[order[0]]);
+        if span <= 0.0 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let prev = key(front[order[w - 1]]);
+            let next = key(front[order[w + 1]]);
+            dist[order[w]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+/// Rank + crowding for a whole population: returns `(rank, distance)` per
+/// index; lower rank is better, higher distance is better within a rank.
+pub fn rank_and_crowd(points: &[Objectives]) -> Vec<(usize, f64)> {
+    let fronts = non_dominated_sort(points);
+    let mut out = vec![(usize::MAX, 0.0); points.len()];
+    for (rank, front) in fronts.iter().enumerate() {
+        let d = crowding_distance(points, front);
+        for (k, &i) in front.iter().enumerate() {
+            out[i] = (rank, d[k]);
+        }
+    }
+    out
+}
+
+/// Crowded-comparison: true if `a` is preferred over `b`.
+pub fn crowded_less(a: (usize, f64), b: (usize, f64)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
+}
+
+/// Environmental selection: pick the `k` best indices by (rank, crowding),
+/// filling whole fronts then truncating the last by crowding distance.
+pub fn select_best(points: &[Objectives], k: usize) -> Vec<usize> {
+    let fronts = non_dominated_sort(points);
+    let mut chosen = Vec::with_capacity(k);
+    for front in &fronts {
+        if chosen.len() + front.len() <= k {
+            chosen.extend_from_slice(front);
+        } else {
+            let d = crowding_distance(points, front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+            for &w in order.iter().take(k - chosen.len()) {
+                chosen.push(front[w]);
+            }
+            break;
+        }
+    }
+    chosen
+}
+
+/// The Pareto front (front-0 indices) of a point set.
+pub fn pareto_front(points: &[Objectives]) -> Vec<usize> {
+    non_dominated_sort(points).into_iter().next().unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates((1.0, 1.0), (2.0, 2.0)));
+        assert!(dominates((1.0, 2.0), (1.0, 3.0)));
+        assert!(!dominates((1.0, 3.0), (2.0, 1.0))); // incomparable
+        assert!(!dominates((1.0, 1.0), (1.0, 1.0))); // equal
+    }
+
+    #[test]
+    fn sort_known_fronts() {
+        // front0: (0,3),(1,1),(3,0); front1: (2,2),(4,1); front2: (5,5)
+        let pts = vec![(0.0, 3.0), (1.0, 1.0), (3.0, 0.0), (2.0, 2.0), (4.0, 1.0), (5.0, 5.0)];
+        let fronts = non_dominated_sort(&pts);
+        assert_eq!(fronts[0], vec![0, 1, 2]);
+        assert_eq!(fronts[1], vec![3, 4]);
+        assert_eq!(fronts[2], vec![5]);
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite() {
+        let pts = vec![(0.0, 3.0), (1.0, 1.0), (3.0, 0.0)];
+        let front = vec![0, 1, 2];
+        let d = crowding_distance(&pts, &front);
+        assert!(d[0].is_infinite());
+        assert!(d[2].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn select_best_prefers_front0_then_spread() {
+        let pts = vec![(0.0, 3.0), (1.0, 1.0), (3.0, 0.0), (2.0, 2.0), (4.0, 1.0)];
+        let sel = select_best(&pts, 3);
+        assert_eq!(sel.len(), 3);
+        for i in [0usize, 1, 2] {
+            assert!(sel.contains(&i), "front-0 member {i} must be selected");
+        }
+        // k=4: picks one of front1 (both boundary => either)
+        let sel4 = select_best(&pts, 4);
+        assert_eq!(sel4.len(), 4);
+    }
+
+    #[test]
+    fn prop_fronts_partition_and_are_mutually_nondominating() {
+        run_prop(100, 0xDEB, |rng: &mut Rng| {
+            let n = rng.range(1, 40);
+            let pts: Vec<Objectives> =
+                (0..n).map(|_| (rng.f64() * 4.0, rng.f64() * 4.0)).collect();
+            let fronts = non_dominated_sort(&pts);
+            let total: usize = fronts.iter().map(|f| f.len()).sum();
+            if total != n {
+                return Err(format!("fronts cover {total} of {n}"));
+            }
+            for front in &fronts {
+                for &i in front {
+                    for &j in front {
+                        if i != j && dominates(pts[i], pts[j]) {
+                            return Err(format!("{i} dominates {j} within one front"));
+                        }
+                    }
+                }
+            }
+            // members of front k+1 are dominated by someone in front k
+            for k in 1..fronts.len() {
+                for &j in &fronts[k] {
+                    if !fronts[k - 1].iter().any(|&i| dominates(pts[i], pts[j])) {
+                        return Err(format!("front {k} member {j} undominated by front {}", k - 1));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_select_best_never_drops_a_dominating_point() {
+        run_prop(100, 0x5E1, |rng: &mut Rng| {
+            let n = rng.range(2, 30);
+            let k = rng.range(1, n);
+            let pts: Vec<Objectives> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+            let sel = select_best(&pts, k);
+            if sel.len() != k {
+                return Err(format!("selected {} of {k}", sel.len()));
+            }
+            // no unselected point dominates a selected point of worse rank
+            let rc = rank_and_crowd(&pts);
+            let worst_sel = sel.iter().map(|&i| rc[i].0).max().unwrap();
+            for i in 0..n {
+                if !sel.contains(&i) && rc[i].0 < worst_sel {
+                    return Err(format!("dropped point {i} with better rank"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,150 @@
+//! The patch genome (paper §4.2).
+//!
+//! "GEVO-ML uses a patch representation in which an individual is
+//! represented as a list of edits to the original program." Each edit
+//! records the *choices* the mutation operator made (source instruction,
+//! anchor position, repair seed) so it can be re-applied to the original
+//! graph — including after crossover reshuffles edit lists between
+//! individuals.
+
+use super::mutate::{apply_edit, MutateError};
+use crate::ir::types::ValueId;
+use crate::ir::Graph;
+
+/// What an edit does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EditKind {
+    /// Copy the instruction that defines `src`, inserting the clone right
+    /// after the instruction that defines `after`; repair operands; then
+    /// connect the clone's value into a downstream use (§4.1/Fig. 5).
+    Copy { src: ValueId, after: ValueId },
+    /// Delete the instruction that defines `target`; repair every
+    /// dangling use with a type-compatible (possibly resized) substitute.
+    Delete { target: ValueId },
+}
+
+/// One replayable edit: the kind plus the seed that drives all random
+/// repair choices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Edit {
+    pub kind: EditKind,
+    pub seed: u64,
+}
+
+impl std::fmt::Display for Edit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            EditKind::Copy { src, after } => write!(f, "copy({src} after {after})"),
+            EditKind::Delete { target } => write!(f, "delete({target})"),
+        }
+    }
+}
+
+/// An individual in the population: an edit list over the original
+/// program, plus cached objectives once evaluated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Individual {
+    pub edits: Vec<Edit>,
+    /// `(runtime, error)` once evaluated; `None` before evaluation.
+    pub objectives: Option<(f64, f64)>,
+}
+
+impl Individual {
+    pub fn original() -> Individual {
+        Individual { edits: vec![], objectives: None }
+    }
+
+    pub fn new(edits: Vec<Edit>) -> Individual {
+        Individual { edits, objectives: None }
+    }
+
+    /// Apply every edit in order to (a clone of) `original`. Any edit
+    /// failing to apply, or a final verification failure, invalidates the
+    /// whole individual — the §4.2 "test if the new combination of edits
+    /// is valid" check.
+    ///
+    /// Dead code is eliminated after the last edit: the paper's execution
+    /// pipeline (IREE) runs its own cleanup passes on the mutated MLIR,
+    /// so ops orphaned by a Delete's use-rewiring would not execute there
+    /// either. This is what lets chains of deletions compound into the
+    /// large runtime cuts of Fig. 4a.
+    pub fn materialize(&self, original: &Graph) -> Result<Graph, MutateError> {
+        let mut g = original.clone();
+        for e in &self.edits {
+            apply_edit(&mut g, e)?;
+        }
+        g.eliminate_dead_code();
+        crate::ir::verify::verify(&g).map_err(MutateError::Invalid)?;
+        Ok(g)
+    }
+
+    /// Stable cache key over the edit list (used by the fitness cache).
+    pub fn cache_key(&self) -> u64 {
+        // FNV-1a over the packed edit encoding.
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        for e in &self.edits {
+            match e.kind {
+                EditKind::Copy { src, after } => {
+                    mix(1);
+                    mix(src.0 as u64);
+                    mix(after.0 as u64);
+                }
+                EditKind::Delete { target } => {
+                    mix(2);
+                    mix(target.0 as u64);
+                }
+            }
+            mix(e.seed);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::OpKind;
+    use crate::ir::types::TType;
+
+    fn base() -> Graph {
+        let mut g = Graph::new("b");
+        let x = g.param(TType::of(&[2, 2]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let t = g.push(OpKind::Tanh, &[e]).unwrap();
+        g.set_outputs(&[t]);
+        g
+    }
+
+    #[test]
+    fn empty_patch_is_identity() {
+        let g = base();
+        let ind = Individual::original();
+        let m = ind.materialize(&g).unwrap();
+        assert_eq!(crate::ir::printer::print(&g), crate::ir::printer::print(&m));
+    }
+
+    #[test]
+    fn cache_key_distinguishes() {
+        let a = Individual::new(vec![Edit {
+            kind: EditKind::Delete { target: ValueId(1) },
+            seed: 7,
+        }]);
+        let b = Individual::new(vec![Edit {
+            kind: EditKind::Delete { target: ValueId(2) },
+            seed: 7,
+        }]);
+        let c = Individual::new(vec![Edit {
+            kind: EditKind::Delete { target: ValueId(1) },
+            seed: 8,
+        }]);
+        assert_ne!(a.cache_key(), b.cache_key());
+        assert_ne!(a.cache_key(), c.cache_key());
+        assert_eq!(a.cache_key(), a.clone().cache_key());
+    }
+}

@@ -1,0 +1,417 @@
+//! The GEVO-ML generation loop (paper §4).
+//!
+//! "The initial population is formed by making copies and applying random
+//! mutations to the original MLIR program. By default, three mutations are
+//! applied to each individual in the initial generation. … Each new
+//! generation of individuals is formed by ranking them according to the
+//! objectives, recombining individuals, applying mutation, comparing the
+//! new variants to a set of elites retained from the previous generation,
+//! and finally selecting the next generation." Elitism keeps the top 16
+//! (§4.4); the remainder is chosen by tournament selection.
+
+use super::crossover::messy_one_point;
+use super::mutate::valid_random_edit;
+use super::nsga2::{crowded_less, pareto_front, rank_and_crowd, select_best, Objectives};
+use super::patch::Individual;
+use crate::ir::Graph;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Evaluates a materialized variant against the workload's test cases,
+/// returning `(runtime, error)` to minimize, or `None` when the variant
+/// fails to execute / produces non-finite output (§4.3).
+pub trait Evaluator: Sync {
+    fn evaluate(&self, g: &Graph) -> Option<Objectives>;
+}
+
+impl<F: Fn(&Graph) -> Option<Objectives> + Sync> Evaluator for F {
+    fn evaluate(&self, g: &Graph) -> Option<Objectives> {
+        self(g)
+    }
+}
+
+/// Search hyper-parameters. Paper defaults where stated; population /
+/// generation counts are scaled to this testbed (DESIGN.md §3).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub pop_size: usize,
+    pub generations: usize,
+    /// Elites copied unchanged each generation (paper: 16).
+    pub elites: usize,
+    /// Mutations applied to each initial individual (paper: 3).
+    pub init_mutations: usize,
+    pub crossover_prob: f64,
+    pub mutation_prob: f64,
+    pub tournament_size: usize,
+    /// Attempts before giving up on finding a valid mutation / crossover.
+    pub max_tries: usize,
+    pub seed: u64,
+    /// Evaluation worker threads.
+    pub workers: usize,
+    pub verbose: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            pop_size: 32,
+            generations: 10,
+            elites: 16,
+            init_mutations: 3,
+            crossover_prob: 0.6,
+            mutation_prob: 0.7,
+            tournament_size: 2,
+            max_tries: 25,
+            seed: 42,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            verbose: false,
+        }
+    }
+}
+
+/// Per-generation statistics.
+#[derive(Debug, Clone)]
+pub struct GenStats {
+    pub gen: usize,
+    pub evaluated: usize,
+    pub valid: usize,
+    pub front_size: usize,
+    pub best_time: f64,
+    pub best_error: f64,
+}
+
+/// Search outcome: the final Pareto archive plus bookkeeping.
+pub struct SearchResult {
+    /// Non-dominated (individual, objectives) pairs over *all* evaluated
+    /// variants, sorted by runtime.
+    pub pareto: Vec<(Individual, Objectives)>,
+    pub history: Vec<GenStats>,
+    pub total_evaluations: usize,
+    pub cache_hits: usize,
+}
+
+/// Run the search. `original` is the unmutated program (the paper's
+/// baseline, the orange diamond in Fig. 4); `eval` scores variants.
+pub fn run(original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) -> SearchResult {
+    let mut rng = Rng::new(cfg.seed);
+    let cache: Mutex<HashMap<u64, Option<Objectives>>> = Mutex::new(HashMap::new());
+    let cache_hits = AtomicUsize::new(0);
+    let total_evals = AtomicUsize::new(0);
+
+    // ---- initial population ------------------------------------------------
+    let mut pop: Vec<Individual> = Vec::with_capacity(cfg.pop_size);
+    pop.push(Individual::original()); // keep the baseline in the race
+    while pop.len() < cfg.pop_size {
+        let mut ind = Individual::original();
+        let mut g = original.clone();
+        for _ in 0..cfg.init_mutations {
+            if let Some((edit, ng)) = valid_random_edit(&g, &mut rng, cfg.max_tries) {
+                ind.edits.push(edit);
+                g = ng;
+            }
+        }
+        pop.push(ind);
+    }
+
+    evaluate_all(original, eval, &mut pop, cfg, &cache, &cache_hits, &total_evals);
+
+    // Archive of every valid evaluated individual (deduped by cache key).
+    let mut archive: HashMap<u64, (Individual, Objectives)> = HashMap::new();
+    let absorb = |archive: &mut HashMap<u64, (Individual, Objectives)>, pop: &[Individual]| {
+        for ind in pop {
+            if let Some(obj) = ind.objectives {
+                archive.entry(ind.cache_key()).or_insert_with(|| (ind.clone(), obj));
+            }
+        }
+    };
+    absorb(&mut archive, &pop);
+
+    let mut history = Vec::new();
+
+    for gen in 0..cfg.generations {
+        // ---- rank current population --------------------------------------
+        let scored: Vec<usize> = (0..pop.len()).filter(|&i| pop[i].objectives.is_some()).collect();
+        let pts: Vec<Objectives> = scored.iter().map(|&i| pop[i].objectives.unwrap()).collect();
+        let rc = rank_and_crowd(&pts);
+
+        // ---- offspring ------------------------------------------------------
+        let mut offspring: Vec<Individual> = Vec::with_capacity(cfg.pop_size);
+        let mut guard = 0usize;
+        while offspring.len() < cfg.pop_size && guard < cfg.pop_size * 20 {
+            guard += 1;
+            let pa = tournament(&scored, &rc, cfg.tournament_size, &mut rng);
+            let pb = tournament(&scored, &rc, cfg.tournament_size, &mut rng);
+            let (mut c1, mut c2) = if rng.chance(cfg.crossover_prob) {
+                messy_one_point(&pop[pa], &pop[pb], &mut rng)
+            } else {
+                (pop[pa].clone(), pop[pb].clone())
+            };
+            for c in [&mut c1, &mut c2] {
+                // §4.2: re-apply the patch to the original; invalid
+                // recombinations are discarded and retried.
+                let Ok(mut g) = c.materialize(original) else { continue };
+                if rng.chance(cfg.mutation_prob) {
+                    if let Some((edit, ng)) = valid_random_edit(&g, &mut rng, cfg.max_tries) {
+                        c.edits.push(edit);
+                        g = ng;
+                    }
+                }
+                let _ = g;
+                c.objectives = None;
+                if offspring.len() < cfg.pop_size {
+                    offspring.push(c.clone());
+                }
+            }
+        }
+
+        evaluate_all(original, eval, &mut offspring, cfg, &cache, &cache_hits, &total_evals);
+        absorb(&mut archive, &offspring);
+
+        // ---- environmental selection: elites + tournament (§4.4) ----------
+        // Dedup by genome and by objective point: without this, a corner
+        // of the front (e.g. the trivial all-deleted predictor) floods
+        // the elite set with duplicates and starves exploration around
+        // the baseline.
+        let mut combined: Vec<Individual> = Vec::new();
+        {
+            let mut seen_keys = std::collections::HashSet::new();
+            let mut seen_obj = std::collections::HashSet::new();
+            for i in pop.iter().chain(offspring.iter()) {
+                let Some((t, e)) = i.objectives else { continue };
+                if !seen_keys.insert(i.cache_key()) {
+                    continue;
+                }
+                let quant = ((t * 1e6) as i64, (e * 1e6) as i64);
+                if !seen_obj.insert(quant) {
+                    continue;
+                }
+                combined.push(i.clone());
+            }
+        }
+        if combined.is_empty() {
+            combined.push(Individual::original());
+            evaluate_all(original, eval, &mut combined, cfg, &cache, &cache_hits, &total_evals);
+        }
+        let cpts: Vec<Objectives> = combined.iter().map(|i| i.objectives.unwrap()).collect();
+        let elite_idx = select_best(&cpts, cfg.elites.min(combined.len()));
+        let mut next: Vec<Individual> = elite_idx.iter().map(|&i| combined[i].clone()).collect();
+        let crc = rank_and_crowd(&cpts);
+        let all_idx: Vec<usize> = (0..combined.len()).collect();
+        while next.len() < cfg.pop_size {
+            let w = tournament(&all_idx, &crc, cfg.tournament_size, &mut rng);
+            next.push(combined[w].clone());
+        }
+        pop = next;
+
+        // ---- stats -----------------------------------------------------------
+        let valid = pop.iter().filter(|i| i.objectives.is_some()).count();
+        let apts: Vec<Objectives> = archive.values().map(|(_, o)| *o).collect();
+        let front = pareto_front(&apts);
+        let best_time = front.iter().map(|&i| apts[i].0).fold(f64::INFINITY, f64::min);
+        let best_error = front.iter().map(|&i| apts[i].1).fold(f64::INFINITY, f64::min);
+        let st = GenStats {
+            gen,
+            evaluated: total_evals.load(Ordering::Relaxed),
+            valid,
+            front_size: front.len(),
+            best_time,
+            best_error,
+        };
+        if cfg.verbose {
+            eprintln!(
+                "[gen {:>3}] evals={:<6} front={:<3} best_time={:.4} best_err={:.4}",
+                st.gen, st.evaluated, st.front_size, st.best_time, st.best_error
+            );
+        }
+        history.push(st);
+    }
+
+    // ---- final Pareto front over the archive --------------------------------
+    let entries: Vec<(Individual, Objectives)> = archive.into_values().collect();
+    let pts: Vec<Objectives> = entries.iter().map(|(_, o)| *o).collect();
+    let mut front: Vec<(Individual, Objectives)> =
+        pareto_front(&pts).into_iter().map(|i| entries[i].clone()).collect();
+    front.sort_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap());
+
+    SearchResult {
+        pareto: front,
+        history,
+        total_evaluations: total_evals.load(Ordering::Relaxed),
+        cache_hits: cache_hits.load(Ordering::Relaxed),
+    }
+}
+
+/// Binary (k-ary) tournament by crowded comparison over scored indices.
+fn tournament(scored: &[usize], rc: &[(usize, f64)], k: usize, rng: &mut Rng) -> usize {
+    debug_assert!(!scored.is_empty());
+    let mut best_slot = rng.below(scored.len());
+    for _ in 1..k.max(1) {
+        let challenger = rng.below(scored.len());
+        if crowded_less(rc[challenger], rc[best_slot]) {
+            best_slot = challenger;
+        }
+    }
+    scored[best_slot]
+}
+
+/// Materialize + evaluate every unevaluated individual, in parallel, with
+/// a shared fitness cache keyed by the edit list.
+fn evaluate_all(
+    original: &Graph,
+    eval: &dyn Evaluator,
+    pop: &mut [Individual],
+    cfg: &SearchConfig,
+    cache: &Mutex<HashMap<u64, Option<Objectives>>>,
+    cache_hits: &AtomicUsize,
+    total_evals: &AtomicUsize,
+) {
+    let todo: Vec<usize> = (0..pop.len()).filter(|&i| pop[i].objectives.is_none()).collect();
+    let results: Vec<Mutex<Option<Option<Objectives>>>> =
+        todo.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = cfg.workers.max(1).min(todo.len().max(1));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let w = next.fetch_add(1, Ordering::Relaxed);
+                if w >= todo.len() {
+                    break;
+                }
+                let ind = &pop[todo[w]];
+                let key = ind.cache_key();
+                if let Some(hit) = cache.lock().unwrap().get(&key).copied() {
+                    cache_hits.fetch_add(1, Ordering::Relaxed);
+                    *results[w].lock().unwrap() = Some(hit);
+                    continue;
+                }
+                let obj = match ind.materialize(original) {
+                    Ok(g) => {
+                        total_evals.fetch_add(1, Ordering::Relaxed);
+                        eval.evaluate(&g)
+                    }
+                    Err(_) => None,
+                };
+                cache.lock().unwrap().insert(key, obj);
+                *results[w].lock().unwrap() = Some(obj);
+            });
+        }
+    });
+    for (w, &i) in todo.iter().enumerate() {
+        pop[i].objectives = results[w].lock().unwrap().flatten();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{OpKind, ReduceKind};
+    use crate::ir::types::TType;
+
+    /// Toy workload: the objective rewards deleting FLOPs (runtime =
+    /// normalized flops) while error = |output - baseline output| on one
+    /// test input, so the search must find cheap-but-close variants.
+    fn toy() -> (Graph, impl Evaluator) {
+        let mut g = Graph::new("toy");
+        let x = g.param(TType::of(&[4, 4]));
+        let e1 = g.push(OpKind::Exponential, &[x]).unwrap();
+        let t = g.push(OpKind::Tanh, &[e1]).unwrap();
+        let a = g.push(OpKind::Add, &[t, x]).unwrap();
+        let r = g
+            .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[a])
+            .unwrap();
+        g.set_outputs(&[r]);
+        let base_flops = g.total_flops() as f64;
+        let input = crate::tensor::Tensor::iota(&[4, 4]);
+        let baseline = crate::interp::eval(&g, &[input.clone()]).unwrap()[0].item() as f64;
+        let eval = move |vg: &Graph| -> Option<Objectives> {
+            let out = crate::interp::eval(vg, &[input.clone()]).ok()?;
+            if out[0].has_non_finite() {
+                return None;
+            }
+            let err = (out[0].item() as f64 - baseline).abs() / baseline.abs().max(1e-9);
+            let time = vg.total_flops() as f64 / base_flops;
+            Some((time, err))
+        };
+        (g, eval)
+    }
+
+    #[test]
+    fn search_runs_and_keeps_baseline_on_front() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 12,
+            generations: 4,
+            elites: 4,
+            workers: 2,
+            seed: 1,
+            ..Default::default()
+        };
+        let res = run(&g, &eval, &cfg);
+        assert!(!res.pareto.is_empty());
+        assert!(res.total_evaluations > 0);
+        // the baseline (error 0, time 1) or something dominating it is on
+        // the front: no front point with error==0 may have time > 1
+        for (_, (t, e)) in &res.pareto {
+            if *e <= 1e-12 {
+                assert!(*t <= 1.0 + 1e-9, "error-free point slower than baseline");
+            }
+        }
+        assert_eq!(res.history.len(), 4);
+    }
+
+    #[test]
+    fn search_finds_cheaper_variants() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 16,
+            generations: 6,
+            elites: 6,
+            workers: 2,
+            seed: 3,
+            ..Default::default()
+        };
+        let res = run(&g, &eval, &cfg);
+        let cheapest = res.pareto.iter().map(|(_, o)| o.0).fold(f64::INFINITY, f64::min);
+        assert!(
+            cheapest < 1.0,
+            "expected a variant cheaper than baseline, cheapest = {cheapest}"
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 8,
+            generations: 3,
+            elites: 4,
+            workers: 1,
+            seed: 9,
+            ..Default::default()
+        };
+        let a = run(&g, &eval, &cfg);
+        let b = run(&g, &eval, &cfg);
+        let pa: Vec<Objectives> = a.pareto.iter().map(|(_, o)| *o).collect();
+        let pb: Vec<Objectives> = b.pareto.iter().map(|(_, o)| *o).collect();
+        assert_eq!(pa, pb, "same seed must reproduce the same front");
+    }
+
+    #[test]
+    fn cache_hits_accumulate() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 10,
+            generations: 5,
+            elites: 8,
+            workers: 2,
+            seed: 5,
+            ..Default::default()
+        };
+        let res = run(&g, &eval, &cfg);
+        // elites are re-selected every generation; with caching they are
+        // never re-evaluated, so hits must be nonzero in a 5-gen run
+        assert!(res.cache_hits > 0, "expected cache hits, got 0");
+    }
+}

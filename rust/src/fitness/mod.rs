@@ -1,0 +1,80 @@
+//! Fitness evaluation (paper §4.3): `argmin(time, error)`.
+//!
+//! Two workloads, as in the paper:
+//!
+//! * [`prediction`] — run the (mutated) forward graph over the fitness
+//!   split; objectives = (runtime, 1 − accuracy). MobileNet/CIFAR in the
+//!   paper.
+//! * [`training`] — re-train from a fixed init with the (mutated)
+//!   train-step graph; objectives = (training runtime, final training
+//!   error). 2fcNet/MNIST in the paper.
+//!
+//! Runtime can be *measured* (wall-clock, what the paper optimizes) or
+//! *modeled* (normalized FLOPs — deterministic, used by tests and for
+//! reproducible experiment tables; DESIGN.md §5). Variants that fail to
+//! execute or produce non-finite values evaluate to `None` and are
+//! discarded, per §4.3 ("requires only that individuals execute
+//! successfully").
+
+pub mod prediction;
+pub mod training;
+
+/// How the runtime objective is produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeMetric {
+    /// Deterministic: `variant FLOPs / baseline FLOPs`.
+    Flops,
+    /// Measured wall-clock seconds of the evaluation.
+    WallClock,
+    /// Geometric mean of the FLOP ratio and the wall-clock ratio, damping
+    /// timer noise while keeping real-time signal.
+    Blend,
+}
+
+impl RuntimeMetric {
+    pub fn parse(s: &str) -> Option<RuntimeMetric> {
+        match s {
+            "flops" => Some(RuntimeMetric::Flops),
+            "wall" | "wallclock" => Some(RuntimeMetric::WallClock),
+            "blend" => Some(RuntimeMetric::Blend),
+            _ => None,
+        }
+    }
+}
+
+pub(crate) fn combine_runtime(
+    metric: RuntimeMetric,
+    flops_ratio: f64,
+    wall_seconds: f64,
+    base_wall: f64,
+) -> f64 {
+    match metric {
+        RuntimeMetric::Flops => flops_ratio,
+        RuntimeMetric::WallClock => wall_seconds,
+        RuntimeMetric::Blend => {
+            let wall_ratio = (wall_seconds / base_wall.max(1e-12)).max(1e-9);
+            (flops_ratio.max(1e-9) * wall_ratio).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combine_modes() {
+        assert_eq!(combine_runtime(RuntimeMetric::Flops, 0.5, 9.0, 1.0), 0.5);
+        assert_eq!(combine_runtime(RuntimeMetric::WallClock, 0.5, 9.0, 1.0), 9.0);
+        let b = combine_runtime(RuntimeMetric::Blend, 0.25, 1.0, 1.0);
+        assert!((b - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metric_parse() {
+        assert_eq!(RuntimeMetric::parse("flops"), Some(RuntimeMetric::Flops));
+        assert_eq!(RuntimeMetric::parse("wall"), Some(RuntimeMetric::WallClock));
+        assert_eq!(RuntimeMetric::parse("blend"), Some(RuntimeMetric::Blend));
+        assert_eq!(RuntimeMetric::parse("x"), None);
+    }
+}

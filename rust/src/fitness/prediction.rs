@@ -1,0 +1,153 @@
+//! The model-prediction workload (paper §4.3 / §5: MobileNet + CIFAR10).
+//!
+//! "fitness is evaluated … simply by passing dataset into the pre-trained
+//! model and recording the inference time and prediction error." The
+//! fitness split is the paper's training set; the held-out split is used
+//! post hoc by [`PredictionWorkload::post_hoc`].
+
+use super::{combine_runtime, RuntimeMetric};
+use crate::data::Dataset;
+use crate::evo::nsga2::Objectives;
+use crate::evo::search::Evaluator;
+use crate::ir::Graph;
+use crate::tensor::Tensor;
+use std::time::Instant;
+
+/// Prediction-fitness evaluator over pre-built batches.
+pub struct PredictionWorkload {
+    /// Batches of (x, onehot) from the fitness split.
+    fit_batches: Vec<(Tensor, Vec<usize>)>,
+    /// Held-out batches for post-hoc verification (§4.3).
+    test_batches: Vec<(Tensor, Vec<usize>)>,
+    baseline_flops: f64,
+    baseline_wall: f64,
+    pub metric: RuntimeMetric,
+}
+
+impl PredictionWorkload {
+    /// Build from a baseline graph and datasets. `fit` is subsampled to
+    /// `fit_batches` batches to bound per-variant cost (the paper uses the
+    /// full 50k set on a P100; we scale — DESIGN.md §3).
+    pub fn new(
+        baseline: &Graph,
+        batch: usize,
+        fit: &Dataset,
+        test: &Dataset,
+        fit_batches: usize,
+        metric: RuntimeMetric,
+    ) -> PredictionWorkload {
+        let mk = |d: &Dataset, cap: usize| -> Vec<(Tensor, Vec<usize>)> {
+            d.batches(batch)
+                .into_iter()
+                .take(cap)
+                .enumerate()
+                .map(|(bi, (x, _))| {
+                    let labels = d.labels[bi * batch..(bi + 1) * batch].to_vec();
+                    (x, labels)
+                })
+                .collect()
+        };
+        let fitb = mk(fit, fit_batches);
+        let testb = mk(test, usize::MAX);
+        let mut w = PredictionWorkload {
+            fit_batches: fitb,
+            test_batches: testb,
+            baseline_flops: baseline.total_flops() as f64,
+            baseline_wall: 1.0,
+            metric,
+        };
+        // calibrate baseline wall-clock
+        let t0 = Instant::now();
+        let _ = w.run(baseline, false);
+        w.baseline_wall = t0.elapsed().as_secs_f64().max(1e-9);
+        w
+    }
+
+    /// Execute the graph over a split; returns (accuracy, wall seconds),
+    /// or `None` on failure / non-finite output.
+    fn run(&self, g: &Graph, test_split: bool) -> Option<(f64, f64)> {
+        let batches = if test_split { &self.test_batches } else { &self.fit_batches };
+        let t0 = Instant::now();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (x, labels) in batches {
+            let out = crate::interp::eval(g, std::slice::from_ref(x)).ok()?;
+            let probs = &out[0];
+            if probs.has_non_finite() {
+                return None;
+            }
+            let preds = crate::tensor::ops::argmax_last(probs);
+            for (row, &p) in preds.data().iter().enumerate() {
+                if p as usize == labels[row] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Some((correct as f64 / total.max(1) as f64, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Post-hoc evaluation on the held-out split (§4.3's "evaluated
+    /// against a separate dataset unseen to GEVO-ML").
+    pub fn post_hoc(&self, g: &Graph) -> Option<Objectives> {
+        let (acc, wall) = self.run(g, true)?;
+        let fr = g.total_flops() as f64 / self.baseline_flops;
+        Some((combine_runtime(self.metric, fr, wall, self.baseline_wall), 1.0 - acc))
+    }
+
+    /// Baseline objectives on the fitness split (the orange diamond).
+    pub fn baseline_point(&self, baseline: &Graph) -> Objectives {
+        self.evaluate(baseline).expect("baseline must evaluate")
+    }
+}
+
+impl Evaluator for PredictionWorkload {
+    fn evaluate(&self, g: &Graph) -> Option<Objectives> {
+        let (acc, wall) = self.run(g, false)?;
+        let fr = g.total_flops() as f64 / self.baseline_flops;
+        Some((combine_runtime(self.metric, fr, wall, self.baseline_wall), 1.0 - acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::patterns;
+    use crate::models::mobilenet::{self, KeyMutation, MobileNetSpec};
+
+    fn setup() -> (MobileNetSpec, Graph, PredictionWorkload) {
+        let spec = MobileNetSpec { batch: 4, side: 16, classes: 10, width: 4, blocks: 3 };
+        let w = mobilenet::random_weights(&spec, 1);
+        let g = mobilenet::predict_graph(&spec, &w);
+        let data = patterns::generate(64, spec.side, 2);
+        let (fit, test) = data.split(40);
+        let wl = PredictionWorkload::new(&g, spec.batch, &fit, &test, 4, RuntimeMetric::Flops);
+        (spec, g, wl)
+    }
+
+    #[test]
+    fn baseline_evaluates_at_unit_time() {
+        let (_, g, wl) = setup();
+        let (t, e) = wl.evaluate(&g).unwrap();
+        assert!((t - 1.0).abs() < 1e-9, "flops metric baseline = 1.0, got {t}");
+        assert!((0.0..=1.0).contains(&e));
+    }
+
+    #[test]
+    fn cheaper_variant_scores_lower_time() {
+        let (_, g, wl) = setup();
+        let mut g1 = g.clone();
+        mobilenet::key_mutations(&mut g1, &[KeyMutation::DropLastConv]);
+        let (t1, _) = wl.evaluate(&g1).unwrap();
+        assert!(t1 < 1.0, "dropped conv should be cheaper, got {t1}");
+    }
+
+    #[test]
+    fn post_hoc_uses_other_split() {
+        let (_, g, wl) = setup();
+        let a = wl.evaluate(&g).unwrap();
+        let b = wl.post_hoc(&g).unwrap();
+        // both valid; error values may differ between splits
+        assert!((0.0..=1.0).contains(&a.1) && (0.0..=1.0).contains(&b.1));
+    }
+}

@@ -1,0 +1,215 @@
+//! Graph interpreter — the execution engine for the inner fitness loop
+//! (the analog of the paper's IREE runtime executing mutated MLIR).
+//!
+//! Deterministic, straight-line evaluation of a verified [`Graph`] over
+//! the [`crate::tensor`] kernels. The fitness objective's *measured*
+//! runtime component is the wall-clock of [`eval`]; the *deterministic*
+//! component is [`Graph::total_flops`] (DESIGN.md §5).
+
+use crate::ir::graph::Graph;
+use crate::ir::op::OpKind;
+use crate::ir::types::ValueId;
+use crate::tensor::{ops, Tensor};
+use std::collections::HashMap;
+
+/// Interpreter failure (shape bugs are caught by the verifier; these are
+/// runtime-only conditions).
+#[derive(Debug, thiserror::Error)]
+pub enum EvalError {
+    #[error("eval: wrong argument count: got {got}, graph wants {want}")]
+    ArgCount { got: usize, want: usize },
+    #[error("eval: argument {index} has shape {got:?}, graph wants {want:?}")]
+    ArgShape {
+        index: usize,
+        got: Vec<usize>,
+        want: Vec<usize>,
+    },
+    #[error("eval: value {0} not materialized (corrupt graph?)")]
+    Missing(ValueId),
+}
+
+/// Evaluate `g` on `inputs` (one tensor per entry parameter, in index
+/// order), returning the output tensors in order.
+pub fn eval(g: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, EvalError> {
+    let want = g.num_params();
+    if inputs.len() != want {
+        return Err(EvalError::ArgCount { got: inputs.len(), want });
+    }
+    let mut env: HashMap<ValueId, Tensor> = HashMap::with_capacity(g.len());
+    for inst in g.insts() {
+        let get = |id: ValueId| env.get(&id).ok_or(EvalError::Missing(id));
+        let out = match &inst.kind {
+            OpKind::Parameter { index } => {
+                let t = &inputs[*index];
+                if t.dims() != inst.ty.dims.as_slice() {
+                    return Err(EvalError::ArgShape {
+                        index: *index,
+                        got: t.dims().to_vec(),
+                        want: inst.ty.dims.clone(),
+                    });
+                }
+                t.clone()
+            }
+            OpKind::Constant { value } => value.clone(),
+            OpKind::Add => ops::add(get(inst.args[0])?, get(inst.args[1])?),
+            OpKind::Subtract => ops::sub(get(inst.args[0])?, get(inst.args[1])?),
+            OpKind::Multiply => ops::mul(get(inst.args[0])?, get(inst.args[1])?),
+            OpKind::Divide => ops::div(get(inst.args[0])?, get(inst.args[1])?),
+            OpKind::Maximum => ops::maximum(get(inst.args[0])?, get(inst.args[1])?),
+            OpKind::Minimum => ops::minimum(get(inst.args[0])?, get(inst.args[1])?),
+            OpKind::CompareGt => ops::compare_gt(get(inst.args[0])?, get(inst.args[1])?),
+            OpKind::Exponential => ops::exp(get(inst.args[0])?),
+            OpKind::Log => ops::log(get(inst.args[0])?),
+            OpKind::Negate => ops::neg(get(inst.args[0])?),
+            OpKind::Sqrt => ops::sqrt(get(inst.args[0])?),
+            OpKind::Rsqrt => ops::rsqrt(get(inst.args[0])?),
+            OpKind::Tanh => ops::tanh(get(inst.args[0])?),
+            OpKind::Select => ops::select(
+                get(inst.args[0])?,
+                get(inst.args[1])?,
+                get(inst.args[2])?,
+            ),
+            OpKind::Dot => ops::dot(get(inst.args[0])?, get(inst.args[1])?),
+            OpKind::Reshape { dims } => get(inst.args[0])?.reshaped(dims),
+            OpKind::Broadcast { dims, mapping } => {
+                ops::broadcast_in_dim(get(inst.args[0])?, dims, mapping)
+            }
+            OpKind::Transpose { perm } => ops::transpose(get(inst.args[0])?, perm),
+            OpKind::Pad { low, high, value } => {
+                ops::pad(get(inst.args[0])?, low, high, *value)
+            }
+            OpKind::Slice { starts, limits } => {
+                ops::slice(get(inst.args[0])?, starts, limits)
+            }
+            OpKind::Concat { dim } => {
+                ops::concat(&[get(inst.args[0])?, get(inst.args[1])?], *dim)
+            }
+            OpKind::Reduce { dims, kind } => ops::reduce(get(inst.args[0])?, dims, *kind),
+            OpKind::Conv2d { stride, same } => {
+                ops::conv2d(get(inst.args[0])?, get(inst.args[1])?, *stride, *same)
+            }
+            OpKind::DepthwiseConv2d { stride, same } => {
+                ops::depthwise_conv2d(get(inst.args[0])?, get(inst.args[1])?, *stride, *same)
+            }
+            OpKind::GlobalAvgPool => ops::global_avg_pool(get(inst.args[0])?),
+        };
+        debug_assert_eq!(
+            out.dims(),
+            inst.ty.dims.as_slice(),
+            "interpreter/type-inference disagreement on {}",
+            inst.kind.mnemonic()
+        );
+        env.insert(inst.id, out);
+    }
+    g.outputs()
+        .iter()
+        .map(|o| env.get(o).cloned().ok_or(EvalError::Missing(*o)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::ReduceKind;
+    use crate::ir::types::TType;
+    use crate::tensor::Shape;
+
+    /// The paper's Fig. 1 program: a 2-layer fully-connected network
+    /// (flatten → dense → relu → dense → softmax) written op-for-op like
+    /// the MLIR listing. Checks the interpreter end-to-end.
+    #[test]
+    fn fig1_two_layer_softmax() {
+        let (b, i, h, c) = (2usize, 4, 3, 2);
+        let mut g = Graph::new("fig1");
+        let x = g.param(TType::of(&[b, i]));
+        let w1 = g.constant(Tensor::full(&[i, h], 0.1));
+        let b1 = g.constant(Tensor::full(&[h], 0.5));
+        let w2 = g.constant(Tensor::full(&[h, c], 0.2));
+        let b2 = g.constant(Tensor::full(&[c], -0.1));
+        // %12 dot / %13 broadcast / %14 add / %15 maximum
+        let d1 = g.push(OpKind::Dot, &[x, w1]).unwrap();
+        let b1b = g
+            .push(OpKind::Broadcast { dims: vec![b, h], mapping: vec![1] }, &[b1])
+            .unwrap();
+        let a1 = g.push(OpKind::Add, &[d1, b1b]).unwrap();
+        let zero = g.constant_scalar(0.0);
+        let zb = g
+            .push(OpKind::Broadcast { dims: vec![b, h], mapping: vec![] }, &[zero])
+            .unwrap();
+        let r1 = g.push(OpKind::Maximum, &[a1, zb]).unwrap();
+        // second dense
+        let d2 = g.push(OpKind::Dot, &[r1, w2]).unwrap();
+        let b2b = g
+            .push(OpKind::Broadcast { dims: vec![b, c], mapping: vec![1] }, &[b2])
+            .unwrap();
+        let a2 = g.push(OpKind::Add, &[d2, b2b]).unwrap();
+        // softmax: max / subtract / exp / sum / divide
+        let m = g
+            .push(OpKind::Reduce { dims: vec![1], kind: ReduceKind::Max }, &[a2])
+            .unwrap();
+        let mb = g
+            .push(OpKind::Broadcast { dims: vec![b, c], mapping: vec![0] }, &[m])
+            .unwrap();
+        let s = g.push(OpKind::Subtract, &[a2, mb]).unwrap();
+        let ex = g.push(OpKind::Exponential, &[s]).unwrap();
+        let su = g
+            .push(OpKind::Reduce { dims: vec![1], kind: ReduceKind::Sum }, &[ex])
+            .unwrap();
+        let sb = g
+            .push(OpKind::Broadcast { dims: vec![b, c], mapping: vec![0] }, &[su])
+            .unwrap();
+        let sm = g.push(OpKind::Divide, &[ex, sb]).unwrap();
+        g.set_outputs(&[sm]);
+        crate::ir::verify::verify(&g).unwrap();
+
+        let input = Tensor::iota(&[b, i]);
+        let out = eval(&g, &[input]).unwrap();
+        let probs = &out[0];
+        assert_eq!(probs.dims(), &[b, c]);
+        // softmax rows sum to 1
+        for r in 0..b {
+            let sum: f32 = (0..c).map(|j| probs.at(&[r, j])).sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {r} sums to {sum}");
+        }
+        // symmetric weights → uniform distribution
+        assert!((probs.at(&[0, 0]) - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rejects_wrong_arity_and_shape() {
+        let mut g = Graph::new("t");
+        let x = g.param(TType::of(&[2, 2]));
+        let y = g.push(OpKind::Exponential, &[x]).unwrap();
+        g.set_outputs(&[y]);
+        assert!(matches!(eval(&g, &[]), Err(EvalError::ArgCount { .. })));
+        let bad = Tensor::zeros(&[3, 3]);
+        assert!(matches!(eval(&g, &[bad]), Err(EvalError::ArgShape { .. })));
+    }
+
+    #[test]
+    fn multi_output_order() {
+        let mut g = Graph::new("t");
+        let x = g.param(TType::of(&[2]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let n = g.push(OpKind::Negate, &[x]).unwrap();
+        g.set_outputs(&[n, e, x]);
+        let out = eval(&g, &[Tensor::new(Shape::of(&[2]), vec![0.0, 1.0])]).unwrap();
+        assert_eq!(out[0].data(), &[0.0, -1.0]);
+        assert!((out[1].at(&[1]) - std::f32::consts::E).abs() < 1e-5);
+        assert_eq!(out[2].data(), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn select_and_compare() {
+        let mut g = Graph::new("t");
+        let a = g.param(TType::of(&[3]));
+        let b = g.param(TType::of(&[3]));
+        let p = g.push(OpKind::CompareGt, &[a, b]).unwrap();
+        let s = g.push(OpKind::Select, &[p, a, b]).unwrap(); // max(a,b)
+        g.set_outputs(&[s]);
+        let av = Tensor::new(Shape::of(&[3]), vec![1.0, 5.0, 2.0]);
+        let bv = Tensor::new(Shape::of(&[3]), vec![3.0, 4.0, 2.0]);
+        let out = eval(&g, &[av, bv]).unwrap();
+        assert_eq!(out[0].data(), &[3.0, 5.0, 2.0]);
+    }
+}

@@ -1,0 +1,532 @@
+//! The IR graph: an SSA instruction list in execution order, with the
+//! edit API (insert / delete / rewire) that GEVO-ML's mutation operators
+//! drive, plus use-def queries and reporting helpers (op census for
+//! Table 1, FLOP totals for the runtime objective).
+
+use super::op::{flops, infer, OpKind};
+use super::types::{IrError, TType, ValueId};
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// One SSA instruction.
+#[derive(Debug, Clone)]
+pub struct Inst {
+    /// Unique id (never reused within a graph).
+    pub id: ValueId,
+    pub kind: OpKind,
+    pub args: Vec<ValueId>,
+    pub ty: TType,
+    /// Optional human label ("dense1", "bn3_gamma", …) carried through
+    /// mutations; used by the mutation analysis in §6.1/§6.2 and Table 1.
+    pub label: Option<String>,
+}
+
+/// An SSA graph (one function: parameters → outputs).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    insts: Vec<Inst>,
+    outputs: Vec<ValueId>,
+    next_id: u32,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph {
+            name: name.to_string(),
+            insts: Vec::new(),
+            outputs: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    // ---- construction ----------------------------------------------------
+
+    fn fresh_id(&mut self) -> ValueId {
+        let id = ValueId(self.next_id);
+        self.next_id += 1;
+        id
+    }
+
+    /// Append an entry parameter of the given type. Parameters may appear
+    /// anywhere in the list but are conventionally first; their `index`
+    /// is the entry-signature position.
+    pub fn param(&mut self, ty: TType) -> ValueId {
+        let index = self
+            .insts
+            .iter()
+            .filter(|i| matches!(i.kind, OpKind::Parameter { .. }))
+            .count();
+        let id = self.fresh_id();
+        self.insts.push(Inst {
+            id,
+            kind: OpKind::Parameter { index },
+            args: vec![],
+            ty,
+            label: None,
+        });
+        id
+    }
+
+    /// Append a constant.
+    pub fn constant(&mut self, value: Tensor) -> ValueId {
+        let ty = TType::of(value.dims());
+        let id = self.fresh_id();
+        self.insts.push(Inst {
+            id,
+            kind: OpKind::Constant { value },
+            args: vec![],
+            ty,
+            label: None,
+        });
+        id
+    }
+
+    pub fn constant_scalar(&mut self, v: f32) -> ValueId {
+        self.constant(Tensor::scalar(v))
+    }
+
+    /// Append an op; infers and records the result type.
+    pub fn push(&mut self, kind: OpKind, args: &[ValueId]) -> Result<ValueId, IrError> {
+        let pos = self.insts.len();
+        self.insert_at(pos, kind, args)
+    }
+
+    /// Append an op with a label.
+    pub fn push_labeled(
+        &mut self,
+        kind: OpKind,
+        args: &[ValueId],
+        label: &str,
+    ) -> Result<ValueId, IrError> {
+        let id = self.push(kind, args)?;
+        self.inst_mut(id).unwrap().label = Some(label.to_string());
+        Ok(id)
+    }
+
+    /// Insert an op at position `pos` (before the instruction currently at
+    /// `pos`). All `args` must be defined strictly before `pos`. This is
+    /// the primitive behind the `Copy` mutation.
+    pub fn insert_at(
+        &mut self,
+        pos: usize,
+        kind: OpKind,
+        args: &[ValueId],
+    ) -> Result<ValueId, IrError> {
+        if pos > self.insts.len() {
+            return Err(IrError::Graph(format!("insert position {pos} out of range")));
+        }
+        for &a in args {
+            match self.index_of(a) {
+                None => return Err(IrError::UnknownValue(a)),
+                Some(i) if i >= pos => return Err(IrError::UseBeforeDef(a)),
+                _ => {}
+            }
+        }
+        let ty = match &kind {
+            OpKind::Constant { value } => TType::of(value.dims()),
+            OpKind::Parameter { .. } => {
+                return Err(IrError::Graph("insert parameters via Graph::param".into()))
+            }
+            k => {
+                let arg_tys: Vec<&TType> = args.iter().map(|a| self.ty(*a).unwrap()).collect();
+                infer(k, &arg_tys)?
+            }
+        };
+        let id = self.fresh_id();
+        self.insts.insert(
+            pos,
+            Inst {
+                id,
+                kind,
+                args: args.to_vec(),
+                ty,
+                label: None,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Set the graph outputs.
+    pub fn set_outputs(&mut self, outs: &[ValueId]) {
+        self.outputs = outs.to_vec();
+    }
+
+    /// Reassemble a graph from raw parts (parser / JSON import). Ids are
+    /// taken as-is; `next_id` resumes above the max. The result is
+    /// verified before being returned.
+    pub fn from_parts(
+        name: &str,
+        insts: Vec<Inst>,
+        outputs: Vec<ValueId>,
+    ) -> Result<Graph, IrError> {
+        let next_id = insts.iter().map(|i| i.id.0 + 1).max().unwrap_or(0);
+        let g = Graph {
+            name: name.to_string(),
+            insts,
+            outputs,
+            next_id,
+        };
+        super::verify::verify(&g)?;
+        Ok(g)
+    }
+
+    // ---- queries -----------------------------------------------------------
+
+    pub fn insts(&self) -> &[Inst] {
+        &self.insts
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    pub fn outputs(&self) -> &[ValueId] {
+        &self.outputs
+    }
+
+    pub fn index_of(&self, id: ValueId) -> Option<usize> {
+        self.insts.iter().position(|i| i.id == id)
+    }
+
+    pub fn inst(&self, id: ValueId) -> Option<&Inst> {
+        self.insts.iter().find(|i| i.id == id)
+    }
+
+    pub fn inst_mut(&mut self, id: ValueId) -> Option<&mut Inst> {
+        self.insts.iter_mut().find(|i| i.id == id)
+    }
+
+    pub fn inst_at(&self, pos: usize) -> &Inst {
+        &self.insts[pos]
+    }
+
+    pub fn ty(&self, id: ValueId) -> Option<&TType> {
+        self.inst(id).map(|i| &i.ty)
+    }
+
+    /// Entry parameter types in index order.
+    pub fn param_types(&self) -> Vec<TType> {
+        let mut ps: Vec<(usize, TType)> = self
+            .insts
+            .iter()
+            .filter_map(|i| match i.kind {
+                OpKind::Parameter { index } => Some((index, i.ty.clone())),
+                _ => None,
+            })
+            .collect();
+        ps.sort_by_key(|(idx, _)| *idx);
+        ps.into_iter().map(|(_, t)| t).collect()
+    }
+
+    /// Output types in order.
+    pub fn output_types(&self) -> Vec<TType> {
+        self.outputs
+            .iter()
+            .map(|o| self.ty(*o).expect("output refers to unknown value").clone())
+            .collect()
+    }
+
+    /// All uses of `id`: instruction positions + argument slots, plus
+    /// output slots (encoded as `Use::Output`).
+    pub fn uses_of(&self, id: ValueId) -> Vec<Use> {
+        let mut uses = Vec::new();
+        for (pos, inst) in self.insts.iter().enumerate() {
+            for (slot, &a) in inst.args.iter().enumerate() {
+                if a == id {
+                    uses.push(Use::Arg { pos, slot });
+                }
+            }
+        }
+        for (slot, &o) in self.outputs.iter().enumerate() {
+            if o == id {
+                uses.push(Use::Output { slot });
+            }
+        }
+        uses
+    }
+
+    /// Values defined strictly before position `pos`, optionally filtered
+    /// by type — the candidate pool for use-def repair (§4.1).
+    pub fn values_before(&self, pos: usize, ty: Option<&TType>) -> Vec<ValueId> {
+        self.insts[..pos.min(self.insts.len())]
+            .iter()
+            .filter(|i| ty.map_or(true, |t| &i.ty == t))
+            .map(|i| i.id)
+            .collect()
+    }
+
+    // ---- edits --------------------------------------------------------------
+
+    /// Replace argument `slot` of the instruction at `pos` with `new`,
+    /// re-inferring the result type. Fails (leaving the graph unchanged)
+    /// if the new operand list does not type-check or `new` is not defined
+    /// before `pos`.
+    pub fn replace_arg(&mut self, pos: usize, slot: usize, new: ValueId) -> Result<(), IrError> {
+        match self.index_of(new) {
+            None => return Err(IrError::UnknownValue(new)),
+            Some(i) if i >= pos => return Err(IrError::UseBeforeDef(new)),
+            _ => {}
+        }
+        let inst = &self.insts[pos];
+        let mut args = inst.args.clone();
+        if slot >= args.len() {
+            return Err(IrError::Graph(format!("slot {slot} out of range")));
+        }
+        args[slot] = new;
+        let mut arg_tys: Vec<&TType> = Vec::with_capacity(args.len());
+        for a in &args {
+            arg_tys.push(self.ty(*a).ok_or(IrError::UnknownValue(*a))?);
+        }
+        let new_ty = infer(&self.insts[pos].kind, &arg_tys)?;
+        if new_ty != self.insts[pos].ty {
+            return Err(IrError::Shape {
+                op: self.insts[pos].kind.mnemonic().to_string(),
+                msg: format!("replacement changes result type {} -> {new_ty}", self.insts[pos].ty),
+            });
+        }
+        self.insts[pos].args = args;
+        Ok(())
+    }
+
+    /// Replace the whole argument vector of the instruction at `pos`,
+    /// re-inferring the type (which must not change). Used by the Delete
+    /// repair when several operands of one instruction dangle at once.
+    pub fn try_set_args(&mut self, pos: usize, new_args: &[ValueId]) -> Result<(), IrError> {
+        for &a in new_args {
+            match self.index_of(a) {
+                None => return Err(IrError::UnknownValue(a)),
+                Some(i) if i >= pos => return Err(IrError::UseBeforeDef(a)),
+                _ => {}
+            }
+        }
+        if new_args.len() != self.insts[pos].args.len() {
+            return Err(IrError::Graph("arg count change".into()));
+        }
+        let arg_tys: Vec<&TType> = new_args.iter().map(|a| self.ty(*a).unwrap()).collect();
+        let new_ty = infer(&self.insts[pos].kind, &arg_tys)?;
+        if new_ty != self.insts[pos].ty {
+            return Err(IrError::Shape {
+                op: self.insts[pos].kind.mnemonic().to_string(),
+                msg: format!("args change result type {} -> {new_ty}", self.insts[pos].ty),
+            });
+        }
+        self.insts[pos].args = new_args.to_vec();
+        Ok(())
+    }
+
+    /// Replace output `slot` with `new` (type must match).
+    pub fn replace_output(&mut self, slot: usize, new: ValueId) -> Result<(), IrError> {
+        let old_ty = self
+            .ty(self.outputs[slot])
+            .ok_or(IrError::UnknownValue(self.outputs[slot]))?
+            .clone();
+        let new_ty = self.ty(new).ok_or(IrError::UnknownValue(new))?;
+        if *new_ty != old_ty {
+            return Err(IrError::Shape {
+                op: "output".into(),
+                msg: format!("{old_ty} -> {new_ty}"),
+            });
+        }
+        self.outputs[slot] = new;
+        Ok(())
+    }
+
+    /// Remove the instruction at `pos` and return it. The caller (the
+    /// Delete mutation) is responsible for repairing dangling uses; the
+    /// verifier will reject the graph until it does.
+    pub fn remove_at(&mut self, pos: usize) -> Inst {
+        self.insts.remove(pos)
+    }
+
+    /// Dead-code elimination: drop instructions whose values are never
+    /// used (transitively), keeping parameters (signature stability).
+    /// Returns the number of instructions removed. Used to normalize
+    /// graphs before reporting / FLOP comparison, like the compiler
+    /// cleanup passes the paper's IREE pipeline applies.
+    pub fn eliminate_dead_code(&mut self) -> usize {
+        let mut live: BTreeMap<ValueId, bool> =
+            self.insts.iter().map(|i| (i.id, false)).collect();
+        let mut stack: Vec<ValueId> = self.outputs.clone();
+        while let Some(v) = stack.pop() {
+            if let Some(flag) = live.get_mut(&v) {
+                if !*flag {
+                    *flag = true;
+                    if let Some(inst) = self.inst(v) {
+                        stack.extend(inst.args.iter().copied());
+                    }
+                }
+            }
+        }
+        let before = self.insts.len();
+        self.insts.retain(|i| {
+            matches!(i.kind, OpKind::Parameter { .. }) || *live.get(&i.id).unwrap_or(&false)
+        });
+        before - self.insts.len()
+    }
+
+    // ---- reporting -----------------------------------------------------------
+
+    /// Total FLOP estimate (the deterministic runtime-objective component).
+    pub fn total_flops(&self) -> u64 {
+        self.insts
+            .iter()
+            .map(|i| {
+                let arg_tys: Vec<&TType> =
+                    i.args.iter().map(|a| self.ty(*a).unwrap()).collect();
+                flops(&i.kind, &arg_tys, &i.ty)
+            })
+            .sum()
+    }
+
+    /// Op census by mnemonic — regenerates Table 1's layer-composition
+    /// rows for our models.
+    pub fn census(&self) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for i in &self.insts {
+            *m.entry(i.kind.mnemonic().to_string()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Number of parameters (entry arguments).
+    pub fn num_params(&self) -> usize {
+        self.insts
+            .iter()
+            .filter(|i| matches!(i.kind, OpKind::Parameter { .. }))
+            .count()
+    }
+
+    /// Find the unique instruction with the given label.
+    pub fn find_label(&self, label: &str) -> Option<ValueId> {
+        self.insts
+            .iter()
+            .find(|i| i.label.as_deref() == Some(label))
+            .map(|i| i.id)
+    }
+}
+
+/// One use of an SSA value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Use {
+    /// Argument `slot` of the instruction at position `pos`.
+    Arg { pos: usize, slot: usize },
+    /// Output slot.
+    Output { slot: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (Graph, ValueId, ValueId, ValueId) {
+        // out = relu(x·w) with relu = maximum(·, broadcast(0))
+        let mut g = Graph::new("t");
+        let x = g.param(TType::of(&[4, 3]));
+        let w = g.param(TType::of(&[3, 2]));
+        let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+        let z = g.constant_scalar(0.0);
+        let zb = g
+            .push(OpKind::Broadcast { dims: vec![4, 2], mapping: vec![] }, &[z])
+            .unwrap();
+        let r = g.push(OpKind::Maximum, &[d, zb]).unwrap();
+        g.set_outputs(&[r]);
+        (g, x, w, d)
+    }
+
+    #[test]
+    fn build_and_types() {
+        let (g, _, _, d) = small();
+        assert_eq!(g.ty(d).unwrap(), &TType::of(&[4, 2]));
+        assert_eq!(g.param_types(), vec![TType::of(&[4, 3]), TType::of(&[3, 2])]);
+        assert_eq!(g.output_types(), vec![TType::of(&[4, 2])]);
+    }
+
+    #[test]
+    fn push_type_errors_reject() {
+        let mut g = Graph::new("t");
+        let x = g.param(TType::of(&[2, 2]));
+        let y = g.param(TType::of(&[3, 3]));
+        assert!(g.push(OpKind::Add, &[x, y]).is_err());
+        assert_eq!(g.len(), 2, "failed push must not modify the graph");
+    }
+
+    #[test]
+    fn insert_respects_def_order() {
+        let (mut g, x, _, d) = small();
+        // inserting a user of d before d's position must fail
+        let dpos = g.index_of(d).unwrap();
+        assert!(g.insert_at(dpos, OpKind::Exponential, &[d]).is_err());
+        // inserting after works
+        let e = g.insert_at(dpos + 1, OpKind::Exponential, &[d]).unwrap();
+        assert_eq!(g.ty(e).unwrap(), &TType::of(&[4, 2]));
+        // x is defined at 0; inserting a user at 1 works
+        assert!(g.insert_at(1, OpKind::Exponential, &[x]).is_ok());
+    }
+
+    #[test]
+    fn uses_and_replace() {
+        let (mut g, _, _, d) = small();
+        let uses = g.uses_of(d);
+        assert_eq!(uses.len(), 1);
+        // replace maximum's first arg with d itself (same type) — ok
+        if let Use::Arg { pos, slot } = uses[0] {
+            assert!(g.replace_arg(pos, slot, d).is_ok());
+        } else {
+            panic!("expected arg use");
+        }
+    }
+
+    #[test]
+    fn replace_arg_rejects_type_change() {
+        let mut g = Graph::new("t");
+        let a = g.param(TType::of(&[2, 3]));
+        let b = g.param(TType::of(&[3, 4]));
+        let c = g.param(TType::of(&[3, 5]));
+        let d = g.push(OpKind::Dot, &[a, b]).unwrap();
+        g.set_outputs(&[d]);
+        let pos = g.index_of(d).unwrap();
+        // c has a different N dim -> output type would change -> reject
+        assert!(g.replace_arg(pos, 1, c).is_err());
+    }
+
+    #[test]
+    fn dce_removes_dead_keeps_params() {
+        let (mut g, x, _, _) = small();
+        let dead = g.push(OpKind::Exponential, &[x]).unwrap();
+        assert!(g.index_of(dead).is_some());
+        let removed = g.eliminate_dead_code();
+        assert_eq!(removed, 1);
+        assert!(g.index_of(dead).is_none());
+        assert_eq!(g.num_params(), 2);
+    }
+
+    #[test]
+    fn census_counts() {
+        let (g, ..) = small();
+        let c = g.census();
+        assert_eq!(c["dot"], 1);
+        assert_eq!(c["maximum"], 1);
+        assert_eq!(c["parameter"], 2);
+    }
+
+    #[test]
+    fn flops_positive_and_dot_dominates() {
+        let (g, ..) = small();
+        let f = g.total_flops();
+        assert!(f >= 2 * 4 * 2 * 3);
+    }
+
+    #[test]
+    fn labels_find() {
+        let mut g = Graph::new("t");
+        let x = g.param(TType::of(&[2]));
+        let e = g.push_labeled(OpKind::Exponential, &[x], "act").unwrap();
+        assert_eq!(g.find_label("act"), Some(e));
+        assert_eq!(g.find_label("missing"), None);
+    }
+}

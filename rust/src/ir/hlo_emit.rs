@@ -1,0 +1,443 @@
+//! Emit XLA HLO **text** from an IR graph.
+//!
+//! This is the bridge that lets any graph — including mutated variants the
+//! search produces — be compiled and executed by real XLA through PJRT
+//! ([`crate::runtime`]), the analog of the paper re-inserting mutated MLIR
+//! into IREE. Text (not serialized proto) is the interchange format; see
+//! /opt/xla-example/README.md for why (64-bit-id protos are rejected by
+//! xla_extension 0.5.1, the text parser reassigns ids).
+//!
+//! Mapping notes (syntax validated against jax-lowered HLO text):
+//! * `compare_gt` lowers to `compare(direction=GT)` + `convert` back to
+//!   f32 (the dialect is mono-dtype, HLO's compare yields `pred`);
+//! * `select` materializes its f32 predicate via `compare NE 0`;
+//! * depthwise convolution lowers to `convolution` with
+//!   `feature_group_count=C` and an HWC→HW1C filter `reshape`;
+//! * `global_avg_pool` lowers to `reduce` + `divide`;
+//! * `reduce` bodies are emitted as named sub-computations.
+
+use super::graph::Graph;
+use super::op::OpKind;
+use super::types::TType;
+use crate::tensor::ops::ReduceKind;
+use crate::tensor::Tensor;
+use std::fmt::Write;
+
+fn hlo_ty(t: &TType) -> String {
+    format!(
+        "f32[{}]",
+        t.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+    )
+}
+
+fn pred_ty(t: &TType) -> String {
+    format!(
+        "pred[{}]",
+        t.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+    )
+}
+
+fn dims_list(v: &[usize]) -> String {
+    v.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn fmt_f32(v: f32) -> String {
+    if v == f32::INFINITY {
+        "inf".into()
+    } else if v == f32::NEG_INFINITY {
+        "-inf".into()
+    } else if v == v.trunc() && v.abs() < 1e9 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:?}")
+    }
+}
+
+/// Nested-brace constant literal, e.g. `{ {1, 2}, {3, 4} }` for f32[2,2].
+fn constant_literal(t: &Tensor) -> String {
+    fn rec(dims: &[usize], data: &[f32]) -> String {
+        if dims.is_empty() {
+            return fmt_f32(data[0]);
+        }
+        let inner: usize = dims[1..].iter().product();
+        let parts: Vec<String> = (0..dims[0])
+            .map(|i| rec(&dims[1..], &data[i * inner..(i + 1) * inner]))
+            .collect();
+        format!("{{ {} }}", parts.join(", "))
+    }
+    if t.rank() == 0 {
+        fmt_f32(t.item())
+    } else {
+        rec(t.dims(), t.data())
+    }
+}
+
+struct Emitter {
+    body: String,
+    regions: String,
+    aux: usize,
+    used_regions: [bool; 3], // sum, max, min
+}
+
+impl Emitter {
+    fn fresh(&mut self, base: &str) -> String {
+        self.aux += 1;
+        format!("{base}_x{}", self.aux)
+    }
+
+    fn line(&mut self, name: &str, ty: &str, rhs: &str) {
+        let _ = writeln!(self.body, "  {name} = {ty} {rhs}");
+    }
+
+    fn region_name(&mut self, kind: ReduceKind) -> &'static str {
+        match kind {
+            ReduceKind::Sum => {
+                self.used_regions[0] = true;
+                "region_sum"
+            }
+            ReduceKind::Max => {
+                self.used_regions[1] = true;
+                "region_max"
+            }
+            ReduceKind::Min => {
+                self.used_regions[2] = true;
+                "region_min"
+            }
+        }
+    }
+
+    /// Emit a scalar constant, returning its name.
+    fn scalar_const(&mut self, v: f32) -> String {
+        let n = self.fresh("cst");
+        self.line(&n, "f32[]", &format!("constant({})", fmt_f32(v)));
+        n
+    }
+
+    /// Emit `reduce` over `dims` with the given region; returns name.
+    fn reduce(&mut self, src: &str, src_ty: &TType, dims: &[usize], kind: ReduceKind) -> (String, TType) {
+        let init = match kind {
+            ReduceKind::Sum => self.scalar_const(0.0),
+            ReduceKind::Max => {
+                let n = self.fresh("cst");
+                self.line(&n, "f32[]", "constant(-inf)");
+                n
+            }
+            ReduceKind::Min => {
+                let n = self.fresh("cst");
+                self.line(&n, "f32[]", "constant(inf)");
+                n
+            }
+        };
+        let out_dims: Vec<usize> = src_ty
+            .dims
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| !dims.contains(d))
+            .map(|(_, &s)| s)
+            .collect();
+        let out_ty = TType::of(&out_dims);
+        let region = self.region_name(kind);
+        let n = self.fresh("red");
+        self.line(
+            &n,
+            &hlo_ty(&out_ty),
+            &format!("reduce({src}, {init}), dimensions={{{}}}, to_apply={region}", dims_list(dims)),
+        );
+        (n, out_ty)
+    }
+}
+
+/// Emit the whole graph as an HLO module. Output is a tuple of the graph
+/// outputs (matching the jax `return_tuple=True` convention the runtime
+/// unwraps with `to_tuple1`).
+pub fn emit(g: &Graph) -> String {
+    let mut e = Emitter {
+        body: String::new(),
+        regions: String::new(),
+        aux: 0,
+        used_regions: [false; 3],
+    };
+
+    let name_of = |id: super::types::ValueId| format!("v{}", id.0);
+
+    for inst in g.insts() {
+        let out = name_of(inst.id);
+        let ty = hlo_ty(&inst.ty);
+        let a = |i: usize| name_of(inst.args[i]);
+        match &inst.kind {
+            OpKind::Parameter { index } => {
+                e.line(&out, &ty, &format!("parameter({index})"));
+            }
+            OpKind::Constant { value } => {
+                e.line(&out, &ty, &format!("constant({})", constant_literal(value)));
+            }
+            OpKind::Add => e.line(&out, &ty, &format!("add({}, {})", a(0), a(1))),
+            OpKind::Subtract => e.line(&out, &ty, &format!("subtract({}, {})", a(0), a(1))),
+            OpKind::Multiply => e.line(&out, &ty, &format!("multiply({}, {})", a(0), a(1))),
+            OpKind::Divide => e.line(&out, &ty, &format!("divide({}, {})", a(0), a(1))),
+            OpKind::Maximum => e.line(&out, &ty, &format!("maximum({}, {})", a(0), a(1))),
+            OpKind::Minimum => e.line(&out, &ty, &format!("minimum({}, {})", a(0), a(1))),
+            OpKind::CompareGt => {
+                let p = e.fresh("cmp");
+                e.line(
+                    &p,
+                    &pred_ty(&inst.ty),
+                    &format!("compare({}, {}), direction=GT", a(0), a(1)),
+                );
+                e.line(&out, &ty, &format!("convert({p})"));
+            }
+            OpKind::Exponential => e.line(&out, &ty, &format!("exponential({})", a(0))),
+            OpKind::Log => e.line(&out, &ty, &format!("log({})", a(0))),
+            OpKind::Negate => e.line(&out, &ty, &format!("negate({})", a(0))),
+            OpKind::Sqrt => e.line(&out, &ty, &format!("sqrt({})", a(0))),
+            OpKind::Rsqrt => e.line(&out, &ty, &format!("rsqrt({})", a(0))),
+            OpKind::Tanh => e.line(&out, &ty, &format!("tanh({})", a(0))),
+            OpKind::Select => {
+                // pred = (p != 0)
+                let zero = e.scalar_const(0.0);
+                let zb = e.fresh("zb");
+                e.line(&zb, &ty, &format!("broadcast({zero}), dimensions={{}}"));
+                let p = e.fresh("prd");
+                e.line(
+                    &p,
+                    &pred_ty(&inst.ty),
+                    &format!("compare({}, {zb}), direction=NE", a(0)),
+                );
+                e.line(&out, &ty, &format!("select({p}, {}, {})", a(1), a(2)));
+            }
+            OpKind::Dot => {
+                let lhs_ty = g.ty(inst.args[0]).unwrap();
+                let lc = lhs_ty.rank() - 1;
+                e.line(
+                    &out,
+                    &ty,
+                    &format!(
+                        "dot({}, {}), lhs_contracting_dims={{{lc}}}, rhs_contracting_dims={{0}}",
+                        a(0),
+                        a(1)
+                    ),
+                );
+            }
+            OpKind::Reshape { .. } => e.line(&out, &ty, &format!("reshape({})", a(0))),
+            OpKind::Broadcast { dims, mapping } => {
+                // XLA broadcast requires exact size match on mapped dims;
+                // size-1 expansions need a reshape dropping those dims.
+                let src_ty = g.ty(inst.args[0]).unwrap().clone();
+                let mut kept_mapping = Vec::new();
+                let mut kept_dims = Vec::new();
+                for (i, &m) in mapping.iter().enumerate() {
+                    if src_ty.dims[i] == dims[m] {
+                        kept_mapping.push(m);
+                        kept_dims.push(src_ty.dims[i]);
+                    }
+                    // dropped: src dim is 1 and expands
+                }
+                let src_name = if kept_dims.len() != src_ty.rank() {
+                    let r = e.fresh("rsh");
+                    e.line(
+                        &r,
+                        &hlo_ty(&TType::of(&kept_dims)),
+                        &format!("reshape({})", a(0)),
+                    );
+                    r
+                } else {
+                    a(0)
+                };
+                e.line(
+                    &out,
+                    &ty,
+                    &format!("broadcast({src_name}), dimensions={{{}}}", dims_list(&kept_mapping)),
+                );
+            }
+            OpKind::Transpose { perm } => {
+                e.line(&out, &ty, &format!("transpose({}), dimensions={{{}}}", a(0), dims_list(perm)));
+            }
+            OpKind::Pad { low, high, value } => {
+                let c = e.scalar_const(*value);
+                let cfg: Vec<String> = low
+                    .iter()
+                    .zip(high.iter())
+                    .map(|(&l, &h)| format!("{l}_{h}"))
+                    .collect();
+                e.line(&out, &ty, &format!("pad({}, {c}), padding={}", a(0), cfg.join("x")));
+            }
+            OpKind::Slice { starts, limits } => {
+                let cfg: Vec<String> = starts
+                    .iter()
+                    .zip(limits.iter())
+                    .map(|(&s, &l)| format!("[{s}:{l}]"))
+                    .collect();
+                e.line(&out, &ty, &format!("slice({}), slice={{{}}}", a(0), cfg.join(", ")));
+            }
+            OpKind::Concat { dim } => {
+                e.line(
+                    &out,
+                    &ty,
+                    &format!("concatenate({}, {}), dimensions={{{dim}}}", a(0), a(1)),
+                );
+            }
+            OpKind::Reduce { dims, kind } => {
+                let src_ty = g.ty(inst.args[0]).unwrap().clone();
+                let (n, _) = e.reduce(&a(0), &src_ty, dims, *kind);
+                // rename: emit copy so the output has the canonical name
+                e.line(&out, &ty, &format!("copy({n})"));
+            }
+            OpKind::Conv2d { stride, same } => {
+                let x_ty = g.ty(inst.args[0]).unwrap();
+                let w_ty = g.ty(inst.args[1]).unwrap();
+                let (kh, kw) = (w_ty.dims[0], w_ty.dims[1]);
+                let (phl, phh, pwl, pwh) =
+                    conv_pads(x_ty.dims[1], x_ty.dims[2], kh, kw, *stride, *same);
+                e.line(
+                    &out,
+                    &ty,
+                    &format!(
+                        "convolution({}, {}), window={{size={kh}x{kw} stride={stride}x{stride} pad={phl}_{phh}x{pwl}_{pwh}}}, dim_labels=b01f_01io->b01f",
+                        a(0),
+                        a(1)
+                    ),
+                );
+            }
+            OpKind::DepthwiseConv2d { stride, same } => {
+                let x_ty = g.ty(inst.args[0]).unwrap().clone();
+                let w_ty = g.ty(inst.args[1]).unwrap().clone();
+                let (kh, kw, c) = (w_ty.dims[0], w_ty.dims[1], w_ty.dims[2]);
+                let (phl, phh, pwl, pwh) =
+                    conv_pads(x_ty.dims[1], x_ty.dims[2], kh, kw, *stride, *same);
+                let r = e.fresh("dwf");
+                e.line(
+                    &r,
+                    &hlo_ty(&TType::of(&[kh, kw, 1, c])),
+                    &format!("reshape({})", a(1)),
+                );
+                e.line(
+                    &out,
+                    &ty,
+                    &format!(
+                        "convolution({}, {r}), window={{size={kh}x{kw} stride={stride}x{stride} pad={phl}_{phh}x{pwl}_{pwh}}}, dim_labels=b01f_01io->b01f, feature_group_count={c}",
+                        a(0)
+                    ),
+                );
+            }
+            OpKind::GlobalAvgPool => {
+                let src_ty = g.ty(inst.args[0]).unwrap().clone();
+                let (h, w) = (src_ty.dims[1], src_ty.dims[2]);
+                let (r, rty) = e.reduce(&a(0), &src_ty, &[1, 2], ReduceKind::Sum);
+                let c = e.scalar_const((h * w) as f32);
+                let cb = e.fresh("gapb");
+                e.line(&cb, &hlo_ty(&rty), &format!("broadcast({c}), dimensions={{}}"));
+                e.line(&out, &ty, &format!("divide({r}, {cb})"));
+            }
+        }
+    }
+
+    // ROOT tuple of outputs.
+    let out_names: Vec<String> = g.outputs().iter().map(|o| format!("v{}", o.0)).collect();
+    let out_tys: Vec<String> = g.output_types().iter().map(hlo_ty).collect();
+    let _ = writeln!(
+        e.body,
+        "  ROOT out = ({}) tuple({})",
+        out_tys.join(", "),
+        out_names.join(", ")
+    );
+
+    // Regions.
+    if e.used_regions[0] {
+        e.regions.push_str(
+            "region_sum {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT r = f32[] add(a, b)\n}\n\n",
+        );
+    }
+    if e.used_regions[1] {
+        e.regions.push_str(
+            "region_max {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT r = f32[] maximum(a, b)\n}\n\n",
+        );
+    }
+    if e.used_regions[2] {
+        e.regions.push_str(
+            "region_min {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT r = f32[] minimum(a, b)\n}\n\n",
+        );
+    }
+
+    format!(
+        "HloModule {}\n\n{}ENTRY main {{\n{}}}\n",
+        sanitize(&g.name),
+        e.regions,
+        e.body
+    )
+}
+
+/// XLA-SAME/VALID padding config `(h_lo, h_hi, w_lo, w_hi)` — must agree
+/// with `tensor::ops::same_pads` so interpreter and XLA see identical
+/// windows.
+fn conv_pads(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    same: bool,
+) -> (usize, usize, usize, usize) {
+    if same {
+        let (hl, hh, _) = crate::tensor::ops::same_pads(h, kh, stride);
+        let (wl, wh, _) = crate::tensor::ops::same_pads(w, kw, stride);
+        (hl, hh, wl, wh)
+    } else {
+        (0, 0, 0, 0)
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    let s: String = name
+        .chars()
+        .map(|c| if c.is_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if s.is_empty() {
+        "m".into()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::Graph;
+
+    #[test]
+    fn emits_parsable_shapes() {
+        let mut g = Graph::new("emit-test");
+        let x = g.param(TType::of(&[2, 3]));
+        let w = g.param(TType::of(&[3, 4]));
+        let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+        let r = g
+            .push(OpKind::Reduce { dims: vec![1], kind: ReduceKind::Sum }, &[d])
+            .unwrap();
+        g.set_outputs(&[d, r]);
+        let text = emit(&g);
+        assert!(text.starts_with("HloModule emit_test"), "{text}");
+        assert!(text.contains("v0 = f32[2,3] parameter(0)"), "{text}");
+        assert!(text.contains("dot(v0, v1), lhs_contracting_dims={1}, rhs_contracting_dims={0}"), "{text}");
+        assert!(text.contains("region_sum"), "{text}");
+        assert!(text.contains("ROOT out = (f32[2,4], f32[2]) tuple(v2, v3)"), "{text}");
+    }
+
+    #[test]
+    fn constant_literals_nested() {
+        let t = Tensor::new(crate::tensor::Shape::of(&[2, 2]), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(constant_literal(&t), "{ { 1, 2 }, { 3, 4 } }");
+        assert_eq!(constant_literal(&Tensor::scalar(0.5)), "0.5");
+    }
+
+    #[test]
+    fn broadcast_with_unit_dim_inserts_reshape() {
+        let mut g = Graph::new("b");
+        let x = g.param(TType::of(&[2, 1]));
+        let b = g
+            .push(OpKind::Broadcast { dims: vec![2, 5], mapping: vec![0, 1] }, &[x])
+            .unwrap();
+        g.set_outputs(&[b]);
+        let text = emit(&g);
+        assert!(text.contains("reshape(v0)"), "{text}");
+        assert!(text.contains("broadcast("), "{text}");
+    }
+}

@@ -1,0 +1,210 @@
+//! Lossless JSON serialization of graphs — used for search checkpoints,
+//! Pareto-front reports, and (via `python/compile/aot.py`) importing the
+//! JAX-side model descriptions.
+
+use super::graph::{Graph, Inst};
+use super::op::{OpKind, ReduceKind};
+use super::types::{IrError, TType, ValueId};
+use crate::tensor::{Shape, Tensor};
+use crate::util::json::Json;
+
+fn kind_to_json(kind: &OpKind) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![("op", Json::str(kind.mnemonic()))];
+    match kind {
+        OpKind::Parameter { index } => fields.push(("index", Json::num(*index as f64))),
+        OpKind::Constant { value } => {
+            fields.push(("shape", Json::from_usizes(value.dims())));
+            fields.push(("data", Json::from_f32s(value.data())));
+        }
+        OpKind::Reshape { dims } => fields.push(("dims", Json::from_usizes(dims))),
+        OpKind::Broadcast { dims, mapping } => {
+            fields.push(("dims", Json::from_usizes(dims)));
+            fields.push(("mapping", Json::from_usizes(mapping)));
+        }
+        OpKind::Transpose { perm } => fields.push(("perm", Json::from_usizes(perm))),
+        OpKind::Pad { low, high, value } => {
+            fields.push(("low", Json::from_usizes(low)));
+            fields.push(("high", Json::from_usizes(high)));
+            fields.push(("value", Json::num(*value as f64)));
+        }
+        OpKind::Slice { starts, limits } => {
+            fields.push(("starts", Json::from_usizes(starts)));
+            fields.push(("limits", Json::from_usizes(limits)));
+        }
+        OpKind::Concat { dim } => fields.push(("dim", Json::num(*dim as f64))),
+        OpKind::Reduce { dims, .. } => fields.push(("dims", Json::from_usizes(dims))),
+        OpKind::Conv2d { stride, same } | OpKind::DepthwiseConv2d { stride, same } => {
+            fields.push(("stride", Json::num(*stride as f64)));
+            fields.push(("same", Json::Bool(*same)));
+        }
+        _ => {}
+    }
+    Json::obj(fields)
+}
+
+fn kind_from_json(j: &Json) -> Result<OpKind, IrError> {
+    let e = |m: String| IrError::Graph(format!("json import: {m}"));
+    let op = j.get("op").and_then(|v| v.as_str().map(str::to_string)).map_err(|x| e(x.to_string()))?;
+    let usizes = |key: &str| -> Result<Vec<usize>, IrError> {
+        j.get(key)
+            .and_then(|v| v.as_usize_vec())
+            .map_err(|x| e(format!("{op}.{key}: {x}")))
+    };
+    Ok(match op.as_str() {
+        "parameter" => OpKind::Parameter {
+            index: j.get("index").and_then(|v| v.as_usize()).map_err(|x| e(x.to_string()))?,
+        },
+        "constant" => {
+            let shape = usizes("shape")?;
+            let data = j
+                .get("data")
+                .and_then(|v| v.as_f32_vec())
+                .map_err(|x| e(x.to_string()))?;
+            if Shape::of(&shape).numel() != data.len() {
+                return Err(e("constant payload size mismatch".into()));
+            }
+            OpKind::Constant { value: Tensor::new(Shape::of(&shape), data) }
+        }
+        "add" => OpKind::Add,
+        "subtract" => OpKind::Subtract,
+        "multiply" => OpKind::Multiply,
+        "divide" => OpKind::Divide,
+        "maximum" => OpKind::Maximum,
+        "minimum" => OpKind::Minimum,
+        "compare_gt" => OpKind::CompareGt,
+        "exponential" => OpKind::Exponential,
+        "log" => OpKind::Log,
+        "negate" => OpKind::Negate,
+        "sqrt" => OpKind::Sqrt,
+        "rsqrt" => OpKind::Rsqrt,
+        "tanh" => OpKind::Tanh,
+        "select" => OpKind::Select,
+        "dot" => OpKind::Dot,
+        "reshape" => OpKind::Reshape { dims: usizes("dims")? },
+        "broadcast_in_dim" => OpKind::Broadcast { dims: usizes("dims")?, mapping: usizes("mapping")? },
+        "transpose" => OpKind::Transpose { perm: usizes("perm")? },
+        "pad" => OpKind::Pad {
+            low: usizes("low")?,
+            high: usizes("high")?,
+            value: j.get("value").and_then(|v| v.as_f64()).map_err(|x| e(x.to_string()))? as f32,
+        },
+        "slice" => OpKind::Slice { starts: usizes("starts")?, limits: usizes("limits")? },
+        "concatenate" => OpKind::Concat {
+            dim: j.get("dim").and_then(|v| v.as_usize()).map_err(|x| e(x.to_string()))?,
+        },
+        "reduce_sum" => OpKind::Reduce { dims: usizes("dims")?, kind: ReduceKind::Sum },
+        "reduce_max" => OpKind::Reduce { dims: usizes("dims")?, kind: ReduceKind::Max },
+        "reduce_min" => OpKind::Reduce { dims: usizes("dims")?, kind: ReduceKind::Min },
+        "convolution" => OpKind::Conv2d {
+            stride: j.get("stride").and_then(|v| v.as_usize()).map_err(|x| e(x.to_string()))?,
+            same: j.get("same").and_then(|v| v.as_bool()).map_err(|x| e(x.to_string()))?,
+        },
+        "depthwise_convolution" => OpKind::DepthwiseConv2d {
+            stride: j.get("stride").and_then(|v| v.as_usize()).map_err(|x| e(x.to_string()))?,
+            same: j.get("same").and_then(|v| v.as_bool()).map_err(|x| e(x.to_string()))?,
+        },
+        "global_avg_pool" => OpKind::GlobalAvgPool,
+        other => return Err(e(format!("unknown op '{other}'"))),
+    })
+}
+
+/// Serialize a graph to JSON.
+pub fn to_json(g: &Graph) -> Json {
+    let insts: Vec<Json> = g
+        .insts()
+        .iter()
+        .map(|i| {
+            let mut fields = vec![
+                ("id", Json::num(i.id.0 as f64)),
+                ("kind", kind_to_json(&i.kind)),
+                (
+                    "args",
+                    Json::Arr(i.args.iter().map(|a| Json::num(a.0 as f64)).collect()),
+                ),
+                ("ty", Json::from_usizes(&i.ty.dims)),
+            ];
+            if let Some(l) = &i.label {
+                fields.push(("label", Json::str(l.clone())));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(g.name.clone())),
+        ("insts", Json::Arr(insts)),
+        (
+            "outputs",
+            Json::Arr(g.outputs().iter().map(|o| Json::num(o.0 as f64)).collect()),
+        ),
+    ])
+}
+
+/// Deserialize a graph from JSON (verified on reconstruction).
+pub fn from_json(j: &Json) -> Result<Graph, IrError> {
+    let e = |m: String| IrError::Graph(format!("json import: {m}"));
+    let name = j.get("name").and_then(|v| v.as_str().map(str::to_string)).map_err(|x| e(x.to_string()))?;
+    let mut insts = Vec::new();
+    for ij in j.get("insts").and_then(|v| v.as_arr().map(|a| a.to_vec())).map_err(|x| e(x.to_string()))? {
+        let id = ValueId(ij.get("id").and_then(|v| v.as_usize()).map_err(|x| e(x.to_string()))? as u32);
+        let kind = kind_from_json(ij.get("kind").map_err(|x| e(x.to_string()))?)?;
+        let args: Vec<ValueId> = ij
+            .get("args")
+            .and_then(|v| v.as_usize_vec())
+            .map_err(|x| e(x.to_string()))?
+            .into_iter()
+            .map(|a| ValueId(a as u32))
+            .collect();
+        let ty = TType::of(
+            &ij.get("ty")
+                .and_then(|v| v.as_usize_vec())
+                .map_err(|x| e(x.to_string()))?,
+        );
+        let label = ij.opt("label").and_then(|l| l.as_str().ok()).map(str::to_string);
+        insts.push(Inst { id, kind, args, ty, label });
+    }
+    let outputs: Vec<ValueId> = j
+        .get("outputs")
+        .and_then(|v| v.as_usize_vec())
+        .map_err(|x| e(x.to_string()))?
+        .into_iter()
+        .map(|o| ValueId(o as u32))
+        .collect();
+    Graph::from_parts(&name, insts, outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::OpKind;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut g = Graph::new("jt");
+        let x = g.param(TType::of(&[2, 3]));
+        let c = g.constant(Tensor::new(Shape::of(&[3]), vec![1.0, 2.0, 3.0]));
+        let cb = g
+            .push(OpKind::Broadcast { dims: vec![2, 3], mapping: vec![1] }, &[c])
+            .unwrap();
+        let a = g.push_labeled(OpKind::Add, &[x, cb], "bias").unwrap();
+        g.set_outputs(&[a]);
+
+        let j = to_json(&g);
+        let text = j.to_pretty();
+        let j2 = Json::parse(&text).unwrap();
+        let g2 = from_json(&j2).unwrap();
+        assert_eq!(crate::ir::printer::print(&g), crate::ir::printer::print(&g2));
+    }
+
+    #[test]
+    fn rejects_bad_payload() {
+        let mut g = Graph::new("jt");
+        let x = g.param(TType::of(&[2]));
+        g.set_outputs(&[x]);
+        let mut j = to_json(&g);
+        // corrupt: point outputs at a missing id
+        if let Json::Obj(m) = &mut j {
+            m.insert("outputs".into(), Json::Arr(vec![Json::num(99.0)]));
+        }
+        assert!(from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,32 @@
+//! The SSA graph IR — the reproduction's analog of the paper's MLIR/HLO
+//! dialect (paper §3).
+//!
+//! GEVO-ML's mutations operate directly on this representation: typed SSA
+//! values (all `f32` tensors, as in the HLO dialect), explicit use-def
+//! chains, and instructions in execution order. The module provides:
+//!
+//! * [`types`] — tensor types, value ids, errors.
+//! * [`op`] — the op set (modeled on the paper's Fig. 1/Fig. 5 listings),
+//!   shape inference, and a FLOP cost model.
+//! * [`graph`] — the instruction list + edit API (insert/delete/replace,
+//!   use-def queries) that the mutation operators drive.
+//! * [`verify`] — SSA and type verification (the paper's validity check).
+//! * [`printer`] / [`parser`] — a textual dialect (round-trippable).
+//! * [`jsonio`] — lossless JSON serialization (checkpoints, reports).
+//! * [`resize`] — the tensor-resize repair chain of §4.1/Fig. 3.
+//! * [`hlo_emit`] — XLA HLO-text emission so any (mutated) graph can be
+//!   compiled and run by real XLA via PJRT ([`crate::runtime`]).
+
+pub mod types;
+pub mod op;
+pub mod graph;
+pub mod verify;
+pub mod printer;
+pub mod parser;
+pub mod jsonio;
+pub mod resize;
+pub mod hlo_emit;
+
+pub use graph::{Graph, Inst};
+pub use op::{OpKind, ReduceKind};
+pub use types::{IrError, TType, ValueId};

@@ -1,0 +1,555 @@
+//! The HLO-dialect op set, shape inference, and cost model.
+//!
+//! The op inventory is taken from the programs the paper actually shows
+//! (Fig. 1: `reshape`, `dot`, `broadcast_in_dim`, `add`, `maximum`,
+//! `reduce`, `subtract`, `exponential`, `divide`; Fig. 5 adds `pad`,
+//! `slice`, `multiply`) plus what MobileNet needs (`convolution`,
+//! depthwise `convolution`, pooling, `rsqrt` for batch-norm, `select`).
+
+use super::types::{IrError, TType};
+use crate::tensor::Tensor;
+
+pub use crate::tensor::ops::ReduceKind;
+
+/// An IR operation. Attributes are embedded in the variant, mirroring
+/// MLIR's statically-assigned attribute fields (paper §7 discusses why
+/// attributes are *not* mutated — we follow that: mutation only copies or
+/// deletes whole operations).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Entry argument `index` (types recorded at creation).
+    Parameter { index: usize },
+    /// Embedded constant (weights, hyper-parameters such as `1/batch` in
+    /// Fig. 5, batch-norm γ/β, …).
+    Constant { value: Tensor },
+    // -- binary elementwise (same shape; adapt with Broadcast) --
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+    Maximum,
+    Minimum,
+    /// 0/1-valued greater-than (HLO `compare GT`).
+    CompareGt,
+    // -- unary elementwise --
+    Exponential,
+    Log,
+    Negate,
+    Sqrt,
+    Rsqrt,
+    Tanh,
+    // -- ternary --
+    Select,
+    // -- linear algebra --
+    Dot,
+    // -- shape --
+    Reshape { dims: Vec<usize> },
+    Broadcast { dims: Vec<usize>, mapping: Vec<usize> },
+    Transpose { perm: Vec<usize> },
+    Pad { low: Vec<usize>, high: Vec<usize>, value: f32 },
+    Slice { starts: Vec<usize>, limits: Vec<usize> },
+    Concat { dim: usize },
+    // -- reductions --
+    Reduce { dims: Vec<usize>, kind: ReduceKind },
+    // -- NN spatial ops (NHWC / HWIO, as produced by the JAX models) --
+    Conv2d { stride: usize, same: bool },
+    DepthwiseConv2d { stride: usize, same: bool },
+    GlobalAvgPool,
+}
+
+impl OpKind {
+    /// Dialect mnemonic, used by the printer and reports. Matches the
+    /// paper's `mhlo.` spellings where the op appears in the paper.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Parameter { .. } => "parameter",
+            OpKind::Constant { .. } => "constant",
+            OpKind::Add => "add",
+            OpKind::Subtract => "subtract",
+            OpKind::Multiply => "multiply",
+            OpKind::Divide => "divide",
+            OpKind::Maximum => "maximum",
+            OpKind::Minimum => "minimum",
+            OpKind::CompareGt => "compare_gt",
+            OpKind::Exponential => "exponential",
+            OpKind::Log => "log",
+            OpKind::Negate => "negate",
+            OpKind::Sqrt => "sqrt",
+            OpKind::Rsqrt => "rsqrt",
+            OpKind::Tanh => "tanh",
+            OpKind::Select => "select",
+            OpKind::Dot => "dot",
+            OpKind::Reshape { .. } => "reshape",
+            OpKind::Broadcast { .. } => "broadcast_in_dim",
+            OpKind::Transpose { .. } => "transpose",
+            OpKind::Pad { .. } => "pad",
+            OpKind::Slice { .. } => "slice",
+            OpKind::Concat { .. } => "concatenate",
+            OpKind::Reduce { kind, .. } => match kind {
+                ReduceKind::Sum => "reduce_sum",
+                ReduceKind::Max => "reduce_max",
+                ReduceKind::Min => "reduce_min",
+            },
+            OpKind::Conv2d { .. } => "convolution",
+            OpKind::DepthwiseConv2d { .. } => "depthwise_convolution",
+            OpKind::GlobalAvgPool => "global_avg_pool",
+        }
+    }
+
+    /// Number of operands the op expects.
+    pub fn arity(&self) -> usize {
+        match self {
+            OpKind::Parameter { .. } | OpKind::Constant { .. } => 0,
+            OpKind::Exponential
+            | OpKind::Log
+            | OpKind::Negate
+            | OpKind::Sqrt
+            | OpKind::Rsqrt
+            | OpKind::Tanh
+            | OpKind::Reshape { .. }
+            | OpKind::Broadcast { .. }
+            | OpKind::Transpose { .. }
+            | OpKind::Pad { .. }
+            | OpKind::Slice { .. }
+            | OpKind::Reduce { .. }
+            | OpKind::GlobalAvgPool => 1,
+            OpKind::Add
+            | OpKind::Subtract
+            | OpKind::Multiply
+            | OpKind::Divide
+            | OpKind::Maximum
+            | OpKind::Minimum
+            | OpKind::CompareGt
+            | OpKind::Dot
+            | OpKind::Concat { .. }
+            | OpKind::Conv2d { .. }
+            | OpKind::DepthwiseConv2d { .. } => 2,
+            OpKind::Select => 3,
+        }
+    }
+
+    /// True for ops the mutation operator may copy/delete. Parameters are
+    /// structural (they define the entry signature) and are excluded, as
+    /// in GEVO-ML.
+    pub fn is_mutable(&self) -> bool {
+        !matches!(self, OpKind::Parameter { .. })
+    }
+}
+
+fn err(op: &OpKind, msg: impl Into<String>) -> IrError {
+    IrError::Shape {
+        op: op.mnemonic().to_string(),
+        msg: msg.into(),
+    }
+}
+
+/// Spatial output dims for (depthwise) convolution — XLA-SAME (see
+/// [`crate::tensor::ops::same_pads`]) or VALID.
+fn conv_out_dims(
+    kind: &OpKind,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    same: bool,
+) -> Result<(usize, usize), IrError> {
+    if same {
+        Ok((h.div_ceil(stride), w.div_ceil(stride)))
+    } else {
+        if h < kh || w < kw {
+            return Err(err(kind, "kernel larger than input (VALID)"));
+        }
+        Ok(((h - kh) / stride + 1, (w - kw) / stride + 1))
+    }
+}
+
+/// Infer the result type of `kind` applied to operands of types `args`.
+///
+/// This is the single source of truth for typing: the builder calls it on
+/// construction, the verifier re-checks it, and the mutation repair logic
+/// uses it to discover what type a copied op requires.
+pub fn infer(kind: &OpKind, args: &[&TType]) -> Result<TType, IrError> {
+    let want = kind.arity();
+    if args.len() != want {
+        return Err(IrError::Arity {
+            op: kind.mnemonic().to_string(),
+            got: args.len(),
+            want,
+        });
+    }
+    match kind {
+        OpKind::Parameter { .. } => Err(err(kind, "parameter types are fixed at creation")),
+        OpKind::Constant { value } => Ok(TType::of(value.dims())),
+        OpKind::Add
+        | OpKind::Subtract
+        | OpKind::Multiply
+        | OpKind::Divide
+        | OpKind::Maximum
+        | OpKind::Minimum
+        | OpKind::CompareGt => {
+            if args[0] != args[1] {
+                return Err(err(kind, format!("operand shapes {} vs {}", args[0], args[1])));
+            }
+            Ok(args[0].clone())
+        }
+        OpKind::Exponential
+        | OpKind::Log
+        | OpKind::Negate
+        | OpKind::Sqrt
+        | OpKind::Rsqrt
+        | OpKind::Tanh => Ok(args[0].clone()),
+        OpKind::Select => {
+            if args[0] != args[1] || args[1] != args[2] {
+                return Err(err(kind, "select operands must share one shape"));
+            }
+            Ok(args[0].clone())
+        }
+        OpKind::Dot => {
+            let (a, b) = (args[0], args[1]);
+            match (a.rank(), b.rank()) {
+                (2, 2) => {
+                    if a.dims[1] != b.dims[0] {
+                        return Err(err(kind, format!("contract {} vs {}", a, b)));
+                    }
+                    Ok(TType::of(&[a.dims[0], b.dims[1]]))
+                }
+                (2, 1) => {
+                    if a.dims[1] != b.dims[0] {
+                        return Err(err(kind, "contract"));
+                    }
+                    Ok(TType::of(&[a.dims[0]]))
+                }
+                (1, 2) => {
+                    if a.dims[0] != b.dims[0] {
+                        return Err(err(kind, "contract"));
+                    }
+                    Ok(TType::of(&[b.dims[1]]))
+                }
+                (1, 1) => {
+                    if a.dims[0] != b.dims[0] {
+                        return Err(err(kind, "contract"));
+                    }
+                    Ok(TType::scalar())
+                }
+                _ => Err(err(kind, format!("unsupported ranks {}x{}", a.rank(), b.rank()))),
+            }
+        }
+        OpKind::Reshape { dims } => {
+            let out = TType::of(dims);
+            if out.numel() != args[0].numel() {
+                return Err(err(kind, format!("{} -> {}: element count", args[0], out)));
+            }
+            Ok(out)
+        }
+        OpKind::Broadcast { dims, mapping } => {
+            if mapping.len() != args[0].rank() {
+                return Err(err(kind, "mapping rank"));
+            }
+            for w in mapping.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(err(kind, "mapping must be strictly increasing"));
+                }
+            }
+            for (i, &m) in mapping.iter().enumerate() {
+                if m >= dims.len() {
+                    return Err(err(kind, "mapping out of range"));
+                }
+                let d = args[0].dims[i];
+                if d != dims[m] && d != 1 {
+                    return Err(err(kind, format!("dim {i} ({d}) vs output dim {m} ({})", dims[m])));
+                }
+            }
+            Ok(TType::of(dims))
+        }
+        OpKind::Transpose { perm } => {
+            if perm.len() != args[0].rank() {
+                return Err(err(kind, "perm rank"));
+            }
+            let mut seen = vec![false; perm.len()];
+            for &p in perm {
+                if p >= perm.len() || seen[p] {
+                    return Err(err(kind, "perm is not a permutation"));
+                }
+                seen[p] = true;
+            }
+            Ok(TType::of(&perm.iter().map(|&p| args[0].dims[p]).collect::<Vec<_>>()))
+        }
+        OpKind::Pad { low, high, .. } => {
+            if low.len() != args[0].rank() || high.len() != args[0].rank() {
+                return Err(err(kind, "padding rank"));
+            }
+            Ok(TType::of(
+                &args[0]
+                    .dims
+                    .iter()
+                    .zip(low.iter().zip(high.iter()))
+                    .map(|(&d, (&l, &h))| d + l + h)
+                    .collect::<Vec<_>>(),
+            ))
+        }
+        OpKind::Slice { starts, limits } => {
+            if starts.len() != args[0].rank() || limits.len() != args[0].rank() {
+                return Err(err(kind, "slice rank"));
+            }
+            let mut dims = Vec::with_capacity(starts.len());
+            for (d, (&s, &l)) in starts.iter().zip(limits.iter()).enumerate() {
+                if s >= l || l > args[0].dims[d] {
+                    return Err(err(kind, format!("range [{s},{l}) on dim {d} of {}", args[0])));
+                }
+                dims.push(l - s);
+            }
+            Ok(TType::of(&dims))
+        }
+        OpKind::Concat { dim } => {
+            let (a, b) = (args[0], args[1]);
+            if a.rank() != b.rank() || *dim >= a.rank() {
+                return Err(err(kind, "rank/dim"));
+            }
+            for d in 0..a.rank() {
+                if d != *dim && a.dims[d] != b.dims[d] {
+                    return Err(err(kind, format!("dim {d} mismatch")));
+                }
+            }
+            let mut dims = a.dims.clone();
+            dims[*dim] += b.dims[*dim];
+            Ok(TType::of(&dims))
+        }
+        OpKind::Reduce { dims, .. } => {
+            for &d in dims {
+                if d >= args[0].rank() {
+                    return Err(err(kind, format!("dim {d} out of rank {}", args[0].rank())));
+                }
+            }
+            let mut sorted = dims.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != dims.len() {
+                return Err(err(kind, "duplicate reduce dims"));
+            }
+            Ok(TType::of(
+                &args[0]
+                    .dims
+                    .iter()
+                    .enumerate()
+                    .filter(|(d, _)| !dims.contains(d))
+                    .map(|(_, &s)| s)
+                    .collect::<Vec<_>>(),
+            ))
+        }
+        OpKind::Conv2d { stride, same } => {
+            let (x, w) = (args[0], args[1]);
+            if x.rank() != 4 || w.rank() != 4 {
+                return Err(err(kind, "conv2d wants NHWC x HWIO"));
+            }
+            if x.dims[3] != w.dims[2] {
+                return Err(err(kind, format!("channels {} vs {}", x.dims[3], w.dims[2])));
+            }
+            let (kh, kw) = (w.dims[0], w.dims[1]);
+            let (oh, ow) = conv_out_dims(kind, x.dims[1], x.dims[2], kh, kw, *stride, *same)?;
+            Ok(TType::of(&[x.dims[0], oh, ow, w.dims[3]]))
+        }
+        OpKind::DepthwiseConv2d { stride, same } => {
+            let (x, w) = (args[0], args[1]);
+            if x.rank() != 4 || w.rank() != 3 {
+                return Err(err(kind, "depthwise conv wants NHWC x HWC"));
+            }
+            if x.dims[3] != w.dims[2] {
+                return Err(err(kind, "channel mismatch"));
+            }
+            let (kh, kw) = (w.dims[0], w.dims[1]);
+            let (oh, ow) = conv_out_dims(kind, x.dims[1], x.dims[2], kh, kw, *stride, *same)?;
+            Ok(TType::of(&[x.dims[0], oh, ow, x.dims[3]]))
+        }
+        OpKind::GlobalAvgPool => {
+            if args[0].rank() != 4 {
+                return Err(err(kind, "wants NHWC"));
+            }
+            Ok(TType::of(&[args[0].dims[0], args[0].dims[3]]))
+        }
+    }
+}
+
+/// FLOP estimate for one op — the deterministic component of the runtime
+/// objective (DESIGN.md §5) and the basis of Table-1-style reporting.
+pub fn flops(kind: &OpKind, args: &[&TType], out: &TType) -> u64 {
+    match kind {
+        OpKind::Parameter { .. } | OpKind::Constant { .. } => 0,
+        OpKind::Dot => {
+            let a = args[0];
+            let k = *a.dims.last().unwrap_or(&1);
+            (2 * out.numel() * k) as u64
+        }
+        OpKind::Conv2d { .. } => {
+            let w = args[1];
+            let per_out = 2 * w.dims[0] * w.dims[1] * w.dims[2];
+            (out.numel() * per_out) as u64
+        }
+        OpKind::DepthwiseConv2d { .. } => {
+            let w = args[1];
+            let per_out = 2 * w.dims[0] * w.dims[1];
+            (out.numel() * per_out) as u64
+        }
+        OpKind::Reduce { .. } | OpKind::GlobalAvgPool => args[0].numel() as u64,
+        OpKind::Exponential | OpKind::Log | OpKind::Tanh => (8 * out.numel()) as u64,
+        OpKind::Sqrt | OpKind::Rsqrt => (4 * out.numel()) as u64,
+        // data movement ops: count elements moved (they are not free at
+        // runtime, which is what makes Delete mutations profitable)
+        OpKind::Reshape { .. }
+        | OpKind::Broadcast { .. }
+        | OpKind::Transpose { .. }
+        | OpKind::Pad { .. }
+        | OpKind::Slice { .. }
+        | OpKind::Concat { .. } => out.numel() as u64,
+        _ => out.numel() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(dims: &[usize]) -> TType {
+        TType::of(dims)
+    }
+
+    #[test]
+    fn infer_elementwise() {
+        let a = t(&[2, 3]);
+        assert_eq!(infer(&OpKind::Add, &[&a, &a]).unwrap(), a);
+        assert!(infer(&OpKind::Add, &[&a, &t(&[3, 2])]).is_err());
+        assert!(infer(&OpKind::Add, &[&a]).is_err());
+    }
+
+    #[test]
+    fn infer_dot_cases() {
+        assert_eq!(infer(&OpKind::Dot, &[&t(&[4, 5]), &t(&[5, 6])]).unwrap(), t(&[4, 6]));
+        assert_eq!(infer(&OpKind::Dot, &[&t(&[4, 5]), &t(&[5])]).unwrap(), t(&[4]));
+        assert_eq!(infer(&OpKind::Dot, &[&t(&[5]), &t(&[5])]).unwrap(), TType::scalar());
+        assert!(infer(&OpKind::Dot, &[&t(&[4, 5]), &t(&[6, 7])]).is_err());
+    }
+
+    #[test]
+    fn infer_shape_ops() {
+        assert_eq!(
+            infer(&OpKind::Reshape { dims: vec![6] }, &[&t(&[2, 3])]).unwrap(),
+            t(&[6])
+        );
+        assert!(infer(&OpKind::Reshape { dims: vec![7] }, &[&t(&[2, 3])]).is_err());
+        assert_eq!(
+            infer(
+                &OpKind::Broadcast { dims: vec![2, 3], mapping: vec![1] },
+                &[&t(&[3])]
+            )
+            .unwrap(),
+            t(&[2, 3])
+        );
+        assert!(infer(
+            &OpKind::Broadcast { dims: vec![2, 3], mapping: vec![0] },
+            &[&t(&[3])]
+        )
+        .is_err());
+        assert_eq!(
+            infer(&OpKind::Transpose { perm: vec![1, 0] }, &[&t(&[2, 3])]).unwrap(),
+            t(&[3, 2])
+        );
+        assert!(infer(&OpKind::Transpose { perm: vec![0, 0] }, &[&t(&[2, 3])]).is_err());
+    }
+
+    #[test]
+    fn infer_pad_slice() {
+        assert_eq!(
+            infer(
+                &OpKind::Pad { low: vec![1, 0], high: vec![0, 2], value: 1.0 },
+                &[&t(&[2, 3])]
+            )
+            .unwrap(),
+            t(&[3, 5])
+        );
+        assert_eq!(
+            infer(
+                &OpKind::Slice { starts: vec![0, 1], limits: vec![2, 3] },
+                &[&t(&[2, 3])]
+            )
+            .unwrap(),
+            t(&[2, 2])
+        );
+        assert!(infer(
+            &OpKind::Slice { starts: vec![0, 0], limits: vec![0, 3] },
+            &[&t(&[2, 3])]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn infer_reduce() {
+        assert_eq!(
+            infer(&OpKind::Reduce { dims: vec![1], kind: ReduceKind::Sum }, &[&t(&[2, 3])])
+                .unwrap(),
+            t(&[2])
+        );
+        assert_eq!(
+            infer(
+                &OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Max },
+                &[&t(&[2, 3])]
+            )
+            .unwrap(),
+            TType::scalar()
+        );
+        assert!(infer(
+            &OpKind::Reduce { dims: vec![2], kind: ReduceKind::Sum },
+            &[&t(&[2, 3])]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn infer_convs() {
+        assert_eq!(
+            infer(
+                &OpKind::Conv2d { stride: 1, same: true },
+                &[&t(&[1, 8, 8, 3]), &t(&[3, 3, 3, 16])]
+            )
+            .unwrap(),
+            t(&[1, 8, 8, 16])
+        );
+        assert_eq!(
+            infer(
+                &OpKind::Conv2d { stride: 2, same: true },
+                &[&t(&[1, 8, 8, 3]), &t(&[3, 3, 3, 16])]
+            )
+            .unwrap(),
+            t(&[1, 4, 4, 16])
+        );
+        assert_eq!(
+            infer(
+                &OpKind::DepthwiseConv2d { stride: 1, same: true },
+                &[&t(&[1, 8, 8, 16]), &t(&[3, 3, 16])]
+            )
+            .unwrap(),
+            t(&[1, 8, 8, 16])
+        );
+        assert_eq!(
+            infer(&OpKind::GlobalAvgPool, &[&t(&[2, 4, 4, 8])]).unwrap(),
+            t(&[2, 8])
+        );
+        assert!(infer(
+            &OpKind::Conv2d { stride: 1, same: false },
+            &[&t(&[1, 2, 2, 3]), &t(&[3, 3, 3, 4])]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn flops_dot_and_conv() {
+        let a = t(&[32, 784]);
+        let b = t(&[784, 128]);
+        let o = infer(&OpKind::Dot, &[&a, &b]).unwrap();
+        assert_eq!(flops(&OpKind::Dot, &[&a, &b], &o), 2 * 32 * 128 * 784);
+        let x = t(&[1, 8, 8, 3]);
+        let w = t(&[3, 3, 3, 16]);
+        let k = OpKind::Conv2d { stride: 1, same: true };
+        let o = infer(&k, &[&x, &w]).unwrap();
+        assert_eq!(flops(&k, &[&x, &w], &o), (8 * 8 * 16) * 2 * 3 * 3 * 3);
+    }
+}

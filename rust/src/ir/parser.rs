@@ -1,0 +1,462 @@
+//! Parser for the textual dialect emitted by [`super::printer`].
+//!
+//! Round-trip property: `parse(print(g))` reproduces `g` (same ids, ops,
+//! attributes, labels, outputs). Exercised by property tests in
+//! `rust/tests/ir_roundtrip.rs`.
+
+use super::graph::{Graph, Inst};
+use super::op::{OpKind, ReduceKind};
+use super::types::{IrError, TType, ValueId};
+use crate::tensor::{Shape, Tensor};
+
+/// Parse a printed graph.
+pub fn parse(text: &str) -> Result<Graph, IrError> {
+    let mut p = P { s: text, pos: 0 };
+    p.parse_graph()
+}
+
+struct P<'a> {
+    s: &'a str,
+    pos: usize,
+}
+
+impl<'a> P<'a> {
+    fn err(&self, msg: &str) -> IrError {
+        let line = self.s[..self.pos].lines().count().max(1);
+        IrError::Graph(format!("parse error (line {line}): {msg}"))
+    }
+
+    fn rest(&self) -> &'a str {
+        &self.s[self.pos..]
+    }
+
+    fn ws(&mut self) {
+        loop {
+            let r = self.rest();
+            let trimmed = r.trim_start();
+            self.pos += r.len() - trimmed.len();
+            if self.rest().starts_with("//") {
+                match self.rest().find('\n') {
+                    Some(n) => self.pos += n + 1,
+                    None => self.pos = self.s.len(),
+                }
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn eat(&mut self, tok: &str) -> bool {
+        self.ws();
+        if self.rest().starts_with(tok) {
+            self.pos += tok.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, tok: &str) -> Result<(), IrError> {
+        if self.eat(tok) {
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{tok}'")))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, IrError> {
+        self.ws();
+        let r = self.rest();
+        let end = r
+            .char_indices()
+            .find(|(_, c)| !(c.is_alphanumeric() || *c == '_'))
+            .map(|(i, _)| i)
+            .unwrap_or(r.len());
+        if end == 0 {
+            return Err(self.err("expected identifier"));
+        }
+        self.pos += end;
+        Ok(r[..end].to_string())
+    }
+
+    fn number_usize(&mut self) -> Result<usize, IrError> {
+        self.ws();
+        let r = self.rest();
+        let end = r
+            .char_indices()
+            .find(|(_, c)| !c.is_ascii_digit())
+            .map(|(i, _)| i)
+            .unwrap_or(r.len());
+        if end == 0 {
+            return Err(self.err("expected integer"));
+        }
+        self.pos += end;
+        r[..end].parse().map_err(|_| self.err("bad integer"))
+    }
+
+    fn number_f32(&mut self) -> Result<f32, IrError> {
+        self.ws();
+        let r = self.rest();
+        if let Some(stripped) = r.strip_prefix("-inf") {
+            self.pos += r.len() - stripped.len();
+            return Ok(f32::NEG_INFINITY);
+        }
+        if let Some(stripped) = r.strip_prefix("inf") {
+            self.pos += r.len() - stripped.len();
+            return Ok(f32::INFINITY);
+        }
+        let end = r
+            .char_indices()
+            .find(|(_, c)| !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E')))
+            .map(|(i, _)| i)
+            .unwrap_or(r.len());
+        if end == 0 {
+            return Err(self.err("expected float"));
+        }
+        self.pos += end;
+        r[..end].parse().map_err(|_| self.err("bad float"))
+    }
+
+    fn value_id(&mut self) -> Result<ValueId, IrError> {
+        self.expect("%")?;
+        Ok(ValueId(self.number_usize()? as u32))
+    }
+
+    /// `f32[2x3]` or `f32[]`.
+    fn ty(&mut self) -> Result<TType, IrError> {
+        self.expect("f32")?;
+        self.expect("[")?;
+        let mut dims = Vec::new();
+        self.ws();
+        if !self.rest().starts_with(']') {
+            loop {
+                dims.push(self.number_usize()?);
+                if !self.eat("x") {
+                    break;
+                }
+            }
+        }
+        self.expect("]")?;
+        Ok(TType { dims })
+    }
+
+    /// `[1,2,3]` or `[]`.
+    fn usize_list(&mut self) -> Result<Vec<usize>, IrError> {
+        self.expect("[")?;
+        let mut v = Vec::new();
+        self.ws();
+        if !self.rest().starts_with(']') {
+            loop {
+                v.push(self.number_usize()?);
+                if !self.eat(",") {
+                    break;
+                }
+            }
+        }
+        self.expect("]")?;
+        Ok(v)
+    }
+
+    fn parse_graph(&mut self) -> Result<Graph, IrError> {
+        self.expect("func")?;
+        self.expect("@")?;
+        let name = self.ident()?;
+        self.expect("(")?;
+        let mut insts: Vec<Inst> = Vec::new();
+        self.ws();
+        let mut pindex = 0usize;
+        if !self.rest().starts_with(')') {
+            loop {
+                let id = self.value_id()?;
+                self.expect(":")?;
+                let ty = self.ty()?;
+                insts.push(Inst {
+                    id,
+                    kind: OpKind::Parameter { index: pindex },
+                    args: vec![],
+                    ty,
+                    label: None,
+                });
+                pindex += 1;
+                if !self.eat(",") {
+                    break;
+                }
+            }
+        }
+        self.expect(")")?;
+        self.expect("->")?;
+        self.expect("(")?;
+        // output types are redundant (re-derived); skip to ')'
+        self.ws();
+        if !self.rest().starts_with(')') {
+            loop {
+                let _ = self.ty()?;
+                if !self.eat(",") {
+                    break;
+                }
+            }
+        }
+        self.expect(")")?;
+        self.expect("{")?;
+        let mut outputs = Vec::new();
+        loop {
+            self.ws();
+            if self.eat("return") {
+                loop {
+                    outputs.push(self.value_id()?);
+                    if !self.eat(",") {
+                        break;
+                    }
+                }
+                break;
+            }
+            let id = self.value_id()?;
+            self.expect("=")?;
+            let mnem = self.ident()?;
+            let (kind, args, label) = self.parse_op_body(&mnem)?;
+            self.expect(":")?;
+            let ty = self.ty()?;
+            insts.push(Inst { id, kind, args, ty, label });
+        }
+        self.expect("}")?;
+        Graph::from_parts(&name, insts, outputs)
+    }
+
+    /// After the mnemonic: operands, optional attrs, optional label.
+    fn parse_op_body(
+        &mut self,
+        mnem: &str,
+    ) -> Result<(OpKind, Vec<ValueId>, Option<String>), IrError> {
+        if mnem == "constant" {
+            self.expect("dense")?;
+            self.expect("<")?;
+            self.expect("[")?;
+            let mut vals = Vec::new();
+            self.ws();
+            if !self.rest().starts_with(']') {
+                loop {
+                    vals.push(self.number_f32()?);
+                    if !self.eat(",") {
+                        break;
+                    }
+                }
+            }
+            self.expect("]")?;
+            self.expect(">")?;
+            let label = self.maybe_label()?;
+            // Shape comes from the type annotation which follows; peek it
+            // without consuming by parsing it after ':' in the caller is
+            // not possible — so parse type here, then "unread" is avoided
+            // by returning a placeholder reshaped later. Simpler: parse
+            // the ': type' ourselves and push it back via direct return.
+            // To keep one code path, we parse the value as flat and fix
+            // the shape when the caller parses the type — but the caller
+            // already consumed nothing; we need the shape NOW. So: clone
+            // the position, parse ahead.
+            let save = self.pos;
+            self.expect(":")?;
+            let ty = self.ty()?;
+            self.pos = save; // caller re-parses ': type'
+            let shape = Shape::of(&ty.dims);
+            if shape.numel() != vals.len() {
+                return Err(self.err(&format!(
+                    "constant payload {} values but type wants {}",
+                    vals.len(),
+                    shape.numel()
+                )));
+            }
+            let t = Tensor::new(shape, vals);
+            return Ok((OpKind::Constant { value: t }, vec![], label));
+        }
+        // operands
+        let mut args = Vec::new();
+        loop {
+            self.ws();
+            if !self.rest().starts_with('%') {
+                break;
+            }
+            args.push(self.value_id()?);
+            if !self.eat(",") {
+                break;
+            }
+        }
+        // attributes
+        let mut dims: Vec<usize> = vec![];
+        let mut mapping: Vec<usize> = vec![];
+        let mut perm: Vec<usize> = vec![];
+        let mut low: Vec<usize> = vec![];
+        let mut high: Vec<usize> = vec![];
+        let mut starts: Vec<usize> = vec![];
+        let mut limits: Vec<usize> = vec![];
+        let mut value = 0.0f32;
+        let mut stride = 1usize;
+        let mut same = false;
+        let mut dim = 0usize;
+        if self.eat("{") {
+            loop {
+                let key = self.ident()?;
+                self.expect("=")?;
+                match key.as_str() {
+                    "dims" => dims = self.usize_list()?,
+                    "mapping" => mapping = self.usize_list()?,
+                    "perm" => perm = self.usize_list()?,
+                    "low" => low = self.usize_list()?,
+                    "high" => high = self.usize_list()?,
+                    "starts" => starts = self.usize_list()?,
+                    "limits" => limits = self.usize_list()?,
+                    "value" => value = self.number_f32()?,
+                    "stride" => stride = self.number_usize()?,
+                    "dim" => dim = self.number_usize()?,
+                    "same" => {
+                        same = if self.eat("true") {
+                            true
+                        } else if self.eat("false") {
+                            false
+                        } else {
+                            return Err(self.err("expected true/false"));
+                        }
+                    }
+                    other => return Err(self.err(&format!("unknown attr '{other}'"))),
+                }
+                if !self.eat(",") {
+                    break;
+                }
+            }
+            self.expect("}")?;
+        }
+        let label = self.maybe_label()?;
+        let kind = match mnem {
+            "add" => OpKind::Add,
+            "subtract" => OpKind::Subtract,
+            "multiply" => OpKind::Multiply,
+            "divide" => OpKind::Divide,
+            "maximum" => OpKind::Maximum,
+            "minimum" => OpKind::Minimum,
+            "compare_gt" => OpKind::CompareGt,
+            "exponential" => OpKind::Exponential,
+            "log" => OpKind::Log,
+            "negate" => OpKind::Negate,
+            "sqrt" => OpKind::Sqrt,
+            "rsqrt" => OpKind::Rsqrt,
+            "tanh" => OpKind::Tanh,
+            "select" => OpKind::Select,
+            "dot" => OpKind::Dot,
+            "reshape" => OpKind::Reshape { dims },
+            "broadcast_in_dim" => OpKind::Broadcast { dims, mapping },
+            "transpose" => OpKind::Transpose { perm },
+            "pad" => OpKind::Pad { low, high, value },
+            "slice" => OpKind::Slice { starts, limits },
+            "concatenate" => OpKind::Concat { dim },
+            "reduce_sum" => OpKind::Reduce { dims, kind: ReduceKind::Sum },
+            "reduce_max" => OpKind::Reduce { dims, kind: ReduceKind::Max },
+            "reduce_min" => OpKind::Reduce { dims, kind: ReduceKind::Min },
+            "convolution" => OpKind::Conv2d { stride, same },
+            "depthwise_convolution" => OpKind::DepthwiseConv2d { stride, same },
+            "global_avg_pool" => OpKind::GlobalAvgPool,
+            other => return Err(self.err(&format!("unknown op '{other}'"))),
+        };
+        Ok((kind, args, label))
+    }
+
+    fn maybe_label(&mut self) -> Result<Option<String>, IrError> {
+        if self.eat("label") {
+            self.expect("(")?;
+            self.expect("\"")?;
+            let r = self.rest();
+            let end = r.find('"').ok_or_else(|| self.err("unterminated label"))?;
+            let lbl = r[..end].to_string();
+            self.pos += end;
+            self.expect("\"")?;
+            self.expect(")")?;
+            Ok(Some(lbl))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::printer::print;
+    use super::*;
+    use crate::ir::graph::Graph;
+
+    fn roundtrip(g: &Graph) {
+        let text = print(g);
+        let g2 = parse(&text).unwrap_or_else(|e| panic!("parse failed: {e}\n{text}"));
+        let text2 = print(&g2);
+        assert_eq!(text, text2, "round-trip mismatch");
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        let mut g = Graph::new("rt");
+        let x = g.param(TType::of(&[2, 3]));
+        let w = g.param(TType::of(&[3, 4]));
+        let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+        let c = g.constant(Tensor::new(Shape::of(&[4]), vec![1.0, -2.5, 0.03125, 7.0]));
+        let cb = g
+            .push(OpKind::Broadcast { dims: vec![2, 4], mapping: vec![1] }, &[c])
+            .unwrap();
+        let a = g.push_labeled(OpKind::Add, &[d, cb], "bias_add").unwrap();
+        let r = g
+            .push(OpKind::Reduce { dims: vec![1], kind: ReduceKind::Max }, &[a])
+            .unwrap();
+        g.set_outputs(&[a, r]);
+        roundtrip(&g);
+    }
+
+    #[test]
+    fn roundtrip_shape_ops() {
+        let mut g = Graph::new("shapes");
+        let x = g.param(TType::of(&[2, 3, 4]));
+        let t = g.push(OpKind::Transpose { perm: vec![2, 0, 1] }, &[x]).unwrap();
+        let p = g
+            .push(OpKind::Pad { low: vec![0, 1, 0], high: vec![1, 0, 2], value: 1.0 }, &[t])
+            .unwrap();
+        let s = g
+            .push(
+                OpKind::Slice { starts: vec![0, 0, 0], limits: vec![2, 2, 2] },
+                &[p],
+            )
+            .unwrap();
+        let rs = g.push(OpKind::Reshape { dims: vec![8] }, &[s]).unwrap();
+        g.set_outputs(&[rs]);
+        roundtrip(&g);
+    }
+
+    #[test]
+    fn roundtrip_convs() {
+        let mut g = Graph::new("convs");
+        let x = g.param(TType::of(&[1, 8, 8, 3]));
+        let w = g.param(TType::of(&[3, 3, 3, 8]));
+        let dw = g.param(TType::of(&[3, 3, 8]));
+        let c = g.push(OpKind::Conv2d { stride: 2, same: true }, &[x, w]).unwrap();
+        let d = g
+            .push(OpKind::DepthwiseConv2d { stride: 1, same: true }, &[c, dw])
+            .unwrap();
+        let p = g.push(OpKind::GlobalAvgPool, &[d]).unwrap();
+        g.set_outputs(&[p]);
+        roundtrip(&g);
+    }
+
+    #[test]
+    fn parse_rejects_invalid_graph_text() {
+        // use-before-def in text form must be rejected by from_parts
+        let bad = "func @b(%0: f32[2]) -> (f32[2]) {\n  %1 = add %2, %2 : f32[2]\n  %2 = exponential %0 : f32[2]\n  return %1\n}\n";
+        assert!(parse(bad).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_op() {
+        let bad = "func @b(%0: f32[2]) -> (f32[2]) {\n  %1 = frobnicate %0 : f32[2]\n  return %1\n}\n";
+        assert!(parse(bad).is_err());
+    }
+
+    #[test]
+    fn parse_constant_payload_size_checked() {
+        let bad =
+            "func @b() -> (f32[3]) {\n  %0 = constant dense<[1.0,2.0]> : f32[3]\n  return %0\n}\n";
+        assert!(parse(bad).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Textual form of the dialect (round-trips through [`super::parser`]).
+//!
+//! The syntax intentionally resembles the paper's Fig. 1 listings:
+//!
+//! ```text
+//! func @twofc(%0: f32[32x784], %1: f32[784x128]) -> (f32[32x10]) {
+//!   %2 = dot %0, %1 : f32[32x128]
+//!   %3 = constant dense<[0]> : f32[]
+//!   %4 = broadcast_in_dim %3 {dims=[32,128], mapping=[]} : f32[32x128]
+//!   %5 = maximum %2, %4 : f32[32x128]
+//!   return %5
+//! }
+//! ```
+
+use super::graph::Graph;
+use super::op::OpKind;
+use super::types::TType;
+use std::fmt::Write;
+
+fn fmt_ty(t: &TType) -> String {
+    format!(
+        "f32[{}]",
+        t.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+    )
+}
+
+fn fmt_usizes(v: &[usize]) -> String {
+    format!("[{}]", v.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","))
+}
+
+/// Format one f32 losslessly enough to round-trip (uses `{:?}`, which
+/// prints shortest-representation floats).
+fn fmt_f32(v: f32) -> String {
+    if v == f32::INFINITY {
+        "inf".into()
+    } else if v == f32::NEG_INFINITY {
+        "-inf".into()
+    } else {
+        format!("{v:?}")
+    }
+}
+
+/// Attribute clause for ops that carry attributes, e.g.
+/// `{dims=[32,128], mapping=[]}`. Empty string for attribute-free ops.
+pub fn attrs(kind: &OpKind) -> String {
+    match kind {
+        OpKind::Reshape { dims } => format!(" {{dims={}}}", fmt_usizes(dims)),
+        OpKind::Broadcast { dims, mapping } => {
+            format!(" {{dims={}, mapping={}}}", fmt_usizes(dims), fmt_usizes(mapping))
+        }
+        OpKind::Transpose { perm } => format!(" {{perm={}}}", fmt_usizes(perm)),
+        OpKind::Pad { low, high, value } => format!(
+            " {{low={}, high={}, value={}}}",
+            fmt_usizes(low),
+            fmt_usizes(high),
+            fmt_f32(*value)
+        ),
+        OpKind::Slice { starts, limits } => {
+            format!(" {{starts={}, limits={}}}", fmt_usizes(starts), fmt_usizes(limits))
+        }
+        OpKind::Concat { dim } => format!(" {{dim={dim}}}"),
+        OpKind::Reduce { dims, .. } => format!(" {{dims={}}}", fmt_usizes(dims)),
+        OpKind::Conv2d { stride, same } | OpKind::DepthwiseConv2d { stride, same } => {
+            format!(" {{stride={stride}, same={same}}}")
+        }
+        _ => String::new(),
+    }
+}
+
+/// Print the whole graph.
+pub fn print(g: &Graph) -> String {
+    let mut s = String::new();
+    let params: Vec<String> = g
+        .insts()
+        .iter()
+        .filter(|i| matches!(i.kind, OpKind::Parameter { .. }))
+        .map(|i| format!("{}: {}", i.id, fmt_ty(&i.ty)))
+        .collect();
+    let outs: Vec<String> = g.output_types().iter().map(fmt_ty).collect();
+    let _ = writeln!(
+        s,
+        "func @{}({}) -> ({}) {{",
+        g.name,
+        params.join(", "),
+        outs.join(", ")
+    );
+    for inst in g.insts() {
+        match &inst.kind {
+            OpKind::Parameter { .. } => continue,
+            OpKind::Constant { value } => {
+                let vals: Vec<String> = value.data().iter().map(|&v| fmt_f32(v)).collect();
+                let _ = write!(s, "  {} = constant dense<[{}]>", inst.id, vals.join(","));
+            }
+            k => {
+                let args: Vec<String> = inst.args.iter().map(|a| a.to_string()).collect();
+                let _ = write!(s, "  {} = {} {}{}", inst.id, k.mnemonic(), args.join(", "), attrs(k));
+            }
+        }
+        if let Some(lbl) = &inst.label {
+            let _ = write!(s, " label(\"{lbl}\")");
+        }
+        let _ = writeln!(s, " : {}", fmt_ty(&inst.ty));
+    }
+    let rets: Vec<String> = g.outputs().iter().map(|o| o.to_string()).collect();
+    let _ = writeln!(s, "  return {}", rets.join(", "));
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::TType;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn prints_expected_shape() {
+        let mut g = Graph::new("m");
+        let x = g.param(TType::of(&[2, 3]));
+        let c = g.constant(Tensor::scalar(0.5));
+        let cb = g
+            .push(OpKind::Broadcast { dims: vec![2, 3], mapping: vec![] }, &[c])
+            .unwrap();
+        let y = g.push_labeled(OpKind::Multiply, &[x, cb], "scale").unwrap();
+        g.set_outputs(&[y]);
+        let text = print(&g);
+        assert!(text.contains("func @m(%0: f32[2x3]) -> (f32[2x3]) {"), "{text}");
+        assert!(text.contains("constant dense<[0.5]> : f32[]"), "{text}");
+        assert!(text.contains("broadcast_in_dim %1 {dims=[2,3], mapping=[]}"), "{text}");
+        assert!(text.contains("multiply %0, %2 label(\"scale\") : f32[2x3]"), "{text}");
+        assert!(text.contains("return %3"), "{text}");
+    }
+
+    #[test]
+    fn float_formatting_roundtrippable() {
+        assert_eq!(fmt_f32(0.03125), "0.03125");
+        assert_eq!(fmt_f32(-1.0), "-1.0");
+        assert_eq!(fmt_f32(f32::INFINITY), "inf");
+    }
+}

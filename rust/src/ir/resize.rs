@@ -1,0 +1,180 @@
+//! Tensor-resize repair (paper §4.1, Fig. 3).
+//!
+//! When a mutation connects a value of type `A` where type `B` is needed,
+//! GEVO-ML "shrinks or expands the selected tensor variable by dropping
+//! values from the tensor's edges or padding the tensor with value 1".
+//! This module builds that adapter chain in the graph:
+//!
+//! 1. rank adjustment — `reshape` (and a leading `slice` when the rank
+//!    must shrink through non-unit dims);
+//! 2. one `slice` shrinking every oversized dimension to the target;
+//! 3. one `pad` (pad value **1.0**, per the paper) growing every
+//!    undersized dimension.
+//!
+//! The paper's Fig. 3 counts these transitions; [`resize_chain`] returns
+//! the number of operations inserted so the mutation log can report it.
+
+use super::graph::Graph;
+use super::op::OpKind;
+use super::types::{IrError, TType, ValueId};
+
+/// Insert a resize chain converting `src` (type `A`) to type `want`,
+/// placing new instructions starting at position `pos`. Returns the id of
+/// the adapted value, the next free position, and the number of ops
+/// inserted.
+pub fn resize_chain(
+    g: &mut Graph,
+    mut pos: usize,
+    src: ValueId,
+    want: &TType,
+) -> Result<(ValueId, usize, usize), IrError> {
+    let have = g.ty(src).ok_or(IrError::UnknownValue(src))?.clone();
+    if &have == want {
+        return Ok((src, pos, 0));
+    }
+    let mut cur = src;
+    let mut dims = have.dims.clone();
+    let mut inserted = 0usize;
+
+    // --- rank adjustment -------------------------------------------------
+    if dims.len() < want.dims.len() {
+        // prepend unit dims
+        let mut nd = vec![1usize; want.dims.len() - dims.len()];
+        nd.extend_from_slice(&dims);
+        cur = g.insert_at(pos, OpKind::Reshape { dims: nd.clone() }, &[cur])?;
+        pos += 1;
+        inserted += 1;
+        dims = nd;
+    } else if dims.len() > want.dims.len() {
+        let extra = dims.len() - want.dims.len();
+        // if any leading dim to drop is >1, slice it to 1 first
+        if dims[..extra].iter().any(|&d| d > 1) {
+            let starts = vec![0usize; dims.len()];
+            let mut limits = dims.clone();
+            for l in limits.iter_mut().take(extra) {
+                *l = 1;
+            }
+            cur = g.insert_at(pos, OpKind::Slice { starts, limits: limits.clone() }, &[cur])?;
+            pos += 1;
+            inserted += 1;
+            dims = limits;
+        }
+        let nd: Vec<usize> = dims[extra..].to_vec();
+        cur = g.insert_at(pos, OpKind::Reshape { dims: nd.clone() }, &[cur])?;
+        pos += 1;
+        inserted += 1;
+        dims = nd;
+    }
+
+    // --- shrink oversized dims (one slice) --------------------------------
+    if dims.iter().zip(want.dims.iter()).any(|(&a, &b)| a > b) {
+        let starts = vec![0usize; dims.len()];
+        let limits: Vec<usize> = dims
+            .iter()
+            .zip(want.dims.iter())
+            .map(|(&a, &b)| a.min(b))
+            .collect();
+        cur = g.insert_at(pos, OpKind::Slice { starts, limits: limits.clone() }, &[cur])?;
+        pos += 1;
+        inserted += 1;
+        dims = limits;
+    }
+
+    // --- grow undersized dims (one pad, value 1.0 per the paper) ----------
+    if dims.iter().zip(want.dims.iter()).any(|(&a, &b)| a < b) {
+        let low = vec![0usize; dims.len()];
+        let high: Vec<usize> = dims
+            .iter()
+            .zip(want.dims.iter())
+            .map(|(&a, &b)| b.saturating_sub(a))
+            .collect();
+        cur = g.insert_at(pos, OpKind::Pad { low, high: high.clone(), value: 1.0 }, &[cur])?;
+        pos += 1;
+        inserted += 1;
+        dims = dims
+            .iter()
+            .zip(high.iter())
+            .map(|(&a, &h)| a + h)
+            .collect();
+    }
+
+    debug_assert_eq!(&dims, &want.dims);
+    Ok((cur, pos, inserted))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::eval;
+    use crate::ir::verify::verify;
+    use crate::tensor::Tensor;
+    use crate::util::prop::run_prop;
+
+    fn check(from: &[usize], to: &[usize]) -> usize {
+        let mut g = Graph::new("rs");
+        let x = g.param(TType::of(from));
+        let (v, _, n) = resize_chain(&mut g, 1, x, &TType::of(to)).unwrap();
+        g.set_outputs(&[v]);
+        verify(&g).unwrap_or_else(|e| panic!("{from:?}->{to:?}: {e}"));
+        assert_eq!(g.ty(v).unwrap(), &TType::of(to));
+        n
+    }
+
+    #[test]
+    fn identity_is_free() {
+        assert_eq!(check(&[3, 4], &[3, 4]), 0);
+    }
+
+    #[test]
+    fn paper_fig3_example_shrink() {
+        // Fig. 3: 3x4x4 -> (1x)2x2 — slice handles all shrinking dims.
+        let n = check(&[3, 4, 4], &[2, 2]);
+        assert!(n <= 3, "expected few transitions, got {n}");
+    }
+
+    #[test]
+    fn grow_pads_with_one() {
+        // 32x10 labels -> 32x32 (Fig. 5 repair), then back down.
+        let mut g = Graph::new("rs");
+        let x = g.param(TType::of(&[2, 3]));
+        let (v, _, _) = resize_chain(&mut g, 1, x, &TType::of(&[2, 5])).unwrap();
+        g.set_outputs(&[v]);
+        verify(&g).unwrap();
+        // evaluate: padded area must be exactly 1.0
+        let input = Tensor::zeros(&[2, 3]);
+        let out = eval(&g, &[input]).unwrap();
+        let t = &out[0];
+        assert_eq!(t.dims(), &[2, 5]);
+        assert_eq!(t.at(&[0, 4]), 1.0);
+        assert_eq!(t.at(&[1, 3]), 1.0);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn rank_changes() {
+        check(&[], &[2, 2]); // scalar -> matrix
+        check(&[4, 4], &[]); // matrix -> scalar
+        check(&[5], &[2, 3, 4]); // vector -> cube
+        check(&[2, 3, 4], &[6]); // cube -> vector
+    }
+
+    #[test]
+    fn prop_resize_always_typechecks() {
+        run_prop(200, 0xC0FFEE, |rng| {
+            let rank_a = rng.below(4);
+            let rank_b = rng.below(4);
+            let dims_a: Vec<usize> = (0..rank_a).map(|_| rng.range(1, 6)).collect();
+            let dims_b: Vec<usize> = (0..rank_b).map(|_| rng.range(1, 6)).collect();
+            let mut g = Graph::new("p");
+            let x = g.param(TType::of(&dims_a));
+            let (v, _, _) = resize_chain(&mut g, 1, x, &TType::of(&dims_b))
+                .map_err(|e| format!("{dims_a:?}->{dims_b:?}: {e}"))?;
+            g.set_outputs(&[v]);
+            verify(&g).map_err(|e| format!("{dims_a:?}->{dims_b:?}: verify: {e}"))?;
+            if g.ty(v).unwrap() != &TType::of(&dims_b) {
+                return Err(format!("{dims_a:?}->{dims_b:?}: wrong type"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,67 @@
+//! Core IR types.
+
+/// A tensor type. The dialect is mono-dtype (`f32`), as in the paper's HLO
+/// listings; two types are equal iff their shapes are equal — the paper's
+/// §4.1 "tensors of different sizes are treated as different types" rule.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TType {
+    pub dims: Vec<usize>,
+}
+
+impl TType {
+    pub fn scalar() -> TType {
+        TType { dims: vec![] }
+    }
+
+    pub fn of(dims: &[usize]) -> TType {
+        TType { dims: dims.to_vec() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+impl std::fmt::Display for TType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "f32[{}]",
+            self.dims
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x")
+        )
+    }
+}
+
+/// An SSA value id. Unique within a graph and never reused, so patches
+/// (lists of edits) remain meaningful as the graph evolves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub u32);
+
+impl std::fmt::Display for ValueId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "%{}", self.0)
+    }
+}
+
+/// IR construction / verification errors.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum IrError {
+    #[error("unknown value {0}")]
+    UnknownValue(ValueId),
+    #[error("value {0} used before definition")]
+    UseBeforeDef(ValueId),
+    #[error("op {op}: arity {got}, expected {want}")]
+    Arity { op: String, got: usize, want: usize },
+    #[error("op {op}: {msg}")]
+    Shape { op: String, msg: String },
+    #[error("graph: {0}")]
+    Graph(String),
+}

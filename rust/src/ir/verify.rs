@@ -1,0 +1,134 @@
+//! Graph verification — the validity check GEVO-ML runs after every
+//! mutation and crossover (§4.1: "Mutations are highly likely to create
+//! invalid programs … GEVO-ML repairs the use-def chain").
+//!
+//! A graph is valid iff:
+//! 1. every instruction id is unique;
+//! 2. every argument refers to an instruction defined strictly earlier
+//!    (SSA dominance in a straight-line function);
+//! 3. every instruction's recorded type equals re-inferred type;
+//! 4. parameter indices are dense `0..n`;
+//! 5. all outputs refer to defined values, and there is ≥1 output.
+
+use super::graph::Graph;
+use super::op::{infer, OpKind};
+use super::types::{IrError, TType};
+use std::collections::BTreeSet;
+
+/// Verify `g`, returning the first violation found.
+pub fn verify(g: &Graph) -> Result<(), IrError> {
+    let mut seen = BTreeSet::new();
+    let mut param_indices = Vec::new();
+    for (pos, inst) in g.insts().iter().enumerate() {
+        if !seen.insert(inst.id) {
+            return Err(IrError::Graph(format!("duplicate id {}", inst.id)));
+        }
+        if inst.args.len() != inst.kind.arity() {
+            return Err(IrError::Arity {
+                op: inst.kind.mnemonic().to_string(),
+                got: inst.args.len(),
+                want: inst.kind.arity(),
+            });
+        }
+        for &a in &inst.args {
+            match g.index_of(a) {
+                None => return Err(IrError::UnknownValue(a)),
+                Some(i) if i >= pos => return Err(IrError::UseBeforeDef(a)),
+                _ => {}
+            }
+        }
+        match &inst.kind {
+            OpKind::Parameter { index } => param_indices.push(*index),
+            OpKind::Constant { value } => {
+                if TType::of(value.dims()) != inst.ty {
+                    return Err(IrError::Shape {
+                        op: "constant".into(),
+                        msg: "recorded type disagrees with payload".into(),
+                    });
+                }
+            }
+            k => {
+                let arg_tys: Vec<&TType> =
+                    inst.args.iter().map(|a| g.ty(*a).unwrap()).collect();
+                let ty = infer(k, &arg_tys)?;
+                if ty != inst.ty {
+                    return Err(IrError::Shape {
+                        op: k.mnemonic().to_string(),
+                        msg: format!("recorded {} but inferred {ty}", inst.ty),
+                    });
+                }
+            }
+        }
+    }
+    param_indices.sort_unstable();
+    for (want, got) in param_indices.iter().enumerate() {
+        if *got != want {
+            return Err(IrError::Graph(format!(
+                "parameter indices not dense: found {got}, expected {want}"
+            )));
+        }
+    }
+    if g.outputs().is_empty() {
+        return Err(IrError::Graph("graph has no outputs".into()));
+    }
+    for &o in g.outputs() {
+        if g.index_of(o).is_none() {
+            return Err(IrError::UnknownValue(o));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::ValueId;
+
+    fn valid() -> Graph {
+        let mut g = Graph::new("v");
+        let x = g.param(TType::of(&[2, 2]));
+        let y = g.push(OpKind::Exponential, &[x]).unwrap();
+        g.set_outputs(&[y]);
+        g
+    }
+
+    #[test]
+    fn accepts_valid() {
+        assert!(verify(&valid()).is_ok());
+    }
+
+    #[test]
+    fn rejects_dangling_use_after_delete() {
+        let mut g = valid();
+        // remove the parameter; exp's arg now dangles
+        let removed = g.remove_at(0);
+        assert!(matches!(removed.kind, OpKind::Parameter { .. }));
+        assert!(verify(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_no_outputs() {
+        let mut g = valid();
+        g.set_outputs(&[]);
+        assert!(matches!(verify(&g), Err(IrError::Graph(_))));
+    }
+
+    #[test]
+    fn rejects_unknown_output() {
+        let mut g = valid();
+        g.set_outputs(&[ValueId(999)]);
+        assert!(verify(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_use_before_def_after_reorder() {
+        let mut g = valid();
+        // swap exp before its parameter by raw surgery
+        let exp = g.remove_at(1);
+        let pos0 = 0;
+        // re-insert exp at position 0 via low-level vec access is not
+        // exposed; emulate with insert_at which itself must reject.
+        let args = exp.args.clone();
+        assert!(g.insert_at(pos0, exp.kind, &args).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! # gevo-ml — a reproduction of *GEVO-ML: Optimizing Machine Learning Code
+//! # with Evolutionary Computation* (Liou, Forrest, Wu; 2023).
+//!
+//! GEVO-ML searches the intermediate representation of an ML workload with
+//! a multi-objective (runtime × model-error) evolutionary algorithm
+//! (NSGA-II), using two IR-level mutation operators (`Copy`, `Delete`) plus
+//! a tensor-resize repair pass, a patch genome, and one-point *messy*
+//! crossover. This crate implements the whole system:
+//!
+//! * [`tensor`] — dense tensor substrate (the runtime's kernel library).
+//! * [`ir`] — an SSA graph IR modeled on the paper's MLIR/HLO dialect,
+//!   with verifier, printer/parser and an XLA-HLO-text emitter.
+//! * [`interp`] — the graph interpreter (the IREE-runtime analog) used for
+//!   the inner fitness loop.
+//! * [`runtime`] — PJRT execution of AOT artifacts produced by the JAX
+//!   compile path (`python/compile/aot.py`), and of HLO text emitted from
+//!   (possibly mutated) IR graphs.
+//! * [`evo`] — the evolutionary machinery: patches, mutation + repair,
+//!   messy crossover, NSGA-II, the generation loop.
+//! * [`fitness`] — the two fitness workloads from the paper: model
+//!   *prediction* (MobileNet-style) and model *training* (2fcNet).
+//! * [`data`] — synthetic MNIST-like and CIFAR-like datasets (stand-ins
+//!   for the paper's MNIST/CIFAR10; see DESIGN.md §3).
+//! * [`models`] — IR builders for the two paper workloads.
+//! * [`coordinator`] — the parallel evaluation pool, metrics and reports.
+//! * [`util`] — infra substrates (RNG, JSON, CLI, stats, bench harness)
+//!   written in-tree because the offline registry carries no such crates.
+
+pub mod util;
+pub mod tensor;
+pub mod ir;
+pub mod interp;
+pub mod evo;
+pub mod fitness;
+pub mod data;
+pub mod models;
+pub mod runtime;
+pub mod coordinator;

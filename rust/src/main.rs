@@ -1,0 +1,266 @@
+//! gevo-ml — leader binary for the GEVO-ML reproduction.
+//!
+//! Subcommands:
+//!
+//! * `search`   — run the evolutionary search on a workload (the paper's
+//!   main experiment; Fig. 4a/4b).
+//! * `table1`   — print the model layer-composition census (Table 1).
+//! * `analyze`  — mutation analysis (§6.1 MobileNet / §6.2 2fcNet).
+//! * `show`     — print a model's IR (textual dialect) or emitted HLO.
+//! * `validate` — cross-check interpreter vs real XLA (PJRT) on the
+//!   models and on random mutants; also smoke-loads the AOT artifacts.
+//!
+//! Run `gevo-ml help` for flags.
+
+use gevo_ml::coordinator::{self, report, ExperimentConfig, WorkloadKind};
+use gevo_ml::evo::search::SearchConfig;
+use gevo_ml::fitness::RuntimeMetric;
+use gevo_ml::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env(true);
+    match args.subcommand.as_deref() {
+        Some("search") => cmd_search(&args),
+        Some("table1") => cmd_table1(),
+        Some("analyze") => cmd_analyze(&args),
+        Some("show") => cmd_show(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("help") | None => print_help(),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "gevo-ml — GEVO-ML reproduction (multi-objective EC over an HLO-dialect IR)
+
+USAGE: gevo-ml <subcommand> [flags]
+
+  search   --workload 2fcnet|mobilenet [--pop N] [--gens N] [--seed S]
+           [--metric flops|wall|blend] [--fit N] [--test N] [--epochs N]
+           [--workers N] [--out PREFIX] [--quiet]
+  table1   print the paper's Table 1 (model layer composition)
+  analyze  --model mobilenet|2fcnet   (§6.1 / §6.2 mutation analysis)
+  show     --workload 2fcnet|mobilenet [--hlo]   print IR or emitted HLO
+  validate [--mutants N]   interpreter vs XLA-PJRT cross-check"
+    );
+}
+
+fn search_config(args: &Args) -> SearchConfig {
+    SearchConfig {
+        pop_size: args.usize_or("pop", 32),
+        generations: args.usize_or("gens", 10),
+        elites: args.usize_or("elites", 16),
+        init_mutations: args.usize_or("init-mutations", 3),
+        crossover_prob: args.f64_or("crossover", 0.6),
+        mutation_prob: args.f64_or("mutation", 0.7),
+        tournament_size: args.usize_or("tournament", 2),
+        max_tries: args.usize_or("max-tries", 25),
+        seed: args.u64_or("seed", 42),
+        workers: args.usize_or(
+            "workers",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        ),
+        verbose: !args.flag("quiet"),
+    }
+}
+
+fn cmd_search(args: &Args) {
+    let kind = WorkloadKind::parse(&args.get_or("workload", "2fcnet"))
+        .unwrap_or_else(|| panic!("--workload must be 2fcnet or mobilenet"));
+    let cfg = ExperimentConfig {
+        kind,
+        search: search_config(args),
+        metric: RuntimeMetric::parse(&args.get_or("metric", "flops"))
+            .unwrap_or_else(|| panic!("--metric must be flops|wall|blend")),
+        fit_samples: args.usize_or("fit", 512),
+        test_samples: args.usize_or("test", 160),
+        epochs: args.usize_or("epochs", 1),
+        data_seed: args.u64_or("data-seed", 7),
+        weight_seed: args.u64_or("weight-seed", 1),
+    };
+    eprintln!(
+        "[gevo-ml] running {kind:?} search: pop={} gens={} seed={}",
+        cfg.search.pop_size, cfg.search.generations, cfg.search.seed
+    );
+    let r = coordinator::run_experiment(&cfg);
+    println!("{}", report::ascii_scatter(&r, 64, 16));
+    println!("{}", report::front_markdown(&r));
+    println!(
+        "evaluations: {}   cache hits: {}   wall: {:.1}s",
+        r.search.total_evaluations, r.search.cache_hits, r.wall_seconds
+    );
+    if let Some(prefix) = args.get("out") {
+        std::fs::write(format!("{prefix}.json"), report::to_json(&r).to_pretty()).unwrap();
+        std::fs::write(format!("{prefix}.csv"), report::front_csv(&r)).unwrap();
+        eprintln!("[gevo-ml] wrote {prefix}.json / {prefix}.csv");
+    }
+}
+
+fn cmd_table1() {
+    use gevo_ml::models::{mobilenet, twofc};
+    let mspec = mobilenet::MobileNetSpec::default();
+    let weights = coordinator::load_or_random_weights(&mspec, 1);
+    let mg = mobilenet::predict_graph(&mspec, &weights);
+    let tspec = twofc::TwoFcSpec::default();
+    let tg = twofc::predict_graph(&tspec);
+    println!("Table 1: Model layer composition (reproduction-scale models)\n");
+    println!("{:<28} {:>12} {:>10}", "Layer", "MobileNet", "2fcNet");
+    let twofc_census = tg.census();
+    for (name, count) in mobilenet::table1_census(&mg) {
+        let t = if name == "Fully-connected Layer" {
+            *twofc_census.get("dot").unwrap_or(&0)
+        } else {
+            0
+        };
+        println!("{name:<28} {count:>11}x {t:>9}x");
+    }
+    println!(
+        "\nFLOPs/batch: MobileNet {:.2} M   2fcNet(predict) {:.2} M",
+        mg.total_flops() as f64 / 1e6,
+        tg.total_flops() as f64 / 1e6
+    );
+}
+
+fn cmd_analyze(args: &Args) {
+    match args.get_or("model", "2fcnet").as_str() {
+        "mobilenet" => analyze_mobilenet(),
+        _ => analyze_twofc(),
+    }
+}
+
+fn analyze_mobilenet() {
+    use gevo_ml::data::patterns;
+    use gevo_ml::models::mobilenet::{self, KeyMutation};
+    let spec = mobilenet::MobileNetSpec::default();
+    let weights = coordinator::load_or_random_weights(&spec, 1);
+    let base = mobilenet::predict_graph(&spec, &weights);
+    let data = patterns::generate(512, spec.side, 7);
+    let base_acc = mobilenet::accuracy_on(&base, &spec, &data);
+    let base_flops = base.total_flops() as f64;
+    println!("§6.1 mutation analysis — MobileNet prediction");
+    println!("baseline: accuracy {base_acc:.4}, FLOPs {:.2} M\n", base_flops / 1e6);
+    println!("{:<44} {:>9} {:>10} {:>9}", "mutation set", "applied", "flops", "acc");
+    let combos: Vec<(&str, Vec<KeyMutation>)> = vec![
+        ("bn-gamma-swap", vec![KeyMutation::BnGammaSwap]),
+        ("drop-fc-bias", vec![KeyMutation::DropFcBias]),
+        ("drop-last-conv", vec![KeyMutation::DropLastConv]),
+        (
+            "ALL THREE (epistatic set)",
+            vec![KeyMutation::BnGammaSwap, KeyMutation::DropFcBias, KeyMutation::DropLastConv],
+        ),
+    ];
+    for (name, muts) in combos {
+        let mut g = base.clone();
+        let n = mobilenet::key_mutations(&mut g, &muts);
+        let acc = mobilenet::accuracy_on(&g, &spec, &data);
+        let fr = g.total_flops() as f64 / base_flops;
+        println!("{name:<44} {n:>9} {fr:>9.4}x {acc:>9.4}");
+    }
+}
+
+fn analyze_twofc() {
+    use gevo_ml::data::digits;
+    use gevo_ml::models::twofc;
+    let spec = twofc::TwoFcSpec::default();
+    let data = digits::generate(1024, spec.side(), 7);
+    let (fit, test) = data.split(768);
+    let base = twofc::train_step_graph(&spec);
+    let wl = gevo_ml::fitness::training::TrainingWorkload::new(
+        spec, &base, fit, test, 1, 1, RuntimeMetric::Flops,
+    );
+    println!("§6.2 mutation analysis — 2fcNet training (lr = {})", spec.lr);
+    println!("{:<40} {:>10} {:>12} {:>12}", "variant", "flops", "train err", "test err");
+    let mut rows: Vec<(String, gevo_ml::ir::Graph)> =
+        vec![("baseline (grad × 1/32)".into(), base.clone())];
+    let mut mutated = base.clone();
+    twofc::apply_fig5_gradient_mutation(&mut mutated).expect("Fig. 5 mutation applies");
+    rows.push(("Fig. 5 mutation (pad/slice labels)".into(), mutated));
+    let hi = twofc::TwoFcSpec { lr: 0.3, ..spec };
+    rows.push(("lr 0.01 → 0.3 (paper's verification)".into(), twofc::train_step_graph(&hi)));
+    for (name, g) in rows {
+        use gevo_ml::evo::search::Evaluator;
+        let fitp = wl.evaluate(&g);
+        let post = wl.post_hoc(&g);
+        match (fitp, post) {
+            (Some((t, e)), Some((_, et))) => {
+                println!("{name:<40} {t:>9.4}x {e:>12.4} {et:>12.4}")
+            }
+            _ => println!("{name:<40} {:>10} {:>12} {:>12}", "-", "invalid", "-"),
+        }
+    }
+}
+
+fn cmd_show(args: &Args) {
+    use gevo_ml::models::{mobilenet, twofc};
+    let g = match args.get_or("workload", "2fcnet").as_str() {
+        "mobilenet" => {
+            let spec = mobilenet::MobileNetSpec::default();
+            mobilenet::predict_graph(&spec, &coordinator::load_or_random_weights(&spec, 1))
+        }
+        _ => twofc::train_step_graph(&twofc::TwoFcSpec::default()),
+    };
+    if args.flag("hlo") {
+        println!("{}", gevo_ml::ir::hlo_emit::emit(&g));
+    } else {
+        println!("{}", gevo_ml::ir::printer::print(&g));
+    }
+}
+
+fn cmd_validate(args: &Args) {
+    use gevo_ml::evo::mutate::valid_random_edit;
+    use gevo_ml::models::twofc;
+    use gevo_ml::runtime::PjrtRuntime;
+    use gevo_ml::tensor::Tensor;
+    use gevo_ml::util::rng::Rng;
+
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    println!("PJRT platform: {}", rt.platform());
+
+    // 1. artifacts smoke-load
+    match gevo_ml::runtime::artifact::ArtifactDir::load("artifacts") {
+        Ok(art) => {
+            for (name, e) in &art.entries {
+                match rt.compile_file(e.hlo_path.to_str().unwrap(), e.num_outputs) {
+                    Ok(_) => println!("artifact {name}: compiles OK ({} outputs)", e.num_outputs),
+                    Err(err) => println!("artifact {name}: FAILED: {err:#}"),
+                }
+            }
+        }
+        Err(e) => println!("no artifacts ({e:#}); run `make artifacts`"),
+    }
+
+    // 2. interpreter vs XLA on random 2fcNet mutants
+    let n = args.usize_or("mutants", 5);
+    let spec = twofc::TwoFcSpec { batch: 4, input: 12, hidden: 6, classes: 3, lr: 0.05 };
+    let base = twofc::train_step_graph(&spec);
+    let mut rng = Rng::new(args.u64_or("seed", 9));
+    let mut agree = 0;
+    for i in 0..n {
+        let g = match valid_random_edit(&base, &mut rng, 30) {
+            Some((_, g)) => g,
+            None => continue,
+        };
+        let inputs: Vec<Tensor> = g
+            .param_types()
+            .iter()
+            .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, &mut rng))
+            .collect();
+        let want = gevo_ml::interp::eval(&g, &inputs).expect("interp");
+        match rt.compile_graph(&g).and_then(|exe| exe.run(&inputs)) {
+            Ok(got) => {
+                let ok = want.iter().zip(got.iter()).all(|(w, g_)| w.allclose(g_, 1e-3));
+                println!("mutant {i}: XLA {} interpreter", if ok { "==" } else { "!=" });
+                if ok {
+                    agree += 1;
+                }
+            }
+            Err(e) => println!("mutant {i}: XLA rejected: {e:#}"),
+        }
+    }
+    println!("{agree}/{n} mutants agree between interpreter and XLA");
+}

@@ -1,0 +1,408 @@
+//! MobileNet-lite — the paper's model-*prediction* workload (Table 1,
+//! §5, §6.1), scaled to interpreter-tractable size while keeping every
+//! layer *type* of MobileNet: standard convolution, depthwise-separable
+//! blocks (depthwise conv + pointwise conv), batch normalization after
+//! every conv, global average pooling, and a fully-connected classifier.
+//!
+//! Weights are either loaded from the AOT artifacts (pretrained in JAX by
+//! `python/compile/pretrain.py`) or generated from a seed (tests).
+//!
+//! §6.1 mutation targets are labeled: `bn{i}_gamma`, `fc_bias_add`,
+//! `conv_last`, and [`key_mutations`] reconstructs the paper's three
+//! epistatic MobileNet mutations for the mutation-analysis experiment.
+
+use super::{batch_norm, bcast_row, relu, softmax};
+use crate::ir::types::TType;
+use crate::ir::{Graph, OpKind, ValueId};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Architecture hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MobileNetSpec {
+    pub batch: usize,
+    /// Input is `side × side × 3` NHWC.
+    pub side: usize,
+    pub classes: usize,
+    /// Base channel width (doubled down the stack).
+    pub width: usize,
+    /// Number of depthwise-separable blocks.
+    pub blocks: usize,
+}
+
+impl Default for MobileNetSpec {
+    fn default() -> Self {
+        MobileNetSpec { batch: 8, side: 16, classes: 10, width: 8, blocks: 5 }
+    }
+}
+
+/// Per-layer channel plan: (stride, out_channels) per separable block.
+///
+/// Channels double on stride-2 blocks and stay constant on stride-1
+/// blocks — like real MobileNet, where stride-1 separable blocks are
+/// shape-preserving. That redundancy is what lets the search bypass whole
+/// blocks at small accuracy cost (the Fig. 4a trade-off).
+fn plan(spec: &MobileNetSpec) -> Vec<(usize, usize)> {
+    (0..spec.blocks)
+        .map(|i| {
+            let stride = if i % 2 == 0 { 2 } else { 1 };
+            let ch = spec.width << (i / 2 + 1).min(3);
+            (stride, ch)
+        })
+        .collect()
+}
+
+/// Named weight tensors for the whole network.
+pub type Weights = BTreeMap<String, Tensor>;
+
+/// Generate reproducible random weights (BN statistics set to identity-ish
+/// values so the untrained net is numerically tame).
+pub fn random_weights(spec: &MobileNetSpec, seed: u64) -> Weights {
+    let mut rng = Rng::new(seed);
+    let mut w = Weights::new();
+    let add_bn = |w: &mut Weights, name: &str, c: usize, rng: &mut Rng| {
+        w.insert(format!("{name}_gamma"), Tensor::rand_uniform(&[c], 0.8, 1.2, rng));
+        w.insert(format!("{name}_beta"), Tensor::rand_uniform(&[c], -0.1, 0.1, rng));
+        w.insert(format!("{name}_mean"), Tensor::rand_uniform(&[c], -0.1, 0.1, rng));
+        w.insert(format!("{name}_var"), Tensor::rand_uniform(&[c], 0.5, 1.5, rng));
+    };
+    w.insert("conv1_w".into(), super::glorot(&[3, 3, 3, spec.width], &mut rng));
+    add_bn(&mut w, "bn1", spec.width, &mut rng);
+    let mut cin = spec.width;
+    for (i, (_, cout)) in plan(spec).iter().enumerate() {
+        w.insert(format!("dw{i}_w"), super::glorot(&[3, 3, cin], &mut rng));
+        add_bn(&mut w, &format!("bn_dw{i}"), cin, &mut rng);
+        w.insert(format!("pw{i}_w"), super::glorot(&[1, 1, cin, *cout], &mut rng));
+        add_bn(&mut w, &format!("bn_pw{i}"), *cout, &mut rng);
+        cin = *cout;
+    }
+    w.insert("fc_w".into(), super::glorot(&[cin, spec.classes], &mut rng));
+    w.insert("fc_b".into(), Tensor::zeros(&[spec.classes]));
+    w
+}
+
+fn take(w: &Weights, key: &str) -> Tensor {
+    w.get(key)
+        .unwrap_or_else(|| panic!("missing weight '{key}'"))
+        .clone()
+}
+
+/// Build the prediction graph: parameter `x [B, side, side, 3]` →
+/// softmax probabilities `[B, classes]`. All weights are embedded
+/// constants (the mutation search space, as in the paper where GEVO-ML
+/// mutates the whole lowered model).
+pub fn predict_graph(spec: &MobileNetSpec, w: &Weights) -> Graph {
+    let mut g = Graph::new("mobilenet_predict");
+    let x = g.param(TType::of(&[spec.batch, spec.side, spec.side, 3]));
+
+    // stem: conv 3x3 stride 1 + BN + relu
+    let cw = g.constant(take(w, "conv1_w"));
+    let c1 = g
+        .push_labeled(OpKind::Conv2d { stride: 1, same: true }, &[x, cw], "conv1")
+        .unwrap();
+    let b1 = batch_norm(
+        &mut g,
+        c1,
+        take(w, "bn1_gamma"),
+        take(w, "bn1_beta"),
+        take(w, "bn1_mean"),
+        take(w, "bn1_var"),
+        "bn1",
+    );
+    let mut h = relu(&mut g, b1);
+
+    // depthwise-separable blocks
+    let p = plan(spec);
+    for (i, (stride, _cout)) in p.iter().enumerate() {
+        let dw = g.constant(take(w, &format!("dw{i}_w")));
+        let dconv = g
+            .push_labeled(
+                OpKind::DepthwiseConv2d { stride: *stride, same: true },
+                &[h, dw],
+                &format!("dwconv{i}"),
+            )
+            .unwrap();
+        let dbn = batch_norm(
+            &mut g,
+            dconv,
+            take(w, &format!("bn_dw{i}_gamma")),
+            take(w, &format!("bn_dw{i}_beta")),
+            take(w, &format!("bn_dw{i}_mean")),
+            take(w, &format!("bn_dw{i}_var")),
+            &format!("bn_dw{i}"),
+        );
+        let dact = relu(&mut g, dbn);
+        let pw = g.constant(take(w, &format!("pw{i}_w")));
+        let label = if i + 1 == p.len() { "conv_last".to_string() } else { format!("pwconv{i}") };
+        let pconv = g
+            .push_labeled(OpKind::Conv2d { stride: 1, same: true }, &[dact, pw], &label)
+            .unwrap();
+        let pbn = batch_norm(
+            &mut g,
+            pconv,
+            take(w, &format!("bn_pw{i}_gamma")),
+            take(w, &format!("bn_pw{i}_beta")),
+            take(w, &format!("bn_pw{i}_mean")),
+            take(w, &format!("bn_pw{i}_var")),
+            &format!("bn_pw{i}"),
+        );
+        h = relu(&mut g, pbn);
+    }
+
+    // head: global average pool → fc → softmax
+    let pooled = g.push_labeled(OpKind::GlobalAvgPool, &[h], "avgpool").unwrap();
+    let fcw = g.constant(take(w, "fc_w"));
+    let fc = g.push_labeled(OpKind::Dot, &[pooled, fcw], "fc").unwrap();
+    let fcb = g.constant(take(w, "fc_b"));
+    let fcbb = bcast_row(&mut g, fcb, spec.batch, spec.classes);
+    let logits = g.push_labeled(OpKind::Add, &[fc, fcbb], "fc_bias_add").unwrap();
+    let probs = softmax(&mut g, logits);
+    g.set_outputs(&[probs]);
+    g
+}
+
+/// The three key §6.1 mutations, reconstructed as direct graph edits so
+/// the mutation-analysis experiment can apply them singly and jointly:
+///
+/// 1. `bn_gamma_swap` — replace the γ of the *last* pointwise BN with the
+///    γ of the previous block's pointwise BN (resized if channel counts
+///    differ, per §4.1);
+/// 2. `drop_fc_bias` — delete the classifier's bias add;
+/// 3. `drop_last_conv` — delete the last pointwise convolution.
+///
+/// Returns the number of graph edits applied.
+pub fn key_mutations(g: &mut Graph, which: &[KeyMutation]) -> usize {
+    let mut applied = 0;
+    for m in which {
+        match m {
+            KeyMutation::BnGammaSwap => {
+                let last = g.len();
+                // find γ constants of the two most recent pointwise BNs
+                let gammas: Vec<ValueId> = g
+                    .insts()
+                    .iter()
+                    .filter(|i| {
+                        i.label
+                            .as_deref()
+                            .map(|l| l.starts_with("bn_pw") && l.ends_with("_gamma"))
+                            .unwrap_or(false)
+                    })
+                    .map(|i| i.id)
+                    .collect();
+                if gammas.len() >= 2 {
+                    let donor = gammas[gammas.len() - 2];
+                    let victim = gammas[gammas.len() - 1];
+                    let want = g.ty(victim).unwrap().clone();
+                    // adapt donor to victim's type, then rewire all uses
+                    let vpos = g.index_of(victim).unwrap();
+                    let insert_at = g
+                        .index_of(donor)
+                        .unwrap()
+                        .max(vpos)
+                        + 1;
+                    if let Ok((adapted, _, _)) =
+                        crate::ir::resize::resize_chain(g, insert_at, donor, &want)
+                    {
+                        let uses = g.uses_of(victim);
+                        let mut ok = false;
+                        for u in uses {
+                            if let crate::ir::graph::Use::Arg { pos, slot } = u {
+                                // only rewire uses after the adapter
+                                if pos > g.index_of(adapted).unwrap()
+                                    && g.replace_arg(pos, slot, adapted).is_ok()
+                                {
+                                    ok = true;
+                                }
+                            }
+                        }
+                        if ok {
+                            applied += 1;
+                        }
+                    }
+                }
+                let _ = last;
+            }
+            KeyMutation::DropFcBias => {
+                if let Some(id) = g.find_label("fc_bias_add") {
+                    // bypass: rewire uses of the add to its first operand
+                    let src = g.inst(id).unwrap().args[0];
+                    let uses = g.uses_of(id);
+                    let mut ok = true;
+                    for u in uses {
+                        match u {
+                            crate::ir::graph::Use::Arg { pos, slot } => {
+                                ok &= g.replace_arg(pos, slot, src).is_ok();
+                            }
+                            crate::ir::graph::Use::Output { slot } => {
+                                ok &= g.replace_output(slot, src).is_ok();
+                            }
+                        }
+                    }
+                    if ok {
+                        let pos = g.index_of(id).unwrap();
+                        g.remove_at(pos);
+                        applied += 1;
+                    }
+                }
+            }
+            KeyMutation::DropLastConv => {
+                if let Some(id) = g.find_label("conv_last") {
+                    // bypass the conv: adapt its input to its output type
+                    let src = g.inst(id).unwrap().args[0];
+                    let want = g.ty(id).unwrap().clone();
+                    let pos = g.index_of(id).unwrap();
+                    if let Ok((adapted, _, inserted)) =
+                        crate::ir::resize::resize_chain(g, pos, src, &want)
+                    {
+                        let id_pos = pos + inserted;
+                        debug_assert_eq!(g.inst_at(id_pos).id, id);
+                        let uses = g.uses_of(id);
+                        let mut ok = true;
+                        for u in uses {
+                            match u {
+                                crate::ir::graph::Use::Arg { pos, slot } => {
+                                    ok &= g.replace_arg(pos, slot, adapted).is_ok();
+                                }
+                                crate::ir::graph::Use::Output { slot } => {
+                                    ok &= g.replace_output(slot, adapted).is_ok();
+                                }
+                            }
+                        }
+                        if ok {
+                            let pos = g.index_of(id).unwrap();
+                            g.remove_at(pos);
+                            applied += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    g.eliminate_dead_code();
+    applied
+}
+
+/// Which §6.1 mutation to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyMutation {
+    BnGammaSwap,
+    DropFcBias,
+    DropLastConv,
+}
+
+/// Classify a dataset; returns accuracy. Partial batches dropped.
+pub fn accuracy_on(g: &Graph, spec: &MobileNetSpec, data: &crate::data::Dataset) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (bi, (x, _)) in data.batches(spec.batch).iter().enumerate() {
+        let Ok(out) = crate::interp::eval(g, &[x.clone()]) else { return 0.0 };
+        let preds = crate::tensor::ops::argmax_last(&out[0]);
+        for (row, &p) in preds.data().iter().enumerate() {
+            if p as usize == data.labels[bi * spec.batch + row] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    correct as f64 / total.max(1) as f64
+}
+
+/// Layer census in the paper's Table 1 vocabulary.
+pub fn table1_census(g: &Graph) -> Vec<(String, usize)> {
+    let c = g.census();
+    let bn = g
+        .insts()
+        .iter()
+        .filter(|i| i.label.as_deref().map(|l| l.ends_with("_out")).unwrap_or(false))
+        .count();
+    vec![
+        ("Depthwise-Convolution".into(), *c.get("depthwise_convolution").unwrap_or(&0)),
+        ("Standard-Convolution".into(), *c.get("convolution").unwrap_or(&0)),
+        ("Batch Norm.".into(), bn),
+        ("Average Pool".into(), *c.get("global_avg_pool").unwrap_or(&0)),
+        ("Fully-connected Layer".into(), *c.get("dot").unwrap_or(&0)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::patterns;
+
+    fn spec() -> MobileNetSpec {
+        MobileNetSpec { batch: 4, side: 16, classes: 10, width: 4, blocks: 3 }
+    }
+
+    #[test]
+    fn builds_and_verifies() {
+        let s = spec();
+        let w = random_weights(&s, 1);
+        let g = predict_graph(&s, &w);
+        crate::ir::verify::verify(&g).unwrap();
+        assert_eq!(g.output_types()[0], TType::of(&[4, 10]));
+    }
+
+    #[test]
+    fn executes_and_rows_sum_to_one() {
+        let s = spec();
+        let w = random_weights(&s, 2);
+        let g = predict_graph(&s, &w);
+        let data = patterns::generate(8, s.side, 3);
+        let (x, _) = data.batch(&[0, 1, 2, 3]);
+        let out = crate::interp::eval(&g, &[x]).unwrap();
+        for r in 0..4 {
+            let sum: f32 = (0..10).map(|c| out[0].at(&[r, c])).sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row {r} sums {sum}");
+        }
+    }
+
+    #[test]
+    fn census_has_all_layer_types() {
+        let s = spec();
+        let w = random_weights(&s, 1);
+        let g = predict_graph(&s, &w);
+        let census = table1_census(&g);
+        let m: std::collections::BTreeMap<_, _> = census.into_iter().collect();
+        assert_eq!(m["Depthwise-Convolution"], 3);
+        assert_eq!(m["Standard-Convolution"], 4); // stem + 3 pointwise
+        assert_eq!(m["Batch Norm."], 7); // stem + 2 per block
+        assert_eq!(m["Average Pool"], 1);
+        assert_eq!(m["Fully-connected Layer"], 1);
+    }
+
+    #[test]
+    fn key_mutations_apply_and_graph_stays_valid() {
+        let s = spec();
+        let w = random_weights(&s, 4);
+        for muts in [
+            vec![KeyMutation::BnGammaSwap],
+            vec![KeyMutation::DropFcBias],
+            vec![KeyMutation::DropLastConv],
+            vec![KeyMutation::BnGammaSwap, KeyMutation::DropFcBias, KeyMutation::DropLastConv],
+        ] {
+            let mut g = predict_graph(&s, &w);
+            let n = key_mutations(&mut g, &muts);
+            assert_eq!(n, muts.len(), "all mutations must apply: {muts:?}");
+            crate::ir::verify::verify(&g).unwrap_or_else(|e| panic!("{muts:?}: {e}"));
+            // still executes
+            let data = patterns::generate(4, s.side, 5);
+            let (x, _) = data.batch(&[0, 1, 2, 3]);
+            let out = crate::interp::eval(&g, &[x]).unwrap();
+            assert_eq!(out[0].dims(), &[4, 10]);
+        }
+    }
+
+    #[test]
+    fn drop_last_conv_reduces_flops() {
+        let s = spec();
+        let w = random_weights(&s, 4);
+        let g0 = predict_graph(&s, &w);
+        let mut g1 = predict_graph(&s, &w);
+        key_mutations(&mut g1, &[KeyMutation::DropLastConv]);
+        assert!(
+            g1.total_flops() < g0.total_flops(),
+            "dropping a conv must reduce FLOPs"
+        );
+    }
+}

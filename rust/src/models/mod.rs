@@ -1,0 +1,126 @@
+//! IR builders for the paper's two evaluation workloads (Table 1):
+//!
+//! * [`twofc`] — the 2fcNet training workload: a two-layer fully-connected
+//!   network with an in-graph SGD step (forward + backward + update),
+//!   op-for-op in the shape of the paper's Fig. 5 listing.
+//! * [`mobilenet`] — the MobileNet prediction workload: a depthwise-
+//!   separable CNN (conv/BN/relu blocks, global average pool, classifier),
+//!   scaled to interpreter-tractable size (MobileNet-lite; DESIGN.md §3).
+//!
+//! Builders label the instructions that matter to the paper's mutation
+//! analysis (`lr`, `grad_scale`, `bn{i}_gamma`, `fc_bias_add`, …) so
+//! §6.1/§6.2 experiments can target them.
+
+pub mod twofc;
+pub mod mobilenet;
+
+use crate::ir::types::TType;
+use crate::ir::{Graph, OpKind, ValueId};
+
+/// Helper: broadcast a `[c]` vector constant across `[rows, c]`.
+pub(crate) fn bcast_row(g: &mut Graph, v: ValueId, rows: usize, c: usize) -> ValueId {
+    g.push(OpKind::Broadcast { dims: vec![rows, c], mapping: vec![1] }, &[v])
+        .expect("bcast_row")
+}
+
+/// Helper: broadcast a scalar across an arbitrary shape.
+pub(crate) fn bcast_scalar(g: &mut Graph, v: ValueId, dims: &[usize]) -> ValueId {
+    g.push(OpKind::Broadcast { dims: dims.to_vec(), mapping: vec![] }, &[v])
+        .expect("bcast_scalar")
+}
+
+/// Helper: `relu(x) = maximum(x, broadcast(0))`, as in the paper's Fig. 1.
+pub(crate) fn relu(g: &mut Graph, x: ValueId) -> ValueId {
+    let dims = g.ty(x).unwrap().dims.clone();
+    let zero = g.constant_scalar(0.0);
+    let zb = bcast_scalar(g, zero, &dims);
+    g.push(OpKind::Maximum, &[x, zb]).expect("relu")
+}
+
+/// Helper: row-softmax of `[rows, c]`, the Fig. 1 tail (max-subtract for
+/// stability, exp, sum, divide).
+pub(crate) fn softmax(g: &mut Graph, x: ValueId) -> ValueId {
+    let dims = g.ty(x).unwrap().dims.clone();
+    let (rows, c) = (dims[0], dims[1]);
+    let m = g
+        .push(OpKind::Reduce { dims: vec![1], kind: crate::ir::ReduceKind::Max }, &[x])
+        .unwrap();
+    let mb = g
+        .push(OpKind::Broadcast { dims: vec![rows, c], mapping: vec![0] }, &[m])
+        .unwrap();
+    let s = g.push(OpKind::Subtract, &[x, mb]).unwrap();
+    let e = g.push(OpKind::Exponential, &[s]).unwrap();
+    let su = g
+        .push(OpKind::Reduce { dims: vec![1], kind: crate::ir::ReduceKind::Sum }, &[e])
+        .unwrap();
+    let sb = g
+        .push(OpKind::Broadcast { dims: vec![rows, c], mapping: vec![0] }, &[su])
+        .unwrap();
+    g.push(OpKind::Divide, &[e, sb]).unwrap()
+}
+
+/// Glorot-uniform initial weights, reproducible by seed.
+pub(crate) fn glorot(
+    dims: &[usize],
+    rng: &mut crate::util::rng::Rng,
+) -> crate::tensor::Tensor {
+    let fan: usize = dims.iter().sum::<usize>().max(1);
+    let limit = (6.0f32 / fan as f32).sqrt();
+    crate::tensor::Tensor::rand_uniform(dims, -limit, limit, rng)
+}
+
+/// Batch-norm (inference form) on `[n,h,w,c]` with per-channel constants:
+/// `γ·(x−μ)/√(σ²+ε) + β`. Labels the γ constant so §6.1's "replace the γ
+/// value in one BN layer" mutation can target it.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn batch_norm(
+    g: &mut Graph,
+    x: ValueId,
+    gamma: crate::tensor::Tensor,
+    beta: crate::tensor::Tensor,
+    mean: crate::tensor::Tensor,
+    var: crate::tensor::Tensor,
+    name: &str,
+) -> ValueId {
+    let dims = g.ty(x).unwrap().dims.clone();
+    let c = *dims.last().unwrap();
+    let map = vec![dims.len() - 1];
+    let ga = g.constant(gamma);
+    g.inst_mut(ga).unwrap().label = Some(format!("{name}_gamma"));
+    let be = g.constant(beta);
+    let mu = g.constant(mean);
+    let va = g.constant(var);
+    let eps = g.constant(crate::tensor::Tensor::full(&[c], 1e-5));
+    let vpe = g.push(OpKind::Add, &[va, eps]).unwrap();
+    let inv = g.push(OpKind::Rsqrt, &[vpe]).unwrap();
+    let scale = g.push(OpKind::Multiply, &[ga, inv]).unwrap(); // γ/√(σ²+ε)  [c]
+    let mb = g
+        .push(OpKind::Broadcast { dims: dims.clone(), mapping: map.clone() }, &[mu])
+        .unwrap();
+    let xm = g.push(OpKind::Subtract, &[x, mb]).unwrap();
+    let sb = g
+        .push(OpKind::Broadcast { dims: dims.clone(), mapping: map.clone() }, &[scale])
+        .unwrap();
+    let xs = g.push(OpKind::Multiply, &[xm, sb]).unwrap();
+    let bb = g
+        .push(OpKind::Broadcast { dims, mapping: map }, &[be])
+        .unwrap();
+    g.push_labeled(OpKind::Add, &[xs, bb], &format!("{name}_out")).unwrap()
+}
+
+/// Accuracy of logits `[n, classes]` against labels.
+pub fn accuracy(logits: &crate::tensor::Tensor, labels: &[usize]) -> f64 {
+    let preds = crate::tensor::ops::argmax_last(logits);
+    let correct = preds
+        .data()
+        .iter()
+        .zip(labels.iter())
+        .filter(|(&p, &l)| p as usize == l)
+        .count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Checked type accessor used by workloads.
+pub fn param_type(g: &Graph, index: usize) -> TType {
+    g.param_types()[index].clone()
+}

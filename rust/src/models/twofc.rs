@@ -1,0 +1,437 @@
+//! 2fcNet — the paper's model-*training* workload (Table 1, §5, §6.2).
+//!
+//! Two fully-connected layers trained with mini-batch SGD. The training
+//! step is a single IR graph containing forward pass, softmax-cross-
+//! entropy gradient, back-propagation, and the weight update — so GEVO-ML
+//! "is able to freely optimize both model forward pass and
+//! back-propagation pass" (§5). The Fig. 5 structure is reproduced
+//! op-for-op in the gradient path, including the labeled mutation
+//! targets: `grad_scale` (the `0.03125 = 1/32` constant of Fig. 5 line 7)
+//! and `lr` (the learning rate applied at line 15).
+
+use super::{bcast_row, bcast_scalar, glorot, relu, softmax};
+use crate::ir::types::TType;
+use crate::ir::{Graph, OpKind, ReduceKind, ValueId};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Model hyper-parameters. Paper values: 784-input MNIST, batch 32,
+/// lr 0.01. The experiment default shrinks the input to 14×14 = 196 and
+/// the hidden layer to 32 to keep thousands of fitness evaluations
+/// tractable on the interpreter (DESIGN.md §3); `full_size()` restores
+/// the paper dimensions.
+#[derive(Debug, Clone, Copy)]
+pub struct TwoFcSpec {
+    pub batch: usize,
+    pub input: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub lr: f32,
+}
+
+impl Default for TwoFcSpec {
+    fn default() -> Self {
+        TwoFcSpec { batch: 32, input: 196, hidden: 32, classes: 10, lr: 0.01 }
+    }
+}
+
+impl TwoFcSpec {
+    /// The paper's dimensions (MNIST 28×28, hidden 128).
+    pub fn full_size() -> Self {
+        TwoFcSpec { batch: 32, input: 784, hidden: 128, classes: 10, lr: 0.01 }
+    }
+
+    /// Image side length (input is a flattened square image).
+    pub fn side(&self) -> usize {
+        (self.input as f64).sqrt() as usize
+    }
+}
+
+/// The model's weights (also the training state threaded through steps).
+#[derive(Debug, Clone)]
+pub struct TwoFcWeights {
+    pub w1: Tensor,
+    pub b1: Tensor,
+    pub w2: Tensor,
+    pub b2: Tensor,
+}
+
+impl TwoFcWeights {
+    /// Reproducible Glorot init.
+    pub fn init(spec: &TwoFcSpec, seed: u64) -> TwoFcWeights {
+        let mut rng = Rng::new(seed);
+        TwoFcWeights {
+            w1: glorot(&[spec.input, spec.hidden], &mut rng),
+            b1: Tensor::zeros(&[spec.hidden]),
+            w2: glorot(&[spec.hidden, spec.classes], &mut rng),
+            b2: Tensor::zeros(&[spec.classes]),
+        }
+    }
+
+    pub fn as_vec(&self) -> Vec<Tensor> {
+        vec![self.w1.clone(), self.b1.clone(), self.w2.clone(), self.b2.clone()]
+    }
+
+    pub fn from_slice(ts: &[Tensor]) -> TwoFcWeights {
+        TwoFcWeights {
+            w1: ts[0].clone(),
+            b1: ts[1].clone(),
+            w2: ts[2].clone(),
+            b2: ts[3].clone(),
+        }
+    }
+}
+
+/// Forward-pass graph for prediction/accuracy measurement.
+///
+/// Parameters: `x [B,in], w1, b1, w2, b2`; output: softmax probabilities
+/// `[B, classes]` (the Fig. 1 program).
+pub fn predict_graph(spec: &TwoFcSpec) -> Graph {
+    let mut g = Graph::new("twofc_predict");
+    let x = g.param(TType::of(&[spec.batch, spec.input]));
+    let w1 = g.param(TType::of(&[spec.input, spec.hidden]));
+    let b1 = g.param(TType::of(&[spec.hidden]));
+    let w2 = g.param(TType::of(&[spec.hidden, spec.classes]));
+    let b2 = g.param(TType::of(&[spec.classes]));
+    let p = forward(&mut g, spec, x, w1, b1, w2, b2);
+    g.set_outputs(&[p.probs]);
+    g
+}
+
+struct Forward {
+    z1: ValueId,
+    a1: ValueId,
+    probs: ValueId,
+}
+
+fn forward(
+    g: &mut Graph,
+    spec: &TwoFcSpec,
+    x: ValueId,
+    w1: ValueId,
+    b1: ValueId,
+    w2: ValueId,
+    b2: ValueId,
+) -> Forward {
+    let (b, h, c) = (spec.batch, spec.hidden, spec.classes);
+    let d1 = g.push_labeled(OpKind::Dot, &[x, w1], "dense1").unwrap();
+    let b1b = bcast_row(g, b1, b, h);
+    let z1 = g.push(OpKind::Add, &[d1, b1b]).unwrap();
+    let a1 = relu(g, z1);
+    let d2 = g.push_labeled(OpKind::Dot, &[a1, w2], "dense2").unwrap();
+    let b2b = bcast_row(g, b2, b, c);
+    let z2 = g.push_labeled(OpKind::Add, &[d2, b2b], "logits").unwrap();
+    let probs = softmax(g, z2);
+    Forward { z1, a1, probs }
+}
+
+/// One SGD training step as a single graph (the Fig. 5 program).
+///
+/// Parameters: `x [B,in], y [B,classes] (one-hot), w1, b1, w2, b2`.
+/// Outputs: `new_w1, new_b1, new_w2, new_b2, mean_loss`.
+///
+/// Mutation-relevant labels:
+/// * `grad_scale` — the `1/B` constant (Fig. 5's `0.03125`), applied
+///   elementwise to the gradient exactly as in line 7–10 of the figure;
+/// * `lr` — the learning-rate constant applied to every update.
+pub fn train_step_graph(spec: &TwoFcSpec) -> Graph {
+    let (bsz, inp, h, c) = (spec.batch, spec.input, spec.hidden, spec.classes);
+    let mut g = Graph::new("twofc_train_step");
+    let x = g.param(TType::of(&[bsz, inp]));
+    let y = g.param(TType::of(&[bsz, c]));
+    let w1 = g.param(TType::of(&[inp, h]));
+    let b1 = g.param(TType::of(&[h]));
+    let w2 = g.param(TType::of(&[h, c]));
+    let b2 = g.param(TType::of(&[c]));
+
+    // ---- forward (Fig. 5 lines 1-5) --------------------------------------
+    let f = forward(&mut g, spec, x, w1, b1, w2, b2);
+
+    // ---- loss: mean cross-entropy (reported, not differentiated) ---------
+    let logp = g.push(OpKind::Log, &[f.probs]).unwrap();
+    let ylogp = g.push(OpKind::Multiply, &[y, logp]).unwrap();
+    let per = g
+        .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[ylogp])
+        .unwrap();
+    let negsum = g.push(OpKind::Negate, &[per]).unwrap();
+    let inv_b = g.constant_scalar(1.0 / bsz as f32);
+    let loss = g.push_labeled(OpKind::Multiply, &[negsum, inv_b], "mean_loss").unwrap();
+
+    // ---- gradient (Fig. 5 lines 6-14) -------------------------------------
+    // %62 = subtract(probs, label)
+    let d2raw = g.push_labeled(OpKind::Subtract, &[f.probs, y], "grad_raw").unwrap();
+    // %63 = multiply(%62, 0.03125)  — `grad_scale` is THE §6.2 target
+    let gs = g.constant(Tensor::full(&[bsz, c], 1.0 / bsz as f32));
+    g.inst_mut(gs).unwrap().label = Some("grad_scale".into());
+    let d2 = g.push_labeled(OpKind::Multiply, &[d2raw, gs], "grad_scaled").unwrap();
+    // dw2 = a1ᵀ · d2 ; db2 = reduce over batch (Fig. 5 lines 11-14)
+    let a1t = g.push(OpKind::Transpose { perm: vec![1, 0] }, &[f.a1]).unwrap();
+    let dw2 = g.push(OpKind::Dot, &[a1t, d2]).unwrap();
+    let db2 = g
+        .push(OpKind::Reduce { dims: vec![0], kind: ReduceKind::Sum }, &[d2])
+        .unwrap();
+    // backprop through layer 1
+    let w2t = g.push(OpKind::Transpose { perm: vec![1, 0] }, &[w2]).unwrap();
+    let da1 = g.push(OpKind::Dot, &[d2, w2t]).unwrap();
+    let zero = g.constant_scalar(0.0);
+    let zb = bcast_scalar(&mut g, zero, &[bsz, h]);
+    let mask = g.push(OpKind::CompareGt, &[f.z1, zb]).unwrap(); // relu'
+    let dz1 = g.push(OpKind::Multiply, &[da1, mask]).unwrap();
+    let xt = g.push(OpKind::Transpose { perm: vec![1, 0] }, &[x]).unwrap();
+    let dw1 = g.push(OpKind::Dot, &[xt, dz1]).unwrap();
+    let db1 = g
+        .push(OpKind::Reduce { dims: vec![0], kind: ReduceKind::Sum }, &[dz1])
+        .unwrap();
+
+    // ---- update (Fig. 5 lines 15-18): w ← w − lr·dw ------------------------
+    let lr = g.constant_scalar(spec.lr);
+    g.inst_mut(lr).unwrap().label = Some("lr".into());
+    let upd = |g: &mut Graph, w: ValueId, dw: ValueId, name: &str| {
+        let dims = g.ty(w).unwrap().dims.clone();
+        let lrb = bcast_scalar(g, lr, &dims);
+        let step = g.push(OpKind::Multiply, &[dw, lrb]).unwrap();
+        g.push_labeled(OpKind::Subtract, &[w, step], name).unwrap()
+    };
+    let nw1 = upd(&mut g, w1, dw1, "new_w1");
+    let nb1 = upd(&mut g, b1, db1, "new_b1");
+    let nw2 = upd(&mut g, w2, dw2, "new_w2");
+    let nb2 = upd(&mut g, b2, db2, "new_b2");
+
+    g.set_outputs(&[nw1, nb1, nw2, nb2, loss]);
+    g
+}
+
+/// Reconstruct the paper's §6.2 / Fig. 5 mutation as a graph edit:
+/// GEVO-ML copied a `broadcast`, connected the *labels* tensor through a
+/// pad/slice repair chain, and used the result to replace the `0.03125`
+/// gradient-scale operand. After the repair the replacing tensor is
+/// "filled mostly by value 1", so the gradient is effectively unscaled —
+/// ≈ B× larger, the same effect as raising the learning rate.
+///
+/// Here: pad the one-hot labels `[B,C]` on the high edge of dim 1 by `C`
+/// (pad value 1.0, per §4.1), slice columns `C..2C` (all 1s), and swap
+/// that in for the `grad_scale` constant.
+pub fn apply_fig5_gradient_mutation(g: &mut Graph) -> Result<(), crate::ir::IrError> {
+    use crate::ir::graph::Use;
+    let gs = g
+        .find_label("grad_scale")
+        .ok_or_else(|| crate::ir::IrError::Graph("no grad_scale label".into()))?;
+    let uses = g.uses_of(gs);
+    let Some(&Use::Arg { pos, slot }) = uses.first() else {
+        return Err(crate::ir::IrError::Graph("grad_scale unused".into()));
+    };
+    // the labels parameter is entry index 1
+    let y = g
+        .insts()
+        .iter()
+        .find(|i| matches!(i.kind, OpKind::Parameter { index: 1 }))
+        .map(|i| i.id)
+        .ok_or_else(|| crate::ir::IrError::Graph("no labels parameter".into()))?;
+    let dims = g.ty(y).unwrap().dims.clone(); // [B, C]
+    let (_b, c) = (dims[0], dims[1]);
+    // %R1 = pad(%label, 1) : [B,C] -> [B,2C]
+    let padded = g.insert_at(
+        pos,
+        OpKind::Pad { low: vec![0, 0], high: vec![0, c], value: 1.0 },
+        &[y],
+    )?;
+    // %R2/%I1 = slice columns C..2C (all pad values = 1)
+    let ones = g.insert_at(
+        pos + 1,
+        OpKind::Slice { starts: vec![0, c], limits: vec![dims[0], 2 * c] },
+        &[padded],
+    )?;
+    g.replace_arg(pos + 2, slot, ones)?;
+    g.eliminate_dead_code();
+    crate::ir::verify::verify(g)
+}
+
+/// Run `steps` of SGD with the given (possibly mutated) train-step graph
+/// over pre-built batches; returns final weights and last loss, or `None`
+/// if the graph fails to execute or produces non-finite state (§4.3's
+/// "individuals execute successfully" requirement).
+pub fn run_training(
+    step: &Graph,
+    init: &TwoFcWeights,
+    batches: &[(Tensor, Tensor)],
+    epochs: usize,
+) -> Option<(TwoFcWeights, f64)> {
+    let mut w = init.clone();
+    let mut last_loss = f64::NAN;
+    for _ in 0..epochs {
+        for (x, y) in batches {
+            let inputs = vec![
+                x.clone(),
+                y.clone(),
+                w.w1.clone(),
+                w.b1.clone(),
+                w.w2.clone(),
+                w.b2.clone(),
+            ];
+            let out = crate::interp::eval(step, &inputs).ok()?;
+            if out.iter().take(4).any(|t| t.has_non_finite()) {
+                return None;
+            }
+            w = TwoFcWeights::from_slice(&out[0..4]);
+            last_loss = out[4].item() as f64;
+        }
+    }
+    if !last_loss.is_finite() {
+        return None;
+    }
+    Some((w, last_loss))
+}
+
+/// Classify a dataset with the (unmutated) predict graph and weights;
+/// returns accuracy. Partial final batches are dropped (fixed-batch graph).
+pub fn accuracy_on(
+    predict: &Graph,
+    spec: &TwoFcSpec,
+    w: &TwoFcWeights,
+    data: &crate::data::Dataset,
+) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (bi, (x, _)) in data.batches(spec.batch).iter().enumerate() {
+        let inputs = vec![x.clone(), w.w1.clone(), w.b1.clone(), w.w2.clone(), w.b2.clone()];
+        let Ok(out) = crate::interp::eval(predict, &inputs) else { return 0.0 };
+        let preds = crate::tensor::ops::argmax_last(&out[0]);
+        for (row, &p) in preds.data().iter().enumerate() {
+            if p as usize == data.labels[bi * spec.batch + row] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    correct as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digits;
+
+    fn small_spec() -> TwoFcSpec {
+        TwoFcSpec { batch: 16, input: 196, hidden: 24, classes: 10, lr: 0.15 }
+    }
+
+    #[test]
+    fn graphs_verify() {
+        let spec = small_spec();
+        crate::ir::verify::verify(&predict_graph(&spec)).unwrap();
+        crate::ir::verify::verify(&train_step_graph(&spec)).unwrap();
+    }
+
+    #[test]
+    fn labels_present_for_mutation_targets() {
+        let g = train_step_graph(&small_spec());
+        for lbl in ["grad_scale", "lr", "dense1", "dense2", "mean_loss"] {
+            assert!(g.find_label(lbl).is_some(), "missing label {lbl}");
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_learns() {
+        let spec = small_spec();
+        let step = train_step_graph(&spec);
+        let predict = predict_graph(&spec);
+        let data = digits::generate(640, spec.side(), 11);
+        let (train, test) = data.split(512);
+        let batches = train.batches(spec.batch);
+        let init = TwoFcWeights::init(&spec, 1);
+
+        // loss after 0 epochs vs after 3
+        let (_, loss1) = run_training(&step, &init, &batches[..4], 1).unwrap();
+        let (w, loss2) = run_training(&step, &init, &batches, 3).unwrap();
+        assert!(loss2 < loss1, "loss did not decrease: {loss1} -> {loss2}");
+
+        let acc_init = accuracy_on(&predict, &spec, &init, &test);
+        let acc_trained = accuracy_on(&predict, &spec, &w, &test);
+        assert!(
+            acc_trained > acc_init + 0.3,
+            "training barely helped: {acc_init} -> {acc_trained}"
+        );
+        assert!(acc_trained > 0.6, "test accuracy only {acc_trained}");
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        // Verify the hand-written backward pass: perturb one w2 entry and
+        // compare d(loss)/dw against the graph's update step.
+        let spec = TwoFcSpec { batch: 4, input: 6, hidden: 5, classes: 3, lr: 1.0 };
+        let step = train_step_graph(&spec);
+        let mut rng = Rng::new(3);
+        let x = Tensor::rand_uniform(&[4, 6], 0.0, 1.0, &mut rng);
+        let mut yv = vec![0.0f32; 12];
+        for r in 0..4 {
+            yv[r * 3 + r % 3] = 1.0;
+        }
+        let y = Tensor::new(crate::tensor::Shape::of(&[4, 3]), yv);
+        let w = TwoFcWeights::init(&spec, 2);
+
+        let run_loss = |w: &TwoFcWeights| -> f64 {
+            let out = crate::interp::eval(
+                &step,
+                &[x.clone(), y.clone(), w.w1.clone(), w.b1.clone(), w.w2.clone(), w.b2.clone()],
+            )
+            .unwrap();
+            out[4].item() as f64
+        };
+        // gradient from the update: dw2 = (w2 - new_w2) / lr ; lr = 1
+        let out = crate::interp::eval(
+            &step,
+            &[x.clone(), y.clone(), w.w1.clone(), w.b1.clone(), w.w2.clone(), w.b2.clone()],
+        )
+        .unwrap();
+        let analytic = w.w2.at(&[2, 1]) - out[2].at(&[2, 1]);
+        // finite difference
+        let eps = 1e-3f32;
+        let mut wp = w.clone();
+        wp.w2.set(&[2, 1], w.w2.at(&[2, 1]) + eps);
+        let mut wm = w.clone();
+        wm.w2.set(&[2, 1], w.w2.at(&[2, 1]) - eps);
+        let numeric = (run_loss(&wp) - run_loss(&wm)) / (2.0 * eps as f64);
+        assert!(
+            (analytic as f64 - numeric).abs() < 2e-3,
+            "grad mismatch: analytic {analytic} vs numeric {numeric}"
+        );
+    }
+
+    #[test]
+    fn fig5_mutation_applies_and_boosts_gradient() {
+        let spec = small_spec();
+        let mut g = train_step_graph(&spec);
+        apply_fig5_gradient_mutation(&mut g).unwrap();
+        crate::ir::verify::verify(&g).unwrap();
+        // One step with the mutated graph must move weights ~B× further
+        // than the baseline (grad no longer scaled by 1/B).
+        let base = train_step_graph(&spec);
+        let data = digits::generate(32, spec.side(), 3);
+        let (x, y) = data.batch(&(0..16).collect::<Vec<_>>());
+        let w = TwoFcWeights::init(&spec, 1);
+        let ins = vec![x, y, w.w1.clone(), w.b1.clone(), w.w2.clone(), w.b2.clone()];
+        let out_base = crate::interp::eval(&base, &ins).unwrap();
+        let out_mut = crate::interp::eval(&g, &ins).unwrap();
+        let delta = |out: &[Tensor]| -> f64 {
+            out[2]
+                .data()
+                .iter()
+                .zip(w.w2.data())
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum()
+        };
+        let (db, dm) = (delta(&out_base), delta(&out_mut));
+        assert!(
+            dm > db * 4.0,
+            "mutated step should take much larger steps: base {db}, mutated {dm}"
+        );
+    }
+
+    #[test]
+    fn census_matches_table1_shape() {
+        // Table 1: 2fcNet = 2 fully-connected layers. Our census counts 2
+        // dot ops in the forward pass.
+        let g = predict_graph(&small_spec());
+        assert_eq!(g.census()["dot"], 2);
+    }
+}

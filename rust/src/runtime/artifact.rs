@@ -1,0 +1,137 @@
+//! AOT artifact loading.
+//!
+//! `make artifacts` runs `python/compile/aot.py`, which writes:
+//!
+//! * `artifacts/manifest.json` — name → {hlo file, #outputs, input shapes,
+//!   description} for every lowered computation;
+//! * `artifacts/<name>.hlo.txt` — HLO text per computation;
+//! * `artifacts/<model>_weights.json` — pretrained weights (MobileNet-lite)
+//!   or fixed initial weights (2fcNet), consumed by [`crate::models`].
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One entry in the artifact manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub num_outputs: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub description: String,
+}
+
+/// The parsed `artifacts/` directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl ArtifactDir {
+    /// Load `root/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<ArtifactDir> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut entries = BTreeMap::new();
+        for ej in j.get("computations")?.as_arr()? {
+            let name = ej.get("name")?.as_str()?.to_string();
+            let hlo = ej.get("hlo")?.as_str()?.to_string();
+            let num_outputs = ej.get("num_outputs")?.as_usize()?;
+            let input_shapes = ej
+                .get("input_shapes")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize_vec())
+                .collect::<std::result::Result<Vec<_>, _>>()?;
+            let description = ej
+                .opt("description")
+                .and_then(|d| d.as_str().ok())
+                .unwrap_or("")
+                .to_string();
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    hlo_path: root.join(hlo),
+                    num_outputs,
+                    input_shapes,
+                    description,
+                },
+            );
+        }
+        Ok(ArtifactDir { root, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Load a weights JSON (flat name → {shape, data}) from the artifact
+    /// directory.
+    pub fn load_weights(&self, file: &str) -> Result<BTreeMap<String, crate::tensor::Tensor>> {
+        let path = self.root.join(file);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing weights json")?;
+        let mut out = BTreeMap::new();
+        if let Json::Obj(map) = &j {
+            for (k, v) in map {
+                let shape = v.get("shape")?.as_usize_vec()?;
+                let data = v.get("data")?.as_f32_vec()?;
+                out.insert(
+                    k.clone(),
+                    crate::tensor::Tensor::new(crate::tensor::Shape::of(&shape), data),
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gevoml_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"computations": [{"name": "m", "hlo": "m.hlo.txt", "num_outputs": 2,
+                "input_shapes": [[2,3],[3]], "description": "test"}]}"#,
+        )
+        .unwrap();
+        let a = ArtifactDir::load(&dir).unwrap();
+        let e = a.get("m").unwrap();
+        assert_eq!(e.num_outputs, 2);
+        assert_eq!(e.input_shapes, vec![vec![2, 3], vec![3]]);
+        assert!(a.get("missing").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn loads_weights() {
+        let dir = std::env::temp_dir().join(format!("gevoml_w_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"computations": []}"#).unwrap();
+        std::fs::write(
+            dir.join("w.json"),
+            r#"{"w1": {"shape": [2,2], "data": [1,2,3,4]}}"#,
+        )
+        .unwrap();
+        let a = ArtifactDir::load(&dir).unwrap();
+        let w = a.load_weights("w.json").unwrap();
+        assert_eq!(w["w1"].dims(), &[2, 2]);
+        assert_eq!(w["w1"].data(), &[1.0, 2.0, 3.0, 4.0]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,20 @@
+//! Dense tensor substrate.
+//!
+//! This is the kernel library underneath the graph interpreter
+//! ([`crate::interp`]) — the analog of the runtime kernels IREE provides in
+//! the paper's setup. Everything is row-major dense `f32`, matching the
+//! HLO-dialect programs in the paper (Fig. 1/Fig. 5 operate on f32
+//! tensors).
+//!
+//! * [`shape`] — shape/stride/index math and broadcast compatibility.
+//! * [`tensor`] — the `Tensor` container.
+//! * [`ops`] — primitive kernels: elementwise, `dot`, `reduce`,
+//!   `pad`/`slice`, `broadcast_in_dim`, `transpose`, convolutions and
+//!   pooling.
+
+pub mod shape;
+pub mod tensor;
+pub mod ops;
+
+pub use shape::Shape;
+pub use tensor::Tensor;

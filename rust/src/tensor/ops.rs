@@ -1,0 +1,798 @@
+//! Primitive tensor kernels.
+//!
+//! These implement the HLO-dialect op set the IR interpreter dispatches to
+//! (DESIGN.md §2). Conventions follow XLA/HLO:
+//!
+//! * binary elementwise ops require *identical* shapes — shape adaptation
+//!   is expressed in the IR with explicit `broadcast_in_dim`, exactly as in
+//!   the paper's Fig. 1/Fig. 5 listings;
+//! * `conv2d` is NHWC with HWIO filters; `depthwise_conv2d` is NHWC with
+//!   HWC filters (channel multiplier 1, as in MobileNet);
+//! * `pad` supports negative edge padding implicitly via [`slice`] — the
+//!   tensor-resize mutation (paper §4.1, Fig. 3) composes `pad` (grow) and
+//!   `slice` (shrink).
+
+use super::shape::Shape;
+use super::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// elementwise
+// ---------------------------------------------------------------------------
+
+/// Apply a binary op elementwise over identically-shaped tensors.
+pub fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "elementwise shape mismatch: {} vs {}", a.shape(), b.shape());
+    let data = a
+        .data()
+        .iter()
+        .zip(b.data().iter())
+        .map(|(&x, &y)| f(x, y))
+        .collect();
+    Tensor::new(a.shape().clone(), data)
+}
+
+/// Apply a unary op elementwise.
+pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::new(a.shape().clone(), a.data().iter().map(|&x| f(x)).collect())
+}
+
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x + y)
+}
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x - y)
+}
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x * y)
+}
+pub fn div(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x / y)
+}
+pub fn maximum(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, f32::max)
+}
+pub fn minimum(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, f32::min)
+}
+pub fn exp(a: &Tensor) -> Tensor {
+    map(a, f32::exp)
+}
+pub fn log(a: &Tensor) -> Tensor {
+    map(a, f32::ln)
+}
+pub fn neg(a: &Tensor) -> Tensor {
+    map(a, |x| -x)
+}
+pub fn sqrt(a: &Tensor) -> Tensor {
+    map(a, f32::sqrt)
+}
+pub fn rsqrt(a: &Tensor) -> Tensor {
+    map(a, |x| 1.0 / x.sqrt())
+}
+pub fn tanh(a: &Tensor) -> Tensor {
+    map(a, f32::tanh)
+}
+
+/// HLO `compare` (direction GE etc.) producing 0.0/1.0 floats.
+pub fn compare_gt(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| if x > y { 1.0 } else { 0.0 })
+}
+
+/// HLO `select`: `pred != 0 ? on_true : on_false`, all same shape.
+pub fn select(pred: &Tensor, on_true: &Tensor, on_false: &Tensor) -> Tensor {
+    assert_eq!(pred.shape(), on_true.shape());
+    assert_eq!(pred.shape(), on_false.shape());
+    let data = pred
+        .data()
+        .iter()
+        .zip(on_true.data().iter().zip(on_false.data().iter()))
+        .map(|(&p, (&t, &f))| if p != 0.0 { t } else { f })
+        .collect();
+    Tensor::new(pred.shape().clone(), data)
+}
+
+// ---------------------------------------------------------------------------
+// dot (matmul)
+// ---------------------------------------------------------------------------
+
+/// HLO `dot` for rank ≤ 2 operands:
+/// `[m,k]·[k,n] → [m,n]`, `[m,k]·[k] → [m]`, `[k]·[k,n] → [n]`, `[k]·[k] → scalar`.
+///
+/// The 2-D×2-D case is the hot path of every fitness evaluation; it runs a
+/// cache-blocked i-k-j kernel with a unrolled inner loop over `j`.
+pub fn dot(a: &Tensor, b: &Tensor) -> Tensor {
+    match (a.rank(), b.rank()) {
+        (2, 2) => matmul(a, b),
+        (2, 1) => {
+            let m = a.dims()[0];
+            let k = a.dims()[1];
+            assert_eq!(k, b.dims()[0], "dot: inner dims {k} vs {}", b.dims()[0]);
+            let mut out = vec![0.0f32; m];
+            for i in 0..m {
+                let row = &a.data()[i * k..(i + 1) * k];
+                out[i] = row.iter().zip(b.data()).map(|(&x, &y)| x * y).sum();
+            }
+            Tensor::new(Shape::of(&[m]), out)
+        }
+        (1, 2) => {
+            let k = a.dims()[0];
+            assert_eq!(k, b.dims()[0], "dot: inner dims");
+            let n = b.dims()[1];
+            let mut out = vec![0.0f32; n];
+            for (t, row) in a.data().iter().zip(b.data().chunks(n)) {
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o += t * v;
+                }
+            }
+            Tensor::new(Shape::of(&[n]), out)
+        }
+        (1, 1) => {
+            assert_eq!(a.dims(), b.dims(), "dot: vector lengths");
+            Tensor::scalar(a.data().iter().zip(b.data()).map(|(&x, &y)| x * y).sum())
+        }
+        (ra, rb) => panic!("dot: unsupported ranks {ra}x{rb}"),
+    }
+}
+
+/// Cache-blocked `[m,k]·[k,n] → [m,n]` GEMM.
+///
+/// i-k-j loop order keeps the B row and C row streaming; blocks of 64 over
+/// k and 256 over n keep the working set in L1/L2. See EXPERIMENTS.md
+/// §Perf for the measured iteration history of this kernel.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul: inner dims {k} vs {k2}");
+    let mut c = vec![0.0f32; m * n];
+    const KB: usize = 64;
+    const NB: usize = 256;
+    let ad = a.data();
+    let bd = b.data();
+    for nb in (0..n).step_by(NB) {
+        let ne = (nb + NB).min(n);
+        for kb in (0..k).step_by(KB) {
+            let ke = (kb + KB).min(k);
+            for i in 0..m {
+                let arow = &ad[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + nb..i * n + ne];
+                for kk in kb..ke {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n + nb..kk * n + ne];
+                    for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(Shape::of(&[m, n]), c)
+}
+
+// ---------------------------------------------------------------------------
+// shape ops
+// ---------------------------------------------------------------------------
+
+/// HLO `transpose` with an arbitrary permutation.
+pub fn transpose(a: &Tensor, perm: &[usize]) -> Tensor {
+    assert_eq!(perm.len(), a.rank(), "transpose: perm rank");
+    let in_dims = a.dims();
+    let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+    let out_shape = Shape::of(&out_dims);
+    let in_strides = a.shape().strides();
+    let mut out = vec![0.0f32; a.numel()];
+    let mut idx = vec![0usize; a.rank()];
+    for (off, slot) in out.iter_mut().enumerate() {
+        // Decompose off in out coordinates, map through perm.
+        let mut rem = off;
+        for d in (0..out_dims.len()).rev() {
+            idx[d] = rem % out_dims[d];
+            rem /= out_dims[d];
+        }
+        let mut src = 0;
+        for (d, &p) in perm.iter().enumerate() {
+            src += idx[d] * in_strides[p];
+        }
+        *slot = a.data()[src];
+    }
+    Tensor::new(out_shape, out)
+}
+
+/// HLO `broadcast_in_dim`: map each input dim to an output dim; other
+/// output dims replicate. `mapping[i]` is the output dim of input dim `i`
+/// (must be increasing; size must match or be 1).
+///
+/// Hot path of every batch-norm / bias / softmax in the interpreter;
+/// specialised fast paths avoid per-element div/mod (§Perf):
+/// * scalar / single-element input → `fill`;
+/// * input mapped to the trailing dims with matching sizes → tiled
+///   `copy_from_slice`;
+/// * general case → odometer (incremental index) walk.
+pub fn broadcast_in_dim(a: &Tensor, out_dims: &[usize], mapping: &[usize]) -> Tensor {
+    assert_eq!(mapping.len(), a.rank(), "broadcast_in_dim: mapping rank");
+    for w in mapping.windows(2) {
+        assert!(w[0] < w[1], "broadcast_in_dim: mapping must be increasing");
+    }
+    for (i, &m) in mapping.iter().enumerate() {
+        assert!(m < out_dims.len(), "broadcast_in_dim: mapping out of range");
+        assert!(
+            a.dims()[i] == out_dims[m] || a.dims()[i] == 1,
+            "broadcast_in_dim: input dim {i} ({}) incompatible with output dim {m} ({})",
+            a.dims()[i],
+            out_dims[m]
+        );
+    }
+    let out_shape = Shape::of(out_dims);
+    let n = out_shape.numel();
+
+    // fast path: single-element source
+    if a.numel() == 1 {
+        return Tensor::new(out_shape, vec![a.data()[0]; n]);
+    }
+
+    // fast path: source occupies the trailing output dims contiguously
+    // with exact sizes (e.g. [c] -> [b,h,w,c], [h,w] -> [b,h,w]).
+    let r_out = out_dims.len();
+    let r_in = a.rank();
+    let trailing = mapping
+        .iter()
+        .enumerate()
+        .all(|(i, &m)| m == r_out - r_in + i && a.dims()[i] == out_dims[m]);
+    if trailing {
+        let chunk = a.numel();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n / chunk {
+            out.extend_from_slice(a.data());
+        }
+        return Tensor::new(out_shape, out);
+    }
+
+    // general case: odometer walk over the output index space.
+    let mut out = vec![0.0f32; n];
+    let in_strides = a.shape().strides();
+    // per-output-dim source stride (0 where replicated or size-1 input)
+    let mut src_stride = vec![0usize; r_out];
+    for (i, &m) in mapping.iter().enumerate() {
+        if a.dims()[i] != 1 {
+            src_stride[m] = in_strides[i];
+        }
+    }
+    let mut idx = vec![0usize; r_out];
+    let mut src = 0usize;
+    let data = a.data();
+    for slot in out.iter_mut() {
+        *slot = data[src];
+        // increment the odometer, updating src incrementally
+        for d in (0..r_out).rev() {
+            idx[d] += 1;
+            src += src_stride[d];
+            if idx[d] < out_dims[d] {
+                break;
+            }
+            src -= src_stride[d] * out_dims[d];
+            idx[d] = 0;
+        }
+    }
+    Tensor::new(out_shape, out)
+}
+
+/// HLO `pad` with edge-low/edge-high counts and a pad value (no interior
+/// padding). Negative counts are rejected — shrinking is `slice`.
+pub fn pad(a: &Tensor, low: &[usize], high: &[usize], value: f32) -> Tensor {
+    assert_eq!(low.len(), a.rank());
+    assert_eq!(high.len(), a.rank());
+    let out_dims: Vec<usize> = a
+        .dims()
+        .iter()
+        .zip(low.iter().zip(high.iter()))
+        .map(|(&d, (&l, &h))| d + l + h)
+        .collect();
+    let out_shape = Shape::of(&out_dims);
+    let mut out = vec![value; out_shape.numel()];
+    let out_strides = out_shape.strides();
+    let in_dims = a.dims();
+    for (src_off, &v) in a.data().iter().enumerate() {
+        let mut rem = src_off;
+        let mut dst = 0;
+        for d in (0..in_dims.len()).rev() {
+            let ix = rem % in_dims[d];
+            rem /= in_dims[d];
+            dst += (ix + low[d]) * out_strides[d];
+        }
+        out[dst] = v;
+    }
+    Tensor::new(out_shape, out)
+}
+
+/// HLO `slice` with unit strides: `starts[d] .. limits[d]` per dim.
+pub fn slice(a: &Tensor, starts: &[usize], limits: &[usize]) -> Tensor {
+    assert_eq!(starts.len(), a.rank());
+    assert_eq!(limits.len(), a.rank());
+    let out_dims: Vec<usize> = starts
+        .iter()
+        .zip(limits.iter())
+        .enumerate()
+        .map(|(d, (&s, &l))| {
+            assert!(s < l && l <= a.dims()[d], "slice: bad range [{s},{l}) on dim {d} of size {}", a.dims()[d]);
+            l - s
+        })
+        .collect();
+    let out_shape = Shape::of(&out_dims);
+    let mut out = vec![0.0f32; out_shape.numel()];
+    let in_strides = a.shape().strides();
+    for (off, slot) in out.iter_mut().enumerate() {
+        let mut rem = off;
+        let mut src = 0;
+        for d in (0..out_dims.len()).rev() {
+            let ix = rem % out_dims[d];
+            rem /= out_dims[d];
+            src += (ix + starts[d]) * in_strides[d];
+        }
+        *slot = a.data()[src];
+    }
+    Tensor::new(out_shape, out)
+}
+
+/// HLO `concatenate` along `dim`.
+pub fn concat(parts: &[&Tensor], dim: usize) -> Tensor {
+    assert!(!parts.is_empty());
+    let rank = parts[0].rank();
+    assert!(dim < rank);
+    let mut out_dims = parts[0].dims().to_vec();
+    out_dims[dim] = parts.iter().map(|p| p.dims()[dim]).sum();
+    for p in parts {
+        assert_eq!(p.rank(), rank);
+        for d in 0..rank {
+            if d != dim {
+                assert_eq!(p.dims()[d], parts[0].dims()[d], "concat: dim {d} mismatch");
+            }
+        }
+    }
+    let out_shape = Shape::of(&out_dims);
+    let mut out = vec![0.0f32; out_shape.numel()];
+    let out_strides = out_shape.strides();
+    let mut base = 0usize;
+    for p in parts {
+        let in_dims = p.dims();
+        for (src_off, &v) in p.data().iter().enumerate() {
+            let mut rem = src_off;
+            let mut dst = 0;
+            for d in (0..rank).rev() {
+                let mut ix = rem % in_dims[d];
+                rem /= in_dims[d];
+                if d == dim {
+                    ix += base;
+                }
+                dst += ix * out_strides[d];
+            }
+            out[dst] = v;
+        }
+        base += p.dims()[dim];
+    }
+    Tensor::new(out_shape, out)
+}
+
+// ---------------------------------------------------------------------------
+// reductions
+// ---------------------------------------------------------------------------
+
+/// Reduction kind for HLO `reduce` (the paper's Fig. 1 uses both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+    Min,
+}
+
+/// HLO `reduce` over a set of dimensions (sorted, deduped by caller).
+///
+/// Fast paths (§Perf): trailing-dim reduction (row sums/maxes — the
+/// softmax/bias-gradient shape) runs as contiguous chunk folds; leading-
+/// dim reduction (batch sums) as strided row folds; the general case
+/// uses an odometer walk instead of per-element div/mod.
+pub fn reduce(a: &Tensor, dims: &[usize], kind: ReduceKind) -> Tensor {
+    for &d in dims {
+        assert!(d < a.rank(), "reduce: dim {d} out of rank {}", a.rank());
+    }
+    let keep: Vec<usize> = (0..a.rank()).filter(|d| !dims.contains(d)).collect();
+    let out_dims: Vec<usize> = keep.iter().map(|&d| a.dims()[d]).collect();
+    let out_shape = Shape::of(&out_dims);
+    let init = match kind {
+        ReduceKind::Sum => 0.0f32,
+        ReduceKind::Max => f32::NEG_INFINITY,
+        ReduceKind::Min => f32::INFINITY,
+    };
+    let fold = |acc: f32, v: f32| -> f32 {
+        match kind {
+            ReduceKind::Sum => acc + v,
+            ReduceKind::Max => acc.max(v),
+            ReduceKind::Min => acc.min(v),
+        }
+    };
+    let rank = a.rank();
+    let in_dims = a.dims();
+
+    // fast path: reduce over a contiguous trailing block of dims
+    let k = dims.len();
+    let trailing = {
+        let mut sorted = dims.to_vec();
+        sorted.sort_unstable();
+        sorted == ((rank - k)..rank).collect::<Vec<_>>()
+    };
+    if trailing {
+        let chunk: usize = in_dims[rank - k..].iter().product();
+        let out: Vec<f32> = a
+            .data()
+            .chunks(chunk.max(1))
+            .map(|c| c.iter().fold(init, |acc, &v| fold(acc, v)))
+            .collect();
+        return Tensor::new(out_shape, out);
+    }
+    // fast path: reduce over a contiguous leading block of dims
+    let leading = {
+        let mut sorted = dims.to_vec();
+        sorted.sort_unstable();
+        sorted == (0..k).collect::<Vec<_>>()
+    };
+    if leading {
+        let inner: usize = in_dims[k..].iter().product();
+        let mut out = vec![init; inner];
+        for row in a.data().chunks(inner) {
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o = fold(*o, v);
+            }
+        }
+        return Tensor::new(out_shape, out);
+    }
+
+    // general case: odometer walk accumulating into strided output.
+    let mut out = vec![init; out_shape.numel()];
+    let out_strides = out_shape.strides();
+    // per-input-dim contribution to the output offset (0 for reduced dims)
+    let mut dst_stride = vec![0usize; rank];
+    for (o, &d) in keep.iter().enumerate() {
+        dst_stride[d] = out_strides[o];
+    }
+    let mut idx = vec![0usize; rank];
+    let mut dst = 0usize;
+    for &v in a.data() {
+        out[dst] = fold(out[dst], v);
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            dst += dst_stride[d];
+            if idx[d] < in_dims[d] {
+                break;
+            }
+            dst -= dst_stride[d] * in_dims[d];
+            idx[d] = 0;
+        }
+    }
+    Tensor::new(out_shape, out)
+}
+
+/// Row-wise argmax over the last dimension, returning indices as f32.
+/// (Used for accuracy; not an HLO op in our dialect.)
+pub fn argmax_last(a: &Tensor) -> Tensor {
+    assert!(a.rank() >= 1);
+    let last = *a.dims().last().unwrap();
+    let rows = a.numel() / last;
+    let mut out = vec![0.0f32; rows];
+    for r in 0..rows {
+        let row = &a.data()[r * last..(r + 1) * last];
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        out[r] = best as f32;
+    }
+    let mut dims = a.dims().to_vec();
+    dims.pop();
+    Tensor::new(Shape::of(&dims), out)
+}
+
+// ---------------------------------------------------------------------------
+// convolutions and pooling (NHWC)
+// ---------------------------------------------------------------------------
+
+/// XLA-style `SAME` padding: `(pad_lo, pad_hi, out_size)` — asymmetric
+/// for even-sized strided cases, matching `jax.lax`'s convention so
+/// pretrained JAX weights transfer exactly.
+pub fn same_pads(input: usize, k: usize, stride: usize) -> (usize, usize, usize) {
+    let out = input.div_ceil(stride);
+    let total = ((out - 1) * stride + k).saturating_sub(input);
+    let lo = total / 2;
+    (lo, total - lo, out)
+}
+
+/// 2-D convolution, NHWC input `[n,h,w,ci]`, HWIO filter `[kh,kw,ci,co]`,
+/// XLA-SAME or VALID padding, unit dilation.
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad_same: bool) -> Tensor {
+    let (n, h, wd, ci) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let (kh, kw, ci2, co) = (w.dims()[0], w.dims()[1], w.dims()[2], w.dims()[3]);
+    assert_eq!(ci, ci2, "conv2d: channel mismatch {ci} vs {ci2}");
+    let ((ph, _, oh), (pw, _, ow)) = if pad_same {
+        (same_pads(h, kh, stride), same_pads(wd, kw, stride))
+    } else {
+        ((0, 0, (h - kh) / stride + 1), (0, 0, (wd - kw) / stride + 1))
+    };
+    let mut out = vec![0.0f32; n * oh * ow * co];
+    let xd = x.data();
+    let wdta = w.data();
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = ((b * oh + oy) * ow + ox) * co;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pw as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let ibase = ((b * h + iy as usize) * wd + ix as usize) * ci;
+                        let wbase = (ky * kw + kx) * ci * co;
+                        for c in 0..ci {
+                            let xv = xd[ibase + c];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &wdta[wbase + c * co..wbase + (c + 1) * co];
+                            let orow = &mut out[obase..obase + co];
+                            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(Shape::of(&[n, oh, ow, co]), out)
+}
+
+/// Depthwise 2-D convolution (channel multiplier 1): NHWC input
+/// `[n,h,w,c]`, filter `[kh,kw,c]`.
+pub fn depthwise_conv2d(x: &Tensor, w: &Tensor, stride: usize, pad_same: bool) -> Tensor {
+    let (n, h, wd, c) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let (kh, kw, c2) = (w.dims()[0], w.dims()[1], w.dims()[2]);
+    assert_eq!(c, c2, "depthwise_conv2d: channel mismatch");
+    let ((ph, _, oh), (pw, _, ow)) = if pad_same {
+        (same_pads(h, kh, stride), same_pads(wd, kw, stride))
+    } else {
+        ((0, 0, (h - kh) / stride + 1), (0, 0, (wd - kw) / stride + 1))
+    };
+    let mut out = vec![0.0f32; n * oh * ow * c];
+    let xd = x.data();
+    let wdta = w.data();
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = ((b * oh + oy) * ow + ox) * c;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pw as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let ibase = ((b * h + iy as usize) * wd + ix as usize) * c;
+                        let wbase = (ky * kw + kx) * c;
+                        let orow = &mut out[obase..obase + c];
+                        for ch in 0..c {
+                            orow[ch] += xd[ibase + ch] * wdta[wbase + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(Shape::of(&[n, oh, ow, c]), out)
+}
+
+/// Global average pooling over H and W: `[n,h,w,c] → [n,c]`.
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let mut out = vec![0.0f32; n * c];
+    let scale = 1.0 / (h * w) as f32;
+    for b in 0..n {
+        for y in 0..h {
+            for xw in 0..w {
+                let base = ((b * h + y) * w + xw) * c;
+                for ch in 0..c {
+                    out[b * c + ch] += x.data()[base + ch];
+                }
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        *v *= scale;
+    }
+    Tensor::new(Shape::of(&[n, c]), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_and_mismatch() {
+        let a = Tensor::iota(&[2, 2]);
+        let b = Tensor::full(&[2, 2], 2.0);
+        assert_eq!(add(&a, &b).data(), &[2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(mul(&a, &b).data(), &[0.0, 2.0, 4.0, 6.0]);
+        assert_eq!(maximum(&a, &b).data(), &[2.0, 2.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn elementwise_shape_mismatch_panics() {
+        add(&Tensor::zeros(&[2]), &Tensor::zeros(&[3]));
+    }
+
+    #[test]
+    fn matmul_against_manual() {
+        let a = Tensor::new(Shape::of(&[2, 3]), vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(Shape::of(&[3, 2]), vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.dims(), &[2, 2]);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_blocked_matches_naive_random() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let a = Tensor::rand_uniform(&[37, 65], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand_uniform(&[65, 41], -1.0, 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        // naive check
+        for i in [0usize, 13, 36] {
+            for j in [0usize, 17, 40] {
+                let mut s = 0.0f32;
+                for k in 0..65 {
+                    s += a.at(&[i, k]) * b.at(&[k, j]);
+                }
+                assert!((c.at(&[i, j]) - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_vector_cases() {
+        let m = Tensor::new(Shape::of(&[2, 3]), vec![1., 2., 3., 4., 5., 6.]);
+        let v = Tensor::new(Shape::of(&[3]), vec![1., 0., -1.]);
+        assert_eq!(dot(&m, &v).data(), &[-2.0, -2.0]);
+        let u = Tensor::new(Shape::of(&[2]), vec![1., 1.]);
+        assert_eq!(dot(&u, &m).data(), &[5.0, 7.0, 9.0]);
+        assert_eq!(dot(&v, &v).item(), 2.0);
+    }
+
+    #[test]
+    fn transpose_2d_and_4d() {
+        let a = Tensor::iota(&[2, 3]);
+        let t = transpose(&a, &[1, 0]);
+        assert_eq!(t.dims(), &[3, 2]);
+        assert_eq!(t.at(&[2, 1]), a.at(&[1, 2]));
+        let b = Tensor::iota(&[2, 3, 4, 5]);
+        let t4 = transpose(&b, &[3, 0, 2, 1]);
+        assert_eq!(t4.dims(), &[5, 2, 4, 3]);
+        assert_eq!(t4.at(&[4, 1, 3, 2]), b.at(&[1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn broadcast_in_dim_row_and_scalar() {
+        let row = Tensor::new(Shape::of(&[3]), vec![1., 2., 3.]);
+        let b = broadcast_in_dim(&row, &[2, 3], &[1]);
+        assert_eq!(b.data(), &[1., 2., 3., 1., 2., 3.]);
+        let s = Tensor::scalar(5.0);
+        let bs = broadcast_in_dim(&s, &[2, 2], &[]);
+        assert_eq!(bs.data(), &[5.0; 4]);
+        // size-1 expansion
+        let col = Tensor::new(Shape::of(&[2, 1]), vec![7., 8.]);
+        let bc = broadcast_in_dim(&col, &[2, 3], &[0, 1]);
+        assert_eq!(bc.data(), &[7., 7., 7., 8., 8., 8.]);
+    }
+
+    #[test]
+    fn pad_and_slice_roundtrip() {
+        let a = Tensor::iota(&[2, 3]);
+        let p = pad(&a, &[1, 0], &[0, 2], 9.0);
+        assert_eq!(p.dims(), &[3, 5]);
+        assert_eq!(p.at(&[0, 0]), 9.0);
+        assert_eq!(p.at(&[1, 0]), 0.0);
+        assert_eq!(p.at(&[2, 2]), 5.0);
+        let s = slice(&p, &[1, 0], &[3, 3]);
+        assert_eq!(s, a);
+    }
+
+    #[test]
+    fn concat_axis1() {
+        let a = Tensor::iota(&[2, 2]);
+        let b = Tensor::full(&[2, 1], 9.0);
+        let c = concat(&[&a, &b], 1);
+        assert_eq!(c.dims(), &[2, 3]);
+        assert_eq!(c.data(), &[0., 1., 9., 2., 3., 9.]);
+    }
+
+    #[test]
+    fn reduce_sum_max_dims() {
+        let a = Tensor::iota(&[2, 3]); // [[0,1,2],[3,4,5]]
+        assert_eq!(reduce(&a, &[0], ReduceKind::Sum).data(), &[3., 5., 7.]);
+        assert_eq!(reduce(&a, &[1], ReduceKind::Sum).data(), &[3., 12.]);
+        assert_eq!(reduce(&a, &[0, 1], ReduceKind::Max).item(), 5.0);
+        assert_eq!(reduce(&a, &[1], ReduceKind::Min).data(), &[0., 3.]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let a = Tensor::new(Shape::of(&[2, 3]), vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.8]);
+        assert_eq!(argmax_last(&a).data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 kernel with identity channel map == copy
+        let x = Tensor::iota(&[1, 3, 3, 2]);
+        let mut w = Tensor::zeros(&[1, 1, 2, 2]);
+        w.set(&[0, 0, 0, 0], 1.0);
+        w.set(&[0, 0, 1, 1], 1.0);
+        let y = conv2d(&x, &w, 1, true);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv2d_sum_kernel_valid() {
+        // 2x2 all-ones filter, no padding, single channel: local sums.
+        let x = Tensor::iota(&[1, 3, 3, 1]);
+        let w = Tensor::full(&[2, 2, 1, 1], 1.0);
+        let y = conv2d(&x, &w, 1, false);
+        assert_eq!(y.dims(), &[1, 2, 2, 1]);
+        // windows: [0,1,3,4]=8, [1,2,4,5]=12, [3,4,6,7]=20, [4,5,7,8]=24
+        assert_eq!(y.data(), &[8., 12., 20., 24.]);
+    }
+
+    #[test]
+    fn conv2d_stride2_shape() {
+        let x = Tensor::zeros(&[2, 8, 8, 3]);
+        let w = Tensor::zeros(&[3, 3, 3, 4]);
+        let y = conv2d(&x, &w, 2, true);
+        assert_eq!(y.dims(), &[2, 4, 4, 4]);
+    }
+
+    #[test]
+    fn depthwise_matches_full_conv_with_diagonal_filter() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let x = Tensor::rand_uniform(&[1, 5, 5, 3], -1.0, 1.0, &mut rng);
+        let wd = Tensor::rand_uniform(&[3, 3, 3], -1.0, 1.0, &mut rng);
+        // Equivalent full conv filter: diagonal in channel dims.
+        let mut wf = Tensor::zeros(&[3, 3, 3, 3]);
+        for ky in 0..3 {
+            for kx in 0..3 {
+                for c in 0..3 {
+                    wf.set(&[ky, kx, c, c], wd.at(&[ky, kx, c]));
+                }
+            }
+        }
+        let yd = depthwise_conv2d(&x, &wd, 1, true);
+        let yf = conv2d(&x, &wf, 1, true);
+        assert!(yd.allclose(&yf, 1e-5));
+    }
+
+    #[test]
+    fn global_avg_pool_basic() {
+        let x = Tensor::iota(&[1, 2, 2, 2]); // channels interleaved
+        let y = global_avg_pool(&x);
+        assert_eq!(y.dims(), &[1, 2]);
+        // ch0: (0+2+4+6)/4 = 3 ; ch1: (1+3+5+7)/4 = 4
+        assert_eq!(y.data(), &[3.0, 4.0]);
+    }
+}

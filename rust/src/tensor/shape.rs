@@ -1,0 +1,109 @@
+//! Shape and stride arithmetic.
+
+/// A tensor shape: dimension sizes, row-major ("C") layout.
+///
+/// Rank 0 (scalar) is the empty dims vector, as in HLO `f32[]`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn scalar() -> Shape {
+        Shape(vec![])
+    }
+
+    pub fn of(dims: &[usize]) -> Shape {
+        Shape(dims.to_vec())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Total number of elements (1 for a scalar).
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Row-major strides (in elements).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.0[i + 1];
+        }
+        s
+    }
+
+    /// Flatten a multi-index to a linear offset. Debug-asserts bounds.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.rank());
+        let strides = self.strides();
+        let mut off = 0;
+        for (i, (&ix, &st)) in idx.iter().zip(strides.iter()).enumerate() {
+            debug_assert!(ix < self.0[i], "index {ix} out of bound {} at dim {i}", self.0[i]);
+            off += ix * st;
+        }
+        off
+    }
+
+    /// Unflatten a linear offset to a multi-index.
+    pub fn unoffset(&self, mut off: usize) -> Vec<usize> {
+        let mut idx = vec![0usize; self.rank()];
+        for i in (0..self.rank()).rev() {
+            idx[i] = off % self.0[i];
+            off /= self.0[i];
+        }
+        idx
+    }
+
+    /// HLO-style display: `3x4x4` (`""` for scalars is shown as `scalar`).
+    pub fn hlo(&self) -> String {
+        if self.0.is_empty() {
+            String::new()
+        } else {
+            self.0
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x")
+        }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}]", self.0.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_strides() {
+        let s = Shape::of(&[2, 3, 4]);
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::scalar().numel(), 1);
+        assert_eq!(Shape::scalar().strides(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn offset_roundtrip() {
+        let s = Shape::of(&[3, 5, 7]);
+        for off in 0..s.numel() {
+            let idx = s.unoffset(off);
+            assert_eq!(s.offset(&idx), off);
+        }
+    }
+
+    #[test]
+    fn hlo_format() {
+        assert_eq!(Shape::of(&[3, 4, 4]).hlo(), "3x4x4");
+        assert_eq!(Shape::scalar().hlo(), "");
+    }
+}

@@ -1,0 +1,222 @@
+//! The dense `f32` tensor container.
+
+use super::shape::Shape;
+use crate::util::rng::Rng;
+
+/// A dense, row-major `f32` tensor.
+///
+/// All HLO-dialect values in this reproduction are `f32` tensors (class
+/// labels travel as one-hot rows or as float class ids), matching the
+/// paper's Fig. 1/Fig. 5 programs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data; panics if sizes disagree.
+    pub fn new(shape: Shape, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {shape} wants {} elements, got {}",
+            shape.numel(),
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::new(Shape::scalar(), vec![v])
+    }
+
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        let shape = Shape::of(dims);
+        let n = shape.numel();
+        Tensor::new(shape, vec![0.0; n])
+    }
+
+    pub fn full(dims: &[usize], v: f32) -> Tensor {
+        let shape = Shape::of(dims);
+        let n = shape.numel();
+        Tensor::new(shape, vec![v; n])
+    }
+
+    /// Uniform random in [lo, hi).
+    pub fn rand_uniform(dims: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Tensor {
+        let shape = Shape::of(dims);
+        let n = shape.numel();
+        let data = (0..n).map(|_| lo + rng.f32() * (hi - lo)).collect();
+        Tensor::new(shape, data)
+    }
+
+    /// Gaussian with given std (He/Glorot-style inits are built on this).
+    pub fn rand_normal(dims: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let shape = Shape::of(dims);
+        let n = shape.numel();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        Tensor::new(shape, data)
+    }
+
+    /// `0, 1, 2, ...` — handy in tests.
+    pub fn iota(dims: &[usize]) -> Tensor {
+        let shape = Shape::of(dims);
+        let n = shape.numel();
+        Tensor::new(shape, (0..n).map(|i| i as f32).collect())
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Multi-index read.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.shape.offset(idx)]
+    }
+
+    /// Multi-index write.
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let off = self.shape.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Scalar extraction (panics unless numel == 1).
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "item() on non-scalar {}", self.shape);
+        self.data[0]
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(&self, dims: &[usize]) -> Tensor {
+        let shape = Shape::of(dims);
+        assert_eq!(
+            shape.numel(),
+            self.numel(),
+            "reshape {} -> {shape}: element count mismatch",
+            self.shape
+        );
+        Tensor::new(shape, self.data.clone())
+    }
+
+    /// True if any element is NaN or infinite — used by fitness evaluation
+    /// to reject numerically-broken variants (§4.3).
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|v| !v.is_finite())
+    }
+
+    /// Max |a-b| against another tensor of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Allclose with absolute tolerance.
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+}
+
+impl std::fmt::Display for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tensor{} ", self.shape)?;
+        let n = self.numel().min(8);
+        write!(f, "[")?;
+        for i in 0..n {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{:.4}", self.data[i])?;
+        }
+        if self.numel() > 8 {
+            write!(f, ", …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::iota(&[2, 3]);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "element")]
+    fn bad_size_panics() {
+        Tensor::new(Shape::of(&[2, 2]), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::iota(&[2, 6]);
+        let r = t.reshaped(&[3, 4]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.dims(), &[3, 4]);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(4.25).item(), 4.25);
+    }
+
+    #[test]
+    fn non_finite_detection() {
+        let mut t = Tensor::zeros(&[3]);
+        assert!(!t.has_non_finite());
+        t.set(&[1], f32::NAN);
+        assert!(t.has_non_finite());
+    }
+
+    #[test]
+    fn allclose_works() {
+        let a = Tensor::full(&[4], 1.0);
+        let mut b = a.clone();
+        b.set(&[2], 1.0005);
+        assert!(a.allclose(&b, 1e-3));
+        assert!(!a.allclose(&b, 1e-5));
+    }
+
+    #[test]
+    fn rand_shapes() {
+        let mut rng = Rng::new(1);
+        let u = Tensor::rand_uniform(&[5, 5], -1.0, 1.0, &mut rng);
+        assert!(u.data().iter().all(|v| (-1.0..1.0).contains(v)));
+        let n = Tensor::rand_normal(&[100], 0.5, &mut rng);
+        assert_eq!(n.numel(), 100);
+    }
+}

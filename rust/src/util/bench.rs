@@ -1,0 +1,173 @@
+//! Wall-clock benchmark harness (the offline registry has no `criterion`).
+//!
+//! Every target under `rust/benches/` is declared `harness = false` in
+//! Cargo.toml and drives this module: warmup, fixed-iteration timing,
+//! summary statistics, and a uniform one-line report format so
+//! `cargo bench | tee bench_output.txt` produces a readable table.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+    /// Optional work units per iteration (e.g. FLOPs) for rate reporting.
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Render as one aligned report line.
+    pub fn line(&self) -> String {
+        let s = &self.summary;
+        let mut out = format!(
+            "{:<44} {:>10} {:>10} {:>10}   n={}",
+            self.name,
+            fmt_dur(s.p50),
+            fmt_dur(s.mean),
+            fmt_dur(s.p95),
+            s.n
+        );
+        if let Some(w) = self.work_per_iter {
+            if s.p50 > 0.0 {
+                out.push_str(&format!("   {:>10}/s", fmt_rate(w / s.p50)));
+            }
+        }
+        out
+    }
+}
+
+fn fmt_dur(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k", r / 1e3)
+    } else {
+        format!("{r:.2}")
+    }
+}
+
+/// A bench suite: collects cases, prints a header/footer.
+pub struct Bench {
+    suite: String,
+    results: Vec<BenchResult>,
+    /// Samples to record per case.
+    pub samples: usize,
+    /// Warmup iterations per case.
+    pub warmup: usize,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        println!("\n=== bench suite: {suite} ===");
+        println!(
+            "{:<44} {:>10} {:>10} {:>10}",
+            "case", "p50", "mean", "p95"
+        );
+        Bench {
+            suite: suite.to_string(),
+            results: Vec::new(),
+            samples: 10,
+            warmup: 2,
+        }
+    }
+
+    /// Time `f` (`samples` runs after `warmup` runs); returns median seconds.
+    pub fn case<F: FnMut()>(&mut self, name: &str, f: F) -> f64 {
+        self.case_with_work(name, None, f)
+    }
+
+    /// Like [`Bench::case`] but with a work-units-per-iteration figure so
+    /// the report shows a rate (e.g. FLOP/s, evals/s).
+    pub fn case_with_work<F: FnMut()>(
+        &mut self,
+        name: &str,
+        work_per_iter: Option<f64>,
+        mut f: F,
+    ) -> f64 {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&times);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.samples,
+            summary,
+            work_per_iter,
+        };
+        println!("{}", res.line());
+        let p50 = summary.p50;
+        self.results.push(res);
+        p50
+    }
+
+    /// Print an arbitrary annotation row (used by figure-regeneration
+    /// benches to emit the paper's table rows inline).
+    pub fn note(&self, text: &str) {
+        println!("    {text}");
+    }
+
+    pub fn finish(self) {
+        println!("=== end suite: {} ({} cases) ===\n", self.suite, self.results.len());
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_and_formats() {
+        let mut b = Bench::new("selftest");
+        b.samples = 3;
+        b.warmup = 1;
+        let med = b.case("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(med >= 0.0);
+        b.finish();
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(2.0), "2.000s");
+        assert_eq!(fmt_dur(0.0025), "2.500ms");
+        assert_eq!(fmt_dur(2.5e-6), "2.500us");
+        assert!(fmt_dur(5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(2.5e9), "2.50G");
+        assert_eq!(fmt_rate(1.5e6), "1.50M");
+        assert_eq!(fmt_rate(3.2e3), "3.20k");
+    }
+}

@@ -1,0 +1,145 @@
+//! Tiny CLI argument parser (the offline registry has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands. Every binary in `examples/` and `rust/src/main.rs`
+//! uses this.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand (optional), flags, options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]). If `with_subcommand`
+    /// and the first token does not start with `-`, it is the subcommand.
+    pub fn parse_env(with_subcommand: bool) -> Args {
+        Self::parse(std::env::args().skip(1), with_subcommand)
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, with_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if with_subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    out.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a clear message on a bad value.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Boolean flag (`--quiet` style; `--quiet=false` also recognized).
+    pub fn flag(&self, key: &str) -> bool {
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, sub: bool) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), sub)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare `--flag` followed by a positional is ambiguous and
+        // parses as `--flag positional`; pass flags last or use `=`.
+        let a = parse("search --pop 32 --gens=10 data.json --quiet", true);
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.usize_or("pop", 0), 32);
+        assert_eq!(a.usize_or("gens", 0), 10);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.positional, vec!["data.json"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("--x 1.5", false);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.f64_or("x", 0.0), 1.5);
+        assert_eq!(a.f64_or("y", 2.5), 2.5);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_last_token() {
+        let a = parse("--verbose", false);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_and_bool_values() {
+        let a = parse("--opt=v --on=true --off=false", false);
+        assert_eq!(a.get("opt"), Some("v"));
+        assert!(a.flag("on"));
+        assert!(!a.flag("off"));
+    }
+}

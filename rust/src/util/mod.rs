@@ -1,0 +1,16 @@
+//! Infrastructure substrates.
+//!
+//! The offline registry available to this build carries no RNG, JSON,
+//! CLI, or benchmarking crates (see DESIGN.md §7), so this module
+//! implements them: a counter-based RNG ([`rng`]), a JSON codec
+//! ([`json`]), a small CLI argument parser ([`cli`]), descriptive
+//! statistics ([`stats`]), a wall-clock bench harness ([`bench`]) used by
+//! every `rust/benches/*.rs` target, and a seeded property-test driver
+//! ([`prop`]).
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod bench;
+pub mod prop;

@@ -1,0 +1,79 @@
+//! Seeded property-test driver (the offline registry has no `proptest`).
+//!
+//! `run_prop(cases, seed, |rng| ...)` executes a closure over many
+//! independently-seeded RNGs and reports the first failing seed so a
+//! failure is reproducible with `check_one`. Property tests across the
+//! crate (IR round-trips, mutation-repair invariants, NSGA-II ordering
+//! laws) are built on this.
+
+use super::rng::Rng;
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` independent cases; panic with the failing case's seed and
+/// message on the first failure.
+pub fn run_prop<F: FnMut(&mut Rng) -> PropResult>(cases: usize, seed: u64, mut f: F) {
+    for i in 0..cases {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed on case {i} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn check_one<F: FnMut(&mut Rng) -> PropResult>(case_seed: u64, mut f: F) {
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property failed (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper that returns `PropResult` instead of panicking, so the
+/// driver can report the seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop(50, 1, |rng| {
+            let n = rng.range(1, 100);
+            if rng.below(n) < n {
+                Ok(())
+            } else {
+                Err("below out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        run_prop(10, 2, |rng| {
+            let v = rng.below(10);
+            Err(format!("always fails, drew {v}"))
+        });
+    }
+
+    #[test]
+    fn macro_returns_err() {
+        fn inner(x: usize) -> PropResult {
+            prop_assert!(x < 5, "x too big: {x}");
+            Ok(())
+        }
+        assert!(inner(3).is_ok());
+        assert!(inner(7).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Property tests at the workload level: every valid mutation/crossover
+//! product preserves the graph contract the fitness layer relies on
+//! (signature stability, executability, finiteness checks).
+
+use gevo_ml::evo::crossover::messy_one_point;
+use gevo_ml::evo::mutate::valid_random_edit;
+use gevo_ml::evo::patch::Individual;
+use gevo_ml::ir::verify::verify;
+use gevo_ml::models::{mobilenet, twofc};
+use gevo_ml::tensor::Tensor;
+use gevo_ml::util::prop::run_prop;
+use gevo_ml::util::rng::Rng;
+
+fn twofc_base() -> gevo_ml::ir::Graph {
+    let spec = twofc::TwoFcSpec { batch: 4, input: 16, hidden: 8, classes: 4, lr: 0.1 };
+    twofc::train_step_graph(&spec)
+}
+
+#[test]
+fn prop_mutations_preserve_signature_on_train_graph() {
+    let base = twofc_base();
+    let out_tys = base.output_types();
+    let in_tys = base.param_types();
+    run_prop(40, 0xAB1, |rng| {
+        if let Some((_, g)) = valid_random_edit(&base, rng, 25) {
+            if g.output_types() != out_tys {
+                return Err("output signature changed".into());
+            }
+            if g.param_types() != in_tys {
+                return Err("input signature changed".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mutation_chains_stay_valid_and_executable() {
+    let base = twofc_base();
+    run_prop(20, 0xAB2, |rng| {
+        let mut ind = Individual::original();
+        let mut g = base.clone();
+        for _ in 0..rng.range(1, 5) {
+            if let Some((e, ng)) = valid_random_edit(&g, rng, 25) {
+                ind.edits.push(e);
+                g = ng;
+            }
+        }
+        let m = ind
+            .materialize(&base)
+            .map_err(|e| format!("materialize failed: {e}"))?;
+        verify(&m).map_err(|e| format!("verify failed: {e}"))?;
+        let inputs: Vec<Tensor> = m
+            .param_types()
+            .iter()
+            .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, rng))
+            .collect();
+        gevo_ml::interp::eval(&m, &inputs).map_err(|e| format!("exec failed: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crossover_products_valid_or_cleanly_rejected() {
+    let base = twofc_base();
+    run_prop(15, 0xAB3, |rng| {
+        let mut mk = |rng: &mut Rng| {
+            let mut ind = Individual::original();
+            let mut g = base.clone();
+            for _ in 0..3 {
+                if let Some((e, ng)) = valid_random_edit(&g, rng, 25) {
+                    ind.edits.push(e);
+                    g = ng;
+                }
+            }
+            ind
+        };
+        let a = mk(rng);
+        let b = mk(rng);
+        let (c, d) = messy_one_point(&a, &b, rng);
+        for child in [c, d] {
+            // materialize either succeeds with a verified graph or fails
+            // with an error — never panics, never returns a broken graph
+            if let Ok(g) = child.materialize(&base) {
+                verify(&g).map_err(|e| format!("crossover child invalid: {e}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mobilenet_mutations_execute() {
+    let spec = mobilenet::MobileNetSpec { batch: 2, side: 8, classes: 4, width: 4, blocks: 2 };
+    let w = mobilenet::random_weights(&spec, 3);
+    let base = mobilenet::predict_graph(&spec, &w);
+    run_prop(15, 0xAB4, |rng| {
+        if let Some((_, g)) = valid_random_edit(&base, rng, 25) {
+            let inputs = vec![Tensor::rand_uniform(&[2, 8, 8, 3], 0.0, 1.0, rng)];
+            let out = gevo_ml::interp::eval(&g, &inputs)
+                .map_err(|e| format!("exec failed: {e}"))?;
+            if out[0].dims() != [2, 4] {
+                return Err(format!("wrong output shape {:?}", out[0].dims()));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,181 @@
+//! Integration: IR → HLO text → real XLA (PJRT CPU) must agree with the
+//! in-tree interpreter — the contract that lets the search validate its
+//! Pareto-front survivors on a production compiler (DESIGN.md §1).
+
+use gevo_ml::interp::eval;
+use gevo_ml::ir::op::{OpKind, ReduceKind};
+use gevo_ml::ir::types::TType;
+use gevo_ml::ir::Graph;
+use gevo_ml::runtime::PjrtRuntime;
+use gevo_ml::tensor::Tensor;
+use gevo_ml::util::rng::Rng;
+
+fn check_graph(g: &Graph, inputs: &[Tensor], atol: f32) {
+    gevo_ml::ir::verify::verify(g).expect("graph verifies");
+    let want = eval(g, inputs).expect("interpreter eval");
+    let rt = PjrtRuntime::cpu().expect("pjrt client");
+    let exe = rt
+        .compile_graph(g)
+        .unwrap_or_else(|e| panic!("XLA rejected emitted HLO:\n{e:?}\n{}", gevo_ml::ir::hlo_emit::emit(g)));
+    let got = exe.run(inputs).expect("pjrt run");
+    assert_eq!(want.len(), got.len());
+    for (i, (w, g_)) in want.iter().zip(got.iter()).enumerate() {
+        assert_eq!(w.dims(), g_.dims(), "output {i} shape");
+        assert!(
+            w.allclose(g_, atol),
+            "output {i} differs: max |Δ| = {}",
+            w.max_abs_diff(g_)
+        );
+    }
+}
+
+#[test]
+fn elementwise_chain() {
+    let mut g = Graph::new("ew");
+    let x = g.param(TType::of(&[2, 3]));
+    let y = g.param(TType::of(&[2, 3]));
+    let a = g.push(OpKind::Add, &[x, y]).unwrap();
+    let m = g.push(OpKind::Multiply, &[a, x]).unwrap();
+    let e = g.push(OpKind::Exponential, &[m]).unwrap();
+    let t = g.push(OpKind::Tanh, &[e]).unwrap();
+    let n = g.push(OpKind::Negate, &[t]).unwrap();
+    g.set_outputs(&[n]);
+    let mut rng = Rng::new(1);
+    let xs = Tensor::rand_uniform(&[2, 3], -1.0, 1.0, &mut rng);
+    let ys = Tensor::rand_uniform(&[2, 3], -1.0, 1.0, &mut rng);
+    check_graph(&g, &[xs, ys], 1e-5);
+}
+
+#[test]
+fn dot_broadcast_reduce() {
+    let mut g = Graph::new("dbr");
+    let x = g.param(TType::of(&[4, 3]));
+    let w = g.param(TType::of(&[3, 5]));
+    let b = g.param(TType::of(&[5]));
+    let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+    let bb = g
+        .push(OpKind::Broadcast { dims: vec![4, 5], mapping: vec![1] }, &[b])
+        .unwrap();
+    let a = g.push(OpKind::Add, &[d, bb]).unwrap();
+    let s = g
+        .push(OpKind::Reduce { dims: vec![1], kind: ReduceKind::Sum }, &[a])
+        .unwrap();
+    let mx = g
+        .push(OpKind::Reduce { dims: vec![0], kind: ReduceKind::Max }, &[a])
+        .unwrap();
+    g.set_outputs(&[a, s, mx]);
+    let mut rng = Rng::new(2);
+    check_graph(
+        &g,
+        &[
+            Tensor::rand_uniform(&[4, 3], -1.0, 1.0, &mut rng),
+            Tensor::rand_uniform(&[3, 5], -1.0, 1.0, &mut rng),
+            Tensor::rand_uniform(&[5], -1.0, 1.0, &mut rng),
+        ],
+        1e-4,
+    );
+}
+
+#[test]
+fn pad_slice_transpose_reshape_concat() {
+    let mut g = Graph::new("shapes");
+    let x = g.param(TType::of(&[2, 3]));
+    let p = g
+        .push(OpKind::Pad { low: vec![1, 0], high: vec![0, 2], value: 1.0 }, &[x])
+        .unwrap();
+    let s = g
+        .push(OpKind::Slice { starts: vec![0, 1], limits: vec![3, 4] }, &[p])
+        .unwrap();
+    let t = g.push(OpKind::Transpose { perm: vec![1, 0] }, &[s]).unwrap();
+    let r = g.push(OpKind::Reshape { dims: vec![9] }, &[t]).unwrap();
+    let c = g.push(OpKind::Concat { dim: 0 }, &[r, r]).unwrap();
+    g.set_outputs(&[c]);
+    let mut rng = Rng::new(3);
+    check_graph(&g, &[Tensor::rand_uniform(&[2, 3], -2.0, 2.0, &mut rng)], 1e-6);
+}
+
+#[test]
+fn constants_select_compare() {
+    let mut g = Graph::new("csc");
+    let x = g.param(TType::of(&[3, 3]));
+    let c = g.constant(Tensor::iota(&[3, 3]));
+    let gt = g.push(OpKind::CompareGt, &[x, c]).unwrap();
+    let sel = g.push(OpKind::Select, &[gt, x, c]).unwrap();
+    g.set_outputs(&[gt, sel]);
+    let mut rng = Rng::new(4);
+    check_graph(&g, &[Tensor::rand_uniform(&[3, 3], 0.0, 9.0, &mut rng)], 1e-6);
+}
+
+#[test]
+fn conv_and_depthwise_and_pool() {
+    let mut g = Graph::new("convs");
+    let x = g.param(TType::of(&[2, 6, 6, 3]));
+    let w = g.param(TType::of(&[3, 3, 3, 4]));
+    let dw = g.param(TType::of(&[3, 3, 4]));
+    let c = g.push(OpKind::Conv2d { stride: 2, same: true }, &[x, w]).unwrap();
+    let d = g
+        .push(OpKind::DepthwiseConv2d { stride: 1, same: true }, &[c, dw])
+        .unwrap();
+    let p = g.push(OpKind::GlobalAvgPool, &[d]).unwrap();
+    g.set_outputs(&[c, d, p]);
+    let mut rng = Rng::new(5);
+    check_graph(
+        &g,
+        &[
+            Tensor::rand_uniform(&[2, 6, 6, 3], -1.0, 1.0, &mut rng),
+            Tensor::rand_uniform(&[3, 3, 3, 4], -0.5, 0.5, &mut rng),
+            Tensor::rand_uniform(&[3, 3, 4], -0.5, 0.5, &mut rng),
+        ],
+        1e-4,
+    );
+}
+
+#[test]
+fn softmax_like_paper_fig1() {
+    // The Fig. 1 tail: reduce_max / subtract / exp / reduce_sum / divide.
+    let mut g = Graph::new("softmax");
+    let x = g.param(TType::of(&[4, 7]));
+    let m = g
+        .push(OpKind::Reduce { dims: vec![1], kind: ReduceKind::Max }, &[x])
+        .unwrap();
+    let mb = g
+        .push(OpKind::Broadcast { dims: vec![4, 7], mapping: vec![0] }, &[m])
+        .unwrap();
+    let sub = g.push(OpKind::Subtract, &[x, mb]).unwrap();
+    let ex = g.push(OpKind::Exponential, &[sub]).unwrap();
+    let s = g
+        .push(OpKind::Reduce { dims: vec![1], kind: ReduceKind::Sum }, &[ex])
+        .unwrap();
+    let sb = g
+        .push(OpKind::Broadcast { dims: vec![4, 7], mapping: vec![0] }, &[s])
+        .unwrap();
+    let out = g.push(OpKind::Divide, &[ex, sb]).unwrap();
+    g.set_outputs(&[out]);
+    let mut rng = Rng::new(6);
+    check_graph(&g, &[Tensor::rand_uniform(&[4, 7], -3.0, 3.0, &mut rng)], 1e-5);
+}
+
+#[test]
+fn resize_chain_compiles_on_xla() {
+    // The §4.1 repair chain (reshape+slice+pad) must be XLA-compilable,
+    // since repaired variants are validated post hoc via PJRT.
+    let mut g = Graph::new("resize");
+    let x = g.param(TType::of(&[3, 4, 4]));
+    let (v, _, n) =
+        gevo_ml::ir::resize::resize_chain(&mut g, 1, x, &TType::of(&[2, 2])).unwrap();
+    assert!(n >= 2);
+    g.set_outputs(&[v]);
+    let mut rng = Rng::new(7);
+    check_graph(&g, &[Tensor::rand_uniform(&[3, 4, 4], -1.0, 1.0, &mut rng)], 1e-6);
+}
+
+#[test]
+fn scalar_inputs_and_outputs() {
+    let mut g = Graph::new("scalar");
+    let x = g.param(TType::scalar());
+    let y = g.push(OpKind::Sqrt, &[x]).unwrap();
+    let c = g.constant_scalar(2.0);
+    let z = g.push(OpKind::Multiply, &[y, c]).unwrap();
+    g.set_outputs(&[z]);
+    check_graph(&g, &[Tensor::scalar(12.25)], 1e-6);
+}

@@ -1,0 +1,86 @@
+//! Integration: the full search stack over the real workloads (small
+//! budgets) — Pareto-dominance invariants, determinism, workload wiring.
+
+use gevo_ml::coordinator::{self, ExperimentConfig, WorkloadKind};
+use gevo_ml::evo::nsga2::dominates;
+use gevo_ml::evo::search::SearchConfig;
+
+fn tiny(kind: WorkloadKind, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        kind,
+        search: SearchConfig {
+            pop_size: 8,
+            generations: 3,
+            elites: 4,
+            workers: 2,
+            seed,
+            verbose: false,
+            ..Default::default()
+        },
+        fit_samples: 96,
+        test_samples: 32,
+        epochs: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn training_front_is_mutually_nondominated() {
+    let r = coordinator::run_experiment(&tiny(WorkloadKind::TwoFcTraining, 1));
+    assert!(!r.front.is_empty());
+    for (i, a) in r.front.iter().enumerate() {
+        for (j, b) in r.front.iter().enumerate() {
+            if i != j {
+                assert!(
+                    !dominates(a.fit, b.fit),
+                    "front members {i} and {j} dominate each other"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn front_never_dominated_by_baseline() {
+    let r = coordinator::run_experiment(&tiny(WorkloadKind::TwoFcTraining, 2));
+    for p in &r.front {
+        assert!(
+            !dominates(r.baseline_fit, p.fit),
+            "baseline dominates front point {:?}",
+            p.fit
+        );
+    }
+}
+
+#[test]
+fn prediction_workload_runs_end_to_end() {
+    let r = coordinator::run_experiment(&tiny(WorkloadKind::MobilenetPrediction, 3));
+    assert!(!r.front.is_empty());
+    assert!((r.baseline_fit.0 - 1.0).abs() < 1e-9, "flops metric baseline = 1.0");
+    // every front point has sane objective ranges
+    for p in &r.front {
+        assert!(p.fit.0 >= 0.0 && p.fit.0 < 10.0);
+        assert!((0.0..=1.0).contains(&p.fit.1));
+    }
+}
+
+#[test]
+fn experiments_are_seed_deterministic() {
+    let a = coordinator::run_experiment(&tiny(WorkloadKind::TwoFcTraining, 7));
+    let b = coordinator::run_experiment(&tiny(WorkloadKind::TwoFcTraining, 7));
+    let fa: Vec<_> = a.front.iter().map(|p| p.fit).collect();
+    let fb: Vec<_> = b.front.iter().map(|p| p.fit).collect();
+    assert_eq!(fa, fb, "same seed must reproduce the same front");
+}
+
+#[test]
+fn different_seeds_explore_differently() {
+    let a = coordinator::run_experiment(&tiny(WorkloadKind::TwoFcTraining, 10));
+    let b = coordinator::run_experiment(&tiny(WorkloadKind::TwoFcTraining, 11));
+    // not a hard guarantee, but with these budgets the evaluation counts
+    // or fronts essentially always differ; treat equality of both as a bug
+    let same_front = a.front.iter().map(|p| p.fit).collect::<Vec<_>>()
+        == b.front.iter().map(|p| p.fit).collect::<Vec<_>>();
+    let same_evals = a.search.total_evaluations == b.search.total_evaluations;
+    assert!(!(same_front && same_evals), "two seeds produced identical searches");
+}
