@@ -100,7 +100,7 @@ def _fused_dense_fwd_only(x, w, b, activation, bm, bn, bk):
         ],
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
-        scratch_shapes=[pl.MemorySpace.ANY((bm_, bn_), jnp.float32)],
+        scratch_shapes=[pl.MemoryRef((bm_, bn_), jnp.float32, pl.MemorySpace.ANY)],
         interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
     )(x, w, b)
 

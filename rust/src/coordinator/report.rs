@@ -133,6 +133,7 @@ mod tests {
                 history: vec![],
                 total_evaluations: 42,
                 cache_hits: 7,
+                program_cache: None,
             },
             wall_seconds: 1.5,
         }

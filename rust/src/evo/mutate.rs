@@ -21,16 +21,40 @@ use crate::ir::Graph;
 use crate::util::rng::Rng;
 
 /// Why an edit failed to apply.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MutateError {
-    #[error("edit references value {0} which is not in the graph")]
     MissingValue(ValueId),
-    #[error("no mutable target available")]
     NoTarget,
-    #[error("could not repair: {0}")]
     CannotRepair(String),
-    #[error("resulting graph invalid: {0}")]
-    Invalid(#[from] IrError),
+    Invalid(IrError),
+}
+
+impl std::fmt::Display for MutateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MutateError::MissingValue(v) => {
+                write!(f, "edit references value {v} which is not in the graph")
+            }
+            MutateError::NoTarget => write!(f, "no mutable target available"),
+            MutateError::CannotRepair(msg) => write!(f, "could not repair: {msg}"),
+            MutateError::Invalid(e) => write!(f, "resulting graph invalid: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for MutateError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MutateError::Invalid(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<IrError> for MutateError {
+    fn from(e: IrError) -> MutateError {
+        MutateError::Invalid(e)
+    }
 }
 
 /// Apply one edit to `g` in place. On error the graph may be partially

@@ -24,6 +24,14 @@ use std::sync::Mutex;
 /// fails to execute / produces non-finite output (§4.3).
 pub trait Evaluator: Sync {
     fn evaluate(&self, g: &Graph) -> Option<Objectives>;
+
+    /// `(hits, misses)` of the workload's compiled-program cache
+    /// ([`crate::exec::cache::ProgramCache`]), if it runs one. The search
+    /// loop records this in [`SearchResult::program_cache`] so experiment
+    /// reports can show how much lowering the population cache saved.
+    fn exec_cache_stats(&self) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 impl<F: Fn(&Graph) -> Option<Objectives> + Sync> Evaluator for F {
@@ -90,6 +98,10 @@ pub struct SearchResult {
     pub history: Vec<GenStats>,
     pub total_evaluations: usize,
     pub cache_hits: usize,
+    /// `(hits, misses)` of the evaluator's compiled-program cache, when
+    /// the workload evaluates through [`crate::exec`]; `misses` counts
+    /// actual graph lowerings across the whole run.
+    pub program_cache: Option<(usize, usize)>,
 }
 
 /// Run the search. `original` is the unmutated program (the paper's
@@ -240,6 +252,7 @@ pub fn run(original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) -> Search
         history,
         total_evaluations: total_evals.load(Ordering::Relaxed),
         cache_hits: cache_hits.load(Ordering::Relaxed),
+        program_cache: eval.exec_cache_stats(),
     }
 }
 

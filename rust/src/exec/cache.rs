@@ -1,0 +1,135 @@
+//! Population-level compiled-program cache.
+//!
+//! Fitness evaluation compiles each variant once and reuses the
+//! [`Program`] across every fitness-split batch; this cache extends the
+//! amortization across the *population*: elites re-selected generation
+//! after generation, and crossover offspring whose edit lists materialize
+//! to the same graph, hit the cache instead of re-lowering. Keys are
+//! canonical graph hashes ([`crate::ir::canon::graph_hash`]), which are
+//! invariant under the value-id renumbering that edit replay introduces.
+
+use super::Program;
+use crate::ir::types::IrError;
+use crate::ir::Graph;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cap on resident entries. Most mutants are evaluated once and never
+/// seen again, but each `Program` owns a clone of its graph's constant
+/// pool (for prediction graphs: the whole weight set), so an unbounded
+/// map would grow by one weight-set per distinct mutant over a long run.
+/// When the cap is reached the map is flushed wholesale — the few live
+/// entries (elites, the baseline) recompile once per flush, which is
+/// cheap next to re-evaluating them.
+const MAX_ENTRIES: usize = 1024;
+
+/// Thread-safe program cache shared by the evaluation worker pool.
+///
+/// Keys are 128-bit canonical digests ([`crate::ir::canon::graph_hash`]);
+/// at that width accidental collisions are negligible (~n²·2⁻¹²⁹), so no
+/// equality check runs on hit.
+#[derive(Debug, Default)]
+pub struct ProgramCache {
+    map: Mutex<HashMap<u128, Arc<Program>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl ProgramCache {
+    pub fn new() -> ProgramCache {
+        ProgramCache::default()
+    }
+
+    /// Fetch the compiled program for `g`, lowering it on first sight.
+    /// Compilation runs outside the lock; a racing duplicate compile is
+    /// possible (and harmless — first insert wins).
+    pub fn get_or_compile(&self, g: &Graph) -> Result<Arc<Program>, IrError> {
+        let key = crate::ir::canon::graph_hash(g);
+        if let Some(p) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(p));
+        }
+        let compiled = Arc::new(Program::compile(g)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= MAX_ENTRIES {
+            map.clear();
+        }
+        let entry = map.entry(key).or_insert(compiled);
+        Ok(Arc::clone(entry))
+    }
+
+    /// `(hits, misses)` so far. `misses` counts actual compilations.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::OpKind;
+    use crate::ir::types::{TType, ValueId};
+    use crate::ir::Inst;
+
+    fn g1() -> Graph {
+        let mut g = Graph::new("a");
+        let x = g.param(TType::of(&[2, 2]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        g.set_outputs(&[e]);
+        g
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let c = ProgramCache::new();
+        let p1 = c.get_or_compile(&g1()).unwrap();
+        let p2 = c.get_or_compile(&g1()).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "identical graphs must share one program");
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn renumbered_graph_hits_same_entry() {
+        let g = g1();
+        let insts: Vec<Inst> = g
+            .insts()
+            .iter()
+            .map(|i| Inst {
+                id: ValueId(i.id.0 + 7),
+                kind: i.kind.clone(),
+                args: i.args.iter().map(|a| ValueId(a.0 + 7)).collect(),
+                ty: i.ty.clone(),
+                label: i.label.clone(),
+            })
+            .collect();
+        let outs: Vec<ValueId> = g.outputs().iter().map(|o| ValueId(o.0 + 7)).collect();
+        let g2 = Graph::from_parts("a2", insts, outs).unwrap();
+        let c = ProgramCache::new();
+        let p1 = c.get_or_compile(&g).unwrap();
+        let p2 = c.get_or_compile(&g2).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "renumbered twin must hit the cache");
+    }
+
+    #[test]
+    fn different_graphs_get_different_programs() {
+        let c = ProgramCache::new();
+        let _ = c.get_or_compile(&g1()).unwrap();
+        let mut g = g1();
+        let e = g.outputs()[0];
+        let t = g.push(OpKind::Tanh, &[e]).unwrap();
+        g.set_outputs(&[t]);
+        let _ = c.get_or_compile(&g).unwrap();
+        assert_eq!(c.len(), 2);
+    }
+}

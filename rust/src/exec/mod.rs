@@ -1,0 +1,744 @@
+//! Compiled execution engine — the compile-once / run-many fast path of
+//! the fitness inner loop.
+//!
+//! [`crate::interp::eval`] re-walks the instruction list on every call,
+//! rebuilding a `HashMap` environment and allocating a fresh tensor per
+//! instruction. GEVO-ML evaluates each individual over every fitness-split
+//! batch, so that overhead is paid thousands of times per generation. This
+//! module lowers a verified [`Graph`] once into a [`Program`] — a
+//! topologically-ordered list of slot-indexed steps over a dense register
+//! file — and then re-executes it with almost no per-run bookkeeping:
+//!
+//! 1. **verify** — only verified graphs lower; shape errors cannot reach
+//!    the kernels;
+//! 2. **topo order** — the instruction list is already in execution order
+//!    (SSA dominance is checked by the verifier), so lowering is a single
+//!    pass;
+//! 3. **slot assignment** — value ids become dense register indices
+//!    (instruction positions), replacing `HashMap<ValueId, Tensor>`;
+//! 4. **liveness** — a backward scan records each register's last use, so
+//!    buffers are dropped at their kill point instead of at end-of-run;
+//! 5. **arena** — killed buffers are recycled through a free list, and
+//!    elementwise steps whose first operand dies at the step run *in
+//!    place* ([`crate::tensor::ops::zip_inplace`] and friends), writing
+//!    into the operand's allocation.
+//!
+//! The engine is **bit-identical** to the interpreter (enforced by
+//! `rust/tests/exec_differential.rs`): every step dispatches to the same
+//! kernels in the same element order, and failures raise the same
+//! [`EvalError`] classes. Use `interp` as the executable semantics
+//! reference and for one-shot evaluation; use `exec` wherever a graph is
+//! executed more than once. [`cache::ProgramCache`] keys compiled programs
+//! by canonical graph hash ([`crate::ir::canon::graph_hash`]) so elites
+//! and crossover-identical offspring skip recompilation entirely.
+
+pub mod cache;
+
+use crate::interp::EvalError;
+use crate::ir::graph::Graph;
+use crate::ir::op::OpKind;
+use crate::ir::types::{IrError, ValueId};
+use crate::tensor::ops::{self, ReduceKind};
+use crate::tensor::{Shape, Tensor};
+
+/// Elementwise binary op, specialized at lowering time. `apply` matches
+/// the closures in [`crate::tensor::ops`] exactly (bit-identity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Gt,
+}
+
+impl BinOp {
+    #[inline]
+    fn apply(self) -> fn(f32, f32) -> f32 {
+        match self {
+            BinOp::Add => |x, y| x + y,
+            BinOp::Sub => |x, y| x - y,
+            BinOp::Mul => |x, y| x * y,
+            BinOp::Div => |x, y| x / y,
+            BinOp::Max => f32::max,
+            BinOp::Min => f32::min,
+            BinOp::Gt => |x, y| if x > y { 1.0 } else { 0.0 },
+        }
+    }
+}
+
+/// Elementwise unary op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum UnOp {
+    Exp,
+    Log,
+    Neg,
+    Sqrt,
+    Rsqrt,
+    Tanh,
+}
+
+impl UnOp {
+    #[inline]
+    fn apply(self) -> fn(f32) -> f32 {
+        match self {
+            UnOp::Exp => f32::exp,
+            UnOp::Log => f32::ln,
+            UnOp::Neg => |x| -x,
+            UnOp::Sqrt => f32::sqrt,
+            UnOp::Rsqrt => |x| 1.0 / x.sqrt(),
+            UnOp::Tanh => f32::tanh,
+        }
+    }
+}
+
+/// Lowered operation: attributes resolved, dispatch shape precomputed.
+#[derive(Debug, Clone)]
+enum StepKind {
+    /// Bind entry argument `index` into the register (no copy).
+    Param { index: usize },
+    /// Bind constant-pool entry `idx` into the register (no copy).
+    Const { idx: usize },
+    Bin(BinOp),
+    Un(UnOp),
+    Select,
+    /// `[m,k]·[k,n]` — the hot GEMM path, run through the arena.
+    Dot2x2,
+    /// Remaining dot ranks (vector cases).
+    DotOther,
+    Reshape,
+    Broadcast { mapping: Vec<usize> },
+    Transpose { perm: Vec<usize> },
+    Pad { low: Vec<usize>, high: Vec<usize>, value: f32 },
+    Slice { starts: Vec<usize>, limits: Vec<usize> },
+    Concat { dim: usize },
+    Reduce { dims: Vec<usize>, kind: ReduceKind },
+    Conv2d { stride: usize, same: bool },
+    DepthwiseConv2d { stride: usize, same: bool },
+    GlobalAvgPool,
+}
+
+/// One lowered instruction.
+#[derive(Debug, Clone)]
+struct Step {
+    kind: StepKind,
+    /// Argument registers (defining-instruction positions).
+    args: Vec<usize>,
+    /// Destination register (== this step's position).
+    dst: usize,
+    /// Result dims, from verified type inference.
+    out_dims: Vec<usize>,
+    /// Registers whose last use is this step; freed right after it.
+    kills: Vec<usize>,
+    /// First operand dies here, appears exactly once, and the op has an
+    /// in-place form — the step may reuse its allocation.
+    inplace0: bool,
+}
+
+/// A compiled graph: slot-indexed steps plus the constant pool.
+///
+/// `Program` is immutable after [`Program::compile`] and `Send + Sync`,
+/// so one compilation can be shared across the evaluation worker pool
+/// (see [`cache::ProgramCache`]).
+#[derive(Debug)]
+pub struct Program {
+    pub name: String,
+    steps: Vec<Step>,
+    consts: Vec<Tensor>,
+    /// Original value id per register (diagnostics / `EvalError::Missing`).
+    slot_vids: Vec<ValueId>,
+    outputs: Vec<usize>,
+    num_params: usize,
+    peak_live: usize,
+}
+
+/// Reusable per-thread run state: the register file and the buffer arena.
+/// Create once (per thread or per evaluation) and pass to
+/// [`Program::run_with`] to amortize allocations across runs.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    regs: Vec<Reg>,
+    arena: Arena,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+/// One register: either a materialized tensor or a view into the constant
+/// pool / entry arguments (copy-on-write under in-place execution).
+#[derive(Debug)]
+enum Reg {
+    Empty,
+    Owned(Tensor),
+    Const(usize),
+    Input(usize),
+}
+
+/// LIFO free list of recycled `f32` buffers.
+#[derive(Debug, Default)]
+struct Arena {
+    free: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    fn take(&mut self) -> Vec<f32> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 && self.free.len() < 64 {
+            self.free.push(buf);
+        }
+    }
+}
+
+#[inline]
+fn get_reg<'a>(
+    regs: &'a [Reg],
+    consts: &'a [Tensor],
+    inputs: &'a [&'a Tensor],
+    vids: &[ValueId],
+    slot: usize,
+) -> Result<&'a Tensor, EvalError> {
+    match &regs[slot] {
+        Reg::Owned(t) => Ok(t),
+        Reg::Const(k) => Ok(&consts[*k]),
+        Reg::Input(i) => Ok(inputs[*i]),
+        Reg::Empty => Err(EvalError::Missing(vids[slot])),
+    }
+}
+
+impl Program {
+    /// Lower a graph: verify → slot assignment → liveness → in-place
+    /// marking. Fails iff the graph does not verify.
+    pub fn compile(g: &Graph) -> Result<Program, IrError> {
+        crate::ir::verify::verify(g)?;
+
+        let slot_of: std::collections::HashMap<ValueId, usize> = g
+            .insts()
+            .iter()
+            .enumerate()
+            .map(|(p, i)| (i.id, p))
+            .collect();
+        let n = g.len();
+
+        // ---- liveness: last use per register --------------------------------
+        // `None` = never used; `usize::MAX` = live out (graph output).
+        let mut last_use: Vec<Option<usize>> = vec![None; n];
+        for (s, inst) in g.insts().iter().enumerate() {
+            for a in &inst.args {
+                last_use[slot_of[a]] = Some(s);
+            }
+        }
+        for o in g.outputs() {
+            last_use[slot_of[o]] = Some(usize::MAX);
+        }
+        let mut kills_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for slot in 0..n {
+            match last_use[slot] {
+                Some(usize::MAX) => {}            // output: lives to the end
+                Some(s) => kills_of[s].push(slot), // freed right after step s
+                None => kills_of[slot].push(slot), // dead def: freed immediately
+            }
+        }
+
+        // ---- lower each instruction ------------------------------------------
+        let mut consts = Vec::new();
+        let mut steps = Vec::with_capacity(n);
+        let mut num_params = 0;
+        for (s, inst) in g.insts().iter().enumerate() {
+            let args: Vec<usize> = inst.args.iter().map(|a| slot_of[a]).collect();
+            let kind = match &inst.kind {
+                OpKind::Parameter { index } => {
+                    num_params += 1;
+                    StepKind::Param { index: *index }
+                }
+                OpKind::Constant { value } => {
+                    consts.push(value.clone());
+                    StepKind::Const { idx: consts.len() - 1 }
+                }
+                OpKind::Add => StepKind::Bin(BinOp::Add),
+                OpKind::Subtract => StepKind::Bin(BinOp::Sub),
+                OpKind::Multiply => StepKind::Bin(BinOp::Mul),
+                OpKind::Divide => StepKind::Bin(BinOp::Div),
+                OpKind::Maximum => StepKind::Bin(BinOp::Max),
+                OpKind::Minimum => StepKind::Bin(BinOp::Min),
+                OpKind::CompareGt => StepKind::Bin(BinOp::Gt),
+                OpKind::Exponential => StepKind::Un(UnOp::Exp),
+                OpKind::Log => StepKind::Un(UnOp::Log),
+                OpKind::Negate => StepKind::Un(UnOp::Neg),
+                OpKind::Sqrt => StepKind::Un(UnOp::Sqrt),
+                OpKind::Rsqrt => StepKind::Un(UnOp::Rsqrt),
+                OpKind::Tanh => StepKind::Un(UnOp::Tanh),
+                OpKind::Select => StepKind::Select,
+                OpKind::Dot => {
+                    let (ra, rb) = (
+                        g.ty(inst.args[0]).unwrap().rank(),
+                        g.ty(inst.args[1]).unwrap().rank(),
+                    );
+                    if ra == 2 && rb == 2 {
+                        StepKind::Dot2x2
+                    } else {
+                        StepKind::DotOther
+                    }
+                }
+                OpKind::Reshape { .. } => StepKind::Reshape,
+                OpKind::Broadcast { mapping, .. } => {
+                    StepKind::Broadcast { mapping: mapping.clone() }
+                }
+                OpKind::Transpose { perm } => StepKind::Transpose { perm: perm.clone() },
+                OpKind::Pad { low, high, value } => StepKind::Pad {
+                    low: low.clone(),
+                    high: high.clone(),
+                    value: *value,
+                },
+                OpKind::Slice { starts, limits } => StepKind::Slice {
+                    starts: starts.clone(),
+                    limits: limits.clone(),
+                },
+                OpKind::Concat { dim } => StepKind::Concat { dim: *dim },
+                OpKind::Reduce { dims, kind } => StepKind::Reduce {
+                    dims: dims.clone(),
+                    kind: *kind,
+                },
+                OpKind::Conv2d { stride, same } => StepKind::Conv2d {
+                    stride: *stride,
+                    same: *same,
+                },
+                OpKind::DepthwiseConv2d { stride, same } => StepKind::DepthwiseConv2d {
+                    stride: *stride,
+                    same: *same,
+                },
+                OpKind::GlobalAvgPool => StepKind::GlobalAvgPool,
+            };
+            let inplace0 = matches!(
+                kind,
+                StepKind::Bin(_) | StepKind::Un(_) | StepKind::Reshape
+            ) && kills_of[s].contains(&args[0])
+                && !args[1..].contains(&args[0]);
+            steps.push(Step {
+                kind,
+                args,
+                dst: s,
+                out_dims: inst.ty.dims.clone(),
+                kills: std::mem::take(&mut kills_of[s]),
+                inplace0,
+            });
+        }
+
+        // ---- peak materialized-buffer count -----------------------------------
+        // High-water mark of Owned registers, counted at the point a step's
+        // result exists but its kills have not yet been applied (the
+        // no-aliasing upper bound; in-place steps can only do better).
+        let materializes =
+            |s: &Step| !matches!(s.kind, StepKind::Param { .. } | StepKind::Const { .. });
+        let mut live = vec![false; n];
+        let mut cur = 0usize;
+        let mut peak = 0usize;
+        for step in &steps {
+            if materializes(step) {
+                live[step.dst] = true;
+                cur += 1;
+            }
+            peak = peak.max(cur);
+            for &k in &step.kills {
+                if live[k] {
+                    live[k] = false;
+                    cur -= 1;
+                }
+            }
+        }
+
+        Ok(Program {
+            name: g.name.clone(),
+            steps,
+            consts,
+            slot_vids: g.insts().iter().map(|i| i.id).collect(),
+            outputs: g.outputs().iter().map(|o| slot_of[o]).collect(),
+            num_params,
+            peak_live: peak,
+        })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// High-water mark of simultaneously-materialized result buffers
+    /// (parameters and constants are zero-copy views), as computed by the
+    /// liveness pass — the engine never holds more than this many owned
+    /// tensors at once.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Execute with fresh scratch state. Prefer [`Program::run_with`] in
+    /// loops.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EvalError> {
+        self.run_with(inputs, &mut Scratch::new())
+    }
+
+    /// Execute, reusing `scratch`'s register file and buffer arena.
+    pub fn run_with(
+        &self,
+        inputs: &[Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<Tensor>, EvalError> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(&refs, scratch)
+    }
+
+    /// Execute over borrowed inputs (no defensive clones — the engine
+    /// copies an input only if a step must mutate it).
+    pub fn run_refs(
+        &self,
+        inputs: &[&Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<Tensor>, EvalError> {
+        if inputs.len() != self.num_params {
+            return Err(EvalError::ArgCount { got: inputs.len(), want: self.num_params });
+        }
+        // Parameter shape validation, in instruction order (same first
+        // error as the interpreter).
+        for step in &self.steps {
+            if let StepKind::Param { index } = step.kind {
+                if inputs[index].dims() != step.out_dims.as_slice() {
+                    return Err(EvalError::ArgShape {
+                        index,
+                        got: inputs[index].dims().to_vec(),
+                        want: step.out_dims.clone(),
+                    });
+                }
+            }
+        }
+
+        // Reset the register file, recycling buffers from the previous run.
+        let n = self.steps.len();
+        for reg in scratch.regs.iter_mut() {
+            if let Reg::Owned(t) = std::mem::replace(reg, Reg::Empty) {
+                scratch.arena.put(t.into_data());
+            }
+        }
+        scratch.regs.resize_with(n, || Reg::Empty);
+
+        for step in &self.steps {
+            self.exec_step(step, inputs, scratch)?;
+            for &k in &step.kills {
+                if let Reg::Owned(t) = std::mem::replace(&mut scratch.regs[k], Reg::Empty) {
+                    scratch.arena.put(t.into_data());
+                }
+            }
+        }
+
+        self.outputs
+            .iter()
+            .map(|&slot| {
+                get_reg(&scratch.regs, &self.consts, inputs, &self.slot_vids, slot)
+                    .map(|t| t.clone())
+            })
+            .collect()
+    }
+
+    fn exec_step(
+        &self,
+        step: &Step,
+        inputs: &[&Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<(), EvalError> {
+        // Zero-copy bindings.
+        match step.kind {
+            StepKind::Param { index } => {
+                scratch.regs[step.dst] = Reg::Input(index);
+                return Ok(());
+            }
+            StepKind::Const { idx } => {
+                scratch.regs[step.dst] = Reg::Const(idx);
+                return Ok(());
+            }
+            _ => {}
+        }
+
+        // In-place fast path: the first operand dies here and is owned, so
+        // its buffer becomes the result (same kernels, same element order —
+        // bit-identical to the allocating path).
+        if step.inplace0 && matches!(scratch.regs[step.args[0]], Reg::Owned(_)) {
+            let Reg::Owned(mut t) =
+                std::mem::replace(&mut scratch.regs[step.args[0]], Reg::Empty)
+            else {
+                unreachable!("checked Owned above")
+            };
+            match &step.kind {
+                StepKind::Bin(op) => {
+                    let b = get_reg(
+                        &scratch.regs,
+                        &self.consts,
+                        inputs,
+                        &self.slot_vids,
+                        step.args[1],
+                    )?;
+                    ops::zip_inplace(&mut t, b, op.apply());
+                }
+                StepKind::Un(op) => ops::map_inplace(&mut t, op.apply()),
+                StepKind::Reshape => {
+                    t = Tensor::new(Shape::of(&step.out_dims), t.into_data());
+                }
+                _ => unreachable!("inplace0 only set for Bin/Un/Reshape"),
+            }
+            debug_assert_eq!(t.dims(), step.out_dims.as_slice());
+            scratch.regs[step.dst] = Reg::Owned(t);
+            return Ok(());
+        }
+
+        // Allocating path; elementwise / GEMM / broadcast steps draw their
+        // output buffer from the arena.
+        let mut buf = match step.kind {
+            StepKind::Bin(_)
+            | StepKind::Un(_)
+            | StepKind::Dot2x2
+            | StepKind::Broadcast { .. } => Some(scratch.arena.take()),
+            _ => None,
+        };
+        let out: Tensor = {
+            let regs = &scratch.regs;
+            let get = |slot: usize| get_reg(regs, &self.consts, inputs, &self.slot_vids, slot);
+            match &step.kind {
+                StepKind::Param { .. } | StepKind::Const { .. } => unreachable!("handled above"),
+                StepKind::Bin(op) => {
+                    let mut b = buf.take().unwrap();
+                    ops::zip_into(get(step.args[0])?, get(step.args[1])?, op.apply(), &mut b);
+                    Tensor::new(Shape::of(&step.out_dims), b)
+                }
+                StepKind::Un(op) => {
+                    let mut b = buf.take().unwrap();
+                    ops::map_into(get(step.args[0])?, op.apply(), &mut b);
+                    Tensor::new(Shape::of(&step.out_dims), b)
+                }
+                StepKind::Select => ops::select(
+                    get(step.args[0])?,
+                    get(step.args[1])?,
+                    get(step.args[2])?,
+                ),
+                StepKind::Dot2x2 => {
+                    let mut b = buf.take().unwrap();
+                    ops::matmul_into(get(step.args[0])?, get(step.args[1])?, &mut b);
+                    Tensor::new(Shape::of(&step.out_dims), b)
+                }
+                StepKind::DotOther => ops::dot(get(step.args[0])?, get(step.args[1])?),
+                StepKind::Reshape => get(step.args[0])?.reshaped(&step.out_dims),
+                StepKind::Broadcast { mapping } => {
+                    let mut b = buf.take().unwrap();
+                    ops::broadcast_in_dim_into(get(step.args[0])?, &step.out_dims, mapping, &mut b);
+                    Tensor::new(Shape::of(&step.out_dims), b)
+                }
+                StepKind::Transpose { perm } => ops::transpose(get(step.args[0])?, perm),
+                StepKind::Pad { low, high, value } => {
+                    ops::pad(get(step.args[0])?, low, high, *value)
+                }
+                StepKind::Slice { starts, limits } => {
+                    ops::slice(get(step.args[0])?, starts, limits)
+                }
+                StepKind::Concat { dim } => {
+                    ops::concat(&[get(step.args[0])?, get(step.args[1])?], *dim)
+                }
+                StepKind::Reduce { dims, kind } => ops::reduce(get(step.args[0])?, dims, *kind),
+                StepKind::Conv2d { stride, same } => {
+                    ops::conv2d(get(step.args[0])?, get(step.args[1])?, *stride, *same)
+                }
+                StepKind::DepthwiseConv2d { stride, same } => {
+                    ops::depthwise_conv2d(get(step.args[0])?, get(step.args[1])?, *stride, *same)
+                }
+                StepKind::GlobalAvgPool => ops::global_avg_pool(get(step.args[0])?),
+            }
+        };
+        if let Some(b) = buf {
+            scratch.arena.put(b);
+        }
+        debug_assert_eq!(
+            out.dims(),
+            step.out_dims.as_slice(),
+            "compiled engine/type-inference disagreement in '{}'",
+            self.name
+        );
+        scratch.regs[step.dst] = Reg::Owned(out);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::eval;
+    use crate::ir::types::TType;
+
+    fn bits_equal(a: &[Tensor], b: &[Tensor]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b.iter()).all(|(x, y)| {
+                x.dims() == y.dims()
+                    && x.data()
+                        .iter()
+                        .zip(y.data().iter())
+                        .all(|(p, q)| p.to_bits() == q.to_bits())
+            })
+    }
+
+    /// out = exp(x) ⊙ (exp(x) + x): a diamond — exp(x) is used twice, so
+    /// the Add must NOT run in place on it.
+    fn diamond() -> Graph {
+        let mut g = Graph::new("diamond");
+        let x = g.param(TType::of(&[3, 4]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let a = g.push(OpKind::Add, &[e, x]).unwrap();
+        let m = g.push(OpKind::Multiply, &[e, a]).unwrap();
+        g.set_outputs(&[m]);
+        g
+    }
+
+    #[test]
+    fn diamond_multi_use_never_corrupted_by_inplace() {
+        let g = diamond();
+        let p = Program::compile(&g).unwrap();
+        let x = Tensor::iota(&[3, 4]);
+        let want = eval(&g, std::slice::from_ref(&x)).unwrap();
+        let got = p.run(std::slice::from_ref(&x)).unwrap();
+        assert!(bits_equal(&want, &got), "diamond graph diverged");
+    }
+
+    #[test]
+    fn diamond_liveness_peak() {
+        // Materialized buffers: during Multiply, both operands (exp and
+        // add results) are still live while the product is produced → 3.
+        // The liveness pass must NOT kill exp(x) after Add (it is used
+        // again), and must kill both operands right after Multiply.
+        let p = Program::compile(&diamond()).unwrap();
+        assert_eq!(p.peak_live(), 3);
+    }
+
+    #[test]
+    fn chain_liveness_peak_is_two() {
+        // x → e → t → n: each intermediate dies at its only use; during
+        // any step at most its operand + its result are materialized.
+        let mut g = Graph::new("chain");
+        let x = g.param(TType::of(&[4]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let t = g.push(OpKind::Tanh, &[e]).unwrap();
+        let n = g.push(OpKind::Negate, &[t]).unwrap();
+        g.set_outputs(&[n]);
+        let p = Program::compile(&g).unwrap();
+        assert_eq!(p.peak_live(), 2);
+    }
+
+    #[test]
+    fn multi_use_constant_stays_intact_across_runs() {
+        // A constant feeding two ops, one of which is in-place-eligible:
+        // the pool copy must never be mutated, so repeated runs agree.
+        let mut g = Graph::new("c2");
+        let x = g.param(TType::of(&[2, 2]));
+        let c = g.constant(Tensor::iota(&[2, 2]));
+        let a = g.push(OpKind::Add, &[x, c]).unwrap();
+        let m = g.push(OpKind::Multiply, &[a, c]).unwrap();
+        g.set_outputs(&[m]);
+        let p = Program::compile(&g).unwrap();
+        let x = Tensor::full(&[2, 2], 0.5);
+        let want = eval(&g, std::slice::from_ref(&x)).unwrap();
+        let mut scratch = Scratch::new();
+        for run in 0..3 {
+            let got = p.run_with(std::slice::from_ref(&x), &mut scratch).unwrap();
+            assert!(bits_equal(&want, &got), "run {run} diverged");
+        }
+    }
+
+    #[test]
+    fn constant_as_output_is_returned_unmutated() {
+        let mut g = Graph::new("co");
+        let x = g.param(TType::of(&[2]));
+        let c = g.constant(Tensor::iota(&[2]));
+        let a = g.push(OpKind::Add, &[x, c]).unwrap();
+        g.set_outputs(&[a, c]);
+        let p = Program::compile(&g).unwrap();
+        let x = Tensor::full(&[2], 1.0);
+        let out = p.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out[1].data(), &[0.0, 1.0]);
+        // and the input itself (param-as-output) round-trips elsewhere:
+        let want = eval(&g, std::slice::from_ref(&x)).unwrap();
+        assert!(bits_equal(&want, &out));
+    }
+
+    #[test]
+    fn error_classes_match_interp() {
+        let g = diamond();
+        let p = Program::compile(&g).unwrap();
+        // wrong arity
+        let ei = eval(&g, &[]).unwrap_err();
+        let ec = p.run(&[]).unwrap_err();
+        assert_eq!(
+            std::mem::discriminant(&ei),
+            std::mem::discriminant(&ec),
+            "arity error class: interp {ei:?} vs exec {ec:?}"
+        );
+        // wrong shape
+        let bad = Tensor::zeros(&[5, 5]);
+        let ei = eval(&g, std::slice::from_ref(&bad)).unwrap_err();
+        let ec = p.run(std::slice::from_ref(&bad)).unwrap_err();
+        assert_eq!(ei, ec, "shape error must match exactly");
+    }
+
+    #[test]
+    fn fitness_workload_graphs_compile_and_match() {
+        let spec = crate::models::twofc::TwoFcSpec {
+            batch: 4,
+            input: 9,
+            hidden: 6,
+            classes: 3,
+            lr: 0.1,
+        };
+        for g in [
+            crate::models::twofc::predict_graph(&spec),
+            crate::models::twofc::train_step_graph(&spec),
+        ] {
+            let p = Program::compile(&g).unwrap();
+            let mut rng = crate::util::rng::Rng::new(12);
+            let inputs: Vec<Tensor> = g
+                .param_types()
+                .iter()
+                .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, &mut rng))
+                .collect();
+            let want = eval(&g, &inputs).unwrap();
+            let got = p.run(&inputs).unwrap();
+            assert!(bits_equal(&want, &got), "graph '{}' diverged", g.name);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_shrinks_allocations_not_results() {
+        let spec = crate::models::twofc::TwoFcSpec {
+            batch: 4,
+            input: 9,
+            hidden: 6,
+            classes: 3,
+            lr: 0.1,
+        };
+        let g = crate::models::twofc::predict_graph(&spec);
+        let p = Program::compile(&g).unwrap();
+        let mut rng = crate::util::rng::Rng::new(13);
+        let inputs: Vec<Tensor> = g
+            .param_types()
+            .iter()
+            .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, &mut rng))
+            .collect();
+        let mut scratch = Scratch::new();
+        let first = p.run_with(&inputs, &mut scratch).unwrap();
+        for _ in 0..5 {
+            let again = p.run_with(&inputs, &mut scratch).unwrap();
+            assert!(bits_equal(&first, &again));
+        }
+    }
+}

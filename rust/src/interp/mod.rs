@@ -13,20 +13,36 @@ use crate::tensor::{ops, Tensor};
 use std::collections::HashMap;
 
 /// Interpreter failure (shape bugs are caught by the verifier; these are
-/// runtime-only conditions).
-#[derive(Debug, thiserror::Error)]
+/// runtime-only conditions). Shared with [`crate::exec`], whose compiled
+/// programs must fail with the same error class as the interpreter.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EvalError {
-    #[error("eval: wrong argument count: got {got}, graph wants {want}")]
     ArgCount { got: usize, want: usize },
-    #[error("eval: argument {index} has shape {got:?}, graph wants {want:?}")]
     ArgShape {
         index: usize,
         got: Vec<usize>,
         want: Vec<usize>,
     },
-    #[error("eval: value {0} not materialized (corrupt graph?)")]
     Missing(ValueId),
 }
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvalError::ArgCount { got, want } => {
+                write!(f, "eval: wrong argument count: got {got}, graph wants {want}")
+            }
+            EvalError::ArgShape { index, got, want } => {
+                write!(f, "eval: argument {index} has shape {got:?}, graph wants {want:?}")
+            }
+            EvalError::Missing(v) => {
+                write!(f, "eval: value {v} not materialized (corrupt graph?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
 
 /// Evaluate `g` on `inputs` (one tensor per entry parameter, in index
 /// order), returning the output tensors in order.

@@ -1,0 +1,247 @@
+//! Canonical graph hashing.
+//!
+//! Two graphs that differ only in [`ValueId`] numbering — the common case
+//! for crossover-identical offspring and re-materialized elites, whose
+//! edit replays mint fresh ids — must hash equal, so the compiled-program
+//! cache ([`crate::exec::cache::ProgramCache`]) can reuse one lowering for
+//! all of them. The hash therefore covers the *canonical form*: every
+//! value reference is replaced by the defining instruction's position in
+//! execution order, and all op attributes (including constant payload
+//! bits) are folded in.
+
+use super::graph::Graph;
+use super::op::OpKind;
+use crate::tensor::ops::ReduceKind;
+use std::collections::HashMap;
+
+/// Dual-lane word-wise hash accumulator producing a 128-bit digest.
+///
+/// Two independent lanes (different bases and multipliers, the second
+/// also position-salted) make accidental collisions among the
+/// adversarially-similar graphs of one population astronomically
+/// unlikely (~2⁻¹²⁸ joint), so the program cache can key on the digest
+/// alone. Folding whole `u64` words (one xor+multiply per lane) instead
+/// of bytes keeps hashing of large embedded constant pools — the entire
+/// weight set, for prediction graphs — cheap; a splitmix64-style
+/// finalizer restores diffusion.
+struct Fnv {
+    a: u64,
+    b: u64,
+    n: u64,
+}
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv { a: 0xcbf29ce484222325, b: 0x9E3779B97F4A7C15, n: 0 }
+    }
+
+    #[inline]
+    fn word(&mut self, v: u64) {
+        self.a = (self.a ^ v).wrapping_mul(0x100000001b3);
+        self.n = self.n.wrapping_add(1);
+        self.b = (self.b ^ v.rotate_left(32) ^ self.n).wrapping_mul(0xA0761D6478BD642F);
+    }
+
+    #[inline]
+    fn usize(&mut self, v: usize) {
+        self.word(v as u64);
+    }
+
+    fn usizes(&mut self, vs: &[usize]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.usize(v);
+        }
+    }
+
+    #[inline]
+    fn f32(&mut self, v: f32) {
+        self.word(v.to_bits() as u64);
+    }
+
+    fn finish(self) -> u128 {
+        fn fin(mut z: u64) -> u64 {
+            z ^= z >> 30;
+            z = z.wrapping_mul(0xBF58476D1CE4E5B9);
+            z ^= z >> 27;
+            z = z.wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        }
+        ((fin(self.a) as u128) << 64) | fin(self.b) as u128
+    }
+}
+
+/// Hash `g` in canonical (position-renumbered) form.
+pub fn graph_hash(g: &Graph) -> u128 {
+    let pos: HashMap<_, _> = g
+        .insts()
+        .iter()
+        .enumerate()
+        .map(|(p, i)| (i.id, p))
+        .collect();
+    let mut h = Fnv::new();
+    h.usize(g.len());
+    for inst in g.insts() {
+        mix_kind(&mut h, &inst.kind);
+        h.usize(inst.args.len());
+        for a in &inst.args {
+            h.usize(pos[a]);
+        }
+        h.usizes(&inst.ty.dims);
+    }
+    h.usize(g.outputs().len());
+    for o in g.outputs() {
+        h.usize(pos[o]);
+    }
+    h.finish()
+}
+
+fn mix_kind(h: &mut Fnv, kind: &OpKind) {
+    // A distinct tag per variant, then the attributes.
+    match kind {
+        OpKind::Parameter { index } => {
+            h.word(1);
+            h.usize(*index);
+        }
+        OpKind::Constant { value } => {
+            h.word(2);
+            h.usizes(value.dims());
+            for &v in value.data() {
+                h.f32(v);
+            }
+        }
+        OpKind::Add => h.word(3),
+        OpKind::Subtract => h.word(4),
+        OpKind::Multiply => h.word(5),
+        OpKind::Divide => h.word(6),
+        OpKind::Maximum => h.word(7),
+        OpKind::Minimum => h.word(8),
+        OpKind::CompareGt => h.word(9),
+        OpKind::Exponential => h.word(10),
+        OpKind::Log => h.word(11),
+        OpKind::Negate => h.word(12),
+        OpKind::Sqrt => h.word(13),
+        OpKind::Rsqrt => h.word(14),
+        OpKind::Tanh => h.word(15),
+        OpKind::Select => h.word(16),
+        OpKind::Dot => h.word(17),
+        OpKind::Reshape { dims } => {
+            h.word(18);
+            h.usizes(dims);
+        }
+        OpKind::Broadcast { dims, mapping } => {
+            h.word(19);
+            h.usizes(dims);
+            h.usizes(mapping);
+        }
+        OpKind::Transpose { perm } => {
+            h.word(20);
+            h.usizes(perm);
+        }
+        OpKind::Pad { low, high, value } => {
+            h.word(21);
+            h.usizes(low);
+            h.usizes(high);
+            h.f32(*value);
+        }
+        OpKind::Slice { starts, limits } => {
+            h.word(22);
+            h.usizes(starts);
+            h.usizes(limits);
+        }
+        OpKind::Concat { dim } => {
+            h.word(23);
+            h.usize(*dim);
+        }
+        OpKind::Reduce { dims, kind } => {
+            h.word(match kind {
+                ReduceKind::Sum => 24,
+                ReduceKind::Max => 25,
+                ReduceKind::Min => 26,
+            });
+            h.usizes(dims);
+        }
+        OpKind::Conv2d { stride, same } => {
+            h.word(27);
+            h.usize(*stride);
+            h.usize(*same as usize);
+        }
+        OpKind::DepthwiseConv2d { stride, same } => {
+            h.word(28);
+            h.usize(*stride);
+            h.usize(*same as usize);
+        }
+        OpKind::GlobalAvgPool => h.word(29),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::TType;
+    use crate::ir::Inst;
+    use crate::ir::ValueId;
+    use crate::tensor::Tensor;
+
+    fn sample() -> Graph {
+        let mut g = Graph::new("c");
+        let x = g.param(TType::of(&[2, 3]));
+        let c = g.constant(Tensor::iota(&[2, 3]));
+        let a = g.push(OpKind::Add, &[x, c]).unwrap();
+        let e = g.push(OpKind::Exponential, &[a]).unwrap();
+        g.set_outputs(&[e]);
+        g
+    }
+
+    #[test]
+    fn stable_for_identical_graphs() {
+        assert_eq!(graph_hash(&sample()), graph_hash(&sample()));
+    }
+
+    #[test]
+    fn invariant_under_id_renumbering() {
+        let g = sample();
+        // rebuild with shifted ids via from_parts
+        let insts: Vec<Inst> = g
+            .insts()
+            .iter()
+            .map(|i| Inst {
+                id: ValueId(i.id.0 + 100),
+                kind: i.kind.clone(),
+                args: i.args.iter().map(|a| ValueId(a.0 + 100)).collect(),
+                ty: i.ty.clone(),
+                label: i.label.clone(),
+            })
+            .collect();
+        let outs: Vec<ValueId> = g.outputs().iter().map(|o| ValueId(o.0 + 100)).collect();
+        let g2 = Graph::from_parts("c2", insts, outs).unwrap();
+        assert_eq!(graph_hash(&g), graph_hash(&g2), "renumbering must not change the hash");
+    }
+
+    #[test]
+    fn sensitive_to_ops_attrs_and_constants() {
+        let base = graph_hash(&sample());
+
+        let mut g = sample();
+        let e = g.outputs()[0];
+        let pos = g.index_of(e).unwrap();
+        let t = g.insert_at(pos + 1, OpKind::Tanh, &[e]).unwrap();
+        g.set_outputs(&[t]);
+        assert_ne!(graph_hash(&g), base, "extra op must change the hash");
+
+        // different constant payload
+        let mut g = Graph::new("c");
+        let x = g.param(TType::of(&[2, 3]));
+        let c = g.constant(Tensor::full(&[2, 3], 0.5));
+        let a = g.push(OpKind::Add, &[x, c]).unwrap();
+        let e = g.push(OpKind::Exponential, &[a]).unwrap();
+        g.set_outputs(&[e]);
+        assert_ne!(graph_hash(&g), base, "constant payload must be hashed");
+
+        // different output selection
+        let mut g = sample();
+        let prev = g.insts()[g.len() - 2].id;
+        g.set_outputs(&[prev]);
+        assert_ne!(graph_hash(&g), base, "outputs must be hashed");
+    }
+}

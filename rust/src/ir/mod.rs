@@ -10,6 +10,8 @@
 //!   shape inference, and a FLOP cost model.
 //! * [`graph`] — the instruction list + edit API (insert/delete/replace,
 //!   use-def queries) that the mutation operators drive.
+//! * [`canon`] — canonical (id-renumbering-invariant) graph hashing, the
+//!   key of the compiled-program cache in [`crate::exec`].
 //! * [`verify`] — SSA and type verification (the paper's validity check).
 //! * [`printer`] / [`parser`] — a textual dialect (round-trippable).
 //! * [`jsonio`] — lossless JSON serialization (checkpoints, reports).
@@ -20,6 +22,7 @@
 pub mod types;
 pub mod op;
 pub mod graph;
+pub mod canon;
 pub mod verify;
 pub mod printer;
 pub mod parser;

@@ -52,16 +52,30 @@ impl std::fmt::Display for ValueId {
 }
 
 /// IR construction / verification errors.
-#[derive(Debug, Clone, thiserror::Error)]
+///
+/// `Display`/`Error` are hand-implemented: the offline registry carries
+/// no `thiserror`.
+#[derive(Debug, Clone)]
 pub enum IrError {
-    #[error("unknown value {0}")]
     UnknownValue(ValueId),
-    #[error("value {0} used before definition")]
     UseBeforeDef(ValueId),
-    #[error("op {op}: arity {got}, expected {want}")]
     Arity { op: String, got: usize, want: usize },
-    #[error("op {op}: {msg}")]
     Shape { op: String, msg: String },
-    #[error("graph: {0}")]
     Graph(String),
 }
+
+impl std::fmt::Display for IrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IrError::UnknownValue(v) => write!(f, "unknown value {v}"),
+            IrError::UseBeforeDef(v) => write!(f, "value {v} used before definition"),
+            IrError::Arity { op, got, want } => {
+                write!(f, "op {op}: arity {got}, expected {want}")
+            }
+            IrError::Shape { op, msg } => write!(f, "op {op}: {msg}"),
+            IrError::Graph(msg) => write!(f, "graph: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for IrError {}

@@ -10,8 +10,12 @@
 //! * [`tensor`] — dense tensor substrate (the runtime's kernel library).
 //! * [`ir`] — an SSA graph IR modeled on the paper's MLIR/HLO dialect,
 //!   with verifier, printer/parser and an XLA-HLO-text emitter.
-//! * [`interp`] — the graph interpreter (the IREE-runtime analog) used for
-//!   the inner fitness loop.
+//! * [`interp`] — the graph interpreter (the IREE-runtime analog): the
+//!   executable reference semantics.
+//! * [`exec`] — the compiled execution engine: lowers a verified graph
+//!   once (slot assignment, liveness, buffer arena, in-place kernels) and
+//!   re-executes it bit-identically to [`interp`]; this is what the
+//!   fitness inner loop runs.
 //! * [`runtime`] — PJRT execution of AOT artifacts produced by the JAX
 //!   compile path (`python/compile/aot.py`), and of HLO text emitted from
 //!   (possibly mutated) IR graphs.
@@ -30,6 +34,7 @@ pub mod util;
 pub mod tensor;
 pub mod ir;
 pub mod interp;
+pub mod exec;
 pub mod evo;
 pub mod fitness;
 pub mod data;

@@ -94,6 +94,9 @@ fn cmd_search(args: &Args) {
         "evaluations: {}   cache hits: {}   wall: {:.1}s",
         r.search.total_evaluations, r.search.cache_hits, r.wall_seconds
     );
+    if let Some((hits, misses)) = r.search.program_cache {
+        println!("program cache: {hits} hits / {misses} lowerings");
+    }
     if let Some(prefix) = args.get("out") {
         std::fs::write(format!("{prefix}.json"), report::to_json(&r).to_pretty()).unwrap();
         std::fs::write(format!("{prefix}.csv"), report::front_csv(&r)).unwrap();

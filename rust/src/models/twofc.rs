@@ -250,6 +250,10 @@ pub fn apply_fig5_gradient_mutation(g: &mut Graph) -> Result<(), crate::ir::IrEr
 /// over pre-built batches; returns final weights and last loss, or `None`
 /// if the graph fails to execute or produces non-finite state (§4.3's
 /// "individuals execute successfully" requirement).
+///
+/// Interpreter-backed reference path; the fitness loop uses
+/// [`run_training_prog`] over a compiled [`crate::exec::Program`], which
+/// is bit-identical.
 pub fn run_training(
     step: &Graph,
     init: &TwoFcWeights,
@@ -274,6 +278,40 @@ pub fn run_training(
             }
             w = TwoFcWeights::from_slice(&out[0..4]);
             last_loss = out[4].item() as f64;
+        }
+    }
+    if !last_loss.is_finite() {
+        return None;
+    }
+    Some((w, last_loss))
+}
+
+/// [`run_training`] through a compiled train-step program: the lowering is
+/// amortized across `epochs × batches` executions, scratch buffers are
+/// reused between steps, and inputs are passed by reference (no defensive
+/// clones of the weight state).
+pub fn run_training_prog(
+    step: &crate::exec::Program,
+    init: &TwoFcWeights,
+    batches: &[(Tensor, Tensor)],
+    epochs: usize,
+) -> Option<(TwoFcWeights, f64)> {
+    let mut w = init.clone();
+    let mut last_loss = f64::NAN;
+    let mut scratch = crate::exec::Scratch::new();
+    for _ in 0..epochs {
+        for (x, y) in batches {
+            let inputs = [x, y, &w.w1, &w.b1, &w.w2, &w.b2];
+            let mut out = step.run_refs(&inputs, &mut scratch).ok()?;
+            if out.iter().take(4).any(|t| t.has_non_finite()) {
+                return None;
+            }
+            last_loss = out[4].item() as f64;
+            let b2 = out.swap_remove(3);
+            let w2 = out.swap_remove(2);
+            let b1 = out.swap_remove(1);
+            let w1 = out.swap_remove(0);
+            w = TwoFcWeights { w1, b1, w2, b2 };
         }
     }
     if !last_loss.is_finite() {
@@ -425,6 +463,26 @@ mod tests {
             dm > db * 4.0,
             "mutated step should take much larger steps: base {db}, mutated {dm}"
         );
+    }
+
+    #[test]
+    fn compiled_training_bit_identical_to_interp() {
+        let spec = small_spec();
+        let step = train_step_graph(&spec);
+        let data = digits::generate(96, spec.side(), 5);
+        let batches = data.batches(spec.batch);
+        let init = TwoFcWeights::init(&spec, 1);
+        let (wi, li) = run_training(&step, &init, &batches, 2).unwrap();
+        let prog = crate::exec::Program::compile(&step).unwrap();
+        let (wp, lp) = run_training_prog(&prog, &init, &batches, 2).unwrap();
+        assert_eq!(li.to_bits(), lp.to_bits(), "loss diverged");
+        for (a, b) in wi.as_vec().iter().zip(wp.as_vec().iter()) {
+            assert_eq!(a.dims(), b.dims());
+            assert!(
+                a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "weights diverged between interp and compiled training"
+            );
+        }
     }
 
     #[test]

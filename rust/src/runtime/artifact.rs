@@ -8,8 +8,8 @@
 //! * `artifacts/<model>_weights.json` — pretrained weights (MobileNet-lite)
 //!   or fixed initial weights (2fcNet), consumed by [`crate::models`].
 
+use super::{ctx, Result, RuntimeError};
 use crate::util::json::Json;
-use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -36,8 +36,8 @@ impl ArtifactDir {
         let root = root.as_ref().to_path_buf();
         let manifest_path = root.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {}", manifest_path.display()))?;
-        let j = Json::parse(&text).context("parsing manifest.json")?;
+            .map_err(ctx(format!("reading {}", manifest_path.display())))?;
+        let j = Json::parse(&text).map_err(ctx("parsing manifest.json"))?;
         let mut entries = BTreeMap::new();
         for ej in j.get("computations")?.as_arr()? {
             let name = ej.get("name")?.as_str()?.to_string();
@@ -71,7 +71,7 @@ impl ArtifactDir {
     pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
         self.entries
             .get(name)
-            .with_context(|| format!("artifact '{name}' not in manifest"))
+            .ok_or_else(|| RuntimeError::new(format!("artifact '{name}' not in manifest")))
     }
 
     /// Load a weights JSON (flat name → {shape, data}) from the artifact
@@ -79,8 +79,8 @@ impl ArtifactDir {
     pub fn load_weights(&self, file: &str) -> Result<BTreeMap<String, crate::tensor::Tensor>> {
         let path = self.root.join(file);
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text).context("parsing weights json")?;
+            .map_err(ctx(format!("reading {}", path.display())))?;
+        let j = Json::parse(&text).map_err(ctx("parsing weights json"))?;
         let mut out = BTreeMap::new();
         if let Json::Obj(map) = &j {
             for (k, v) in map {

@@ -1,6 +1,8 @@
 //! PJRT execution runtime.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU client) to:
+//! In the full configuration (cargo feature `pjrt`, which requires a
+//! vendored `xla` crate — the offline registry carries none) this module
+//! wraps the PJRT C API CPU client to:
 //!
 //! 1. load and execute the AOT artifacts produced by the JAX compile path
 //!    (`python/compile/aot.py` → `artifacts/*.hlo.txt`) — the unmutated
@@ -11,120 +13,230 @@
 //! 3. cross-validate interpreter numerics against real XLA
 //!    (`rust/tests/pjrt_roundtrip.rs`).
 //!
-//! Python never runs on this path; the rust binary is self-contained once
-//! `make artifacts` has produced the HLO text files.
+//! Without the feature (the default, and the only buildable configuration
+//! offline) the same API is exposed as a stub whose constructor returns a
+//! [`RuntimeError`], so callers degrade gracefully. The in-tree execution
+//! engines ([`crate::interp`] and [`crate::exec`]) carry the whole fitness
+//! loop either way.
 
 pub mod artifact;
 
-use crate::tensor::{Shape, Tensor};
-use anyhow::{Context, Result};
-
-/// A PJRT CPU client plus compiled-executable helpers.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
+/// Runtime-layer error (the offline registry has no `anyhow`; this is a
+/// message chain built with [`RuntimeError::context`]).
+#[derive(Debug)]
+pub struct RuntimeError {
+    msg: String,
 }
 
-/// One compiled HLO module ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Number of outputs in the ROOT tuple.
-    pub num_outputs: usize,
-}
-
-impl PjrtRuntime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtRuntime { client })
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError { msg: msg.into() }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile HLO text (from a file produced by aot.py).
-    pub fn compile_file(&self, path: &str, num_outputs: usize) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        self.compile_proto(proto, num_outputs)
-    }
-
-    /// Compile HLO text held in memory (e.g. emitted by
-    /// [`crate::ir::hlo_emit::emit`]).
-    pub fn compile_text(&self, hlo: &str, num_outputs: usize) -> Result<Executable> {
-        // The xla crate only exposes text parsing from a file path.
-        let dir = std::env::temp_dir();
-        let path = dir.join(format!(
-            "gevoml_hlo_{}_{}.txt",
-            std::process::id(),
-            std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .unwrap()
-                .as_nanos()
-        ));
-        std::fs::write(&path, hlo).context("writing HLO temp file")?;
-        let result = self.compile_file(path.to_str().unwrap(), num_outputs);
-        let _ = std::fs::remove_file(&path);
-        result
-    }
-
-    fn compile_proto(&self, proto: xla::HloModuleProto, num_outputs: usize) -> Result<Executable> {
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).context("PJRT compile")?;
-        Ok(Executable { exe, num_outputs })
-    }
-
-    /// Compile an IR graph by emitting HLO text.
-    pub fn compile_graph(&self, g: &crate::ir::Graph) -> Result<Executable> {
-        let text = crate::ir::hlo_emit::emit(g);
-        self.compile_text(&text, g.outputs().len())
-            .with_context(|| format!("compiling emitted HLO for graph '{}'", g.name))
+    /// Prepend context, anyhow-style: `err.context("loading manifest")`.
+    pub fn context(self, msg: impl Into<String>) -> RuntimeError {
+        RuntimeError { msg: format!("{}: {}", msg.into(), self.msg) }
     }
 }
 
-impl Executable {
-    /// Execute on tensors; returns output tensors (the ROOT tuple
-    /// unpacked). All values are f32, matching the dialect.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let flat = xla::Literal::vec1(t.data());
-                if t.rank() == 0 {
-                    // scalar: reshape to []
-                    flat.reshape(&[]).context("scalar reshape")
-                } else {
-                    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
-                    flat.reshape(&dims).context("input reshape")
-                }
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .context("PJRT execute")?[0][0]
-            .to_literal_sync()
-            .context("fetch result")?;
-        let tuple = result.to_tuple().context("unpack ROOT tuple")?;
-        anyhow::ensure!(
-            tuple.len() == self.num_outputs,
-            "executable returned {} outputs, expected {}",
-            tuple.len(),
-            self.num_outputs
-        );
-        tuple
-            .into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape().context("output shape")?;
-                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-                let data = lit.to_vec::<f32>().context("output data")?;
-                Ok(Tensor::new(Shape::of(&dims), data))
-            })
-            .collect()
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
     }
 }
 
-#[cfg(test)]
+impl std::error::Error for RuntimeError {}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> RuntimeError {
+        RuntimeError::new(e.to_string())
+    }
+}
+
+impl From<crate::util::json::JsonError> for RuntimeError {
+    fn from(e: crate::util::json::JsonError) -> RuntimeError {
+        RuntimeError::new(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Map any error into a [`RuntimeError`] with a context prefix.
+pub(crate) fn ctx<E: std::fmt::Display>(msg: impl Into<String>) -> impl FnOnce(E) -> RuntimeError {
+    let msg = msg.into();
+    move |e| RuntimeError::new(format!("{msg}: {e}"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::{Result, RuntimeError};
+    use crate::tensor::Tensor;
+
+    /// Stub PJRT client: constructing it reports that the build lacks the
+    /// `pjrt` feature. Keeps the API surface identical so `gevo-ml
+    /// validate`, the quickstart example, etc. compile unchanged.
+    pub struct PjrtRuntime {
+        _priv: (),
+    }
+
+    /// Stub compiled executable (never constructible without `pjrt`).
+    pub struct Executable {
+        pub num_outputs: usize,
+        _priv: (),
+    }
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `pjrt` cargo \
+         feature (the offline registry has no `xla` crate); use the in-tree \
+         `interp`/`exec` engines instead";
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn compile_file(&self, _path: &str, _num_outputs: usize) -> Result<Executable> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+
+        pub fn compile_text(&self, _hlo: &str, _num_outputs: usize) -> Result<Executable> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+
+        pub fn compile_graph(&self, _g: &crate::ir::Graph) -> Result<Executable> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::{ctx, Result, RuntimeError};
+    use crate::tensor::{Shape, Tensor};
+
+    /// A PJRT CPU client plus compiled-executable helpers.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+    }
+
+    /// One compiled HLO module ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        /// Number of outputs in the ROOT tuple.
+        pub num_outputs: usize,
+    }
+
+    impl PjrtRuntime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu().map_err(ctx("creating PJRT CPU client"))?;
+            Ok(PjrtRuntime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile HLO text (from a file produced by aot.py).
+        pub fn compile_file(&self, path: &str, num_outputs: usize) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(ctx(format!("parsing HLO text {path}")))?;
+            self.compile_proto(proto, num_outputs)
+        }
+
+        /// Compile HLO text held in memory (e.g. emitted by
+        /// [`crate::ir::hlo_emit::emit`]).
+        pub fn compile_text(&self, hlo: &str, num_outputs: usize) -> Result<Executable> {
+            // The xla crate only exposes text parsing from a file path.
+            let dir = std::env::temp_dir();
+            let path = dir.join(format!(
+                "gevoml_hlo_{}_{}.txt",
+                std::process::id(),
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .unwrap()
+                    .as_nanos()
+            ));
+            std::fs::write(&path, hlo).map_err(ctx("writing HLO temp file"))?;
+            let result = self.compile_file(path.to_str().unwrap(), num_outputs);
+            let _ = std::fs::remove_file(&path);
+            result
+        }
+
+        fn compile_proto(
+            &self,
+            proto: xla::HloModuleProto,
+            num_outputs: usize,
+        ) -> Result<Executable> {
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(ctx("PJRT compile"))?;
+            Ok(Executable { exe, num_outputs })
+        }
+
+        /// Compile an IR graph by emitting HLO text.
+        pub fn compile_graph(&self, g: &crate::ir::Graph) -> Result<Executable> {
+            let text = crate::ir::hlo_emit::emit(g);
+            self.compile_text(&text, g.outputs().len())
+                .map_err(|e| e.context(format!("compiling emitted HLO for graph '{}'", g.name)))
+        }
+    }
+
+    impl Executable {
+        /// Execute on tensors; returns output tensors (the ROOT tuple
+        /// unpacked). All values are f32, matching the dialect.
+        pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let flat = xla::Literal::vec1(t.data());
+                    if t.rank() == 0 {
+                        // scalar: reshape to []
+                        flat.reshape(&[]).map_err(ctx("scalar reshape"))
+                    } else {
+                        let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                        flat.reshape(&dims).map_err(ctx("input reshape"))
+                    }
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(ctx("PJRT execute"))?[0][0]
+                .to_literal_sync()
+                .map_err(ctx("fetch result"))?;
+            let tuple = result.to_tuple().map_err(ctx("unpack ROOT tuple"))?;
+            if tuple.len() != self.num_outputs {
+                return Err(RuntimeError::new(format!(
+                    "executable returned {} outputs, expected {}",
+                    tuple.len(),
+                    self.num_outputs
+                )));
+            }
+            tuple
+                .into_iter()
+                .map(|lit| {
+                    let shape = lit.array_shape().map_err(ctx("output shape"))?;
+                    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                    let data = lit.to_vec::<f32>().map_err(ctx("output data"))?;
+                    Ok(Tensor::new(Shape::of(&dims), data))
+                })
+                .collect()
+        }
+    }
+}
+
+pub use imp::{Executable, PjrtRuntime};
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -135,5 +247,22 @@ mod tests {
     fn cpu_client_comes_up() {
         let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
         assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjrtRuntime::cpu().err().expect("stub must error");
+        assert!(err.to_string().contains("pjrt"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn error_context_chains() {
+        let e = RuntimeError::new("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
     }
 }

@@ -36,6 +36,40 @@ pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
     Tensor::new(a.shape().clone(), a.data().iter().map(|&x| f(x)).collect())
 }
 
+// -- in-place / into-buffer variants (the compiled engine's hot path) -------
+//
+// [`crate::exec`] must be bit-identical to the interpreter, so every
+// variant below applies the same operation in the same element order as
+// its allocating twin — it only changes where the result lands.
+
+/// `a[i] = f(a[i], b[i])` in place (same element order as [`zip`]).
+pub fn zip_inplace(a: &mut Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) {
+    assert_eq!(a.shape(), b.shape(), "elementwise shape mismatch: {} vs {}", a.shape(), b.shape());
+    for (x, &y) in a.data_mut().iter_mut().zip(b.data().iter()) {
+        *x = f(*x, y);
+    }
+}
+
+/// `a[i] = f(a[i])` in place (same element order as [`map`]).
+pub fn map_inplace(a: &mut Tensor, f: impl Fn(f32) -> f32) {
+    for x in a.data_mut().iter_mut() {
+        *x = f(*x);
+    }
+}
+
+/// `out = f(a, b)` elementwise into a recycled buffer (cleared first).
+pub fn zip_into(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32, out: &mut Vec<f32>) {
+    assert_eq!(a.shape(), b.shape(), "elementwise shape mismatch: {} vs {}", a.shape(), b.shape());
+    out.clear();
+    out.extend(a.data().iter().zip(b.data().iter()).map(|(&x, &y)| f(x, y)));
+}
+
+/// `out = f(a)` elementwise into a recycled buffer (cleared first).
+pub fn map_into(a: &Tensor, f: impl Fn(f32) -> f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(a.data().iter().map(|&x| f(x)));
+}
+
 pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
     zip(a, b, |x, y| x + y)
 }
@@ -140,10 +174,20 @@ pub fn dot(a: &Tensor, b: &Tensor) -> Tensor {
 /// k and 256 over n keep the working set in L1/L2. See EXPERIMENTS.md
 /// §Perf for the measured iteration history of this kernel.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut c = Vec::new();
+    matmul_into(a, b, &mut c);
+    let (m, n) = (a.dims()[0], b.dims()[1]);
+    Tensor::new(Shape::of(&[m, n]), c)
+}
+
+/// [`matmul`] into a recycled buffer (cleared + zero-filled first); same
+/// blocking and accumulation order, so results are bit-identical.
+pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Vec<f32>) {
     let (m, k) = (a.dims()[0], a.dims()[1]);
     let (k2, n) = (b.dims()[0], b.dims()[1]);
     assert_eq!(k, k2, "matmul: inner dims {k} vs {k2}");
-    let mut c = vec![0.0f32; m * n];
+    c.clear();
+    c.resize(m * n, 0.0);
     const KB: usize = 64;
     const NB: usize = 256;
     let ad = a.data();
@@ -168,7 +212,6 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
-    Tensor::new(Shape::of(&[m, n]), c)
 }
 
 // ---------------------------------------------------------------------------
@@ -211,6 +254,14 @@ pub fn transpose(a: &Tensor, perm: &[usize]) -> Tensor {
 ///   `copy_from_slice`;
 /// * general case → odometer (incremental index) walk.
 pub fn broadcast_in_dim(a: &Tensor, out_dims: &[usize], mapping: &[usize]) -> Tensor {
+    let mut out = Vec::new();
+    broadcast_in_dim_into(a, out_dims, mapping, &mut out);
+    Tensor::new(Shape::of(out_dims), out)
+}
+
+/// [`broadcast_in_dim`] into a recycled buffer (cleared first); same fast
+/// paths and element order, so results are bit-identical.
+pub fn broadcast_in_dim_into(a: &Tensor, out_dims: &[usize], mapping: &[usize], out: &mut Vec<f32>) {
     assert_eq!(mapping.len(), a.rank(), "broadcast_in_dim: mapping rank");
     for w in mapping.windows(2) {
         assert!(w[0] < w[1], "broadcast_in_dim: mapping must be increasing");
@@ -224,12 +275,13 @@ pub fn broadcast_in_dim(a: &Tensor, out_dims: &[usize], mapping: &[usize]) -> Te
             out_dims[m]
         );
     }
-    let out_shape = Shape::of(out_dims);
-    let n = out_shape.numel();
+    let n: usize = out_dims.iter().product();
+    out.clear();
 
     // fast path: single-element source
     if a.numel() == 1 {
-        return Tensor::new(out_shape, vec![a.data()[0]; n]);
+        out.resize(n, a.data()[0]);
+        return;
     }
 
     // fast path: source occupies the trailing output dims contiguously
@@ -242,15 +294,15 @@ pub fn broadcast_in_dim(a: &Tensor, out_dims: &[usize], mapping: &[usize]) -> Te
         .all(|(i, &m)| m == r_out - r_in + i && a.dims()[i] == out_dims[m]);
     if trailing {
         let chunk = a.numel();
-        let mut out = Vec::with_capacity(n);
+        out.reserve(n);
         for _ in 0..n / chunk {
             out.extend_from_slice(a.data());
         }
-        return Tensor::new(out_shape, out);
+        return;
     }
 
     // general case: odometer walk over the output index space.
-    let mut out = vec![0.0f32; n];
+    out.resize(n, 0.0);
     let in_strides = a.shape().strides();
     // per-output-dim source stride (0 where replicated or size-1 input)
     let mut src_stride = vec![0usize; r_out];
@@ -275,7 +327,6 @@ pub fn broadcast_in_dim(a: &Tensor, out_dims: &[usize], mapping: &[usize]) -> Te
             idx[d] = 0;
         }
     }
-    Tensor::new(out_shape, out)
 }
 
 /// HLO `pad` with edge-low/edge-high counts and a pad value (no interior
@@ -637,6 +688,51 @@ mod tests {
     #[should_panic(expected = "mismatch")]
     fn elementwise_shape_mismatch_panics() {
         add(&Tensor::zeros(&[2]), &Tensor::zeros(&[3]));
+    }
+
+    #[test]
+    fn inplace_variants_bit_identical() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let a = Tensor::rand_uniform(&[7, 5], -3.0, 3.0, &mut rng);
+        let b = Tensor::rand_uniform(&[7, 5], -3.0, 3.0, &mut rng);
+        let want = zip(&a, &b, |x, y| x / y);
+        let mut got = a.clone();
+        zip_inplace(&mut got, &b, |x, y| x / y);
+        assert!(bits_equal(want.data(), got.data()));
+
+        let want = map(&a, f32::exp);
+        let mut got = a.clone();
+        map_inplace(&mut got, f32::exp);
+        assert!(bits_equal(want.data(), got.data()));
+    }
+
+    #[test]
+    fn into_variants_bit_identical_and_reuse_buffers() {
+        let mut rng = crate::util::rng::Rng::new(22);
+        let a = Tensor::rand_uniform(&[9, 4], -2.0, 2.0, &mut rng);
+        let b = Tensor::rand_uniform(&[9, 4], -2.0, 2.0, &mut rng);
+        let mut buf = vec![9.0f32; 128]; // stale, oversized recycled buffer
+        zip_into(&a, &b, |x, y| x * y, &mut buf);
+        assert!(bits_equal(mul(&a, &b).data(), &buf));
+        map_into(&a, f32::tanh, &mut buf);
+        assert!(bits_equal(map(&a, f32::tanh).data(), &buf));
+
+        let m = Tensor::rand_uniform(&[5, 7], -1.0, 1.0, &mut rng);
+        let n = Tensor::rand_uniform(&[7, 6], -1.0, 1.0, &mut rng);
+        matmul_into(&m, &n, &mut buf);
+        assert!(bits_equal(matmul(&m, &n).data(), &buf));
+
+        let row = Tensor::rand_uniform(&[6], -1.0, 1.0, &mut rng);
+        broadcast_in_dim_into(&row, &[5, 6], &[1], &mut buf);
+        assert!(bits_equal(broadcast_in_dim(&row, &[5, 6], &[1]).data(), &buf));
+        let col = Tensor::new(Shape::of(&[2, 1]), vec![7.0, 8.0]);
+        broadcast_in_dim_into(&col, &[2, 3], &[0, 1], &mut buf);
+        assert!(bits_equal(broadcast_in_dim(&col, &[2, 3], &[0, 1]).data(), &buf));
+    }
+
+    fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
     }
 
     #[test]

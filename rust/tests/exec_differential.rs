@@ -1,0 +1,174 @@
+//! Differential testing: the compiled execution engine ([`gevo_ml::exec`])
+//! must be **bit-identical** to the tree-walking interpreter
+//! ([`gevo_ml::interp`]) — same output bits on success, same
+//! [`EvalError`] class on failure — across hundreds of seeded random
+//! mutation chains over both paper workload graphs. This is the contract
+//! that lets the fitness loop run compiled while `interp::eval` stays the
+//! executable reference semantics.
+
+use gevo_ml::evo::mutate::valid_random_edit;
+use gevo_ml::exec::{Program, Scratch};
+use gevo_ml::interp::{eval, EvalError};
+use gevo_ml::ir::Graph;
+use gevo_ml::models::{mobilenet, twofc};
+use gevo_ml::tensor::Tensor;
+use gevo_ml::util::prop::run_prop;
+use gevo_ml::util::rng::Rng;
+
+fn twofc_base() -> Graph {
+    let spec = twofc::TwoFcSpec { batch: 4, input: 16, hidden: 8, classes: 4, lr: 0.1 };
+    twofc::train_step_graph(&spec)
+}
+
+fn mobilenet_base() -> Graph {
+    let spec =
+        mobilenet::MobileNetSpec { batch: 2, side: 8, classes: 4, width: 4, blocks: 2 };
+    let w = mobilenet::random_weights(&spec, 3);
+    mobilenet::predict_graph(&spec, &w)
+}
+
+/// Apply a random chain of 1..=4 valid edits to `base`.
+fn mutate_chain(base: &Graph, rng: &mut Rng) -> Graph {
+    let mut g = base.clone();
+    for _ in 0..rng.range(1, 5) {
+        if let Some((_, ng)) = valid_random_edit(&g, rng, 25) {
+            g = ng;
+        }
+    }
+    g
+}
+
+fn random_inputs(g: &Graph, rng: &mut Rng) -> Vec<Tensor> {
+    g.param_types()
+        .iter()
+        .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, rng))
+        .collect()
+}
+
+/// Outputs must agree bit-for-bit, including NaN payloads (mutants are
+/// often numerically broken; both engines must be broken identically).
+fn assert_bit_identical(want: &[Tensor], got: &[Tensor]) -> Result<(), String> {
+    if want.len() != got.len() {
+        return Err(format!("output count {} vs {}", want.len(), got.len()));
+    }
+    for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+        if w.dims() != g.dims() {
+            return Err(format!("output {i}: dims {:?} vs {:?}", w.dims(), g.dims()));
+        }
+        for (j, (a, b)) in w.data().iter().zip(g.data().iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "output {i}[{j}]: interp {a} ({:#010x}) vs exec {b} ({:#010x})",
+                    a.to_bits(),
+                    b.to_bits()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn differential_case(base: &Graph, rng: &mut Rng) -> Result<(), String> {
+    let g = mutate_chain(base, rng);
+    let prog = Program::compile(&g).map_err(|e| format!("compile failed: {e}"))?;
+    let inputs = random_inputs(&g, rng);
+    let want = eval(&g, &inputs).map_err(|e| format!("interp failed: {e}"))?;
+    let mut scratch = Scratch::new();
+    let got = prog
+        .run_with(&inputs, &mut scratch)
+        .map_err(|e| format!("exec failed: {e}"))?;
+    assert_bit_identical(&want, &got)?;
+    // Re-run with warm scratch (recycled buffers must not leak stale data).
+    let again = prog
+        .run_with(&inputs, &mut scratch)
+        .map_err(|e| format!("warm exec failed: {e}"))?;
+    assert_bit_identical(&want, &again).map_err(|e| format!("warm run: {e}"))
+}
+
+#[test]
+fn twofc_mutation_chains_bit_identical() {
+    let base = twofc_base();
+    run_prop(150, 0xD1FF, |rng| differential_case(&base, rng));
+}
+
+#[test]
+fn mobilenet_mutation_chains_bit_identical() {
+    let base = mobilenet_base();
+    run_prop(100, 0xD2FF, |rng| differential_case(&base, rng));
+}
+
+/// Failing variants must fail with the same `EvalError` class in both
+/// engines: wrong argument count and wrong argument shapes.
+#[test]
+fn error_classes_agree_on_both_workloads() {
+    for base in [twofc_base(), mobilenet_base()] {
+        run_prop(40, 0xE44, |rng| {
+            let g = mutate_chain(&base, rng);
+            let prog = Program::compile(&g).map_err(|e| format!("compile: {e}"))?;
+            let mut inputs = random_inputs(&g, rng);
+
+            // wrong count: drop one input
+            let dropped = inputs.pop().expect("graphs have parameters");
+            let ei = eval(&g, &inputs).expect_err("interp must reject short inputs");
+            let ec = prog.run(&inputs).expect_err("exec must reject short inputs");
+            if std::mem::discriminant(&ei) != std::mem::discriminant(&ec) {
+                return Err(format!("count error class: interp {ei:?} vs exec {ec:?}"));
+            }
+            if !matches!(ei, EvalError::ArgCount { .. }) {
+                return Err(format!("expected ArgCount, interp said {ei:?}"));
+            }
+            inputs.push(dropped);
+
+            // wrong shape: corrupt one random input's dims
+            let k = rng.below(inputs.len());
+            let mut dims = inputs[k].dims().to_vec();
+            if dims.is_empty() {
+                dims.push(2); // scalar param -> rank-1
+            } else {
+                dims[0] += 1;
+            }
+            inputs[k] = Tensor::zeros(&dims);
+            let ei = eval(&g, &inputs).expect_err("interp must reject bad shape");
+            let ec = prog.run(&inputs).expect_err("exec must reject bad shape");
+            if ei != ec {
+                return Err(format!("shape error mismatch: interp {ei:?} vs exec {ec:?}"));
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Satellite regression: two `search::run` invocations with the same seed
+/// and `RuntimeMetric::Flops` must produce identical Pareto fronts when
+/// every fitness evaluation goes through the compiled engine.
+#[test]
+fn search_deterministic_through_compiled_engine() {
+    use gevo_ml::data::digits;
+    use gevo_ml::evo::search::{self, SearchConfig};
+    use gevo_ml::fitness::training::TrainingWorkload;
+    use gevo_ml::fitness::RuntimeMetric;
+
+    let spec = twofc::TwoFcSpec { batch: 8, input: 16, hidden: 8, classes: 4, lr: 0.1 };
+    let base = twofc::train_step_graph(&spec);
+    let cfg = SearchConfig {
+        pop_size: 8,
+        generations: 3,
+        elites: 4,
+        workers: 3,
+        seed: 11,
+        verbose: false,
+        ..Default::default()
+    };
+    let run_once = || {
+        let data = digits::generate(96, spec.side(), 7);
+        let (fit, test) = data.split(64);
+        let wl = TrainingWorkload::new(spec, &base, fit, test, 1, 1, RuntimeMetric::Flops);
+        let res = search::run(&base, &wl, &cfg);
+        assert!(res.program_cache.is_some(), "workload must report its program cache");
+        res.pareto.iter().map(|(_, o)| *o).collect::<Vec<_>>()
+    };
+    let a = run_once();
+    let b = run_once();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same seed + Flops metric must reproduce the same front");
+}

@@ -1,6 +1,11 @@
 //! Integration: IR → HLO text → real XLA (PJRT CPU) must agree with the
 //! in-tree interpreter — the contract that lets the search validate its
 //! Pareto-front survivors on a production compiler (DESIGN.md §1).
+//!
+//! Compiled only with the `pjrt` cargo feature (requires a vendored `xla`
+//! crate; the offline registry carries none). The interpreter-vs-compiled
+//! contract is covered offline by `tests/exec_differential.rs`.
+#![cfg(feature = "pjrt")]
 
 use gevo_ml::interp::eval;
 use gevo_ml::ir::op::{OpKind, ReduceKind};
