@@ -3,7 +3,8 @@
 //! headline: +4.88% training accuracy (error 8.62% → 3.74%) at unchanged
 //! runtime, via the gradient-scale mutation of §6.2/Fig. 5.
 //!
-//! Run: `cargo run --release --example evolve_2fcnet -- [--pop 32] [--gens 12] [--seed 42]`
+//! Run: `cargo run --release --example evolve_2fcnet -- [--pop 32] [--gens 12] [--seed 42]
+//!       [--islands 4] [--migration-interval 4] [--checkpoint ck.json]`
 
 use gevo_ml::coordinator::{self, report, ExperimentConfig, WorkloadKind};
 use gevo_ml::evo::search::SearchConfig;
@@ -22,12 +23,16 @@ fn main() {
                 "workers",
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             ),
+            islands: args.usize_or("islands", 1),
+            migration_interval: args.usize_or("migration-interval", 4),
+            migrants: args.usize_or("migrants", 2),
             verbose: !args.flag("quiet"),
             ..Default::default()
         },
         fit_samples: args.usize_or("fit", 512),
         test_samples: args.usize_or("test", 160),
         epochs: args.usize_or("epochs", 1),
+        checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
         ..Default::default()
     };
     eprintln!(
@@ -59,6 +64,9 @@ fn main() {
         "evaluations: {}   cache hits: {}   wall: {:.1}s",
         r.search.total_evaluations, r.search.cache_hits, r.wall_seconds
     );
+    if r.search.islands.len() > 1 {
+        print!("{}", report::island_summary(&r));
+    }
     if let Some(prefix) = args.get("out") {
         std::fs::write(format!("{prefix}.json"), report::to_json(&r).to_pretty()).unwrap();
         std::fs::write(format!("{prefix}.csv"), report::front_csv(&r)).unwrap();

@@ -8,7 +8,7 @@ pub mod metrics;
 
 use crate::data::{digits, patterns};
 use crate::evo::nsga2::Objectives;
-use crate::evo::search::{self, SearchConfig, SearchResult};
+use crate::evo::search::{SearchConfig, SearchResult};
 use crate::fitness::prediction::PredictionWorkload;
 use crate::fitness::training::TrainingWorkload;
 use crate::fitness::RuntimeMetric;
@@ -47,6 +47,10 @@ pub struct ExperimentConfig {
     pub epochs: usize,
     pub data_seed: u64,
     pub weight_seed: u64,
+    /// Checkpoint file: written every `search.checkpoint_every`
+    /// generations (plus once at the end of the run); if it already
+    /// exists the search resumes from it (see [`crate::evo::island`]).
+    pub checkpoint: Option<std::path::PathBuf>,
 }
 
 impl Default for ExperimentConfig {
@@ -60,6 +64,7 @@ impl Default for ExperimentConfig {
             epochs: 1,
             data_seed: 7,
             weight_seed: 1,
+            checkpoint: None,
         }
     }
 }
@@ -68,6 +73,9 @@ impl Default for ExperimentConfig {
 #[derive(Debug, Clone)]
 pub struct FrontPoint {
     pub edits: usize,
+    /// Island whose archive first produced this genome (0 when sharding
+    /// is off).
+    pub island: usize,
     pub fit: Objectives,
     /// Post-hoc objectives on the held-out split (None if the variant
     /// failed there — reported, as the paper reports test-set movement).
@@ -105,7 +113,12 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 (cfg.fit_samples / spec.batch).min(32),
                 cfg.metric,
             );
-            let res = search::run(&baseline, &wl, &cfg.search);
+            let res = crate::evo::island::run_with_checkpoint(
+                &baseline,
+                &wl,
+                &cfg.search,
+                cfg.checkpoint.as_deref(),
+            );
             finish(t0, &baseline, res, |g| wl.evaluate_pair(g))
         }
         WorkloadKind::TwoFcTraining => {
@@ -126,7 +139,12 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.weight_seed,
                 cfg.metric,
             );
-            let res = search::run(&baseline, &wl, &cfg.search);
+            let res = crate::evo::island::run_with_checkpoint(
+                &baseline,
+                &wl,
+                &cfg.search,
+                cfg.checkpoint.as_deref(),
+            );
             finish(t0, &baseline, res, |g| {
                 use crate::evo::search::Evaluator;
                 (wl.evaluate(g), wl.post_hoc(g))
@@ -150,21 +168,20 @@ fn finish(
 ) -> ExperimentResult {
     let (bf, bp) = eval_pair(baseline);
     // Dedup front rows by quantized objective point — corners of the
-    // front are often reached by many distinct genomes.
+    // front are often reached by many distinct genomes. Provenance rides
+    // along so per-island contributions stay visible in reports.
     let mut seen = std::collections::HashSet::new();
-    let pareto: Vec<_> = res
-        .pareto
-        .iter()
-        .filter(|(_, o)| seen.insert(((o.0 * 1e4) as i64, (o.1 * 1e4) as i64)))
-        .cloned()
-        .collect();
     let mut front = Vec::new();
-    for (ind, fit) in &pareto {
+    let q = |x: f64| crate::evo::search::quantize_at(x, 1e4);
+    for ((ind, fit), &island) in res.pareto.iter().zip(res.pareto_islands.iter()) {
+        if !seen.insert((q(fit.0), q(fit.1))) {
+            continue;
+        }
         let post_hoc = ind
             .materialize(baseline)
             .ok()
             .and_then(|g| eval_pair(&g).1);
-        front.push(FrontPoint { edits: ind.edits.len(), fit: *fit, post_hoc });
+        front.push(FrontPoint { edits: ind.edits.len(), island, fit: *fit, post_hoc });
     }
     ExperimentResult {
         baseline_fit: bf.expect("baseline evaluates"),
@@ -217,6 +234,33 @@ mod tests {
         assert!(!r.front.is_empty());
         assert!((r.baseline_fit.0 - 1.0).abs() < 1e-9, "flops baseline = 1");
         assert!(r.search.total_evaluations > 0);
+    }
+
+    #[test]
+    fn sharded_experiment_end_to_end() {
+        let cfg = ExperimentConfig {
+            kind: WorkloadKind::TwoFcTraining,
+            search: SearchConfig {
+                pop_size: 6,
+                generations: 2,
+                elites: 3,
+                workers: 2,
+                seed: 5,
+                islands: 2,
+                migration_interval: 1,
+                ..Default::default()
+            },
+            fit_samples: 64,
+            test_samples: 32,
+            epochs: 1,
+            ..Default::default()
+        };
+        let r = run_experiment(&cfg);
+        assert!(!r.front.is_empty());
+        assert_eq!(r.search.islands.len(), 2);
+        assert!(r.front.iter().all(|p| p.island < 2));
+        let evals: usize = r.search.islands.iter().map(|s| s.evaluations).sum();
+        assert_eq!(evals, r.search.total_evaluations);
     }
 
     #[test]

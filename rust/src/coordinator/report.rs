@@ -1,18 +1,20 @@
 //! Experiment reporting: Pareto-front tables (markdown / CSV), the
 //! terminal scatter plot used to eyeball Fig. 4, and JSON dumps for
-//! downstream tooling.
+//! downstream tooling. Sharded (island) runs additionally report
+//! per-island stats, migration counts and merged-front provenance.
 
 use super::{ExperimentResult, FrontPoint};
 use crate::evo::nsga2::Objectives;
+use crate::evo::search::IslandStats;
 use crate::util::json::Json;
 
 /// Markdown table of the front (the Fig. 4 data, in rows).
 pub fn front_markdown(r: &ExperimentResult) -> String {
     let mut s = String::new();
-    s.push_str("| variant | edits | runtime (fit) | error (fit) | runtime (held-out) | error (held-out) |\n");
-    s.push_str("|---|---|---|---|---|---|\n");
+    s.push_str("| variant | edits | island | runtime (fit) | error (fit) | runtime (held-out) | error (held-out) |\n");
+    s.push_str("|---|---|---|---|---|---|---|\n");
     s.push_str(&format!(
-        "| original | 0 | {:.4} | {:.4} | {} | {} |\n",
+        "| original | 0 | - | {:.4} | {:.4} | {} | {} |\n",
         r.baseline_fit.0,
         r.baseline_fit.1,
         r.baseline_post_hoc.map_or("-".into(), |o| format!("{:.4}", o.0)),
@@ -20,8 +22,9 @@ pub fn front_markdown(r: &ExperimentResult) -> String {
     ));
     for (i, p) in r.front.iter().enumerate() {
         s.push_str(&format!(
-            "| pareto-{i} | {} | {:.4} | {:.4} | {} | {} |\n",
+            "| pareto-{i} | {} | {} | {:.4} | {:.4} | {} | {} |\n",
             p.edits,
+            p.island,
             p.fit.0,
             p.fit.1,
             p.post_hoc.map_or("-".into(), |o| format!("{:.4}", o.0)),
@@ -31,16 +34,30 @@ pub fn front_markdown(r: &ExperimentResult) -> String {
     s
 }
 
-/// CSV (runtime,error,edits,split) rows for plotting.
+/// CSV (runtime,error,edits,island,split) rows for plotting.
 pub fn front_csv(r: &ExperimentResult) -> String {
-    let mut s = String::from("runtime,error,edits,split\n");
-    s.push_str(&format!("{},{},0,baseline\n", r.baseline_fit.0, r.baseline_fit.1));
+    let mut s = String::from("runtime,error,edits,island,split\n");
+    s.push_str(&format!("{},{},0,-,baseline\n", r.baseline_fit.0, r.baseline_fit.1));
     for p in &r.front {
-        s.push_str(&format!("{},{},{},fit\n", p.fit.0, p.fit.1, p.edits));
+        s.push_str(&format!("{},{},{},{},fit\n", p.fit.0, p.fit.1, p.edits, p.island));
         if let Some(o) = p.post_hoc {
-            s.push_str(&format!("{},{},{},heldout\n", o.0, o.1, p.edits));
+            s.push_str(&format!("{},{},{},{},heldout\n", o.0, o.1, p.edits, p.island));
         }
     }
+    s
+}
+
+/// Per-island summary rows for terminal output.
+pub fn island_summary(r: &ExperimentResult) -> String {
+    let mut s = String::new();
+    for i in &r.search.islands {
+        s.push_str(&format!(
+            "island {}: {} evals, {} cache hits, local front {}, migrants {} out / {} in\n",
+            i.island, i.evaluations, i.cache_hits, i.front_size, i.migrants_sent,
+            i.migrants_received
+        ));
+    }
+    s.push_str(&format!("migrations: {}\n", r.search.migrations));
     s
 }
 
@@ -61,6 +78,7 @@ pub fn to_json(r: &ExperimentResult) -> Json {
                     .map(|p: &FrontPoint| {
                         Json::obj(vec![
                             ("edits", Json::num(p.edits as f64)),
+                            ("island", Json::num(p.island as f64)),
                             ("fit", pt(p.fit)),
                             ("post_hoc", p.post_hoc.map_or(Json::Null, pt)),
                         ])
@@ -68,6 +86,26 @@ pub fn to_json(r: &ExperimentResult) -> Json {
                     .collect(),
             ),
         ),
+        (
+            "islands",
+            Json::Arr(
+                r.search
+                    .islands
+                    .iter()
+                    .map(|s: &IslandStats| {
+                        Json::obj(vec![
+                            ("island", Json::num(s.island as f64)),
+                            ("evaluations", Json::num(s.evaluations as f64)),
+                            ("cache_hits", Json::num(s.cache_hits as f64)),
+                            ("front_size", Json::num(s.front_size as f64)),
+                            ("migrants_sent", Json::num(s.migrants_sent as f64)),
+                            ("migrants_received", Json::num(s.migrants_received as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("migrations", Json::num(r.search.migrations as f64)),
         ("evaluations", Json::num(r.search.total_evaluations as f64)),
         ("cache_hits", Json::num(r.search.cache_hits as f64)),
         ("wall_seconds", Json::num(r.wall_seconds)),
@@ -125,14 +163,34 @@ mod tests {
             baseline_fit: (1.0, 0.1),
             baseline_post_hoc: Some((1.0, 0.12)),
             front: vec![
-                FrontPoint { edits: 2, fit: (0.5, 0.2), post_hoc: Some((0.5, 0.22)) },
-                FrontPoint { edits: 1, fit: (1.0, 0.05), post_hoc: None },
+                FrontPoint { edits: 2, island: 0, fit: (0.5, 0.2), post_hoc: Some((0.5, 0.22)) },
+                FrontPoint { edits: 1, island: 1, fit: (1.0, 0.05), post_hoc: None },
             ],
             search: SearchResult {
                 pareto: vec![],
+                pareto_islands: vec![],
                 history: vec![],
                 total_evaluations: 42,
                 cache_hits: 7,
+                islands: vec![
+                    IslandStats {
+                        island: 0,
+                        evaluations: 20,
+                        cache_hits: 3,
+                        front_size: 2,
+                        migrants_sent: 2,
+                        migrants_received: 1,
+                    },
+                    IslandStats {
+                        island: 1,
+                        evaluations: 22,
+                        cache_hits: 4,
+                        front_size: 1,
+                        migrants_sent: 1,
+                        migrants_received: 2,
+                    },
+                ],
+                migrations: 3,
                 program_cache: None,
             },
             wall_seconds: 1.5,
@@ -142,9 +200,9 @@ mod tests {
     #[test]
     fn markdown_has_all_rows() {
         let md = front_markdown(&fake());
-        assert!(md.contains("| original | 0 | 1.0000 | 0.1000 |"));
-        assert!(md.contains("pareto-0"));
-        assert!(md.contains("pareto-1"));
+        assert!(md.contains("| original | 0 | - | 1.0000 | 0.1000 |"));
+        assert!(md.contains("| pareto-0 | 2 | 0 | 0.5000 |"));
+        assert!(md.contains("| pareto-1 | 1 | 1 | 1.0000 |"));
         assert!(md.lines().count() >= 5);
     }
 
@@ -152,7 +210,8 @@ mod tests {
     fn csv_parses_back() {
         let csv = front_csv(&fake());
         assert_eq!(csv.lines().count(), 1 + 1 + 3); // header + baseline + 2 fit + 1 heldout
-        assert!(csv.contains("0.5,0.2,2,fit"));
+        assert!(csv.contains("0.5,0.2,2,0,fit"));
+        assert!(csv.contains("1,0.05,1,1,fit"));
     }
 
     #[test]
@@ -160,6 +219,18 @@ mod tests {
         let j = to_json(&fake());
         let j2 = Json::parse(&j.to_pretty()).unwrap();
         assert_eq!(j2.get("evaluations").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(j2.get("migrations").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j2.get("islands").unwrap().as_arr().unwrap().len(), 2);
+        let front = j2.get("front").unwrap().as_arr().unwrap();
+        assert_eq!(front[1].get("island").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn island_summary_lists_every_island() {
+        let s = island_summary(&fake());
+        assert!(s.contains("island 0: 20 evals"));
+        assert!(s.contains("island 1: 22 evals"));
+        assert!(s.contains("migrations: 3"));
     }
 
     #[test]

@@ -1,0 +1,653 @@
+//! Island-model search with checkpoint/resume.
+//!
+//! GEVO-ML's multi-objective search is embarrassingly parallel across
+//! subpopulations: K independent islands — each with its own RNG stream,
+//! fitness cache and generation loop ([`Engine`]) — exchange elite
+//! migrants on a ring topology every `migration_interval` generations and
+//! merge into a single global Pareto archive at the end. `islands = 1`
+//! degenerates to the classic single-population search, bit-identically:
+//! island 0 keeps the user seed and migration is skipped.
+//!
+//! Long searches are restartable: [`run_with_checkpoint`] serializes the
+//! full search state (per-island populations as edit lists, RNG states,
+//! archives, fitness caches, generation counters) through [`crate::util::json`]
+//! after every generation, and a killed run resumed from that file
+//! produces the same result as an uninterrupted one. All `u64` words and
+//! `f64` objectives are stored as hex bit patterns so the round trip is
+//! exact.
+
+use super::nsga2::{pareto_front, rank_and_crowd, select_best, Objectives};
+use super::patch::{Edit, EditKind, Individual};
+use super::search::{Engine, Evaluator, GenStats, SearchConfig, SearchResult};
+use crate::ir::types::ValueId;
+use crate::ir::Graph;
+use crate::util::json::{Json, JsonError};
+use crate::util::rng::Rng;
+use std::collections::{BTreeMap, HashSet};
+use std::path::Path;
+
+/// In-flight search state: what a checkpoint captures.
+pub(crate) struct RunState {
+    pub(crate) engines: Vec<Engine>,
+    pub(crate) history: Vec<GenStats>,
+    /// Generations fully completed (all islands stepped + migration).
+    pub(crate) completed: usize,
+    /// Individuals moved between islands so far.
+    pub(crate) migrations: usize,
+}
+
+/// Run the (possibly multi-island) search, checkpointing after every
+/// generation when `checkpoint` is given. If the file already exists the
+/// run resumes from it — `cfg.generations` is the *target*, so resuming
+/// with a larger value extends the search. The checkpoint must have been
+/// written by a run with the same stochastic configuration (seed,
+/// population shape, operator probabilities); anything else panics with a
+/// description of the mismatch.
+pub fn run_with_checkpoint(
+    original: &Graph,
+    eval: &dyn Evaluator,
+    cfg: &SearchConfig,
+    checkpoint: Option<&Path>,
+) -> SearchResult {
+    let k = cfg.islands.max(1);
+    // Identity of the baseline program: resuming against a different
+    // workload graph would silently reinterpret cached objectives, so the
+    // canonical graph hash is echoed into the checkpoint and verified.
+    let ghash = crate::ir::canon::graph_hash(original);
+    let mut st = match checkpoint {
+        Some(p) if p.exists() => {
+            let text = std::fs::read_to_string(p)
+                .unwrap_or_else(|e| panic!("read checkpoint {}: {e}", p.display()));
+            let j = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("parse checkpoint {}: {e}", p.display()));
+            restore_checkpoint(&j, cfg, ghash)
+                .unwrap_or_else(|e| panic!("checkpoint {}: {e}", p.display()))
+        }
+        _ => {
+            let engines = (0..k).map(|i| Engine::new(i, original, eval, cfg)).collect();
+            let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
+            if let Some(p) = checkpoint {
+                save_checkpoint(p, cfg, ghash, &st);
+            }
+            st
+        }
+    };
+
+    let every = cfg.checkpoint_every.max(1);
+    while st.completed < cfg.generations {
+        let gen = st.completed;
+        for e in st.engines.iter_mut() {
+            let s = e.step(original, eval, cfg, gen);
+            if cfg.verbose {
+                eprintln!(
+                    "[isl {} gen {:>3}] evals=+{:<5} front={:<3} best_time={:.4} best_err={:.4}",
+                    s.island, s.gen, s.evaluated, s.front_size, s.best_time, s.best_error
+                );
+            }
+            st.history.push(s);
+        }
+        if k > 1 && cfg.migration_interval > 0 && (gen + 1) % cfg.migration_interval == 0 {
+            st.migrations += migrate(&mut st.engines, cfg.migrants);
+        }
+        st.completed += 1;
+        if let Some(p) = checkpoint {
+            if st.completed % every == 0 || st.completed >= cfg.generations {
+                save_checkpoint(p, cfg, ghash, &st);
+            }
+        }
+    }
+
+    // ---- merge the island archives into the global Pareto front ----------
+    // Keyed insert dedups genomes that reached several islands (via
+    // migration); the lowest island id claims provenance.
+    let mut merged: BTreeMap<u64, (Individual, Objectives, usize)> = BTreeMap::new();
+    for e in &st.engines {
+        for (key, (ind, obj)) in &e.archive {
+            merged.entry(*key).or_insert_with(|| (ind.clone(), *obj, e.id));
+        }
+    }
+    let entries: Vec<(Individual, Objectives, usize)> = merged.into_values().collect();
+    let pts: Vec<Objectives> = entries.iter().map(|(_, o, _)| *o).collect();
+    let mut front: Vec<(Individual, Objectives, usize)> =
+        pareto_front(&pts).into_iter().map(|i| entries[i].clone()).collect();
+    front.sort_by(|a, b| {
+        let (ta, ea) = a.1;
+        let (tb, eb) = b.1;
+        ta.total_cmp(&tb)
+            .then(ea.total_cmp(&eb))
+            .then(a.0.cache_key().cmp(&b.0.cache_key()))
+    });
+
+    SearchResult {
+        pareto_islands: front.iter().map(|&(_, _, i)| i).collect(),
+        pareto: front.into_iter().map(|(ind, o, _)| (ind, o)).collect(),
+        history: st.history,
+        total_evaluations: st.engines.iter().map(|e| e.evals).sum(),
+        cache_hits: st.engines.iter().map(|e| e.cache_hits).sum(),
+        islands: st.engines.iter().map(|e| e.island_stats()).collect(),
+        migrations: st.migrations,
+        program_cache: eval.exec_cache_stats(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Migration
+// ---------------------------------------------------------------------------
+
+/// Ring migration: each island sends its `n` best individuals to its
+/// right neighbour, where they replace the worst-ranked residents (never
+/// the archive — archives only grow). Entirely deterministic and
+/// RNG-free, so it cannot perturb the islands' streams. Returns the
+/// number of individuals actually placed.
+pub(crate) fn migrate(engines: &mut [Engine], n: usize) -> usize {
+    let k = engines.len();
+    if k < 2 || n == 0 {
+        return 0;
+    }
+    // Select every outgoing set from the pre-migration snapshot first so
+    // the ring direction cannot create order dependence.
+    let outgoing: Vec<Vec<Individual>> = engines
+        .iter()
+        .map(|e| {
+            let idx: Vec<usize> =
+                (0..e.pop.len()).filter(|&i| e.pop[i].objectives.is_some()).collect();
+            let pts: Vec<Objectives> =
+                idx.iter().map(|&i| e.pop[i].objectives.unwrap()).collect();
+            select_best(&pts, n.min(idx.len()))
+                .into_iter()
+                .map(|s| e.pop[idx[s]].clone())
+                .collect()
+        })
+        .collect();
+    let mut moved = 0;
+    for to in 0..k {
+        let from = (to + k - 1) % k;
+        let placed = {
+            let e = &mut engines[to];
+            let resident: HashSet<u64> = e.pop.iter().map(|i| i.cache_key()).collect();
+            let incoming: Vec<&Individual> = outgoing[from]
+                .iter()
+                .filter(|m| !resident.contains(&m.cache_key()))
+                .collect();
+            let slots = worst_first(&e.pop);
+            let mut placed = 0;
+            for (m, &slot) in incoming.iter().zip(slots.iter()) {
+                if let Some(obj) = m.objectives {
+                    e.archive.entry(m.cache_key()).or_insert_with(|| ((*m).clone(), obj));
+                }
+                e.pop[slot] = (*m).clone();
+                placed += 1;
+            }
+            e.migrants_received += placed;
+            placed
+        };
+        engines[from].migrants_sent += placed;
+        moved += placed;
+    }
+    moved
+}
+
+/// Population indices ordered worst-first: invalid members, then valid
+/// ones by descending rank / ascending crowding.
+fn worst_first(pop: &[Individual]) -> Vec<usize> {
+    let valid: Vec<usize> = (0..pop.len()).filter(|&i| pop[i].objectives.is_some()).collect();
+    let pts: Vec<Objectives> = valid.iter().map(|&i| pop[i].objectives.unwrap()).collect();
+    let rc = rank_and_crowd(&pts);
+    let mut order: Vec<usize> =
+        (0..pop.len()).filter(|&i| pop[i].objectives.is_none()).collect();
+    let mut vs: Vec<usize> = (0..valid.len()).collect();
+    vs.sort_by(|&a, &b| rc[b].0.cmp(&rc[a].0).then(rc[a].1.total_cmp(&rc[b].1)));
+    order.extend(vs.into_iter().map(|s| valid[s]));
+    order
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint serialization
+// ---------------------------------------------------------------------------
+
+const CHECKPOINT_VERSION: usize = 1;
+
+fn jerr<T>(r: Result<T, JsonError>) -> Result<T, String> {
+    r.map_err(|e| e.to_string())
+}
+
+fn hex_u64(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn parse_u64(j: &Json) -> Result<u64, String> {
+    let s = jerr(j.as_str())?;
+    u64::from_str_radix(s, 16).map_err(|e| format!("bad u64 '{s}': {e}"))
+}
+
+/// f64 as its bit pattern: JSON's decimal floats would be close enough,
+/// but bit-exactness is what makes resume reproduce a run *identically*.
+fn hex_f64(x: f64) -> Json {
+    hex_u64(x.to_bits())
+}
+
+fn parse_f64(j: &Json) -> Result<f64, String> {
+    Ok(f64::from_bits(parse_u64(j)?))
+}
+
+fn obj_json(o: Option<Objectives>) -> Json {
+    match o {
+        Some((t, e)) => Json::arr([hex_f64(t), hex_f64(e)]),
+        None => Json::Null,
+    }
+}
+
+fn parse_obj(j: &Json) -> Result<Option<Objectives>, String> {
+    if *j == Json::Null {
+        return Ok(None);
+    }
+    let a = jerr(j.as_arr())?;
+    if a.len() != 2 {
+        return Err(format!("objective pair has {} entries", a.len()));
+    }
+    Ok(Some((parse_f64(&a[0])?, parse_f64(&a[1])?)))
+}
+
+fn edit_json(e: &Edit) -> Json {
+    match e.kind {
+        EditKind::Copy { src, after } => Json::obj(vec![
+            ("t", Json::str("copy")),
+            ("src", Json::num(src.0 as f64)),
+            ("after", Json::num(after.0 as f64)),
+            ("seed", hex_u64(e.seed)),
+        ]),
+        EditKind::Delete { target } => Json::obj(vec![
+            ("t", Json::str("del")),
+            ("target", Json::num(target.0 as f64)),
+            ("seed", hex_u64(e.seed)),
+        ]),
+    }
+}
+
+fn parse_edit(j: &Json) -> Result<Edit, String> {
+    let seed = parse_u64(jerr(j.get("seed"))?)?;
+    let vid = |key: &str| -> Result<ValueId, String> {
+        Ok(ValueId(jerr(j.get(key).and_then(|v| v.as_usize()))? as u32))
+    };
+    let kind = match jerr(j.get("t").and_then(|v| v.as_str()))? {
+        "copy" => EditKind::Copy { src: vid("src")?, after: vid("after")? },
+        "del" => EditKind::Delete { target: vid("target")? },
+        other => return Err(format!("unknown edit kind '{other}'")),
+    };
+    Ok(Edit { kind, seed })
+}
+
+fn ind_json(i: &Individual) -> Json {
+    Json::obj(vec![
+        ("edits", Json::Arr(i.edits.iter().map(edit_json).collect())),
+        ("obj", obj_json(i.objectives)),
+    ])
+}
+
+fn parse_ind(j: &Json) -> Result<Individual, String> {
+    let edits = jerr(j.get("edits").and_then(|v| v.as_arr()))?
+        .iter()
+        .map(parse_edit)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(Individual { edits, objectives: parse_obj(jerr(j.get("obj"))?)? })
+}
+
+fn stats_json(s: &GenStats) -> Json {
+    Json::obj(vec![
+        ("gen", Json::num(s.gen as f64)),
+        ("island", Json::num(s.island as f64)),
+        ("evaluated", Json::num(s.evaluated as f64)),
+        ("valid", Json::num(s.valid as f64)),
+        ("front_size", Json::num(s.front_size as f64)),
+        ("best_time", hex_f64(s.best_time)),
+        ("best_error", hex_f64(s.best_error)),
+    ])
+}
+
+fn parse_stats(j: &Json) -> Result<GenStats, String> {
+    let u = |key: &str| jerr(j.get(key).and_then(|v| v.as_usize()));
+    Ok(GenStats {
+        gen: u("gen")?,
+        island: u("island")?,
+        evaluated: u("evaluated")?,
+        valid: u("valid")?,
+        front_size: u("front_size")?,
+        best_time: parse_f64(jerr(j.get("best_time"))?)?,
+        best_error: parse_f64(jerr(j.get("best_error"))?)?,
+    })
+}
+
+fn engine_json(e: &Engine) -> Json {
+    // archive / cache entries sorted by key so the file itself is
+    // deterministic (useful for diffing two checkpoints).
+    let mut archive: Vec<(&u64, &(Individual, Objectives))> = e.archive.iter().collect();
+    archive.sort_by_key(|(k, _)| **k);
+    let mut cache: Vec<(&u64, &Option<Objectives>)> = e.cache.iter().collect();
+    cache.sort_by_key(|(k, _)| **k);
+    Json::obj(vec![
+        ("id", Json::num(e.id as f64)),
+        ("rng", Json::Arr(e.rng.state().iter().map(|&w| hex_u64(w)).collect())),
+        ("evals", Json::num(e.evals as f64)),
+        ("cache_hits", Json::num(e.cache_hits as f64)),
+        ("sent", Json::num(e.migrants_sent as f64)),
+        ("received", Json::num(e.migrants_received as f64)),
+        ("pop", Json::Arr(e.pop.iter().map(ind_json).collect())),
+        (
+            "archive",
+            Json::Arr(archive.iter().map(|(_, (ind, _))| ind_json(ind)).collect()),
+        ),
+        (
+            "cache",
+            Json::Arr(
+                cache
+                    .iter()
+                    .map(|(k, v)| Json::arr([hex_u64(**k), obj_json(**v)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn parse_engine(j: &Json) -> Result<Engine, String> {
+    let u = |key: &str| jerr(j.get(key).and_then(|v| v.as_usize()));
+    let rng_words = jerr(j.get("rng").and_then(|v| v.as_arr()))?;
+    if rng_words.len() != 4 {
+        return Err(format!("rng state has {} words", rng_words.len()));
+    }
+    let mut state = [0u64; 4];
+    for (w, src) in state.iter_mut().zip(rng_words.iter()) {
+        *w = parse_u64(src)?;
+    }
+    let pop = jerr(j.get("pop").and_then(|v| v.as_arr()))?
+        .iter()
+        .map(parse_ind)
+        .collect::<Result<Vec<_>, _>>()?;
+    let mut archive = std::collections::HashMap::new();
+    for aj in jerr(j.get("archive").and_then(|v| v.as_arr()))? {
+        let ind = parse_ind(aj)?;
+        let obj = ind.objectives.ok_or("archive entry without objectives")?;
+        archive.insert(ind.cache_key(), (ind, obj));
+    }
+    let mut cache = std::collections::HashMap::new();
+    for cj in jerr(j.get("cache").and_then(|v| v.as_arr()))? {
+        let pair = jerr(cj.as_arr())?;
+        if pair.len() != 2 {
+            return Err("cache entry is not a [key, objectives] pair".into());
+        }
+        cache.insert(parse_u64(&pair[0])?, parse_obj(&pair[1])?);
+    }
+    Ok(Engine {
+        id: u("id")?,
+        rng: Rng::from_state(state),
+        pop,
+        archive,
+        cache,
+        evals: u("evals")?,
+        cache_hits: u("cache_hits")?,
+        migrants_sent: u("sent")?,
+        migrants_received: u("received")?,
+    })
+}
+
+/// The fields of [`SearchConfig`] that drive the stochastic process; a
+/// resume is only bit-identical when every one of them matches, so they
+/// are echoed into the checkpoint and verified on load. `generations` is
+/// deliberately absent (resume may extend the run), as are `workers`
+/// (scheduling only) and `verbose`.
+fn config_json(cfg: &SearchConfig) -> Json {
+    Json::obj(vec![
+        ("seed", hex_u64(cfg.seed)),
+        ("pop_size", Json::num(cfg.pop_size as f64)),
+        ("islands", Json::num(cfg.islands.max(1) as f64)),
+        ("elites", Json::num(cfg.elites as f64)),
+        ("init_mutations", Json::num(cfg.init_mutations as f64)),
+        ("crossover_prob", hex_f64(cfg.crossover_prob)),
+        ("mutation_prob", hex_f64(cfg.mutation_prob)),
+        ("tournament_size", Json::num(cfg.tournament_size as f64)),
+        ("max_tries", Json::num(cfg.max_tries as f64)),
+        ("migration_interval", Json::num(cfg.migration_interval as f64)),
+        ("migrants", Json::num(cfg.migrants as f64)),
+    ])
+}
+
+/// Serialize the full search state. `graph_hash` is the canonical hash
+/// ([`crate::ir::canon::graph_hash`]) of the baseline program the state
+/// was computed against.
+pub(crate) fn checkpoint_json(cfg: &SearchConfig, graph_hash: u128, st: &RunState) -> Json {
+    Json::obj(vec![
+        ("version", Json::num(CHECKPOINT_VERSION as f64)),
+        ("graph", Json::Str(format!("{graph_hash:032x}"))),
+        ("config", config_json(cfg)),
+        ("completed", Json::num(st.completed as f64)),
+        ("migrations", Json::num(st.migrations as f64)),
+        ("history", Json::Arr(st.history.iter().map(stats_json).collect())),
+        ("engines", Json::Arr(st.engines.iter().map(engine_json).collect())),
+    ])
+}
+
+/// Restore search state, verifying the stochastic config and the baseline
+/// program identity match this run.
+pub(crate) fn restore_checkpoint(
+    j: &Json,
+    cfg: &SearchConfig,
+    graph_hash: u128,
+) -> Result<RunState, String> {
+    let version = jerr(j.get("version").and_then(|v| v.as_usize()))?;
+    if version != CHECKPOINT_VERSION {
+        return Err(format!("checkpoint version {version}, expected {CHECKPOINT_VERSION}"));
+    }
+    let want_graph = format!("{graph_hash:032x}");
+    let got_graph = jerr(j.get("graph").and_then(|v| v.as_str()))?;
+    if got_graph != want_graph {
+        return Err(format!(
+            "baseline program mismatch: checkpoint was written for graph {got_graph}, \
+             this run evolves graph {want_graph} (different workload, spec or weights)"
+        ));
+    }
+    let want = config_json(cfg);
+    let got = jerr(j.get("config"))?;
+    if *got != want {
+        return Err(format!(
+            "search configuration mismatch: checkpoint was written with {}, this run uses {}",
+            got.to_string(),
+            want.to_string()
+        ));
+    }
+    let engines = jerr(j.get("engines").and_then(|v| v.as_arr()))?
+        .iter()
+        .map(parse_engine)
+        .collect::<Result<Vec<_>, _>>()?;
+    if engines.len() != cfg.islands.max(1) {
+        return Err(format!(
+            "checkpoint has {} islands, this run wants {}",
+            engines.len(),
+            cfg.islands.max(1)
+        ));
+    }
+    let history = jerr(j.get("history").and_then(|v| v.as_arr()))?
+        .iter()
+        .map(parse_stats)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(RunState {
+        engines,
+        history,
+        completed: jerr(j.get("completed").and_then(|v| v.as_usize()))?,
+        migrations: jerr(j.get("migrations").and_then(|v| v.as_usize()))?,
+    })
+}
+
+/// Write the checkpoint atomically (temp file + rename) so a kill during
+/// the write can never corrupt the previous checkpoint. Compact JSON: the
+/// file scales with the archive + fitness cache, so pretty-printing long
+/// runs would multiply an already-large write.
+fn save_checkpoint(path: &Path, cfg: &SearchConfig, graph_hash: u128, st: &RunState) {
+    let j = checkpoint_json(cfg, graph_hash, st);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, j.to_string())
+        .unwrap_or_else(|e| panic!("write checkpoint {}: {e}", tmp.display()));
+    std::fs::rename(&tmp, path)
+        .unwrap_or_else(|e| panic!("install checkpoint {}: {e}", path.display()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{OpKind, ReduceKind};
+    use crate::ir::types::TType;
+    use crate::util::prop::run_prop;
+
+    fn toy() -> (Graph, impl Evaluator) {
+        let mut g = Graph::new("toy");
+        let x = g.param(TType::of(&[4, 4]));
+        let e1 = g.push(OpKind::Exponential, &[x]).unwrap();
+        let t = g.push(OpKind::Tanh, &[e1]).unwrap();
+        let a = g.push(OpKind::Add, &[t, x]).unwrap();
+        let r = g
+            .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[a])
+            .unwrap();
+        g.set_outputs(&[r]);
+        let base_flops = g.total_flops() as f64;
+        let input = crate::tensor::Tensor::iota(&[4, 4]);
+        let baseline = crate::interp::eval(&g, &[input.clone()]).unwrap()[0].item() as f64;
+        let eval = move |vg: &Graph| -> Option<Objectives> {
+            let out = crate::interp::eval(vg, &[input.clone()]).ok()?;
+            if out[0].has_non_finite() {
+                return None;
+            }
+            let err = (out[0].item() as f64 - baseline).abs() / baseline.abs().max(1e-9);
+            let time = vg.total_flops() as f64 / base_flops;
+            Some((time, err))
+        };
+        (g, eval)
+    }
+
+    fn archive_keys(engines: &[Engine]) -> Vec<std::collections::HashSet<u64>> {
+        engines.iter().map(|e| e.archive.keys().copied().collect()).collect()
+    }
+
+    #[test]
+    fn prop_migration_never_loses_archive_entries() {
+        let (g, eval) = toy();
+        run_prop(12, 0x15_1A_4D, |rng: &mut Rng| {
+            let cfg = SearchConfig {
+                pop_size: rng.range(4, 9),
+                generations: 0,
+                elites: 2,
+                workers: 1,
+                seed: rng.next_u64(),
+                islands: rng.range(2, 5),
+                ..Default::default()
+            };
+            let mut engines: Vec<Engine> =
+                (0..cfg.islands).map(|i| Engine::new(i, &g, &eval, &cfg)).collect();
+            for gen in 0..rng.range(1, 3) {
+                for e in engines.iter_mut() {
+                    e.step(&g, &eval, &cfg, gen);
+                }
+            }
+            let before = archive_keys(&engines);
+            let migrants = rng.range(1, 4);
+            migrate(&mut engines, migrants);
+            let after = archive_keys(&engines);
+            for (i, (b, a)) in before.iter().zip(after.iter()).enumerate() {
+                if !b.is_subset(a) {
+                    return Err(format!("island {i} lost archive entries in migration"));
+                }
+            }
+            // pop sizes are preserved too — migrants replace, not append
+            for (i, e) in engines.iter().enumerate() {
+                if e.pop.len() != cfg.pop_size {
+                    return Err(format!("island {i} pop size changed to {}", e.pop.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn migration_moves_elites_around_the_ring() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 8,
+            generations: 0,
+            elites: 2,
+            workers: 1,
+            seed: 3,
+            islands: 3,
+            ..Default::default()
+        };
+        let mut engines: Vec<Engine> =
+            (0..3).map(|i| Engine::new(i, &g, &eval, &cfg)).collect();
+        for e in engines.iter_mut() {
+            e.step(&g, &eval, &cfg, 0);
+        }
+        let moved = migrate(&mut engines, 2);
+        assert!(moved > 0, "distinct seeds should always have migrants to exchange");
+        let sent: usize = engines.iter().map(|e| e.migrants_sent).sum();
+        let recv: usize = engines.iter().map(|e| e.migrants_received).sum();
+        assert_eq!(sent, moved);
+        assert_eq!(recv, moved);
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrips_and_resumes_identically() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 6,
+            generations: 0,
+            elites: 2,
+            workers: 1,
+            seed: 11,
+            islands: 2,
+            ..Default::default()
+        };
+        let mut engines: Vec<Engine> =
+            (0..2).map(|i| Engine::new(i, &g, &eval, &cfg)).collect();
+        let mut history = Vec::new();
+        for gen in 0..2 {
+            for e in engines.iter_mut() {
+                history.push(e.step(&g, &eval, &cfg, gen));
+            }
+        }
+        let ghash = crate::ir::canon::graph_hash(&g);
+        let st = RunState { engines, history, completed: 2, migrations: 0 };
+        let j = checkpoint_json(&cfg, ghash, &st);
+        // serialize → parse text → restore must reproduce the state …
+        let mut restored =
+            restore_checkpoint(&Json::parse(&j.to_string()).unwrap(), &cfg, ghash).unwrap();
+        assert_eq!(restored.completed, 2);
+        assert_eq!(j, checkpoint_json(&cfg, ghash, &restored));
+        // … and stepping both copies onward stays in lockstep.
+        let mut st = st;
+        for (a, b) in st.engines.iter_mut().zip(restored.engines.iter_mut()) {
+            a.step(&g, &eval, &cfg, 2);
+            b.step(&g, &eval, &cfg, 2);
+        }
+        assert_eq!(checkpoint_json(&cfg, ghash, &st), checkpoint_json(&cfg, ghash, &restored));
+    }
+
+    #[test]
+    fn checkpoint_rejects_mismatched_config_or_baseline() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 4,
+            generations: 0,
+            elites: 2,
+            workers: 1,
+            seed: 5,
+            ..Default::default()
+        };
+        let ghash = crate::ir::canon::graph_hash(&g);
+        let engines = vec![Engine::new(0, &g, &eval, &cfg)];
+        let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
+        let j = checkpoint_json(&cfg, ghash, &st);
+        let other = SearchConfig { seed: 6, ..cfg.clone() };
+        let err = restore_checkpoint(&j, &other, ghash).unwrap_err();
+        assert!(err.contains("mismatch"), "unexpected error: {err}");
+        // a different baseline program (e.g. another workload) is refused
+        // even with an identical search config
+        let err = restore_checkpoint(&j, &cfg, ghash ^ 1).unwrap_err();
+        assert!(err.contains("baseline program mismatch"), "unexpected error: {err}");
+        assert!(restore_checkpoint(&j, &cfg, ghash).is_ok());
+    }
+}

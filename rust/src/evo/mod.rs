@@ -8,15 +8,19 @@
 //! * [`crossover`] — one-point *messy* crossover (§4.2).
 //! * [`nsga2`] — NSGA-II: fast non-dominated sort, crowding distance,
 //!   crowded-comparison operator (§4.4, citing Deb et al.).
-//! * [`search`] — the generation loop: init population with 3 mutations
+//! * [`search`] — the generation engine: init population with 3 mutations
 //!   per individual, rank, recombine, mutate, elitism (top 16),
 //!   tournament selection.
+//! * [`island`] — K independent subpopulations exchanging elite migrants
+//!   on a ring, with checkpoint/resume of the full search state.
 
 pub mod patch;
 pub mod mutate;
 pub mod crossover;
 pub mod nsga2;
 pub mod search;
+pub mod island;
 
+pub use island::run_with_checkpoint;
 pub use patch::{Edit, EditKind, Individual};
 pub use search::{SearchConfig, SearchResult};

@@ -60,7 +60,7 @@ pub fn crowding_distance(points: &[Objectives], front: &[usize]) -> Vec<f64> {
     for obj in 0..2usize {
         let key = |i: usize| if obj == 0 { points[i].0 } else { points[i].1 };
         let mut order: Vec<usize> = (0..m).collect();
-        order.sort_by(|&a, &b| key(front[a]).partial_cmp(&key(front[b])).unwrap());
+        order.sort_by(|&a, &b| key(front[a]).total_cmp(&key(front[b])));
         dist[order[0]] = f64::INFINITY;
         dist[order[m - 1]] = f64::INFINITY;
         let span = key(front[order[m - 1]]) - key(front[order[0]]);
@@ -106,7 +106,7 @@ pub fn select_best(points: &[Objectives], k: usize) -> Vec<usize> {
         } else {
             let d = crowding_distance(points, front);
             let mut order: Vec<usize> = (0..front.len()).collect();
-            order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+            order.sort_by(|&a, &b| d[b].total_cmp(&d[a]));
             for &w in order.iter().take(k - chosen.len()) {
                 chosen.push(front[w]);
             }

@@ -1,4 +1,4 @@
-//! The GEVO-ML generation loop (paper §4).
+//! The GEVO-ML generation engine (paper §4).
 //!
 //! "The initial population is formed by making copies and applying random
 //! mutations to the original MLIR program. By default, three mutations are
@@ -8,6 +8,12 @@
 //! new variants to a set of elites retained from the previous generation,
 //! and finally selecting the next generation." Elitism keeps the top 16
 //! (§4.4); the remainder is chosen by tournament selection.
+//!
+//! This module holds the *per-population* machinery: [`Engine`] owns one
+//! subpopulation (its RNG stream, fitness cache, archive and counters) and
+//! advances it one generation at a time. [`run`] drives a single
+//! population to completion; the island model in [`super::island`] runs K
+//! engines with migration and checkpointing on top of the same `Engine`.
 
 use super::crossover::messy_one_point;
 use super::mutate::valid_random_edit;
@@ -58,6 +64,19 @@ pub struct SearchConfig {
     pub seed: u64,
     /// Evaluation worker threads.
     pub workers: usize,
+    /// Independent subpopulations; 1 is the classic single-population
+    /// search (bit-identical to the pre-island code path).
+    pub islands: usize,
+    /// Exchange elites between ring neighbours every this many
+    /// generations (0 = never). Only meaningful when `islands > 1`.
+    pub migration_interval: usize,
+    /// Elite migrants each island sends per migration event.
+    pub migrants: usize,
+    /// Write the checkpoint every this many generations (plus once at the
+    /// end of the run). Scheduling only — not part of the stochastic
+    /// process, so it is excluded from the checkpoint's config echo and a
+    /// resume may use a different value.
+    pub checkpoint_every: usize,
     pub verbose: bool,
 }
 
@@ -74,15 +93,24 @@ impl Default for SearchConfig {
             max_tries: 25,
             seed: 42,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            islands: 1,
+            migration_interval: 4,
+            migrants: 2,
+            checkpoint_every: 1,
             verbose: false,
         }
     }
 }
 
-/// Per-generation statistics.
+/// Per-generation statistics for one island.
 #[derive(Debug, Clone)]
 pub struct GenStats {
     pub gen: usize,
+    /// Which island produced this row (0 for single-population runs).
+    pub island: usize,
+    /// Evaluator calls made *during this generation* on this island (the
+    /// cumulative total across the run lives in
+    /// [`SearchResult::total_evaluations`]).
     pub evaluated: usize,
     pub valid: usize,
     pub front_size: usize,
@@ -90,14 +118,33 @@ pub struct GenStats {
     pub best_error: f64,
 }
 
+/// End-of-run summary for one island.
+#[derive(Debug, Clone)]
+pub struct IslandStats {
+    pub island: usize,
+    pub evaluations: usize,
+    pub cache_hits: usize,
+    /// Size of this island's *local* Pareto front over its own archive.
+    pub front_size: usize,
+    pub migrants_sent: usize,
+    pub migrants_received: usize,
+}
+
 /// Search outcome: the final Pareto archive plus bookkeeping.
 pub struct SearchResult {
     /// Non-dominated (individual, objectives) pairs over *all* evaluated
-    /// variants, sorted by runtime.
+    /// variants across every island, sorted by runtime.
     pub pareto: Vec<(Individual, Objectives)>,
+    /// Island of origin for each [`SearchResult::pareto`] entry (the
+    /// lowest-id island that first archived the genome).
+    pub pareto_islands: Vec<usize>,
     pub history: Vec<GenStats>,
     pub total_evaluations: usize,
     pub cache_hits: usize,
+    /// Per-island summaries (one entry when `islands = 1`).
+    pub islands: Vec<IslandStats>,
+    /// Individuals moved between islands over the whole run.
+    pub migrations: usize,
     /// `(hits, misses)` of the evaluator's compiled-program cache, when
     /// the workload evaluates through [`crate::exec`]; `misses` counts
     /// actual graph lowerings across the whole run.
@@ -106,46 +153,126 @@ pub struct SearchResult {
 
 /// Run the search. `original` is the unmutated program (the paper's
 /// baseline, the orange diamond in Fig. 4); `eval` scores variants.
+/// Honors `cfg.islands` / `cfg.migration_interval`; for checkpointed runs
+/// use [`super::island::run_with_checkpoint`].
 pub fn run(original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) -> SearchResult {
-    let mut rng = Rng::new(cfg.seed);
-    let cache: Mutex<HashMap<u64, Option<Objectives>>> = Mutex::new(HashMap::new());
-    let cache_hits = AtomicUsize::new(0);
-    let total_evals = AtomicUsize::new(0);
+    super::island::run_with_checkpoint(original, eval, cfg, None)
+}
 
-    // ---- initial population ------------------------------------------------
-    let mut pop: Vec<Individual> = Vec::with_capacity(cfg.pop_size);
-    pop.push(Individual::original()); // keep the baseline in the race
-    while pop.len() < cfg.pop_size {
-        let mut ind = Individual::original();
-        let mut g = original.clone();
-        for _ in 0..cfg.init_mutations {
-            if let Some((edit, ng)) = valid_random_edit(&g, &mut rng, cfg.max_tries) {
-                ind.edits.push(edit);
-                g = ng;
-            }
-        }
-        pop.push(ind);
+/// Quantize an objective value for duplicate detection at the given
+/// resolution. A bare `(x * scale) as i64` saturates at
+/// `i64::MIN`/`i64::MAX` for huge values, silently collapsing distinct
+/// points into one dedup bucket; out of the exactly-representable range
+/// we fall back to the raw bit pattern instead. The boolean tags which
+/// branch produced the value, so a bit-pattern key can never collide
+/// with a scaled key.
+pub(crate) fn quantize_at(x: f64, scale: f64) -> (bool, i64) {
+    let scaled = x * scale;
+    if scaled.is_finite() && scaled.abs() <= 9.0e15 {
+        (false, scaled as i64)
+    } else {
+        (true, x.to_bits() as i64)
+    }
+}
+
+/// [`quantize_at`] at the selection loop's historical 1e-6 resolution.
+pub(crate) fn quantize(x: f64) -> (bool, i64) {
+    quantize_at(x, 1e6)
+}
+
+/// One subpopulation: its RNG stream, population, archive of every valid
+/// evaluated individual (deduped by cache key), fitness cache and
+/// counters. The island model runs K of these side by side; `islands = 1`
+/// is the classic single-population search.
+pub(crate) struct Engine {
+    pub(crate) id: usize,
+    pub(crate) rng: Rng,
+    pub(crate) pop: Vec<Individual>,
+    pub(crate) archive: HashMap<u64, (Individual, Objectives)>,
+    pub(crate) cache: HashMap<u64, Option<Objectives>>,
+    pub(crate) evals: usize,
+    pub(crate) cache_hits: usize,
+    pub(crate) migrants_sent: usize,
+    pub(crate) migrants_received: usize,
+}
+
+/// Per-island RNG seed: island 0 keeps the user seed unchanged so a
+/// one-island run reproduces the historical single-population stream.
+pub(crate) fn island_seed(seed: u64, island: usize) -> u64 {
+    seed ^ (island as u64).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+impl Engine {
+    /// Fresh engine: seed the initial population and evaluate it.
+    pub(crate) fn new(
+        id: usize,
+        original: &Graph,
+        eval: &dyn Evaluator,
+        cfg: &SearchConfig,
+    ) -> Engine {
+        let mut e = Engine {
+            id,
+            rng: Rng::new(island_seed(cfg.seed, id)),
+            pop: Vec::new(),
+            archive: HashMap::new(),
+            cache: HashMap::new(),
+            evals: 0,
+            cache_hits: 0,
+            migrants_sent: 0,
+            migrants_received: 0,
+        };
+        e.pop = seed_population(original, &mut e.rng, cfg);
+        e.evaluate_pop(original, eval, cfg);
+        e.absorb_pop();
+        e
     }
 
-    evaluate_all(original, eval, &mut pop, cfg, &cache, &cache_hits, &total_evals);
+    fn evaluate_pop(&mut self, original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) {
+        let (evals, hits) = evaluate_all(original, eval, &mut self.pop, cfg, &mut self.cache);
+        self.evals += evals;
+        self.cache_hits += hits;
+    }
 
-    // Archive of every valid evaluated individual (deduped by cache key).
-    let mut archive: HashMap<u64, (Individual, Objectives)> = HashMap::new();
-    let absorb = |archive: &mut HashMap<u64, (Individual, Objectives)>, pop: &[Individual]| {
-        for ind in pop {
-            if let Some(obj) = ind.objectives {
-                archive.entry(ind.cache_key()).or_insert_with(|| (ind.clone(), obj));
-            }
-        }
-    };
-    absorb(&mut archive, &pop);
+    fn absorb_pop(&mut self) {
+        absorb(&mut self.archive, &self.pop);
+    }
 
-    let mut history = Vec::new();
+    /// Replace the population with a fresh seeding from the original
+    /// program (the recovery path when a generation degenerates to zero
+    /// valid individuals) and evaluate it.
+    fn reseed(&mut self, original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) {
+        self.pop = seed_population(original, &mut self.rng, cfg);
+        self.evaluate_pop(original, eval, cfg);
+        self.absorb_pop();
+    }
 
-    for gen in 0..cfg.generations {
+    /// Advance one generation: rank, recombine, mutate, evaluate, select.
+    pub(crate) fn step(
+        &mut self,
+        original: &Graph,
+        eval: &dyn Evaluator,
+        cfg: &SearchConfig,
+        gen: usize,
+    ) -> GenStats {
+        let evals_before = self.evals;
+
         // ---- rank current population --------------------------------------
-        let scored: Vec<usize> = (0..pop.len()).filter(|&i| pop[i].objectives.is_some()).collect();
-        let pts: Vec<Objectives> = scored.iter().map(|&i| pop[i].objectives.unwrap()).collect();
+        let mut scored: Vec<usize> =
+            (0..self.pop.len()).filter(|&i| self.pop[i].objectives.is_some()).collect();
+        if scored.is_empty() {
+            // Every individual failed evaluation; tournament selection has
+            // nothing to draw from. Fall back to reseeding from the
+            // original program instead of panicking.
+            self.reseed(original, eval, cfg);
+            scored =
+                (0..self.pop.len()).filter(|&i| self.pop[i].objectives.is_some()).collect();
+        }
+        if scored.is_empty() {
+            // The evaluator rejects even the unmutated original: record the
+            // degenerate generation and move on.
+            return self.stats(gen, evals_before);
+        }
+        let pts: Vec<Objectives> = scored.iter().map(|&i| self.pop[i].objectives.unwrap()).collect();
         let rc = rank_and_crowd(&pts);
 
         // ---- offspring ------------------------------------------------------
@@ -153,19 +280,20 @@ pub fn run(original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) -> Search
         let mut guard = 0usize;
         while offspring.len() < cfg.pop_size && guard < cfg.pop_size * 20 {
             guard += 1;
-            let pa = tournament(&scored, &rc, cfg.tournament_size, &mut rng);
-            let pb = tournament(&scored, &rc, cfg.tournament_size, &mut rng);
-            let (mut c1, mut c2) = if rng.chance(cfg.crossover_prob) {
-                messy_one_point(&pop[pa], &pop[pb], &mut rng)
+            let pa = tournament(&scored, &rc, cfg.tournament_size, &mut self.rng);
+            let pb = tournament(&scored, &rc, cfg.tournament_size, &mut self.rng);
+            let (mut c1, mut c2) = if self.rng.chance(cfg.crossover_prob) {
+                messy_one_point(&self.pop[pa], &self.pop[pb], &mut self.rng)
             } else {
-                (pop[pa].clone(), pop[pb].clone())
+                (self.pop[pa].clone(), self.pop[pb].clone())
             };
             for c in [&mut c1, &mut c2] {
                 // §4.2: re-apply the patch to the original; invalid
                 // recombinations are discarded and retried.
                 let Ok(mut g) = c.materialize(original) else { continue };
-                if rng.chance(cfg.mutation_prob) {
-                    if let Some((edit, ng)) = valid_random_edit(&g, &mut rng, cfg.max_tries) {
+                if self.rng.chance(cfg.mutation_prob) {
+                    if let Some((edit, ng)) = valid_random_edit(&g, &mut self.rng, cfg.max_tries)
+                    {
                         c.edits.push(edit);
                         g = ng;
                     }
@@ -178,8 +306,10 @@ pub fn run(original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) -> Search
             }
         }
 
-        evaluate_all(original, eval, &mut offspring, cfg, &cache, &cache_hits, &total_evals);
-        absorb(&mut archive, &offspring);
+        let (evals, hits) = evaluate_all(original, eval, &mut offspring, cfg, &mut self.cache);
+        self.evals += evals;
+        self.cache_hits += hits;
+        absorb(&mut self.archive, &offspring);
 
         // ---- environmental selection: elites + tournament (§4.4) ----------
         // Dedup by genome and by objective point: without this, a corner
@@ -190,21 +320,22 @@ pub fn run(original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) -> Search
         {
             let mut seen_keys = std::collections::HashSet::new();
             let mut seen_obj = std::collections::HashSet::new();
-            for i in pop.iter().chain(offspring.iter()) {
+            for i in self.pop.iter().chain(offspring.iter()) {
                 let Some((t, e)) = i.objectives else { continue };
                 if !seen_keys.insert(i.cache_key()) {
                     continue;
                 }
-                let quant = ((t * 1e6) as i64, (e * 1e6) as i64);
-                if !seen_obj.insert(quant) {
+                if !seen_obj.insert((quantize(t), quantize(e))) {
                     continue;
                 }
                 combined.push(i.clone());
             }
         }
         if combined.is_empty() {
-            combined.push(Individual::original());
-            evaluate_all(original, eval, &mut combined, cfg, &cache, &cache_hits, &total_evals);
+            // Unreachable when `scored` was non-empty above, but keep the
+            // degenerate path panic-free: reseed rather than unwrap.
+            self.reseed(original, eval, cfg);
+            return self.stats(gen, evals_before);
         }
         let cpts: Vec<Objectives> = combined.iter().map(|i| i.objectives.unwrap()).collect();
         let elite_idx = select_best(&cpts, cfg.elites.min(combined.len()));
@@ -212,47 +343,75 @@ pub fn run(original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) -> Search
         let crc = rank_and_crowd(&cpts);
         let all_idx: Vec<usize> = (0..combined.len()).collect();
         while next.len() < cfg.pop_size {
-            let w = tournament(&all_idx, &crc, cfg.tournament_size, &mut rng);
+            let w = tournament(&all_idx, &crc, cfg.tournament_size, &mut self.rng);
             next.push(combined[w].clone());
         }
-        pop = next;
+        self.pop = next;
 
-        // ---- stats -----------------------------------------------------------
-        let valid = pop.iter().filter(|i| i.objectives.is_some()).count();
-        let apts: Vec<Objectives> = archive.values().map(|(_, o)| *o).collect();
+        self.stats(gen, evals_before)
+    }
+
+    /// Generation stats from the current population + archive state.
+    fn stats(&self, gen: usize, evals_before: usize) -> GenStats {
+        let valid = self.pop.iter().filter(|i| i.objectives.is_some()).count();
+        let apts: Vec<Objectives> = self.archive.values().map(|(_, o)| *o).collect();
         let front = pareto_front(&apts);
         let best_time = front.iter().map(|&i| apts[i].0).fold(f64::INFINITY, f64::min);
         let best_error = front.iter().map(|&i| apts[i].1).fold(f64::INFINITY, f64::min);
-        let st = GenStats {
+        GenStats {
             gen,
-            evaluated: total_evals.load(Ordering::Relaxed),
+            island: self.id,
+            evaluated: self.evals - evals_before,
             valid,
             front_size: front.len(),
             best_time,
             best_error,
-        };
-        if cfg.verbose {
-            eprintln!(
-                "[gen {:>3}] evals={:<6} front={:<3} best_time={:.4} best_err={:.4}",
-                st.gen, st.evaluated, st.front_size, st.best_time, st.best_error
-            );
         }
-        history.push(st);
     }
 
-    // ---- final Pareto front over the archive --------------------------------
-    let entries: Vec<(Individual, Objectives)> = archive.into_values().collect();
-    let pts: Vec<Objectives> = entries.iter().map(|(_, o)| *o).collect();
-    let mut front: Vec<(Individual, Objectives)> =
-        pareto_front(&pts).into_iter().map(|i| entries[i].clone()).collect();
-    front.sort_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap());
+    /// End-of-run summary row.
+    pub(crate) fn island_stats(&self) -> IslandStats {
+        let apts: Vec<Objectives> = self.archive.values().map(|(_, o)| *o).collect();
+        IslandStats {
+            island: self.id,
+            evaluations: self.evals,
+            cache_hits: self.cache_hits,
+            front_size: pareto_front(&apts).len(),
+            migrants_sent: self.migrants_sent,
+            migrants_received: self.migrants_received,
+        }
+    }
+}
 
-    SearchResult {
-        pareto: front,
-        history,
-        total_evaluations: total_evals.load(Ordering::Relaxed),
-        cache_hits: cache_hits.load(Ordering::Relaxed),
-        program_cache: eval.exec_cache_stats(),
+/// The initial population: the unmutated original plus `pop_size - 1`
+/// individuals carrying `init_mutations` random edits each.
+pub(crate) fn seed_population(
+    original: &Graph,
+    rng: &mut Rng,
+    cfg: &SearchConfig,
+) -> Vec<Individual> {
+    let mut pop: Vec<Individual> = Vec::with_capacity(cfg.pop_size);
+    pop.push(Individual::original()); // keep the baseline in the race
+    while pop.len() < cfg.pop_size {
+        let mut ind = Individual::original();
+        let mut g = original.clone();
+        for _ in 0..cfg.init_mutations {
+            if let Some((edit, ng)) = valid_random_edit(&g, rng, cfg.max_tries) {
+                ind.edits.push(edit);
+                g = ng;
+            }
+        }
+        pop.push(ind);
+    }
+    pop
+}
+
+/// Archive every valid evaluated individual (deduped by cache key).
+pub(crate) fn absorb(archive: &mut HashMap<u64, (Individual, Objectives)>, pop: &[Individual]) {
+    for ind in pop {
+        if let Some(obj) = ind.objectives {
+            archive.entry(ind.cache_key()).or_insert_with(|| (ind.clone(), obj));
+        }
     }
 }
 
@@ -270,16 +429,19 @@ fn tournament(scored: &[usize], rc: &[(usize, f64)], k: usize, rng: &mut Rng) ->
 }
 
 /// Materialize + evaluate every unevaluated individual, in parallel, with
-/// a shared fitness cache keyed by the edit list.
+/// a shared fitness cache keyed by the edit list. Non-finite objectives
+/// are rejected here — NaN/inf never enters ranking, crowding or dedup.
+/// Returns `(evaluator calls, cache hits)` for this batch.
 fn evaluate_all(
     original: &Graph,
     eval: &dyn Evaluator,
     pop: &mut [Individual],
     cfg: &SearchConfig,
-    cache: &Mutex<HashMap<u64, Option<Objectives>>>,
-    cache_hits: &AtomicUsize,
-    total_evals: &AtomicUsize,
-) {
+    cache: &mut HashMap<u64, Option<Objectives>>,
+) -> (usize, usize) {
+    let shared = Mutex::new(std::mem::take(cache));
+    let cache_hits = AtomicUsize::new(0);
+    let total_evals = AtomicUsize::new(0);
     let todo: Vec<usize> = (0..pop.len()).filter(|&i| pop[i].objectives.is_none()).collect();
     let results: Vec<Mutex<Option<Option<Objectives>>>> =
         todo.iter().map(|_| Mutex::new(None)).collect();
@@ -294,7 +456,7 @@ fn evaluate_all(
                 }
                 let ind = &pop[todo[w]];
                 let key = ind.cache_key();
-                if let Some(hit) = cache.lock().unwrap().get(&key).copied() {
+                if let Some(hit) = shared.lock().unwrap().get(&key).copied() {
                     cache_hits.fetch_add(1, Ordering::Relaxed);
                     *results[w].lock().unwrap() = Some(hit);
                     continue;
@@ -302,11 +464,11 @@ fn evaluate_all(
                 let obj = match ind.materialize(original) {
                     Ok(g) => {
                         total_evals.fetch_add(1, Ordering::Relaxed);
-                        eval.evaluate(&g)
+                        eval.evaluate(&g).filter(|o| o.0.is_finite() && o.1.is_finite())
                     }
                     Err(_) => None,
                 };
-                cache.lock().unwrap().insert(key, obj);
+                shared.lock().unwrap().insert(key, obj);
                 *results[w].lock().unwrap() = Some(obj);
             });
         }
@@ -314,6 +476,8 @@ fn evaluate_all(
     for (w, &i) in todo.iter().enumerate() {
         pop[i].objectives = results[w].lock().unwrap().flatten();
     }
+    *cache = shared.into_inner().unwrap();
+    (total_evals.into_inner(), cache_hits.into_inner())
 }
 
 #[cfg(test)]
@@ -372,6 +536,9 @@ mod tests {
             }
         }
         assert_eq!(res.history.len(), 4);
+        assert_eq!(res.islands.len(), 1);
+        assert_eq!(res.pareto_islands.len(), res.pareto.len());
+        assert!(res.pareto_islands.iter().all(|&i| i == 0));
     }
 
     #[test]
@@ -426,5 +593,94 @@ mod tests {
         // elites are re-selected every generation; with caching they are
         // never re-evaluated, so hits must be nonzero in a 5-gen run
         assert!(res.cache_hits > 0, "expected cache hits, got 0");
+    }
+
+    #[test]
+    fn all_invalid_generation_reseeds_instead_of_panicking() {
+        // Regression: an evaluator that rejects everything used to leave
+        // `scored` empty, sending `tournament` into `rng.below(0)`.
+        let (g, _) = toy();
+        let reject_all = |_: &Graph| -> Option<Objectives> { None };
+        let cfg = SearchConfig {
+            pop_size: 6,
+            generations: 3,
+            elites: 2,
+            workers: 2,
+            seed: 4,
+            ..Default::default()
+        };
+        let res = run(&g, &reject_all, &cfg);
+        assert!(res.pareto.is_empty());
+        assert_eq!(res.history.len(), 3);
+        assert!(res.history.iter().all(|s| s.valid == 0));
+        assert!(res.total_evaluations > 0, "reseeding must keep evaluating");
+    }
+
+    #[test]
+    fn nan_objectives_are_rejected_at_the_boundary() {
+        // Regression: a NaN objective used to reach the front sort /
+        // crowding `partial_cmp(..).unwrap()` and panic. Non-finite
+        // objectives must be filtered like failed evaluations.
+        let (g, _) = toy();
+        let base_flops = g.total_flops() as f64;
+        let nan_for_variants = move |vg: &Graph| -> Option<Objectives> {
+            let t = vg.total_flops() as f64 / base_flops;
+            if (t - 1.0).abs() < 1e-12 {
+                Some((1.0, 0.0))
+            } else {
+                Some((t, f64::NAN))
+            }
+        };
+        let cfg = SearchConfig {
+            pop_size: 8,
+            generations: 3,
+            elites: 4,
+            workers: 2,
+            seed: 6,
+            ..Default::default()
+        };
+        let res = run(&g, &nan_for_variants, &cfg);
+        assert!(!res.pareto.is_empty());
+        for (_, (t, e)) in &res.pareto {
+            assert!(t.is_finite() && e.is_finite(), "non-finite point on front");
+        }
+    }
+
+    #[test]
+    fn quantize_distinguishes_huge_values() {
+        // small values keep the historical 1e-6 resolution
+        assert_eq!(quantize(1.5), (false, 1_500_000));
+        assert_eq!(quantize(0.0), (false, 0));
+        // `as i64` saturates for these; the fallback must keep them apart
+        assert_ne!(quantize(1e300), quantize(2e300));
+        assert_ne!(quantize(-1e300), quantize(-2e300));
+        assert_ne!(quantize(f64::INFINITY), quantize(1e300));
+        // the branch tag prevents a bit-pattern key from aliasing a scaled
+        // key: this negative huge value's bits land inside the scaled
+        // branch's output range, but the tag keeps the buckets apart
+        let tricky = f64::from_bits(0xFFE0_1974_8000_0000);
+        let alias = (tricky.to_bits() as i64) as f64 / 1e6;
+        assert_ne!(quantize(tricky), quantize(alias));
+    }
+
+    #[test]
+    fn gen_stats_record_per_generation_deltas() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 10,
+            generations: 5,
+            elites: 4,
+            workers: 1,
+            seed: 8,
+            ..Default::default()
+        };
+        let res = run(&g, &eval, &cfg);
+        // deltas exclude the initial-population evaluations, so they must
+        // sum to strictly less than the cumulative total …
+        let delta_sum: usize = res.history.iter().map(|s| s.evaluated).sum();
+        assert!(delta_sum < res.total_evaluations);
+        // … and the last generation's figure is a delta, not the running
+        // total (the old bug stored the cumulative counter every row).
+        assert!(res.history.last().unwrap().evaluated < res.total_evaluations);
     }
 }

@@ -42,7 +42,13 @@ USAGE: gevo-ml <subcommand> [flags]
 
   search   --workload 2fcnet|mobilenet [--pop N] [--gens N] [--seed S]
            [--metric flops|wall|blend] [--fit N] [--test N] [--epochs N]
-           [--workers N] [--out PREFIX] [--quiet]
+           [--workers N] [--islands K] [--migration-interval M]
+           [--migrants N] [--checkpoint FILE] [--checkpoint-every N]
+           [--out PREFIX] [--quiet]
+           --islands shards the population into K ring-connected
+           subpopulations; --checkpoint saves resumable state every
+           --checkpoint-every generations (an existing file is resumed,
+           targeting --gens)
   table1   print the paper's Table 1 (model layer composition)
   analyze  --model mobilenet|2fcnet   (§6.1 / §6.2 mutation analysis)
   show     --workload 2fcnet|mobilenet [--hlo]   print IR or emitted HLO
@@ -65,6 +71,10 @@ fn search_config(args: &Args) -> SearchConfig {
             "workers",
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
         ),
+        islands: args.usize_or("islands", 1),
+        migration_interval: args.usize_or("migration-interval", 4),
+        migrants: args.usize_or("migrants", 2),
+        checkpoint_every: args.usize_or("checkpoint-every", 1),
         verbose: !args.flag("quiet"),
     }
 }
@@ -82,10 +92,11 @@ fn cmd_search(args: &Args) {
         epochs: args.usize_or("epochs", 1),
         data_seed: args.u64_or("data-seed", 7),
         weight_seed: args.u64_or("weight-seed", 1),
+        checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
     };
     eprintln!(
-        "[gevo-ml] running {kind:?} search: pop={} gens={} seed={}",
-        cfg.search.pop_size, cfg.search.generations, cfg.search.seed
+        "[gevo-ml] running {kind:?} search: pop={} gens={} seed={} islands={}",
+        cfg.search.pop_size, cfg.search.generations, cfg.search.seed, cfg.search.islands
     );
     let r = coordinator::run_experiment(&cfg);
     println!("{}", report::ascii_scatter(&r, 64, 16));
@@ -94,6 +105,9 @@ fn cmd_search(args: &Args) {
         "evaluations: {}   cache hits: {}   wall: {:.1}s",
         r.search.total_evaluations, r.search.cache_hits, r.wall_seconds
     );
+    if r.search.islands.len() > 1 {
+        print!("{}", report::island_summary(&r));
+    }
     if let Some((hits, misses)) = r.search.program_cache {
         println!("program cache: {hits} hits / {misses} lowerings");
     }

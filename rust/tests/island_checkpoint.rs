@@ -1,0 +1,202 @@
+//! Integration: island-model sharding and checkpoint/resume over the full
+//! search stack — determinism across runs, bit-identical resume, and the
+//! `islands = 1` ≡ single-population equivalence guarantee.
+
+use gevo_ml::evo::island::run_with_checkpoint;
+use gevo_ml::evo::nsga2::Objectives;
+use gevo_ml::evo::search::{self, Evaluator, SearchConfig, SearchResult};
+use gevo_ml::ir::op::{OpKind, ReduceKind};
+use gevo_ml::ir::types::TType;
+use gevo_ml::ir::Graph;
+
+/// The toy workload from the search unit tests: runtime = normalized
+/// FLOPs, error = |output − baseline| on one input.
+fn toy() -> (Graph, impl Evaluator) {
+    let mut g = Graph::new("toy");
+    let x = g.param(TType::of(&[4, 4]));
+    let e1 = g.push(OpKind::Exponential, &[x]).unwrap();
+    let t = g.push(OpKind::Tanh, &[e1]).unwrap();
+    let a = g.push(OpKind::Add, &[t, x]).unwrap();
+    let r = g
+        .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[a])
+        .unwrap();
+    g.set_outputs(&[r]);
+    let base_flops = g.total_flops() as f64;
+    let input = gevo_ml::tensor::Tensor::iota(&[4, 4]);
+    let baseline = gevo_ml::interp::eval(&g, &[input.clone()]).unwrap()[0].item() as f64;
+    let eval = move |vg: &Graph| -> Option<Objectives> {
+        let out = gevo_ml::interp::eval(vg, &[input.clone()]).ok()?;
+        if out[0].has_non_finite() {
+            return None;
+        }
+        let err = (out[0].item() as f64 - baseline).abs() / baseline.abs().max(1e-9);
+        let time = vg.total_flops() as f64 / base_flops;
+        Some((time, err))
+    };
+    (g, eval)
+}
+
+fn front_of(r: &SearchResult) -> Vec<Objectives> {
+    r.pareto.iter().map(|(_, o)| *o).collect()
+}
+
+/// Unique scratch path per test; best-effort cleanup wrapper.
+struct TempCk(std::path::PathBuf);
+
+impl TempCk {
+    fn new(tag: &str) -> TempCk {
+        TempCk(std::env::temp_dir().join(format!("gevo_ck_{tag}_{}.json", std::process::id())))
+    }
+}
+
+impl Drop for TempCk {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+#[test]
+fn islands_one_is_the_plain_single_population_search() {
+    let (g, eval) = toy();
+    let cfg = SearchConfig {
+        pop_size: 8,
+        generations: 3,
+        elites: 4,
+        workers: 1,
+        seed: 9,
+        islands: 1,
+        ..Default::default()
+    };
+    let plain = search::run(&g, &eval, &cfg);
+    let via_islands = run_with_checkpoint(&g, &eval, &cfg, None);
+    assert_eq!(front_of(&plain), front_of(&via_islands));
+    assert_eq!(plain.total_evaluations, via_islands.total_evaluations);
+    assert!(via_islands.pareto_islands.iter().all(|&i| i == 0));
+    assert_eq!(via_islands.migrations, 0, "a lone island must never migrate");
+}
+
+#[test]
+fn island_runs_are_seed_deterministic() {
+    let (g, eval) = toy();
+    let cfg = SearchConfig {
+        pop_size: 6,
+        generations: 4,
+        elites: 3,
+        workers: 1,
+        seed: 21,
+        islands: 3,
+        migration_interval: 2,
+        migrants: 2,
+        ..Default::default()
+    };
+    let a = run_with_checkpoint(&g, &eval, &cfg, None);
+    let b = run_with_checkpoint(&g, &eval, &cfg, None);
+    assert_eq!(front_of(&a), front_of(&b), "same seed must reproduce the merged front");
+    assert_eq!(a.pareto_islands, b.pareto_islands, "provenance must be deterministic too");
+    assert_eq!(a.total_evaluations, b.total_evaluations);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.islands.len(), 3);
+    // every generation produced one stats row per island
+    assert_eq!(a.history.len(), 4 * 3);
+}
+
+#[test]
+fn islands_explore_more_than_one_stream() {
+    let (g, eval) = toy();
+    let one = SearchConfig {
+        pop_size: 6,
+        generations: 3,
+        elites: 3,
+        workers: 1,
+        seed: 33,
+        islands: 1,
+        ..Default::default()
+    };
+    let many = SearchConfig { islands: 3, migration_interval: 2, ..one.clone() };
+    let a = run_with_checkpoint(&g, &eval, &one, None);
+    let b = run_with_checkpoint(&g, &eval, &many, None);
+    assert!(
+        b.total_evaluations > a.total_evaluations,
+        "three islands must evaluate more than one ({} vs {})",
+        b.total_evaluations,
+        a.total_evaluations
+    );
+}
+
+#[test]
+fn resume_from_checkpoint_reproduces_uninterrupted_run() {
+    let (g, eval) = toy();
+    let cfg = SearchConfig {
+        pop_size: 6,
+        generations: 5,
+        elites: 3,
+        workers: 1,
+        seed: 13,
+        islands: 2,
+        migration_interval: 2,
+        migrants: 1,
+        ..Default::default()
+    };
+    let uninterrupted = run_with_checkpoint(&g, &eval, &cfg, None);
+
+    // "kill" after two generations, then resume towards the full target
+    let ck = TempCk::new("resume");
+    let partial_cfg = SearchConfig { generations: 2, ..cfg.clone() };
+    let partial = run_with_checkpoint(&g, &eval, &partial_cfg, Some(&ck.0));
+    assert!(ck.0.exists(), "checkpoint file must be written");
+    assert!(partial.history.len() < uninterrupted.history.len());
+    let resumed = run_with_checkpoint(&g, &eval, &cfg, Some(&ck.0));
+
+    assert_eq!(
+        front_of(&uninterrupted),
+        front_of(&resumed),
+        "resumed run must reproduce the uninterrupted Pareto front exactly"
+    );
+    assert_eq!(uninterrupted.pareto_islands, resumed.pareto_islands);
+    assert_eq!(uninterrupted.total_evaluations, resumed.total_evaluations);
+    assert_eq!(uninterrupted.cache_hits, resumed.cache_hits);
+    assert_eq!(uninterrupted.migrations, resumed.migrations);
+    assert_eq!(uninterrupted.history.len(), resumed.history.len());
+    for (a, b) in uninterrupted.history.iter().zip(resumed.history.iter()) {
+        assert_eq!((a.gen, a.island, a.evaluated, a.valid), (b.gen, b.island, b.evaluated, b.valid));
+        assert_eq!(a.best_time.to_bits(), b.best_time.to_bits());
+        assert_eq!(a.best_error.to_bits(), b.best_error.to_bits());
+    }
+}
+
+#[test]
+fn resuming_a_finished_run_is_a_no_op() {
+    let (g, eval) = toy();
+    let cfg = SearchConfig {
+        pop_size: 6,
+        generations: 3,
+        elites: 3,
+        workers: 1,
+        seed: 17,
+        ..Default::default()
+    };
+    let ck = TempCk::new("finished");
+    let first = run_with_checkpoint(&g, &eval, &cfg, Some(&ck.0));
+    let again = run_with_checkpoint(&g, &eval, &cfg, Some(&ck.0));
+    assert_eq!(front_of(&first), front_of(&again));
+    assert_eq!(first.total_evaluations, again.total_evaluations);
+    assert_eq!(first.history.len(), again.history.len());
+}
+
+#[test]
+#[should_panic(expected = "mismatch")]
+fn resuming_with_a_different_seed_is_rejected() {
+    let (g, eval) = toy();
+    let cfg = SearchConfig {
+        pop_size: 6,
+        generations: 2,
+        elites: 3,
+        workers: 1,
+        seed: 40,
+        ..Default::default()
+    };
+    let ck = TempCk::new("mismatch");
+    run_with_checkpoint(&g, &eval, &cfg, Some(&ck.0));
+    let other = SearchConfig { seed: 41, ..cfg };
+    run_with_checkpoint(&g, &eval, &other, Some(&ck.0));
+}
