@@ -1,0 +1,132 @@
+//! §Perf: the graph-optimizer pipeline on the fitness hot path —
+//! instruction-count reduction, ProgramCache hit-rate uplift and
+//! compile-path cost at `--opt-level 2` vs `0`, over a population-shaped
+//! stream of mutants. Writes a machine-readable summary to
+//! `BENCH_opt.json` next to the human-readable table.
+
+use gevo_ml::evo::mutate::valid_random_edit;
+use gevo_ml::exec::cache::ProgramCache;
+use gevo_ml::ir::{Graph, OpKind};
+use gevo_ml::models::twofc;
+use gevo_ml::opt::{optimize, OptLevel};
+use gevo_ml::util::bench::{black_box, Bench};
+use gevo_ml::util::json::Json;
+use gevo_ml::util::rng::Rng;
+
+/// Seeded mutants: chains of 1..=4 valid edits on the train-step graph.
+fn mutants(base: &Graph, n: usize, seed: u64) -> Vec<Graph> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut g = base.clone();
+            for _ in 0..rng.range(1, 5) {
+                if let Some((_, ng)) = valid_random_edit(&g, &mut rng, 25) {
+                    g = ng;
+                }
+            }
+            g
+        })
+        .collect()
+}
+
+/// A generation-shaped lookup stream: each mutant, a twin differing only
+/// by a dead instruction (what neutral edits produce), and the baseline
+/// again (elite re-selection). O0 sees three distinct keys per triple;
+/// the optimizing cache collapses the first two.
+fn stream(base: &Graph, pop: &[Graph]) -> Vec<Graph> {
+    let mut out = Vec::with_capacity(pop.len() * 3);
+    for g in pop {
+        out.push(g.clone());
+        let mut twin = g.clone();
+        let anchor = twin.insts()[0].id;
+        let _ = twin.push(OpKind::Exponential, &[anchor]);
+        out.push(twin);
+        out.push(base.clone());
+    }
+    out
+}
+
+fn main() {
+    let mut b = Bench::new("perf_opt");
+    let spec = twofc::TwoFcSpec { batch: 8, input: 16, hidden: 16, classes: 10, lr: 0.1 };
+    let base = twofc::train_step_graph(&spec);
+    let pop = mutants(&base, 48, 0x0917);
+    let looks = stream(&base, &pop);
+
+    // --- per-graph compile path: optimize (+ compile) cost ------------------
+    b.case("optimize train-step (opt-level 1)", || {
+        black_box(optimize(&base, OptLevel::O1));
+    });
+    b.case("optimize train-step (opt-level 2)", || {
+        black_box(optimize(&base, OptLevel::O2));
+    });
+    b.case("compile train-step raw (O0 path)", || {
+        black_box(gevo_ml::exec::Program::compile(&base).unwrap());
+    });
+    b.case("optimize O2 + compile train-step", || {
+        let (og, _) = optimize(&base, OptLevel::O2);
+        black_box(gevo_ml::exec::Program::compile(&og).unwrap());
+    });
+
+    // --- the population cache, cold, at both levels -------------------------
+    let mut level_rows: Vec<Json> = Vec::new();
+    for level in [OptLevel::O0, OptLevel::O2] {
+        let cache = ProgramCache::with_opt(level);
+        let t0 = std::time::Instant::now();
+        for g in &looks {
+            black_box(cache.get_or_compile(g).unwrap());
+        }
+        let cold_secs = t0.elapsed().as_secs_f64();
+        let (hits, misses) = cache.stats();
+        let (ins_in, ins_out) = cache.opt_stats();
+        let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+        let reduction = if ins_in > 0 {
+            1.0 - ins_out as f64 / ins_in as f64
+        } else {
+            0.0
+        };
+        b.note(&format!(
+            "opt-level {level}: {} lookups -> {hits} hits / {misses} lowerings \
+             (hit rate {:.1}%), insts {ins_in} -> {ins_out} ({:.1}% removed), \
+             cold pass {:.3}s",
+            looks.len(),
+            hit_rate * 100.0,
+            reduction * 100.0,
+            cold_secs
+        ));
+        level_rows.push(Json::obj(vec![
+            ("opt_level", Json::num(level.as_u8() as f64)),
+            ("lookups", Json::num(looks.len() as f64)),
+            ("hits", Json::num(hits as f64)),
+            ("misses", Json::num(misses as f64)),
+            ("hit_rate", Json::num(hit_rate)),
+            ("insts_in", Json::num(ins_in as f64)),
+            ("insts_out", Json::num(ins_out as f64)),
+            ("instruction_reduction", Json::num(reduction)),
+            ("cold_seconds", Json::num(cold_secs)),
+        ]));
+    }
+
+    // --- warm cache throughput (everything hits) -----------------------------
+    for level in [OptLevel::O0, OptLevel::O2] {
+        let cache = ProgramCache::with_opt(level);
+        for g in &looks {
+            let _ = cache.get_or_compile(g).unwrap();
+        }
+        b.case(&format!("warm cache stream x{} (opt-level {level})", looks.len()), || {
+            for g in &looks {
+                black_box(cache.get_or_compile(g).unwrap());
+            }
+        });
+    }
+
+    let summary = Json::obj(vec![
+        ("suite", Json::str("perf_opt")),
+        ("workload", Json::str("2fcnet train-step")),
+        ("population", Json::num(pop.len() as f64)),
+        ("levels", Json::Arr(level_rows)),
+    ]);
+    std::fs::write("BENCH_opt.json", summary.to_pretty()).expect("write BENCH_opt.json");
+    b.note("wrote BENCH_opt.json");
+    b.finish();
+}

@@ -4,7 +4,7 @@
 //! a 1.90× speedup) when 2% test accuracy is sacrificed.
 //!
 //! Run: `cargo run --release --example evolve_mobilenet -- [--pop 32] [--gens 15] [--seed 42]
-//!       [--islands 4] [--migration-interval 4] [--checkpoint ck.json]`
+//!       [--islands 4] [--migration-interval 4] [--checkpoint ck.json] [--opt-level 0|1|2]`
 
 use gevo_ml::coordinator::{self, report, ExperimentConfig, WorkloadKind};
 use gevo_ml::evo::search::SearchConfig;
@@ -26,6 +26,8 @@ fn main() {
             islands: args.usize_or("islands", 1),
             migration_interval: args.usize_or("migration-interval", 4),
             migrants: args.usize_or("migrants", 2),
+            opt_level: gevo_ml::opt::OptLevel::parse(&args.get_or("opt-level", "2"))
+                .expect("--opt-level must be 0, 1 or 2"),
             verbose: !args.flag("quiet"),
             ..Default::default()
         },

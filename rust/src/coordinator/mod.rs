@@ -51,6 +51,13 @@ pub struct ExperimentConfig {
     /// generations (plus once at the end of the run); if it already
     /// exists the search resumes from it (see [`crate::evo::island`]).
     pub checkpoint: Option<std::path::PathBuf>,
+    /// Post-search stage: delta-debug every Pareto-front individual's
+    /// edit list down to the edits that matter
+    /// ([`crate::opt::minimize`]), re-evaluating candidates through the
+    /// same fitness workload. Never degrades a front point's objective
+    /// vector; fills [`FrontPoint::minimized`] (minimized-edit counts and
+    /// the per-edit attribution table in reports).
+    pub minimize_front: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -65,6 +72,7 @@ impl Default for ExperimentConfig {
             data_seed: 7,
             weight_seed: 1,
             checkpoint: None,
+            minimize_front: false,
         }
     }
 }
@@ -80,6 +88,28 @@ pub struct FrontPoint {
     /// Post-hoc objectives on the held-out split (None if the variant
     /// failed there — reported, as the paper reports test-set movement).
     pub post_hoc: Option<Objectives>,
+    /// Patch-minimization outcome ([`ExperimentConfig::minimize_front`]);
+    /// `None` when minimization was off or the point failed to re-evaluate.
+    pub minimized: Option<MinimizedPoint>,
+}
+
+/// Minimization summary for one front point (see [`crate::opt::minimize`]).
+#[derive(Debug, Clone)]
+pub struct MinimizedPoint {
+    /// Surviving edits.
+    pub edits: usize,
+    /// Edits removed from the raw patch.
+    pub removed: usize,
+    /// Re-evaluated objectives of the raw patch — the baseline every
+    /// removal was measured against.
+    pub start: Objectives,
+    /// Objectives of the minimized patch; component-wise `<= start`.
+    pub fit: Objectives,
+    /// Evaluator calls spent on this point.
+    pub evaluations: usize,
+    /// `(edit, objective delta when removed alone)` per surviving edit;
+    /// `None` delta means the edit is structurally required.
+    pub attribution: Vec<(String, Option<Objectives>)>,
 }
 
 /// Experiment outcome.
@@ -105,13 +135,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.data_seed,
             );
             let (fit, test) = data.split(cfg.fit_samples);
-            let wl = PredictionWorkload::new(
+            let wl = PredictionWorkload::new_with_opt(
                 &baseline,
                 spec.batch,
                 &fit,
                 &test,
                 (cfg.fit_samples / spec.batch).min(32),
                 cfg.metric,
+                cfg.search.opt_level,
             );
             let res = crate::evo::island::run_with_checkpoint(
                 &baseline,
@@ -119,7 +150,10 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 &cfg.search,
                 cfg.checkpoint.as_deref(),
             );
-            finish(t0, &baseline, res, |g| wl.evaluate_pair(g))
+            use crate::evo::search::Evaluator;
+            finish(t0, &baseline, res, cfg.minimize_front, |g| wl.evaluate(g), |g| {
+                wl.post_hoc(g)
+            })
         }
         WorkloadKind::TwoFcTraining => {
             let spec = twofc::TwoFcSpec::default();
@@ -130,7 +164,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.data_seed,
             );
             let (fit, test) = data.split(cfg.fit_samples);
-            let wl = TrainingWorkload::new(
+            let wl = TrainingWorkload::new_with_opt(
                 spec,
                 &baseline,
                 fit,
@@ -138,6 +172,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.epochs,
                 cfg.weight_seed,
                 cfg.metric,
+                cfg.search.opt_level,
             );
             let res = crate::evo::island::run_with_checkpoint(
                 &baseline,
@@ -145,18 +180,11 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 &cfg.search,
                 cfg.checkpoint.as_deref(),
             );
-            finish(t0, &baseline, res, |g| {
-                use crate::evo::search::Evaluator;
-                (wl.evaluate(g), wl.post_hoc(g))
+            use crate::evo::search::Evaluator;
+            finish(t0, &baseline, res, cfg.minimize_front, |g| wl.evaluate(g), |g| {
+                wl.post_hoc(g)
             })
         }
-    }
-}
-
-impl PredictionWorkload {
-    fn evaluate_pair(&self, g: &Graph) -> (Option<Objectives>, Option<Objectives>) {
-        use crate::evo::search::Evaluator;
-        (self.evaluate(g), self.post_hoc(g))
     }
 }
 
@@ -164,9 +192,12 @@ fn finish(
     t0: std::time::Instant,
     baseline: &Graph,
     res: SearchResult,
-    eval_pair: impl Fn(&Graph) -> (Option<Objectives>, Option<Objectives>),
+    minimize_front: bool,
+    eval_fit: impl Fn(&Graph) -> Option<Objectives> + Sync,
+    eval_post: impl Fn(&Graph) -> Option<Objectives>,
 ) -> ExperimentResult {
-    let (bf, bp) = eval_pair(baseline);
+    let bf = eval_fit(baseline);
+    let bp = eval_post(baseline);
     // Dedup front rows by quantized objective point — corners of the
     // front are often reached by many distinct genomes. Provenance rides
     // along so per-island contributions stay visible in reports.
@@ -180,8 +211,33 @@ fn finish(
         let post_hoc = ind
             .materialize(baseline)
             .ok()
-            .and_then(|g| eval_pair(&g).1);
-        front.push(FrontPoint { edits: ind.edits.len(), island, fit: *fit, post_hoc });
+            .and_then(|g| eval_post(&g));
+        let minimized = if minimize_front {
+            // `eval_fit` is an `Evaluator` via the closure blanket impl;
+            // minimization candidates are scored on the fitness split
+            // only — the held-out evaluation would be discarded anyway.
+            crate::opt::minimize::minimize(baseline, ind, &eval_fit).map(|m| MinimizedPoint {
+                edits: m.minimized.edits.len(),
+                removed: m.removed,
+                start: m.start,
+                fit: m.objectives,
+                evaluations: m.evaluations,
+                attribution: m
+                    .attribution
+                    .iter()
+                    .map(|a| (a.edit.to_string(), a.delta))
+                    .collect(),
+            })
+        } else {
+            None
+        };
+        front.push(FrontPoint {
+            edits: ind.edits.len(),
+            island,
+            fit: *fit,
+            post_hoc,
+            minimized,
+        });
     }
     ExperimentResult {
         baseline_fit: bf.expect("baseline evaluates"),
@@ -261,6 +317,43 @@ mod tests {
         assert!(r.front.iter().all(|p| p.island < 2));
         let evals: usize = r.search.islands.iter().map(|s| s.evaluations).sum();
         assert_eq!(evals, r.search.total_evaluations);
+    }
+
+    #[test]
+    fn minimize_front_never_degrades_and_fills_reports() {
+        let cfg = ExperimentConfig {
+            kind: WorkloadKind::TwoFcTraining,
+            search: SearchConfig {
+                pop_size: 6,
+                generations: 1,
+                elites: 3,
+                workers: 2,
+                seed: 9,
+                ..Default::default()
+            },
+            fit_samples: 64,
+            test_samples: 32,
+            epochs: 1,
+            minimize_front: true,
+            ..Default::default()
+        };
+        let r = run_experiment(&cfg);
+        assert!(!r.front.is_empty());
+        let mut saw_minimized = false;
+        for p in &r.front {
+            let Some(m) = &p.minimized else { continue };
+            saw_minimized = true;
+            assert!(m.edits <= p.edits, "minimization must never grow the edit list");
+            assert_eq!(m.removed, p.edits - m.edits);
+            assert!(
+                m.fit.0 <= m.start.0 && m.fit.1 <= m.start.1,
+                "minimize degraded a front point: {:?} -> {:?}",
+                m.start,
+                m.fit
+            );
+            assert_eq!(m.attribution.len(), m.edits);
+        }
+        assert!(saw_minimized, "flops metric re-evaluates deterministically");
     }
 
     #[test]

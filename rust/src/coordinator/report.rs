@@ -8,13 +8,15 @@ use crate::evo::nsga2::Objectives;
 use crate::evo::search::IslandStats;
 use crate::util::json::Json;
 
-/// Markdown table of the front (the Fig. 4 data, in rows).
+/// Markdown table of the front (the Fig. 4 data, in rows). `min edits`
+/// is the surviving-edit count after patch minimization (`-` when the
+/// run did not minimize).
 pub fn front_markdown(r: &ExperimentResult) -> String {
     let mut s = String::new();
-    s.push_str("| variant | edits | island | runtime (fit) | error (fit) | runtime (held-out) | error (held-out) |\n");
-    s.push_str("|---|---|---|---|---|---|---|\n");
+    s.push_str("| variant | edits | min edits | island | runtime (fit) | error (fit) | runtime (held-out) | error (held-out) |\n");
+    s.push_str("|---|---|---|---|---|---|---|---|\n");
     s.push_str(&format!(
-        "| original | 0 | - | {:.4} | {:.4} | {} | {} |\n",
+        "| original | 0 | - | - | {:.4} | {:.4} | {} | {} |\n",
         r.baseline_fit.0,
         r.baseline_fit.1,
         r.baseline_post_hoc.map_or("-".into(), |o| format!("{:.4}", o.0)),
@@ -22,8 +24,9 @@ pub fn front_markdown(r: &ExperimentResult) -> String {
     ));
     for (i, p) in r.front.iter().enumerate() {
         s.push_str(&format!(
-            "| pareto-{i} | {} | {} | {:.4} | {:.4} | {} | {} |\n",
+            "| pareto-{i} | {} | {} | {} | {:.4} | {:.4} | {} | {} |\n",
             p.edits,
+            p.minimized.as_ref().map_or("-".into(), |m| m.edits.to_string()),
             p.island,
             p.fit.0,
             p.fit.1,
@@ -34,15 +37,54 @@ pub fn front_markdown(r: &ExperimentResult) -> String {
     s
 }
 
-/// CSV (runtime,error,edits,island,split) rows for plotting.
+/// CSV (runtime,error,edits,min_edits,island,split) rows for plotting.
 pub fn front_csv(r: &ExperimentResult) -> String {
-    let mut s = String::from("runtime,error,edits,island,split\n");
-    s.push_str(&format!("{},{},0,-,baseline\n", r.baseline_fit.0, r.baseline_fit.1));
+    let mut s = String::from("runtime,error,edits,min_edits,island,split\n");
+    s.push_str(&format!("{},{},0,-,-,baseline\n", r.baseline_fit.0, r.baseline_fit.1));
     for p in &r.front {
-        s.push_str(&format!("{},{},{},{},fit\n", p.fit.0, p.fit.1, p.edits, p.island));
+        let min_edits =
+            p.minimized.as_ref().map_or("-".to_string(), |m| m.edits.to_string());
+        s.push_str(&format!(
+            "{},{},{},{},{},fit\n",
+            p.fit.0, p.fit.1, p.edits, min_edits, p.island
+        ));
         if let Some(o) = p.post_hoc {
-            s.push_str(&format!("{},{},{},{},heldout\n", o.0, o.1, p.edits, p.island));
+            s.push_str(&format!(
+                "{},{},{},{},{},heldout\n",
+                o.0, o.1, p.edits, min_edits, p.island
+            ));
         }
+    }
+    s
+}
+
+/// Per-edit attribution tables for every minimized front point: what each
+/// surviving edit contributes (the objective delta when it alone is
+/// removed) — the §6.1/§6.2 "key mutations" analysis, automated.
+pub fn attribution_markdown(r: &ExperimentResult) -> String {
+    let mut s = String::new();
+    for (i, p) in r.front.iter().enumerate() {
+        let Some(m) = &p.minimized else { continue };
+        s.push_str(&format!(
+            "pareto-{i}: {} edits -> {} ({} removed, {} evals); fit ({:.4}, {:.4}) -> ({:.4}, {:.4})\n",
+            p.edits, m.edits, m.removed, m.evaluations, m.start.0, m.start.1, m.fit.0, m.fit.1
+        ));
+        if m.attribution.is_empty() {
+            s.push_str("  (no surviving edits — the point is the baseline)\n");
+            continue;
+        }
+        s.push_str("| surviving edit | Δruntime if removed | Δerror if removed |\n|---|---|---|\n");
+        for (edit, delta) in &m.attribution {
+            match delta {
+                Some((dt, de)) => {
+                    s.push_str(&format!("| {edit} | {dt:+.4} | {de:+.4} |\n"))
+                }
+                None => s.push_str(&format!("| {edit} | required | required |\n")),
+            }
+        }
+    }
+    if s.is_empty() {
+        s.push_str("(no minimized front points — run with minimization enabled)\n");
     }
     s
 }
@@ -81,6 +123,35 @@ pub fn to_json(r: &ExperimentResult) -> Json {
                             ("island", Json::num(p.island as f64)),
                             ("fit", pt(p.fit)),
                             ("post_hoc", p.post_hoc.map_or(Json::Null, pt)),
+                            (
+                                "minimized",
+                                p.minimized.as_ref().map_or(Json::Null, |m| {
+                                    Json::obj(vec![
+                                        ("edits", Json::num(m.edits as f64)),
+                                        ("removed", Json::num(m.removed as f64)),
+                                        ("evaluations", Json::num(m.evaluations as f64)),
+                                        ("start", pt(m.start)),
+                                        ("fit", pt(m.fit)),
+                                        (
+                                            "attribution",
+                                            Json::Arr(
+                                                m.attribution
+                                                    .iter()
+                                                    .map(|(edit, delta)| {
+                                                        Json::obj(vec![
+                                                            ("edit", Json::str(edit.clone())),
+                                                            (
+                                                                "delta",
+                                                                delta.map_or(Json::Null, pt),
+                                                            ),
+                                                        ])
+                                                    })
+                                                    .collect(),
+                                            ),
+                                        ),
+                                    ])
+                                }),
+                            ),
                         ])
                     })
                     .collect(),
@@ -163,8 +234,30 @@ mod tests {
             baseline_fit: (1.0, 0.1),
             baseline_post_hoc: Some((1.0, 0.12)),
             front: vec![
-                FrontPoint { edits: 2, island: 0, fit: (0.5, 0.2), post_hoc: Some((0.5, 0.22)) },
-                FrontPoint { edits: 1, island: 1, fit: (1.0, 0.05), post_hoc: None },
+                FrontPoint {
+                    edits: 2,
+                    island: 0,
+                    fit: (0.5, 0.2),
+                    post_hoc: Some((0.5, 0.22)),
+                    minimized: Some(crate::coordinator::MinimizedPoint {
+                        edits: 2,
+                        removed: 0,
+                        start: (0.5, 0.2),
+                        fit: (0.5, 0.2),
+                        evaluations: 5,
+                        attribution: vec![
+                            ("delete(%3)".into(), Some((0.5, 0.0))),
+                            ("copy(%2 after %4)".into(), None),
+                        ],
+                    }),
+                },
+                FrontPoint {
+                    edits: 1,
+                    island: 1,
+                    fit: (1.0, 0.05),
+                    post_hoc: None,
+                    minimized: None,
+                },
             ],
             search: SearchResult {
                 pareto: vec![],
@@ -200,9 +293,9 @@ mod tests {
     #[test]
     fn markdown_has_all_rows() {
         let md = front_markdown(&fake());
-        assert!(md.contains("| original | 0 | - | 1.0000 | 0.1000 |"));
-        assert!(md.contains("| pareto-0 | 2 | 0 | 0.5000 |"));
-        assert!(md.contains("| pareto-1 | 1 | 1 | 1.0000 |"));
+        assert!(md.contains("| original | 0 | - | - | 1.0000 | 0.1000 |"));
+        assert!(md.contains("| pareto-0 | 2 | 2 | 0 | 0.5000 |"));
+        assert!(md.contains("| pareto-1 | 1 | - | 1 | 1.0000 |"));
         assert!(md.lines().count() >= 5);
     }
 
@@ -210,8 +303,19 @@ mod tests {
     fn csv_parses_back() {
         let csv = front_csv(&fake());
         assert_eq!(csv.lines().count(), 1 + 1 + 3); // header + baseline + 2 fit + 1 heldout
-        assert!(csv.contains("0.5,0.2,2,0,fit"));
-        assert!(csv.contains("1,0.05,1,1,fit"));
+        assert!(csv.starts_with("runtime,error,edits,min_edits,island,split\n"));
+        assert!(csv.contains("0.5,0.2,2,2,0,fit"));
+        assert!(csv.contains("0.5,0.22,2,2,0,heldout"));
+        assert!(csv.contains("1,0.05,1,-,1,fit"));
+    }
+
+    #[test]
+    fn attribution_lists_surviving_edits() {
+        let s = attribution_markdown(&fake());
+        assert!(s.contains("pareto-0: 2 edits -> 2 (0 removed, 5 evals)"));
+        assert!(s.contains("| delete(%3) | +0.5000 | +0.0000 |"));
+        assert!(s.contains("| copy(%2 after %4) | required | required |"));
+        assert!(!s.contains("pareto-1:"), "unminimized points have no table");
     }
 
     #[test]
@@ -223,6 +327,10 @@ mod tests {
         assert_eq!(j2.get("islands").unwrap().as_arr().unwrap().len(), 2);
         let front = j2.get("front").unwrap().as_arr().unwrap();
         assert_eq!(front[1].get("island").unwrap().as_usize().unwrap(), 1);
+        let m = front[0].get("minimized").unwrap();
+        assert_eq!(m.get("edits").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(m.get("attribution").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(*front[1].get("minimized").unwrap(), Json::Null);
     }
 
     #[test]

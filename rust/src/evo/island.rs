@@ -50,6 +50,18 @@ pub fn run_with_checkpoint(
     checkpoint: Option<&Path>,
 ) -> SearchResult {
     let k = cfg.islands.max(1);
+    // The level a checkpoint pins must be the level actually in effect:
+    // workloads that run a program cache report its optimizer level, and
+    // a disagreement with the config is a caller bug, caught here rather
+    // than silently recorded wrong.
+    if let Some(wl_level) = eval.opt_level() {
+        assert_eq!(
+            wl_level, cfg.opt_level,
+            "SearchConfig::opt_level ({}) disagrees with the workload's program cache \
+             ({wl_level}); build the workload with new_with_opt(cfg.opt_level)",
+            cfg.opt_level
+        );
+    }
     // Identity of the baseline program: resuming against a different
     // workload graph would silently reinterpret cached objectives, so the
     // canonical graph hash is echoed into the checkpoint and verified.
@@ -407,6 +419,10 @@ fn config_json(cfg: &SearchConfig) -> Json {
         ("max_tries", Json::num(cfg.max_tries as f64)),
         ("migration_interval", Json::num(cfg.migration_interval as f64)),
         ("migrants", Json::num(cfg.migrants as f64)),
+        // Not stochastic (the pipeline is bit-identity-preserving), but a
+        // resume under a different level would change wall-clock-metric
+        // objectives and cache keys mid-run, so it is pinned like the rest.
+        ("opt_level", Json::num(cfg.opt_level.as_u8() as f64)),
     ])
 }
 
@@ -446,7 +462,18 @@ pub(crate) fn restore_checkpoint(
     }
     let want = config_json(cfg);
     let got = jerr(j.get("config"))?;
-    if *got != want {
+    // Checkpoints written before the optimizer existed carry no
+    // `opt_level` key; those runs always executed unoptimized, so the
+    // missing key means level 0 — resumable iff this run uses 0 too.
+    let got = match got {
+        Json::Obj(map) if !map.contains_key("opt_level") => {
+            let mut map = map.clone();
+            map.insert("opt_level".to_string(), Json::num(0.0));
+            Json::Obj(map)
+        }
+        other => other.clone(),
+    };
+    if got != want {
         return Err(format!(
             "search configuration mismatch: checkpoint was written with {}, this run uses {}",
             got.to_string(),
@@ -627,6 +654,39 @@ mod tests {
     }
 
     #[test]
+    fn pre_optimizer_checkpoints_resume_at_level_zero() {
+        // A PR-2-era checkpoint has no `opt_level` in its config echo;
+        // those runs always executed unoptimized, so it must resume under
+        // --opt-level 0 and be refused under any other level.
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 4,
+            generations: 0,
+            elites: 2,
+            workers: 1,
+            seed: 5,
+            opt_level: crate::opt::OptLevel::O0,
+            ..Default::default()
+        };
+        let ghash = crate::ir::canon::graph_hash(&g);
+        let engines = vec![Engine::new(0, &g, &eval, &cfg)];
+        let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
+        let mut j = checkpoint_json(&cfg, ghash, &st);
+        if let Json::Obj(ref mut top) = j {
+            if let Some(Json::Obj(ref mut c)) = top.get_mut("config") {
+                c.remove("opt_level");
+            }
+        }
+        assert!(
+            restore_checkpoint(&j, &cfg, ghash).is_ok(),
+            "legacy checkpoint must resume at opt-level 0"
+        );
+        let o2 = SearchConfig { opt_level: crate::opt::OptLevel::O2, ..cfg.clone() };
+        let err = restore_checkpoint(&j, &o2, ghash).unwrap_err();
+        assert!(err.contains("mismatch"), "unexpected error: {err}");
+    }
+
+    #[test]
     fn checkpoint_rejects_mismatched_config_or_baseline() {
         let (g, eval) = toy();
         let cfg = SearchConfig {
@@ -642,6 +702,11 @@ mod tests {
         let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
         let j = checkpoint_json(&cfg, ghash, &st);
         let other = SearchConfig { seed: 6, ..cfg.clone() };
+        let err = restore_checkpoint(&j, &other, ghash).unwrap_err();
+        assert!(err.contains("mismatch"), "unexpected error: {err}");
+        // a different optimizer level is pinned too (wall-clock metrics
+        // and cache keys would silently change mid-run otherwise)
+        let other = SearchConfig { opt_level: crate::opt::OptLevel::O2, ..cfg.clone() };
         let err = restore_checkpoint(&j, &other, ghash).unwrap_err();
         assert!(err.contains("mismatch"), "unexpected error: {err}");
         // a different baseline program (e.g. another workload) is refused

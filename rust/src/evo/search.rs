@@ -38,6 +38,15 @@ pub trait Evaluator: Sync {
     fn exec_cache_stats(&self) -> Option<(usize, usize)> {
         None
     }
+
+    /// The optimizer level of the workload's compiled-program cache, if
+    /// it runs one. [`super::island::run_with_checkpoint`] cross-checks
+    /// this against [`SearchConfig::opt_level`] so the level a checkpoint
+    /// pins is the level actually in effect — the two are otherwise easy
+    /// to let drift apart when a workload is constructed by hand.
+    fn opt_level(&self) -> Option<crate::opt::OptLevel> {
+        None
+    }
 }
 
 impl<F: Fn(&Graph) -> Option<Objectives> + Sync> Evaluator for F {
@@ -77,6 +86,19 @@ pub struct SearchConfig {
     /// process, so it is excluded from the checkpoint's config echo and a
     /// resume may use a different value.
     pub checkpoint_every: usize,
+    /// Optimizer level for the fitness workloads' compiled-program cache
+    /// ([`crate::exec::cache::ProgramCache`]): graphs are canonicalized
+    /// through the bit-identity-preserving pipeline in [`crate::opt`]
+    /// before hashing and lowering. Level 0 reproduces the historical
+    /// behavior exactly. Because the pipeline preserves output bits and
+    /// the `flops` runtime objective is computed on the unoptimized
+    /// graph, the search trajectory under the `flops` metric is identical
+    /// at every level — only evaluation speed and cache sharing change.
+    /// Echoed into checkpoints and verified on resume, and cross-checked
+    /// against the workload's own cache level by the search entry point.
+    /// `Default` is level 0 to agree with the workloads' `new()`
+    /// constructors (the CLI tools and examples default to 2).
+    pub opt_level: crate::opt::OptLevel,
     pub verbose: bool,
 }
 
@@ -97,6 +119,7 @@ impl Default for SearchConfig {
             migration_interval: 4,
             migrants: 2,
             checkpoint_every: 1,
+            opt_level: crate::opt::OptLevel::O0,
             verbose: false,
         }
     }

@@ -7,10 +7,20 @@
 //! to the same graph, hit the cache instead of re-lowering. Keys are
 //! canonical graph hashes ([`crate::ir::canon::graph_hash`]), which are
 //! invariant under the value-id renumbering that edit replay introduces.
+//!
+//! With an [`OptLevel`] above 0 the cache additionally canonicalizes each
+//! graph through the optimizer pipeline ([`crate::opt`]) *before* hashing
+//! and lowering: mutants that differ only by dead or redundant edits —
+//! the common case, since most raw edits are neutral — collapse onto one
+//! cache entry, and the programs that do get compiled are smaller. The
+//! pipeline is bit-identity-preserving, so execution results are
+//! unchanged at every level; `OptLevel::O0` bypasses it entirely and
+//! reproduces the historical keys and programs exactly.
 
 use super::Program;
 use crate::ir::types::IrError;
 use crate::ir::Graph;
+use crate::opt::OptLevel;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -29,28 +39,68 @@ const MAX_ENTRIES: usize = 1024;
 /// Keys are 128-bit canonical digests ([`crate::ir::canon::graph_hash`]);
 /// at that width accidental collisions are negligible (~n²·2⁻¹²⁹), so no
 /// equality check runs on hit.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ProgramCache {
     map: Mutex<HashMap<u128, Arc<Program>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    opt_level: OptLevel,
+    /// Instructions seen / instructions left after optimization, summed
+    /// over every lookup (0/0 at `O0`, which never optimizes).
+    opt_insts_in: AtomicUsize,
+    opt_insts_out: AtomicUsize,
+}
+
+impl Default for ProgramCache {
+    fn default() -> Self {
+        ProgramCache::with_opt(OptLevel::O0)
+    }
 }
 
 impl ProgramCache {
+    /// An `O0` cache: graphs are hashed and lowered exactly as given —
+    /// the historical behavior.
     pub fn new() -> ProgramCache {
         ProgramCache::default()
     }
 
+    /// A cache that canonicalizes every graph at `opt_level` before
+    /// hashing and lowering.
+    pub fn with_opt(opt_level: OptLevel) -> ProgramCache {
+        ProgramCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            opt_level,
+            opt_insts_in: AtomicUsize::new(0),
+            opt_insts_out: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn opt_level(&self) -> OptLevel {
+        self.opt_level
+    }
+
     /// Fetch the compiled program for `g`, lowering it on first sight.
-    /// Compilation runs outside the lock; a racing duplicate compile is
-    /// possible (and harmless — first insert wins).
+    /// Optimization and compilation run outside the lock; a racing
+    /// duplicate compile is possible (and harmless — first insert wins).
     pub fn get_or_compile(&self, g: &Graph) -> Result<Arc<Program>, IrError> {
-        let key = crate::ir::canon::graph_hash(g);
+        let optimized;
+        let target: &Graph = if self.opt_level == OptLevel::O0 {
+            g
+        } else {
+            let (og, _) = crate::opt::optimize(g, self.opt_level);
+            self.opt_insts_in.fetch_add(g.len(), Ordering::Relaxed);
+            self.opt_insts_out.fetch_add(og.len(), Ordering::Relaxed);
+            optimized = og;
+            &optimized
+        };
+        let key = crate::ir::canon::graph_hash(target);
         if let Some(p) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
         }
-        let compiled = Arc::new(Program::compile(g)?);
+        let compiled = Arc::new(Program::compile(target)?);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.map.lock().unwrap();
         if map.len() >= MAX_ENTRIES {
@@ -63,6 +113,16 @@ impl ProgramCache {
     /// `(hits, misses)` so far. `misses` counts actual compilations.
     pub fn stats(&self) -> (usize, usize) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// `(instructions in, instructions out)` across every optimized
+    /// lookup — the aggregate instruction-count reduction the pipeline
+    /// delivered. Both zero at `OptLevel::O0`.
+    pub fn opt_stats(&self) -> (usize, usize) {
+        (
+            self.opt_insts_in.load(Ordering::Relaxed),
+            self.opt_insts_out.load(Ordering::Relaxed),
+        )
     }
 
     pub fn len(&self) -> usize {
@@ -80,6 +140,7 @@ mod tests {
     use crate::ir::op::OpKind;
     use crate::ir::types::{TType, ValueId};
     use crate::ir::Inst;
+    use crate::tensor::Tensor;
 
     fn g1() -> Graph {
         let mut g = Graph::new("a");
@@ -97,6 +158,7 @@ mod tests {
         assert!(Arc::ptr_eq(&p1, &p2), "identical graphs must share one program");
         assert_eq!(c.stats(), (1, 1));
         assert_eq!(c.len(), 1);
+        assert_eq!(c.opt_stats(), (0, 0), "O0 never optimizes");
     }
 
     #[test]
@@ -131,5 +193,65 @@ mod tests {
         g.set_outputs(&[t]);
         let _ = c.get_or_compile(&g).unwrap();
         assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn optimizing_cache_shares_dead_edit_twins() {
+        // A mutant and its twin that differs only by a dead instruction
+        // collapse onto one entry at O1+; at O0 they are distinct.
+        let g = g1();
+        let mut twin = g.clone();
+        let x = twin.insts()[0].id;
+        twin.push(OpKind::Tanh, &[x]).unwrap(); // unused -> dead
+        for (level, want_entries) in
+            [(OptLevel::O0, 2usize), (OptLevel::O1, 1), (OptLevel::O2, 1)]
+        {
+            let c = ProgramCache::with_opt(level);
+            let p1 = c.get_or_compile(&g).unwrap();
+            let p2 = c.get_or_compile(&twin).unwrap();
+            assert_eq!(c.len(), want_entries, "opt-level {level}");
+            if want_entries == 1 {
+                assert!(Arc::ptr_eq(&p1, &p2), "twins must share at opt-level {level}");
+                assert_eq!(c.stats(), (1, 1), "second lookup must hit at {level}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_programs_run_bit_identically() {
+        let mut g = Graph::new("b");
+        let x = g.param(TType::of(&[2, 2]));
+        let c1 = g.constant(Tensor::full(&[2, 2], 2.0));
+        let c2 = g.constant(Tensor::full(&[2, 2], 3.0));
+        let s = g.push(OpKind::Add, &[c1, c2]).unwrap();
+        let a = g.push(OpKind::Add, &[x, s]).unwrap();
+        g.set_outputs(&[a]);
+        let input = Tensor::iota(&[2, 2]);
+        let want = crate::interp::eval(&g, std::slice::from_ref(&input)).unwrap();
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let c = ProgramCache::with_opt(level);
+            let p = c.get_or_compile(&g).unwrap();
+            let got = p.run(std::slice::from_ref(&input)).unwrap();
+            assert_eq!(want.len(), got.len());
+            for (w, o) in want.iter().zip(got.iter()) {
+                assert_eq!(w.dims(), o.dims());
+                for (a, b) in w.data().iter().zip(o.data().iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "opt-level {level} changed bits");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn opt_stats_track_instruction_reduction() {
+        let g = g1();
+        let mut twin = g.clone();
+        let x = twin.insts()[0].id;
+        twin.push(OpKind::Tanh, &[x]).unwrap();
+        let c = ProgramCache::with_opt(OptLevel::O2);
+        let _ = c.get_or_compile(&twin).unwrap();
+        let (ins, outs) = c.opt_stats();
+        assert_eq!(ins, 3);
+        assert_eq!(outs, 2, "the dead tanh must be optimized away");
     }
 }

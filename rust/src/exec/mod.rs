@@ -30,7 +30,11 @@
 //! reference and for one-shot evaluation; use `exec` wherever a graph is
 //! executed more than once. [`cache::ProgramCache`] keys compiled programs
 //! by canonical graph hash ([`crate::ir::canon::graph_hash`]) so elites
-//! and crossover-identical offspring skip recompilation entirely.
+//! and crossover-identical offspring skip recompilation entirely; at
+//! `--opt-level 1|2` it additionally canonicalizes each graph through the
+//! bit-identity-preserving optimizer pipeline ([`crate::opt`]) before
+//! hashing, so mutants that differ only by dead or redundant edits share
+//! one entry and the lowered programs are smaller.
 
 pub mod cache;
 

@@ -33,9 +33,8 @@ pub struct PredictionWorkload {
 }
 
 impl PredictionWorkload {
-    /// Build from a baseline graph and datasets. `fit` is subsampled to
-    /// `fit_batches` batches to bound per-variant cost (the paper uses the
-    /// full 50k set on a P100; we scale — DESIGN.md §3).
+    /// [`PredictionWorkload::new_with_opt`] at `OptLevel::O0` (graphs are
+    /// lowered exactly as materialized).
     pub fn new(
         baseline: &Graph,
         batch: usize,
@@ -43,6 +42,32 @@ impl PredictionWorkload {
         test: &Dataset,
         fit_batches: usize,
         metric: RuntimeMetric,
+    ) -> PredictionWorkload {
+        Self::new_with_opt(
+            baseline,
+            batch,
+            fit,
+            test,
+            fit_batches,
+            metric,
+            crate::opt::OptLevel::O0,
+        )
+    }
+
+    /// Build from a baseline graph and datasets. `fit` is subsampled to
+    /// `fit_batches` batches to bound per-variant cost (the paper uses the
+    /// full 50k set on a P100; we scale — DESIGN.md §3). `opt` sets the
+    /// program cache's optimizer level: execution results are bit-identical
+    /// at every level (the FLOPs objective is computed on the unoptimized
+    /// graph), only lowering cost and cache sharing change.
+    pub fn new_with_opt(
+        baseline: &Graph,
+        batch: usize,
+        fit: &Dataset,
+        test: &Dataset,
+        fit_batches: usize,
+        metric: RuntimeMetric,
+        opt: crate::opt::OptLevel,
     ) -> PredictionWorkload {
         let mk = |d: &Dataset, cap: usize| -> Vec<(Tensor, Vec<usize>)> {
             d.batches(batch)
@@ -63,7 +88,7 @@ impl PredictionWorkload {
             baseline_flops: baseline.total_flops() as f64,
             baseline_wall: 1.0,
             metric,
-            programs: ProgramCache::new(),
+            programs: ProgramCache::with_opt(opt),
         };
         // calibrate baseline wall-clock
         let t0 = Instant::now();
@@ -125,6 +150,10 @@ impl Evaluator for PredictionWorkload {
     fn exec_cache_stats(&self) -> Option<(usize, usize)> {
         Some(self.programs.stats())
     }
+
+    fn opt_level(&self) -> Option<crate::opt::OptLevel> {
+        Some(self.programs.opt_level())
+    }
 }
 
 #[cfg(test)]
@@ -158,6 +187,27 @@ mod tests {
         mobilenet::key_mutations(&mut g1, &[KeyMutation::DropLastConv]);
         let (t1, _) = wl.evaluate(&g1).unwrap();
         assert!(t1 < 1.0, "dropped conv should be cheaper, got {t1}");
+    }
+
+    #[test]
+    fn optimized_cache_scores_identically() {
+        // Bit-identity of the optimizer pipeline means the (deterministic)
+        // flops-metric objectives are the same at every opt level.
+        let spec = MobileNetSpec { batch: 4, side: 16, classes: 10, width: 4, blocks: 3 };
+        let w = mobilenet::random_weights(&spec, 1);
+        let g = mobilenet::predict_graph(&spec, &w);
+        let data = patterns::generate(64, spec.side, 2);
+        let (fit, test) = data.split(40);
+        let wl0 = PredictionWorkload::new_with_opt(
+            &g, spec.batch, &fit, &test, 4, RuntimeMetric::Flops, crate::opt::OptLevel::O0,
+        );
+        let wl2 = PredictionWorkload::new_with_opt(
+            &g, spec.batch, &fit, &test, 4, RuntimeMetric::Flops, crate::opt::OptLevel::O2,
+        );
+        assert_eq!(wl0.evaluate(&g), wl2.evaluate(&g));
+        let mut g1 = g.clone();
+        mobilenet::key_mutations(&mut g1, &[KeyMutation::DropLastConv]);
+        assert_eq!(wl0.evaluate(&g1), wl2.evaluate(&g1));
     }
 
     #[test]

@@ -39,6 +39,8 @@ pub struct TrainingWorkload {
 }
 
 impl TrainingWorkload {
+    /// [`TrainingWorkload::new_with_opt`] at `OptLevel::O0` (graphs are
+    /// lowered exactly as materialized).
     pub fn new(
         spec: TwoFcSpec,
         baseline_step: &Graph,
@@ -47,6 +49,33 @@ impl TrainingWorkload {
         epochs: usize,
         weight_seed: u64,
         metric: RuntimeMetric,
+    ) -> TrainingWorkload {
+        Self::new_with_opt(
+            spec,
+            baseline_step,
+            fit,
+            test,
+            epochs,
+            weight_seed,
+            metric,
+            crate::opt::OptLevel::O0,
+        )
+    }
+
+    /// Full constructor. `opt` sets the program cache's optimizer level:
+    /// training trajectories are bit-identical at every level (the FLOPs
+    /// objective is computed on the unoptimized step graph), only
+    /// lowering cost and cache sharing change.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with_opt(
+        spec: TwoFcSpec,
+        baseline_step: &Graph,
+        fit: Dataset,
+        test: Dataset,
+        epochs: usize,
+        weight_seed: u64,
+        metric: RuntimeMetric,
+        opt: crate::opt::OptLevel,
     ) -> TrainingWorkload {
         let fit_batches = fit.batches(spec.batch);
         let mut w = TrainingWorkload {
@@ -60,7 +89,7 @@ impl TrainingWorkload {
             baseline_flops: baseline_step.total_flops() as f64,
             baseline_wall: 1.0,
             metric,
-            programs: ProgramCache::new(),
+            programs: ProgramCache::with_opt(opt),
         };
         let t0 = Instant::now();
         let _ = w.train_and_score(baseline_step, false);
@@ -110,6 +139,10 @@ impl Evaluator for TrainingWorkload {
     fn exec_cache_stats(&self) -> Option<(usize, usize)> {
         Some(self.programs.stats())
     }
+
+    fn opt_level(&self) -> Option<crate::opt::OptLevel> {
+        Some(self.programs.opt_level())
+    }
 }
 
 #[cfg(test)]
@@ -148,6 +181,25 @@ mod tests {
             e_hi < e_lo - 0.03,
             "lr 0.3 should clearly beat lr 0.01 in one epoch: {e_lo} vs {e_hi}"
         );
+    }
+
+    #[test]
+    fn optimized_cache_trains_identically() {
+        // The optimizer pipeline is bit-identity-preserving, so the SGD
+        // trajectory — thousands of compiled-step executions — lands on
+        // exactly the same weights and the same flops-metric objectives.
+        let spec = TwoFcSpec { batch: 16, input: 196, hidden: 16, classes: 10, lr: 0.2 };
+        let step = twofc::train_step_graph(&spec);
+        let mk = |opt| {
+            let data = digits::generate(320, spec.side(), 7);
+            let (fit, test) = data.split(256);
+            TrainingWorkload::new_with_opt(
+                spec, &step, fit, test, 1, 1, RuntimeMetric::Flops, opt,
+            )
+        };
+        let wl0 = mk(crate::opt::OptLevel::O0);
+        let wl2 = mk(crate::opt::OptLevel::O2);
+        assert_eq!(wl0.evaluate(&step), wl2.evaluate(&step));
     }
 
     #[test]

@@ -44,6 +44,48 @@ impl std::fmt::Display for EvalError {
 
 impl std::error::Error for EvalError {}
 
+/// Apply one non-parameter op to already-materialized operands through
+/// the [`crate::tensor::ops`] kernels — the single dispatch point shared
+/// by [`eval`] and the optimizer's constant folder
+/// ([`crate::opt::passes::ConstantFold`]), which is what makes folding
+/// bit-identical to execution: the fold *is* an execution.
+///
+/// `args` must match the op's arity (callers evaluate verified graphs).
+/// Panics on `Parameter`, whose value binding is the caller's job.
+pub(crate) fn eval_op(kind: &OpKind, args: &[&Tensor]) -> Tensor {
+    match kind {
+        OpKind::Parameter { .. } => unreachable!("parameters are bound by the caller"),
+        OpKind::Constant { value } => value.clone(),
+        OpKind::Add => ops::add(args[0], args[1]),
+        OpKind::Subtract => ops::sub(args[0], args[1]),
+        OpKind::Multiply => ops::mul(args[0], args[1]),
+        OpKind::Divide => ops::div(args[0], args[1]),
+        OpKind::Maximum => ops::maximum(args[0], args[1]),
+        OpKind::Minimum => ops::minimum(args[0], args[1]),
+        OpKind::CompareGt => ops::compare_gt(args[0], args[1]),
+        OpKind::Exponential => ops::exp(args[0]),
+        OpKind::Log => ops::log(args[0]),
+        OpKind::Negate => ops::neg(args[0]),
+        OpKind::Sqrt => ops::sqrt(args[0]),
+        OpKind::Rsqrt => ops::rsqrt(args[0]),
+        OpKind::Tanh => ops::tanh(args[0]),
+        OpKind::Select => ops::select(args[0], args[1], args[2]),
+        OpKind::Dot => ops::dot(args[0], args[1]),
+        OpKind::Reshape { dims } => args[0].reshaped(dims),
+        OpKind::Broadcast { dims, mapping } => ops::broadcast_in_dim(args[0], dims, mapping),
+        OpKind::Transpose { perm } => ops::transpose(args[0], perm),
+        OpKind::Pad { low, high, value } => ops::pad(args[0], low, high, *value),
+        OpKind::Slice { starts, limits } => ops::slice(args[0], starts, limits),
+        OpKind::Concat { dim } => ops::concat(&[args[0], args[1]], *dim),
+        OpKind::Reduce { dims, kind } => ops::reduce(args[0], dims, *kind),
+        OpKind::Conv2d { stride, same } => ops::conv2d(args[0], args[1], *stride, *same),
+        OpKind::DepthwiseConv2d { stride, same } => {
+            ops::depthwise_conv2d(args[0], args[1], *stride, *same)
+        }
+        OpKind::GlobalAvgPool => ops::global_avg_pool(args[0]),
+    }
+}
+
 /// Evaluate `g` on `inputs` (one tensor per entry parameter, in index
 /// order), returning the output tensors in order.
 pub fn eval(g: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, EvalError> {
@@ -53,7 +95,6 @@ pub fn eval(g: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, EvalError> {
     }
     let mut env: HashMap<ValueId, Tensor> = HashMap::with_capacity(g.len());
     for inst in g.insts() {
-        let get = |id: ValueId| env.get(&id).ok_or(EvalError::Missing(id));
         let out = match &inst.kind {
             OpKind::Parameter { index } => {
                 let t = &inputs[*index];
@@ -67,47 +108,13 @@ pub fn eval(g: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, EvalError> {
                 t.clone()
             }
             OpKind::Constant { value } => value.clone(),
-            OpKind::Add => ops::add(get(inst.args[0])?, get(inst.args[1])?),
-            OpKind::Subtract => ops::sub(get(inst.args[0])?, get(inst.args[1])?),
-            OpKind::Multiply => ops::mul(get(inst.args[0])?, get(inst.args[1])?),
-            OpKind::Divide => ops::div(get(inst.args[0])?, get(inst.args[1])?),
-            OpKind::Maximum => ops::maximum(get(inst.args[0])?, get(inst.args[1])?),
-            OpKind::Minimum => ops::minimum(get(inst.args[0])?, get(inst.args[1])?),
-            OpKind::CompareGt => ops::compare_gt(get(inst.args[0])?, get(inst.args[1])?),
-            OpKind::Exponential => ops::exp(get(inst.args[0])?),
-            OpKind::Log => ops::log(get(inst.args[0])?),
-            OpKind::Negate => ops::neg(get(inst.args[0])?),
-            OpKind::Sqrt => ops::sqrt(get(inst.args[0])?),
-            OpKind::Rsqrt => ops::rsqrt(get(inst.args[0])?),
-            OpKind::Tanh => ops::tanh(get(inst.args[0])?),
-            OpKind::Select => ops::select(
-                get(inst.args[0])?,
-                get(inst.args[1])?,
-                get(inst.args[2])?,
-            ),
-            OpKind::Dot => ops::dot(get(inst.args[0])?, get(inst.args[1])?),
-            OpKind::Reshape { dims } => get(inst.args[0])?.reshaped(dims),
-            OpKind::Broadcast { dims, mapping } => {
-                ops::broadcast_in_dim(get(inst.args[0])?, dims, mapping)
+            kind => {
+                let mut argv: Vec<&Tensor> = Vec::with_capacity(inst.args.len());
+                for a in &inst.args {
+                    argv.push(env.get(a).ok_or(EvalError::Missing(*a))?);
+                }
+                eval_op(kind, &argv)
             }
-            OpKind::Transpose { perm } => ops::transpose(get(inst.args[0])?, perm),
-            OpKind::Pad { low, high, value } => {
-                ops::pad(get(inst.args[0])?, low, high, *value)
-            }
-            OpKind::Slice { starts, limits } => {
-                ops::slice(get(inst.args[0])?, starts, limits)
-            }
-            OpKind::Concat { dim } => {
-                ops::concat(&[get(inst.args[0])?, get(inst.args[1])?], *dim)
-            }
-            OpKind::Reduce { dims, kind } => ops::reduce(get(inst.args[0])?, dims, *kind),
-            OpKind::Conv2d { stride, same } => {
-                ops::conv2d(get(inst.args[0])?, get(inst.args[1])?, *stride, *same)
-            }
-            OpKind::DepthwiseConv2d { stride, same } => {
-                ops::depthwise_conv2d(get(inst.args[0])?, get(inst.args[1])?, *stride, *same)
-            }
-            OpKind::GlobalAvgPool => ops::global_avg_pool(get(inst.args[0])?),
         };
         debug_assert_eq!(
             out.dims(),

@@ -96,6 +96,21 @@ pub fn graph_hash(g: &Graph) -> u128 {
     h.finish()
 }
 
+/// Hash one instruction: the op's variant tag and attributes (constant
+/// payload bits included) plus caller-supplied argument keys. This is the
+/// bucket key for common-subexpression elimination in [`crate::opt`] —
+/// the caller confirms a candidate match by exact (bitwise) comparison,
+/// so a collision can never merge distinct computations.
+pub fn inst_hash(kind: &OpKind, args: &[u64]) -> u128 {
+    let mut h = Fnv::new();
+    mix_kind(&mut h, kind);
+    h.usize(args.len());
+    for &a in args {
+        h.word(a);
+    }
+    h.finish()
+}
+
 fn mix_kind(h: &mut Fnv, kind: &OpKind) {
     // A distinct tag per variant, then the attributes.
     match kind {
@@ -216,6 +231,19 @@ mod tests {
         let outs: Vec<ValueId> = g.outputs().iter().map(|o| ValueId(o.0 + 100)).collect();
         let g2 = Graph::from_parts("c2", insts, outs).unwrap();
         assert_eq!(graph_hash(&g), graph_hash(&g2), "renumbering must not change the hash");
+    }
+
+    #[test]
+    fn inst_hash_distinguishes_kind_args_and_payload_bits() {
+        let a = inst_hash(&OpKind::Add, &[0, 1]);
+        assert_eq!(a, inst_hash(&OpKind::Add, &[0, 1]));
+        assert_ne!(a, inst_hash(&OpKind::Multiply, &[0, 1]));
+        assert_ne!(a, inst_hash(&OpKind::Add, &[1, 0]));
+        assert_ne!(a, inst_hash(&OpKind::Add, &[0, 1, 2]));
+        // constant payloads hash by bit pattern: ±0.0 must differ
+        let pz = inst_hash(&OpKind::Constant { value: Tensor::full(&[2], 0.0) }, &[]);
+        let nz = inst_hash(&OpKind::Constant { value: Tensor::full(&[2], -0.0) }, &[]);
+        assert_ne!(pz, nz);
     }
 
     #[test]

@@ -344,29 +344,91 @@ impl Graph {
     }
 
     /// Dead-code elimination: drop instructions whose values are never
-    /// used (transitively), keeping parameters (signature stability).
-    /// Returns the number of instructions removed. Used to normalize
-    /// graphs before reporting / FLOP comparison, like the compiler
-    /// cleanup passes the paper's IREE pipeline applies.
+    /// used (transitively), keeping parameters (signature stability —
+    /// params are never removed, even when dead). Returns the number of
+    /// instructions removed. Output slots that alias the same value are
+    /// marked once and all remain valid; output ids that do not resolve
+    /// to an instruction (possible on graphs mid-repair) are ignored
+    /// rather than tripping the marker. Used to normalize graphs before
+    /// reporting / FLOP comparison, and promoted into the optimizer
+    /// pipeline as [`crate::opt::passes::Dce`].
     pub fn eliminate_dead_code(&mut self) -> usize {
-        let mut live: BTreeMap<ValueId, bool> =
-            self.insts.iter().map(|i| (i.id, false)).collect();
-        let mut stack: Vec<ValueId> = self.outputs.clone();
-        while let Some(v) = stack.pop() {
-            if let Some(flag) = live.get_mut(&v) {
-                if !*flag {
-                    *flag = true;
-                    if let Some(inst) = self.inst(v) {
-                        stack.extend(inst.args.iter().copied());
+        let pos_of: BTreeMap<ValueId, usize> =
+            self.insts.iter().enumerate().map(|(p, i)| (i.id, p)).collect();
+        let mut live = vec![false; self.insts.len()];
+        let mut stack: Vec<usize> =
+            self.outputs.iter().filter_map(|o| pos_of.get(o).copied()).collect();
+        while let Some(p) = stack.pop() {
+            if live[p] {
+                continue; // aliased outputs / shared operands: mark once
+            }
+            live[p] = true;
+            for a in &self.insts[p].args {
+                if let Some(&ap) = pos_of.get(a) {
+                    if !live[ap] {
+                        stack.push(ap);
                     }
                 }
             }
         }
         let before = self.insts.len();
+        let mut keep = live.into_iter();
         self.insts.retain(|i| {
-            matches!(i.kind, OpKind::Parameter { .. }) || *live.get(&i.id).unwrap_or(&false)
+            let l = keep.next().unwrap_or(false);
+            matches!(i.kind, OpKind::Parameter { .. }) || l
         });
         before - self.insts.len()
+    }
+
+    /// Rewrite the instruction at `pos` in place — new kind and operands,
+    /// same [`ValueId`] (so every use stays valid) and same label. The
+    /// re-inferred result type must equal the recorded one: rewrites may
+    /// never change a value's type. Parameters can be neither rewritten
+    /// nor introduced. This is the primitive behind the optimizer's
+    /// constant-folding and chain-composition rules
+    /// ([`crate::opt::passes`]).
+    pub fn rewrite_at(
+        &mut self,
+        pos: usize,
+        kind: OpKind,
+        args: &[ValueId],
+    ) -> Result<(), IrError> {
+        if pos >= self.insts.len() {
+            return Err(IrError::Graph(format!("rewrite position {pos} out of range")));
+        }
+        if matches!(self.insts[pos].kind, OpKind::Parameter { .. })
+            || matches!(kind, OpKind::Parameter { .. })
+        {
+            return Err(IrError::Graph("cannot rewrite a parameter".into()));
+        }
+        for &a in args {
+            match self.index_of(a) {
+                None => return Err(IrError::UnknownValue(a)),
+                Some(i) if i >= pos => return Err(IrError::UseBeforeDef(a)),
+                _ => {}
+            }
+        }
+        let new_ty = match &kind {
+            OpKind::Constant { value } => {
+                if !args.is_empty() {
+                    return Err(IrError::Graph("constant takes no operands".into()));
+                }
+                TType::of(value.dims())
+            }
+            k => {
+                let arg_tys: Vec<&TType> = args.iter().map(|a| self.ty(*a).unwrap()).collect();
+                infer(k, &arg_tys)?
+            }
+        };
+        if new_ty != self.insts[pos].ty {
+            return Err(IrError::Shape {
+                op: kind.mnemonic().to_string(),
+                msg: format!("rewrite changes result type {} -> {new_ty}", self.insts[pos].ty),
+            });
+        }
+        self.insts[pos].kind = kind;
+        self.insts[pos].args = args.to_vec();
+        Ok(())
     }
 
     // ---- reporting -----------------------------------------------------------
@@ -503,6 +565,91 @@ mod tests {
         assert_eq!(removed, 1);
         assert!(g.index_of(dead).is_none());
         assert_eq!(g.num_params(), 2);
+    }
+
+    #[test]
+    fn dce_handles_outputs_aliasing_one_value() {
+        let (mut g, x, _, _) = small();
+        let out = g.outputs()[0];
+        // the same value in several output slots plus a dead op on top
+        let dead = g.push(OpKind::Exponential, &[x]).unwrap();
+        g.set_outputs(&[out, out, out]);
+        assert_eq!(g.eliminate_dead_code(), 1);
+        assert!(g.index_of(dead).is_none());
+        assert_eq!(g.outputs(), &[out, out, out], "aliased output slots must survive");
+        assert!(crate::ir::verify::verify(&g).is_ok());
+    }
+
+    #[test]
+    fn dce_keeps_dead_parameters() {
+        let mut g = Graph::new("t");
+        let _unused = g.param(TType::of(&[3]));
+        let x = g.param(TType::of(&[2]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let dead = g.push(OpKind::Tanh, &[x]).unwrap();
+        g.set_outputs(&[e]);
+        assert_eq!(g.eliminate_dead_code(), 1, "only the dead tanh goes");
+        assert!(g.index_of(dead).is_none());
+        assert_eq!(g.num_params(), 2, "parameters are structural, dead or not");
+        assert!(crate::ir::verify::verify(&g).is_ok());
+    }
+
+    #[test]
+    fn dce_param_as_output_and_transitive_chains() {
+        let mut g = Graph::new("t");
+        let x = g.param(TType::of(&[2]));
+        // dead chain: e -> t -> n (nothing reaches the outputs)
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let t = g.push(OpKind::Tanh, &[e]).unwrap();
+        let n = g.push(OpKind::Negate, &[t]).unwrap();
+        g.set_outputs(&[x]);
+        assert_eq!(g.eliminate_dead_code(), 3, "the whole dead chain must go");
+        for v in [e, t, n] {
+            assert!(g.index_of(v).is_none());
+        }
+        assert_eq!(g.outputs(), &[x]);
+        assert!(crate::ir::verify::verify(&g).is_ok());
+    }
+
+    #[test]
+    fn dce_is_idempotent() {
+        let (mut g, x, _, _) = small();
+        g.push(OpKind::Exponential, &[x]).unwrap();
+        assert_eq!(g.eliminate_dead_code(), 1);
+        assert_eq!(g.eliminate_dead_code(), 0, "second sweep must find nothing");
+    }
+
+    #[test]
+    fn rewrite_at_keeps_id_and_uses() {
+        let (mut g, x, _, d) = small();
+        let pos = g.index_of(d).unwrap();
+        // rewrite dot -> same-typed constant; downstream uses stay wired
+        let uses_before = g.uses_of(d).len();
+        g.rewrite_at(pos, OpKind::Constant { value: Tensor::zeros(&[4, 2]) }, &[])
+            .unwrap();
+        assert_eq!(g.inst_at(pos).id, d, "rewrite must keep the value id");
+        assert_eq!(g.uses_of(d).len(), uses_before);
+        assert!(crate::ir::verify::verify(&g).is_ok());
+        let _ = x;
+    }
+
+    #[test]
+    fn rewrite_at_rejects_type_change_and_bad_refs() {
+        let (mut g, x, w, d) = small();
+        let pos = g.index_of(d).unwrap();
+        // result type change: [4,2] -> [4,3]
+        assert!(g
+            .rewrite_at(pos, OpKind::Constant { value: Tensor::zeros(&[4, 3]) }, &[])
+            .is_err());
+        // operand defined later than pos
+        let later = g.outputs()[0];
+        assert!(g.rewrite_at(pos, OpKind::Exponential, &[later]).is_err());
+        // parameters can be neither target nor replacement
+        assert!(g.rewrite_at(0, OpKind::Constant { value: Tensor::zeros(&[4, 3]) }, &[]).is_err());
+        assert!(g.rewrite_at(pos, OpKind::Parameter { index: 9 }, &[]).is_err());
+        // graph unchanged by all the failures
+        assert_eq!(g.inst_at(pos).args, vec![x, w]);
+        assert!(crate::ir::verify::verify(&g).is_ok());
     }
 
     #[test]

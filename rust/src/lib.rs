@@ -16,6 +16,11 @@
 //!   once (slot assignment, liveness, buffer arena, in-place kernels) and
 //!   re-executes it bit-identically to [`interp`]; this is what the
 //!   fitness inner loop runs.
+//! * [`opt`] — the graph optimizer: a deterministic, bit-identity-
+//!   preserving pass pipeline (constant folding, CSE, algebraic
+//!   simplification, DCE) that canonicalizes graphs ahead of the program
+//!   cache, plus post-search patch minimization with per-edit
+//!   attribution.
 //! * [`runtime`] — PJRT execution of AOT artifacts produced by the JAX
 //!   compile path (`python/compile/aot.py`), and of HLO text emitted from
 //!   (possibly mutated) IR graphs.
@@ -35,6 +40,7 @@ pub mod tensor;
 pub mod ir;
 pub mod interp;
 pub mod exec;
+pub mod opt;
 pub mod evo;
 pub mod fitness;
 pub mod data;

@@ -15,12 +15,14 @@
 use gevo_ml::coordinator::{self, report, ExperimentConfig, WorkloadKind};
 use gevo_ml::evo::search::SearchConfig;
 use gevo_ml::fitness::RuntimeMetric;
+use gevo_ml::opt::OptLevel;
 use gevo_ml::util::cli::Args;
 
 fn main() {
     let args = Args::parse_env(true);
     match args.subcommand.as_deref() {
         Some("search") => cmd_search(&args),
+        Some("minimize") => cmd_minimize(&args),
         Some("table1") => cmd_table1(),
         Some("analyze") => cmd_analyze(&args),
         Some("show") => cmd_show(&args),
@@ -44,11 +46,18 @@ USAGE: gevo-ml <subcommand> [flags]
            [--metric flops|wall|blend] [--fit N] [--test N] [--epochs N]
            [--workers N] [--islands K] [--migration-interval M]
            [--migrants N] [--checkpoint FILE] [--checkpoint-every N]
-           [--out PREFIX] [--quiet]
+           [--opt-level 0|1|2] [--out PREFIX] [--quiet]
            --islands shards the population into K ring-connected
            subpopulations; --checkpoint saves resumable state every
            --checkpoint-every generations (an existing file is resumed,
-           targeting --gens)
+           targeting --gens); --opt-level canonicalizes candidate graphs
+           through the bit-identity-preserving optimizer pipeline before
+           lowering (0 = off, reproduces historical behavior exactly;
+           default 2)
+  minimize same flags as search; after the search (or checkpoint resume)
+           delta-debugs every Pareto-front edit list down to the edits
+           that matter and prints the per-edit attribution table; never
+           degrades a front point's objective vector
   table1   print the paper's Table 1 (model layer composition)
   analyze  --model mobilenet|2fcnet   (§6.1 / §6.2 mutation analysis)
   show     --workload 2fcnet|mobilenet [--hlo]   print IR or emitted HLO
@@ -75,14 +84,16 @@ fn search_config(args: &Args) -> SearchConfig {
         migration_interval: args.usize_or("migration-interval", 4),
         migrants: args.usize_or("migrants", 2),
         checkpoint_every: args.usize_or("checkpoint-every", 1),
+        opt_level: OptLevel::parse(&args.get_or("opt-level", "2"))
+            .unwrap_or_else(|| panic!("--opt-level must be 0, 1 or 2")),
         verbose: !args.flag("quiet"),
     }
 }
 
-fn cmd_search(args: &Args) {
+fn experiment_config(args: &Args, minimize_front: bool) -> ExperimentConfig {
     let kind = WorkloadKind::parse(&args.get_or("workload", "2fcnet"))
         .unwrap_or_else(|| panic!("--workload must be 2fcnet or mobilenet"));
-    let cfg = ExperimentConfig {
+    ExperimentConfig {
         kind,
         search: search_config(args),
         metric: RuntimeMetric::parse(&args.get_or("metric", "flops"))
@@ -93,10 +104,28 @@ fn cmd_search(args: &Args) {
         data_seed: args.u64_or("data-seed", 7),
         weight_seed: args.u64_or("weight-seed", 1),
         checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
-    };
+        minimize_front,
+    }
+}
+
+fn write_out(args: &Args, r: &coordinator::ExperimentResult) {
+    if let Some(prefix) = args.get("out") {
+        std::fs::write(format!("{prefix}.json"), report::to_json(r).to_pretty()).unwrap();
+        std::fs::write(format!("{prefix}.csv"), report::front_csv(r)).unwrap();
+        eprintln!("[gevo-ml] wrote {prefix}.json / {prefix}.csv");
+    }
+}
+
+fn cmd_search(args: &Args) {
+    let cfg = experiment_config(args, false);
     eprintln!(
-        "[gevo-ml] running {kind:?} search: pop={} gens={} seed={} islands={}",
-        cfg.search.pop_size, cfg.search.generations, cfg.search.seed, cfg.search.islands
+        "[gevo-ml] running {:?} search: pop={} gens={} seed={} islands={} opt-level={}",
+        cfg.kind,
+        cfg.search.pop_size,
+        cfg.search.generations,
+        cfg.search.seed,
+        cfg.search.islands,
+        cfg.search.opt_level
     );
     let r = coordinator::run_experiment(&cfg);
     println!("{}", report::ascii_scatter(&r, 64, 16));
@@ -111,11 +140,51 @@ fn cmd_search(args: &Args) {
     if let Some((hits, misses)) = r.search.program_cache {
         println!("program cache: {hits} hits / {misses} lowerings");
     }
-    if let Some(prefix) = args.get("out") {
-        std::fs::write(format!("{prefix}.json"), report::to_json(&r).to_pretty()).unwrap();
-        std::fs::write(format!("{prefix}.csv"), report::front_csv(&r)).unwrap();
-        eprintln!("[gevo-ml] wrote {prefix}.json / {prefix}.csv");
+    write_out(args, &r);
+}
+
+fn cmd_minimize(args: &Args) {
+    let cfg = experiment_config(args, true);
+    eprintln!(
+        "[gevo-ml] running {:?} search + front minimization: pop={} gens={} seed={} opt-level={}",
+        cfg.kind,
+        cfg.search.pop_size,
+        cfg.search.generations,
+        cfg.search.seed,
+        cfg.search.opt_level
+    );
+    let r = coordinator::run_experiment(&cfg);
+    println!("{}", report::front_markdown(&r));
+    println!("{}", report::attribution_markdown(&r));
+    // The minimizer's contract, re-checked at the CLI boundary so the CI
+    // smoke step fails loudly if it ever regresses.
+    let mut points = 0usize;
+    let mut removed = 0usize;
+    let mut evals = 0usize;
+    for p in &r.front {
+        let Some(m) = &p.minimized else { continue };
+        assert!(
+            m.fit.0 <= m.start.0 && m.fit.1 <= m.start.1,
+            "minimize degraded a front point: {:?} -> {:?}",
+            m.start,
+            m.fit
+        );
+        assert!(m.edits <= p.edits, "minimize grew an edit list");
+        points += 1;
+        removed += m.removed;
+        evals += m.evaluations;
     }
+    // A front that minimized nothing means the feature is broken, not
+    // that there was nothing to do — the baseline's empty patch alone
+    // always minimizes. Keep the CI grep from passing vacuously.
+    assert!(
+        r.front.is_empty() || points > 0,
+        "no front point produced a minimization result"
+    );
+    println!(
+        "minimize: objectives preserved: OK ({points} front points, {removed} edits removed, {evals} re-evaluations)"
+    );
+    write_out(args, &r);
 }
 
 fn cmd_table1() {

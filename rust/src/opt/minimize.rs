@@ -1,0 +1,303 @@
+//! Post-search patch minimization and per-edit attribution.
+//!
+//! GEVO (arXiv:2004.08140) ships a delta-debugging minimization step
+//! because most edits in an evolved patch are neutral hitchhikers — the
+//! follow-up analysis (arXiv:2208.12350) finds the large majority of raw
+//! edits contribute nothing — and GEVO-ML's §6.1/§6.2 "key mutation"
+//! analyses are exactly the question "which edits matter?". This module
+//! automates both over the patch genome:
+//!
+//! * [`minimize`] — shrink an [`Individual`]'s edit list while **never
+//!   degrading** its objective vector, re-evaluating every candidate
+//!   through the same fitness workload the search used. Classic ddmin
+//!   shape: coarse contiguous chunks first, then single-edit removal to a
+//!   1-minimal fixed point.
+//! * Attribution — for each *surviving* edit, the objective delta when
+//!   that edit alone is removed from the minimized patch. After
+//!   1-minimality every delta is either a strict degradation or `None`
+//!   (removing the edit makes the patch invalid): each surviving edit is
+//!   individually load-bearing.
+//!
+//! With the deterministic `flops` runtime metric the whole procedure is
+//! reproducible bit-for-bit; with wall-clock metrics the non-degradation
+//! guarantee still holds relative to the timings actually measured.
+
+use crate::evo::nsga2::Objectives;
+use crate::evo::patch::{Edit, Individual};
+use crate::evo::search::Evaluator;
+use crate::ir::Graph;
+use std::collections::HashMap;
+
+/// One surviving edit's contribution.
+#[derive(Debug, Clone)]
+pub struct EditAttribution {
+    pub edit: Edit,
+    /// `(runtime, error)` delta when this edit alone is removed from the
+    /// minimized patch — positive components mean the patch gets *worse*
+    /// without the edit. `None`: the reduced patch fails to materialize
+    /// or evaluate (the edit is structurally required).
+    pub delta: Option<Objectives>,
+}
+
+/// Outcome of [`minimize`].
+#[derive(Debug, Clone)]
+pub struct MinimizeResult {
+    /// The reduced individual; `objectives` is set to [`MinimizeResult::objectives`].
+    pub minimized: Individual,
+    /// Re-evaluated objectives of the *full* edit list (the baseline every
+    /// removal was measured against).
+    pub start: Objectives,
+    /// Objectives of the minimized list; component-wise `<= start`.
+    pub objectives: Objectives,
+    /// Edits removed (`original len - minimized len`).
+    pub removed: usize,
+    /// Distinct evaluator calls spent (minimization + attribution;
+    /// candidate edit lists are memoized, so repeats are free).
+    pub evaluations: usize,
+    /// Per-surviving-edit attribution, in edit-list order.
+    pub attribution: Vec<EditAttribution>,
+}
+
+/// Delta-debug `ind`'s edit list against `eval` (the search's fitness
+/// workload): a removal is kept only when the re-evaluated objectives are
+/// no worse in *both* components, so the result never degrades the
+/// objective vector and strictly shrinks or preserves the edit list.
+///
+/// Returns `None` when the full edit list itself fails to materialize or
+/// evaluate — there is no objective vector to preserve.
+pub fn minimize(
+    original: &Graph,
+    ind: &Individual,
+    eval: &dyn Evaluator,
+) -> Option<MinimizeResult> {
+    let mut evaluations = 0usize;
+    // Memoized by the edit-list fitness-cache key: the final (rejecting)
+    // ddmin sweep and the attribution phase probe the same single-removal
+    // candidates, and each evaluation is a full workload run — pay once.
+    let mut memo: HashMap<u64, Option<Objectives>> = HashMap::new();
+    let mut eval_edits = |edits: &[Edit]| -> Option<Objectives> {
+        let cand = Individual::new(edits.to_vec());
+        let key = cand.cache_key();
+        if let Some(hit) = memo.get(&key) {
+            return *hit;
+        }
+        let obj = match cand.materialize(original) {
+            Ok(g) => {
+                evaluations += 1;
+                eval.evaluate(&g)
+            }
+            Err(_) => None,
+        };
+        memo.insert(key, obj);
+        obj
+    };
+
+    let start = eval_edits(&ind.edits)?;
+    let mut best: Vec<Edit> = ind.edits.clone();
+    let mut best_obj = start;
+    let not_worse = |o: Objectives, b: Objectives| o.0 <= b.0 && o.1 <= b.1;
+
+    // Phase 1: coarse contiguous chunks (classic delta debugging) — cheap
+    // when many edits are hitchhikers, harmless when none are.
+    let mut chunk = best.len() / 2;
+    while chunk > 1 {
+        let mut i = 0;
+        while i < best.len() {
+            let end = (i + chunk).min(best.len());
+            let mut cand = best[..i].to_vec();
+            cand.extend_from_slice(&best[end..]);
+            if let Some(o) = eval_edits(&cand) {
+                if not_worse(o, best_obj) {
+                    best = cand;
+                    best_obj = o;
+                    continue; // same i now addresses the next chunk
+                }
+            }
+            i = end;
+        }
+        chunk /= 2;
+    }
+
+    // Phase 2: single-edit removal to a 1-minimal fixed point.
+    loop {
+        let mut removed_any = false;
+        let mut i = 0;
+        while i < best.len() {
+            let mut cand = best.clone();
+            cand.remove(i);
+            if let Some(o) = eval_edits(&cand) {
+                if not_worse(o, best_obj) {
+                    best = cand;
+                    best_obj = o;
+                    removed_any = true;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+        if !removed_any {
+            break;
+        }
+    }
+
+    // Attribution over the survivors: each is individually load-bearing
+    // after 1-minimality, and the delta quantifies by how much.
+    let attribution: Vec<EditAttribution> = (0..best.len())
+        .map(|i| {
+            let mut cand = best.clone();
+            cand.remove(i);
+            let delta =
+                eval_edits(&cand).map(|o| (o.0 - best_obj.0, o.1 - best_obj.1));
+            EditAttribution { edit: best[i], delta }
+        })
+        .collect();
+
+    let removed = ind.edits.len() - best.len();
+    let mut minimized = Individual::new(best);
+    minimized.objectives = Some(best_obj);
+    Some(MinimizeResult {
+        minimized,
+        start,
+        objectives: best_obj,
+        removed,
+        evaluations,
+        attribution,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evo::mutate::valid_random_edit;
+    use crate::ir::op::{OpKind, ReduceKind};
+    use crate::ir::types::TType;
+    use crate::util::rng::Rng;
+
+    /// The search tests' toy workload: runtime = normalized FLOPs, error =
+    /// relative output deviation on one input — fully deterministic.
+    fn toy() -> (Graph, impl Evaluator) {
+        let mut g = Graph::new("toy");
+        let x = g.param(TType::of(&[4, 4]));
+        let e1 = g.push(OpKind::Exponential, &[x]).unwrap();
+        let t = g.push(OpKind::Tanh, &[e1]).unwrap();
+        let a = g.push(OpKind::Add, &[t, x]).unwrap();
+        let r = g
+            .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[a])
+            .unwrap();
+        g.set_outputs(&[r]);
+        let base_flops = g.total_flops() as f64;
+        let input = crate::tensor::Tensor::iota(&[4, 4]);
+        let baseline = crate::interp::eval(&g, &[input.clone()]).unwrap()[0].item() as f64;
+        let eval = move |vg: &Graph| -> Option<Objectives> {
+            let out = crate::interp::eval(vg, &[input.clone()]).ok()?;
+            if out[0].has_non_finite() {
+                return None;
+            }
+            let err = (out[0].item() as f64 - baseline).abs() / baseline.abs().max(1e-9);
+            let time = vg.total_flops() as f64 / base_flops;
+            Some((time, err))
+        };
+        (g, eval)
+    }
+
+    fn chain(g: &Graph, rng: &mut Rng, n: usize) -> Individual {
+        let mut ind = Individual::original();
+        let mut cur = g.clone();
+        for _ in 0..n {
+            if let Some((edit, ng)) = valid_random_edit(&cur, rng, 25) {
+                ind.edits.push(edit);
+                cur = ng;
+            }
+        }
+        ind
+    }
+
+    #[test]
+    fn never_degrades_and_never_grows() {
+        let (g, eval) = toy();
+        let mut rng = Rng::new(0x41);
+        let mut minimized_any = false;
+        for _ in 0..20 {
+            let n = rng.range(1, 6);
+            let ind = chain(&g, &mut rng, n);
+            let Some(res) = minimize(&g, &ind, &eval) else { continue };
+            assert!(res.minimized.edits.len() <= ind.edits.len());
+            assert_eq!(res.removed, ind.edits.len() - res.minimized.edits.len());
+            assert!(
+                res.objectives.0 <= res.start.0 && res.objectives.1 <= res.start.1,
+                "minimize degraded {:?} -> {:?}",
+                res.start,
+                res.objectives
+            );
+            assert!(res.evaluations > 0);
+            if res.removed > 0 {
+                minimized_any = true;
+            }
+        }
+        assert!(minimized_any, "random chains should contain at least one neutral edit");
+    }
+
+    #[test]
+    fn result_is_one_minimal() {
+        // Re-minimizing a minimized individual must be a no-op, and every
+        // surviving edit's solo-removal must degrade or invalidate.
+        let (g, eval) = toy();
+        let mut rng = Rng::new(0x42);
+        let mut checked = 0;
+        for _ in 0..10 {
+            let ind = chain(&g, &mut rng, 4);
+            let Some(res) = minimize(&g, &ind, &eval) else { continue };
+            let again = minimize(&g, &res.minimized, &eval).unwrap();
+            assert_eq!(again.removed, 0, "re-minimization must not remove more edits");
+            assert_eq!(again.minimized.edits, res.minimized.edits);
+            assert_eq!(res.attribution.len(), res.minimized.edits.len());
+            for at in &res.attribution {
+                if let Some((dt, de)) = at.delta {
+                    assert!(
+                        dt > 0.0 || de > 0.0,
+                        "surviving edit {} is removable for free (delta {dt}, {de})",
+                        at.edit
+                    );
+                }
+            }
+            checked += 1;
+        }
+        assert!(checked > 3, "too few chains minimized ({checked})");
+    }
+
+    #[test]
+    fn empty_individual_minimizes_to_itself() {
+        let (g, eval) = toy();
+        let res = minimize(&g, &Individual::original(), &eval).unwrap();
+        assert_eq!(res.minimized.edits.len(), 0);
+        assert_eq!(res.removed, 0);
+        assert_eq!(res.start, res.objectives);
+        assert!(res.attribution.is_empty());
+    }
+
+    #[test]
+    fn unevaluable_individual_returns_none() {
+        let (g, _) = toy();
+        let reject_all = |_: &Graph| -> Option<Objectives> { None };
+        let ind = Individual::original();
+        assert!(minimize(&g, &ind, &reject_all).is_none());
+    }
+
+    #[test]
+    fn deterministic_for_a_deterministic_evaluator() {
+        let (g, eval) = toy();
+        let mut rng = Rng::new(0x43);
+        let ind = chain(&g, &mut rng, 5);
+        let a = minimize(&g, &ind, &eval);
+        let b = minimize(&g, &ind, &eval);
+        match (a, b) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.minimized.edits, y.minimized.edits);
+                assert_eq!(x.objectives, y.objectives);
+                assert_eq!(x.evaluations, y.evaluations);
+            }
+            (None, None) => {}
+            _ => panic!("minimize must be deterministic"),
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Graph optimizer — a deterministic pass pipeline over [`crate::ir::Graph`]
+//! plus post-search patch minimization.
+//!
+//! GEVO-ML's predecessor (GEVO, Liou et al. 2020) ships a post-search
+//! patch-minimization step because most raw edits in a winning patch are
+//! neutral noise (the follow-up analysis, arXiv:2208.12350, measures the
+//! fraction); the paper's own IREE pipeline likewise runs compiler cleanup
+//! passes over every mutated MLIR module before executing it. This module
+//! is the reproduction's analog of both:
+//!
+//! * [`PassManager`] — a fixed-point driver over **semantics-preserving**
+//!   rewrites: constant folding (through the interpreter's own kernels),
+//!   common-subexpression elimination (keyed by [`crate::ir::canon`]
+//!   instruction hashing), algebraic simplification, and dead-code
+//!   elimination (promoting [`Graph::eliminate_dead_code`]). Every pass is
+//!   **bit-identity-preserving**: an optimized graph produces exactly the
+//!   same output bits as the original on every input (enforced by
+//!   `rust/tests/opt_differential.rs`). Rules that are algebraically true
+//!   but not bit-true for IEEE-754 `f32` — `x + 0.0` (breaks on `-0.0`),
+//!   `x * 0.0` (breaks on NaN/∞), `x - x` — are deliberately **excluded**.
+//! * [`minimize`](minimize::minimize) — delta-debugging reduction of an
+//!   [`crate::evo::patch::Individual`]'s edit list that never degrades its
+//!   objective vector, plus a per-edit attribution table (the objective
+//!   delta when each surviving edit is removed alone) — the §6.1/§6.2
+//!   "key mutations" analysis, automated.
+//!
+//! The pipeline sits on the fitness hot path through
+//! [`crate::exec::cache::ProgramCache`]: with `--opt-level 1|2` the cache
+//! canonicalizes each candidate graph *before* hashing, so mutants that
+//! differ only by dead or redundant edits collapse onto one compiled
+//! program, and the programs it does compile are smaller. `--opt-level 0`
+//! bypasses the pipeline entirely and reproduces the historical behavior
+//! bit-identically (same graph hashes, same cache keys, same results).
+
+pub mod minimize;
+pub mod passes;
+
+use crate::ir::types::IrError;
+use crate::ir::Graph;
+
+/// How aggressively graphs are optimized before lowering.
+///
+/// Every level is bit-identity-preserving; levels only trade optimization
+/// time against compiled-program size and cache sharing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OptLevel {
+    /// No optimization: graphs are hashed and lowered exactly as
+    /// materialized (the historical behavior).
+    O0,
+    /// Structural cleanup only: common-subexpression elimination +
+    /// dead-code elimination.
+    O1,
+    /// Full pipeline: constant folding + CSE + algebraic simplification +
+    /// dead-code elimination, to a fixed point.
+    O2,
+}
+
+impl OptLevel {
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        match s {
+            "0" => Some(OptLevel::O0),
+            "1" => Some(OptLevel::O1),
+            "2" => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        match self {
+            OptLevel::O0 => 0,
+            OptLevel::O1 => 1,
+            OptLevel::O2 => 2,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<OptLevel> {
+        match v {
+            0 => Some(OptLevel::O0),
+            1 => Some(OptLevel::O1),
+            2 => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
+}
+
+impl Default for OptLevel {
+    fn default() -> Self {
+        OptLevel::O0
+    }
+}
+
+impl std::fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.as_u8())
+    }
+}
+
+/// One rewrite pass. Implementations must be deterministic (no RNG, no
+/// hash-iteration-order dependence) and semantics-preserving at the bit
+/// level; `run` returns the number of rewrites applied so the driver can
+/// detect the fixed point.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, g: &mut Graph) -> Result<usize, IrError>;
+}
+
+/// Per-pass counters accumulated across every round of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct PassStats {
+    pub name: &'static str,
+    /// Rewrites applied across all rounds.
+    pub rewrites: usize,
+    /// Times the pass ran.
+    pub runs: usize,
+}
+
+/// Outcome of one [`PassManager::run`].
+#[derive(Debug, Clone)]
+pub struct PipelineStats {
+    /// Full rounds executed (the last one applies zero rewrites unless the
+    /// round cap was hit).
+    pub rounds: usize,
+    /// Total rewrites across all passes and rounds.
+    pub rewrites: usize,
+    pub insts_before: usize,
+    pub insts_after: usize,
+    pub per_pass: Vec<PassStats>,
+}
+
+impl PipelineStats {
+    fn identity(len: usize) -> PipelineStats {
+        PipelineStats {
+            rounds: 0,
+            rewrites: 0,
+            insts_before: len,
+            insts_after: len,
+            per_pass: Vec::new(),
+        }
+    }
+}
+
+/// Fixed-point driver: runs its passes in order, repeating the whole
+/// sequence until one full round applies zero rewrites (or the round cap
+/// is hit — a backstop against rewrite cycles, far above anything the
+/// shipped passes need).
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+    pub max_rounds: usize,
+}
+
+impl PassManager {
+    pub fn new(passes: Vec<Box<dyn Pass>>) -> PassManager {
+        PassManager { passes, max_rounds: 16 }
+    }
+
+    /// The standard pipeline for an [`OptLevel`]. Order matters: folding
+    /// creates constants CSE can merge, CSE and algebraic rewiring leave
+    /// dead instructions DCE sweeps up, and the fixed-point loop lets each
+    /// round expose work for the next.
+    pub fn for_level(level: OptLevel) -> PassManager {
+        use passes::{Algebraic, ConstantFold, Cse, Dce};
+        let passes: Vec<Box<dyn Pass>> = match level {
+            OptLevel::O0 => vec![],
+            OptLevel::O1 => vec![Box::new(Cse), Box::new(Dce)],
+            OptLevel::O2 => vec![
+                Box::new(ConstantFold),
+                Box::new(Cse),
+                Box::new(Algebraic),
+                Box::new(Dce),
+            ],
+        };
+        PassManager::new(passes)
+    }
+
+    /// Run to a fixed point. On `Err` the graph may hold a partial round's
+    /// rewrites — callers that need all-or-nothing semantics run on a
+    /// clone (see [`optimize`]).
+    pub fn run(&self, g: &mut Graph) -> Result<PipelineStats, IrError> {
+        let insts_before = g.len();
+        let mut per_pass: Vec<PassStats> = self
+            .passes
+            .iter()
+            .map(|p| PassStats { name: p.name(), rewrites: 0, runs: 0 })
+            .collect();
+        let mut rounds = 0;
+        let mut total = 0;
+        if !self.passes.is_empty() {
+            loop {
+                let mut round = 0;
+                for (k, pass) in self.passes.iter().enumerate() {
+                    let n = pass.run(g)?;
+                    per_pass[k].rewrites += n;
+                    per_pass[k].runs += 1;
+                    round += n;
+                }
+                rounds += 1;
+                total += round;
+                if round == 0 || rounds >= self.max_rounds {
+                    break;
+                }
+            }
+        }
+        Ok(PipelineStats {
+            rounds,
+            rewrites: total,
+            insts_before,
+            insts_after: g.len(),
+            per_pass,
+        })
+    }
+}
+
+/// Optimize a copy of `g` at the given level. All-or-nothing: if any pass
+/// errors or the result fails verification (both indicate a pass bug, not
+/// a property of the input graph), the original graph is returned
+/// unchanged — optimization can never make a graph *invalid*.
+pub fn optimize(g: &Graph, level: OptLevel) -> (Graph, PipelineStats) {
+    if level == OptLevel::O0 {
+        return (g.clone(), PipelineStats::identity(g.len()));
+    }
+    let pm = PassManager::for_level(level);
+    let mut out = g.clone();
+    match pm.run(&mut out) {
+        Ok(stats) if crate::ir::verify::verify(&out).is_ok() => (out, stats),
+        _ => (g.clone(), PipelineStats::identity(g.len())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::eval;
+    use crate::ir::op::{OpKind, ReduceKind};
+    use crate::ir::printer::print;
+    use crate::ir::types::TType;
+    use crate::tensor::Tensor;
+
+    /// A graph with a little of everything the pipeline rewrites: a
+    /// foldable constant subtree, a duplicated subexpression, a `* 1`
+    /// identity, and dead code.
+    fn testbed() -> Graph {
+        let mut g = Graph::new("opt-tb");
+        let x = g.param(TType::of(&[2, 3]));
+        let c1 = g.constant(Tensor::full(&[2, 3], 2.0));
+        let c2 = g.constant(Tensor::full(&[2, 3], 3.0));
+        let folded = g.push(OpKind::Add, &[c1, c2]).unwrap(); // constant 5s
+        let a1 = g.push(OpKind::Add, &[x, folded]).unwrap();
+        let a2 = g.push(OpKind::Add, &[x, folded]).unwrap(); // CSE dup of a1
+        let one = g.constant_scalar(1.0);
+        let oneb = g
+            .push(OpKind::Broadcast { dims: vec![2, 3], mapping: vec![] }, &[one])
+            .unwrap();
+        let m = g.push(OpKind::Multiply, &[a1, oneb]).unwrap(); // * 1 identity
+        let dead = g.push(OpKind::Exponential, &[a2]).unwrap();
+        let _ = dead;
+        let s = g.push(OpKind::Subtract, &[m, a2]).unwrap(); // == a1 - a1 after opt
+        let r = g
+            .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[s])
+            .unwrap();
+        g.set_outputs(&[r]);
+        g
+    }
+
+    fn bits(outs: &[Tensor]) -> Vec<Vec<u32>> {
+        outs.iter().map(|t| t.data().iter().map(|v| v.to_bits()).collect()).collect()
+    }
+
+    #[test]
+    fn o0_is_the_identity() {
+        let g = testbed();
+        let (og, stats) = optimize(&g, OptLevel::O0);
+        assert_eq!(print(&g), print(&og));
+        assert_eq!(stats.rewrites, 0);
+        assert_eq!(
+            crate::ir::canon::graph_hash(&g),
+            crate::ir::canon::graph_hash(&og),
+            "O0 must not change the canonical hash"
+        );
+    }
+
+    #[test]
+    fn pipeline_shrinks_and_preserves_bits() {
+        let g = testbed();
+        let x = Tensor::iota(&[2, 3]);
+        let want = eval(&g, std::slice::from_ref(&x)).unwrap();
+        for level in [OptLevel::O1, OptLevel::O2] {
+            let (og, stats) = optimize(&g, level);
+            crate::ir::verify::verify(&og).unwrap();
+            assert!(og.len() < g.len(), "level {level} should remove instructions");
+            assert!(stats.rewrites > 0);
+            let got = eval(&og, std::slice::from_ref(&x)).unwrap();
+            assert_eq!(bits(&want), bits(&got), "level {level} changed output bits");
+        }
+    }
+
+    #[test]
+    fn pipeline_reaches_a_fixed_point() {
+        let g = testbed();
+        let (og, _) = optimize(&g, OptLevel::O2);
+        let (og2, stats2) = optimize(&og, OptLevel::O2);
+        assert_eq!(print(&og), print(&og2), "re-optimizing must be a no-op");
+        assert_eq!(stats2.rewrites, 0, "fixed point must apply zero rewrites");
+    }
+
+    #[test]
+    fn pipeline_is_deterministic() {
+        let g = testbed();
+        let (a, sa) = optimize(&g, OptLevel::O2);
+        let (b, sb) = optimize(&g, OptLevel::O2);
+        assert_eq!(print(&a), print(&b));
+        assert_eq!(sa.rewrites, sb.rewrites);
+        assert_eq!(sa.rounds, sb.rounds);
+    }
+
+    #[test]
+    fn signature_is_preserved() {
+        let g = testbed();
+        for level in [OptLevel::O1, OptLevel::O2] {
+            let (og, _) = optimize(&g, level);
+            assert_eq!(g.param_types(), og.param_types(), "level {level}");
+            assert_eq!(g.output_types(), og.output_types(), "level {level}");
+        }
+    }
+
+    #[test]
+    fn per_pass_stats_cover_the_pipeline() {
+        let mut g = testbed();
+        let pm = PassManager::for_level(OptLevel::O2);
+        let stats = pm.run(&mut g).unwrap();
+        let names: Vec<&str> = stats.per_pass.iter().map(|p| p.name).collect();
+        assert_eq!(names, vec!["constant-fold", "cse", "algebraic", "dce"]);
+        assert!(stats.per_pass.iter().all(|p| p.runs == stats.rounds));
+        assert_eq!(stats.insts_before, testbed().len());
+        assert_eq!(stats.insts_after, g.len());
+    }
+
+    #[test]
+    fn opt_level_parses_and_roundtrips() {
+        assert_eq!(OptLevel::parse("0"), Some(OptLevel::O0));
+        assert_eq!(OptLevel::parse("1"), Some(OptLevel::O1));
+        assert_eq!(OptLevel::parse("2"), Some(OptLevel::O2));
+        assert_eq!(OptLevel::parse("3"), None);
+        for l in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            assert_eq!(OptLevel::from_u8(l.as_u8()), Some(l));
+            assert_eq!(OptLevel::parse(&l.to_string()), Some(l));
+        }
+    }
+}

@@ -1,0 +1,654 @@
+//! The shipped optimizer passes. Every rewrite here must be **bit-true**:
+//! the optimized graph produces exactly the same `f32` bit patterns as the
+//! original on every input (NaN payloads, signed zeros and infinities
+//! included) — that is what lets the fitness loop execute optimized
+//! programs while the search's objectives stay byte-for-byte reproducible.
+//! Algebraic identities that hold over the reals but not over IEEE-754
+//! (`x + 0.0`, `x * 0.0`, `x - x`, `x / x`) are deliberately absent; see
+//! each rule for the bit-level argument.
+
+use super::Pass;
+use crate::ir::op::OpKind;
+use crate::ir::types::{IrError, ValueId};
+use crate::ir::Graph;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Bit patterns the algebraic rules key on.
+const POS_ZERO: u32 = 0x0000_0000; // +0.0f32
+const NEG_ZERO: u32 = 0x8000_0000; // -0.0f32
+const ONE: u32 = 0x3F80_0000; // 1.0f32
+
+/// Constant folding materializes results; cap the output size so a folded
+/// broadcast cannot blow up graph memory (weight-sized constants already
+/// exist in these graphs, so the cap is generous).
+const FOLD_NUMEL_CAP: usize = 1 << 16;
+
+// ---------------------------------------------------------------------------
+// Dead-code elimination
+// ---------------------------------------------------------------------------
+
+/// Dead-code elimination — promotes [`Graph::eliminate_dead_code`] into
+/// the pipeline. Removing an unused instruction cannot change any output
+/// bit by construction.
+pub struct Dce;
+
+impl Pass for Dce {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<usize, IrError> {
+        Ok(g.eliminate_dead_code())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Constant folding
+// ---------------------------------------------------------------------------
+
+/// Evaluate every instruction whose operands are all constants, replacing
+/// it (in place, same [`ValueId`]) with the resulting constant.
+///
+/// Bit-true because the fold runs [`crate::interp::eval_op`] — the exact
+/// kernels, in the exact element order, that the interpreter and the
+/// compiled engine would run at execution time.
+pub struct ConstantFold;
+
+impl Pass for ConstantFold {
+    fn name(&self) -> &'static str {
+        "constant-fold"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<usize, IrError> {
+        let mut count = 0;
+        for pos in 0..g.len() {
+            // All checks, and the evaluation itself, borrow — weight-sized
+            // constant payloads are never cloned on the skip path (which is
+            // almost every instruction on every cache lookup).
+            let folded = {
+                let i = g.inst_at(pos);
+                if matches!(i.kind, OpKind::Parameter { .. } | OpKind::Constant { .. })
+                    || i.args.is_empty()
+                    || i.ty.numel() > FOLD_NUMEL_CAP
+                {
+                    continue;
+                }
+                let mut refs: Vec<&Tensor> = Vec::with_capacity(i.args.len());
+                let mut all_const = true;
+                for a in &i.args {
+                    match g.inst(*a).map(|x| &x.kind) {
+                        Some(OpKind::Constant { value }) => refs.push(value),
+                        _ => {
+                            all_const = false;
+                            break;
+                        }
+                    }
+                }
+                if !all_const {
+                    continue;
+                }
+                crate::interp::eval_op(&i.kind, &refs)
+            };
+            g.rewrite_at(pos, OpKind::Constant { value: folded }, &[])?;
+            count += 1;
+        }
+        Ok(count)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common-subexpression elimination
+// ---------------------------------------------------------------------------
+
+/// Merge instructions that compute the same value: identical op (bitwise
+/// attribute comparison) over identical — already-canonicalized —
+/// operands. Later duplicates are rewired onto the earliest definition
+/// and left for DCE. Bit-true because the kernels are deterministic: the
+/// same op over the same operand values yields the same bits.
+///
+/// Buckets are keyed by [`crate::ir::canon::inst_hash`]; a bucket hit is
+/// confirmed by exact comparison, so a (vanishingly unlikely) hash
+/// collision can never merge distinct computations. Constants compare by
+/// payload **bits**, not `==`: `f32` equality would merge `-0.0` with
+/// `0.0` and that is not bit-true.
+pub struct Cse;
+
+impl Pass for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<usize, IrError> {
+        let mut resolve: HashMap<ValueId, ValueId> = HashMap::new();
+        let mut buckets: HashMap<u128, Vec<ValueId>> = HashMap::new();
+        let mut count = 0;
+        for pos in 0..g.len() {
+            let (id, kind, args) = {
+                let i = g.inst_at(pos);
+                (i.id, i.kind.clone(), i.args.clone())
+            };
+            // Parameters are program inputs, never mergeable (two equally
+            // typed parameters are still different values at run time).
+            if matches!(kind, OpKind::Parameter { .. }) {
+                continue;
+            }
+            let mapped: Vec<ValueId> =
+                args.iter().map(|a| *resolve.get(a).unwrap_or(a)).collect();
+            if mapped != args {
+                g.try_set_args(pos, &mapped)?;
+            }
+            let arg_words: Vec<u64> = mapped.iter().map(|v| v.0 as u64).collect();
+            let key = crate::ir::canon::inst_hash(&kind, &arg_words);
+            let bucket = buckets.entry(key).or_default();
+            let mut dup_of = None;
+            for &cand in bucket.iter() {
+                let c = g.inst(cand).expect("bucket entries stay in the graph");
+                if c.args == mapped && kinds_bit_equal(&c.kind, &kind) {
+                    dup_of = Some(cand);
+                    break;
+                }
+            }
+            match dup_of {
+                Some(rep) => {
+                    // Keep the earliest definition; carry a label over so
+                    // mutation analysis (`find_label`) still resolves it.
+                    if let Some(lbl) = g.inst(id).and_then(|i| i.label.clone()) {
+                        let ri = g.inst_mut(rep).unwrap();
+                        if ri.label.is_none() {
+                            ri.label = Some(lbl);
+                        }
+                    }
+                    resolve.insert(id, rep);
+                    count += 1;
+                }
+                None => bucket.push(id),
+            }
+        }
+        for slot in 0..g.outputs().len() {
+            let o = g.outputs()[slot];
+            if let Some(&rep) = resolve.get(&o) {
+                g.replace_output(slot, rep)?;
+            }
+        }
+        Ok(count)
+    }
+}
+
+/// Attribute equality at the bit level. Only `Constant` and `Pad` carry
+/// `f32` payloads where `==` diverges from bit equality (`-0.0 == 0.0`,
+/// `NaN != NaN`); every other variant holds only `usize` attributes and
+/// derives the right thing.
+fn kinds_bit_equal(a: &OpKind, b: &OpKind) -> bool {
+    match (a, b) {
+        (OpKind::Constant { value: x }, OpKind::Constant { value: y }) => {
+            x.dims() == y.dims()
+                && x.data()
+                    .iter()
+                    .zip(y.data().iter())
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (
+            OpKind::Pad { low: l1, high: h1, value: v1 },
+            OpKind::Pad { low: l2, high: h2, value: v2 },
+        ) => l1 == l2 && h1 == h2 && v1.to_bits() == v2.to_bits(),
+        _ => a == b,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algebraic simplification
+// ---------------------------------------------------------------------------
+
+/// Bit-true algebraic rewrites:
+///
+/// * `x + (-0.0) → x` — IEEE addition of `-0.0` returns the other operand
+///   unchanged for every bit pattern (`+0 + -0 = +0`, `-0 + -0 = -0`,
+///   NaN/∞ propagate). `x + (+0.0)` is **not** rewritten: `-0.0 + 0.0`
+///   is `+0.0`, which flips the sign bit.
+/// * `x - (+0.0) → x` — dual of the above (`-0 - +0 = -0`).
+/// * `x * 1.0 → x`, `1.0 * x → x`, `x / 1.0 → x` — exact for every
+///   finite, infinite, NaN and signed-zero input.
+/// * `max(x, x) → x`, `min(x, x) → x`, `select(p, x, x) → x` — the same
+///   SSA value on both sides means the same bits either way.
+/// * `x > x → 0.0` — false for every value including NaN, so the result
+///   is a zero tensor regardless of `x`.
+/// * `negate(negate(x)) → x` — negation flips the sign bit, twice is the
+///   identity (NaNs included).
+/// * `transpose ∘ transpose` composes into one transpose (identity
+///   compositions drop out); `reshape ∘ reshape` keeps only the outer
+///   reshape; `broadcast ∘ broadcast` composes the dimension mappings —
+///   all pure data movement, bits untouched.
+///
+/// Splat detection (for the 0/1 operands) looks through `Broadcast`,
+/// `Reshape` and `Transpose` to an all-same-bits constant, which is how
+/// these graphs spell "scalar operand" (elementwise ops require equal
+/// shapes, so scalars arrive broadcast).
+pub struct Algebraic;
+
+impl Pass for Algebraic {
+    fn name(&self) -> &'static str {
+        "algebraic"
+    }
+
+    fn run(&self, g: &mut Graph) -> Result<usize, IrError> {
+        // Used-value map, built once — this pass never inserts or removes
+        // instructions, so positions are stable. It can go stale in one
+        // direction (a value's last use rewired away mid-sweep), which
+        // only costs a wasted rule attempt; replace_uses then changes
+        // zero sites and contributes zero progress, so the fixed point is
+        // unaffected. Unused values are otherwise DCE's job; skipping
+        // them keeps the rewrite count an honest progress measure (a
+        // value-forwarding rule on a dead instruction would "fire" every
+        // round).
+        let mut used = vec![false; g.len()];
+        {
+            let pos_of: HashMap<ValueId, usize> =
+                g.insts().iter().enumerate().map(|(p, i)| (i.id, p)).collect();
+            for inst in g.insts() {
+                for a in &inst.args {
+                    if let Some(&p) = pos_of.get(a) {
+                        used[p] = true;
+                    }
+                }
+            }
+            for o in g.outputs() {
+                if let Some(&p) = pos_of.get(o) {
+                    used[p] = true;
+                }
+            }
+        }
+        let mut count = 0;
+        for pos in 0..g.len() {
+            if !used[pos] {
+                continue;
+            }
+            let (id, kind, args, ty_dims, ty_numel) = {
+                let i = g.inst_at(pos);
+                if matches!(i.kind, OpKind::Parameter { .. } | OpKind::Constant { .. }) {
+                    continue;
+                }
+                (i.id, i.kind.clone(), i.args.clone(), i.ty.dims.clone(), i.ty.numel())
+            };
+            match &kind {
+                OpKind::Add => {
+                    if splat_bits(g, args[1]) == Some(NEG_ZERO) {
+                        count += replace_uses(g, id, args[0])?;
+                    } else if splat_bits(g, args[0]) == Some(NEG_ZERO) {
+                        count += replace_uses(g, id, args[1])?;
+                    }
+                }
+                OpKind::Subtract => {
+                    if splat_bits(g, args[1]) == Some(POS_ZERO) {
+                        count += replace_uses(g, id, args[0])?;
+                    }
+                }
+                OpKind::Multiply => {
+                    if splat_bits(g, args[1]) == Some(ONE) {
+                        count += replace_uses(g, id, args[0])?;
+                    } else if splat_bits(g, args[0]) == Some(ONE) {
+                        count += replace_uses(g, id, args[1])?;
+                    }
+                }
+                OpKind::Divide => {
+                    if splat_bits(g, args[1]) == Some(ONE) {
+                        count += replace_uses(g, id, args[0])?;
+                    }
+                }
+                OpKind::Maximum | OpKind::Minimum => {
+                    if args[0] == args[1] {
+                        count += replace_uses(g, id, args[0])?;
+                    }
+                }
+                OpKind::Select => {
+                    if args[1] == args[2] {
+                        count += replace_uses(g, id, args[1])?;
+                    }
+                }
+                OpKind::CompareGt => {
+                    if args[0] == args[1] && ty_numel <= FOLD_NUMEL_CAP {
+                        g.rewrite_at(
+                            pos,
+                            OpKind::Constant { value: Tensor::zeros(&ty_dims) },
+                            &[],
+                        )?;
+                        count += 1;
+                    }
+                }
+                OpKind::Negate => {
+                    let src = g.inst(args[0]).expect("verified arg");
+                    if matches!(src.kind, OpKind::Negate) {
+                        let base = src.args[0];
+                        count += replace_uses(g, id, base)?;
+                    }
+                }
+                OpKind::Reshape { dims } => {
+                    let src = g.inst(args[0]).expect("verified arg");
+                    if src.ty.dims == *dims {
+                        count += replace_uses(g, id, args[0])?;
+                    } else if matches!(src.kind, OpKind::Reshape { .. }) {
+                        let base = src.args[0];
+                        g.rewrite_at(pos, OpKind::Reshape { dims: dims.clone() }, &[base])?;
+                        count += 1;
+                    }
+                }
+                OpKind::Transpose { perm } => {
+                    if perm.iter().enumerate().all(|(i, &p)| i == p) {
+                        count += replace_uses(g, id, args[0])?;
+                    } else {
+                        let src = g.inst(args[0]).expect("verified arg");
+                        if let OpKind::Transpose { perm: inner } = &src.kind {
+                            // z[i] reads y[perm[i]] reads x[inner[perm[i]]]
+                            let composed: Vec<usize> =
+                                perm.iter().map(|&i| inner[i]).collect();
+                            let base = src.args[0];
+                            if composed.iter().enumerate().all(|(i, &p)| i == p) {
+                                count += replace_uses(g, id, base)?;
+                            } else {
+                                g.rewrite_at(
+                                    pos,
+                                    OpKind::Transpose { perm: composed },
+                                    &[base],
+                                )?;
+                                count += 1;
+                            }
+                        }
+                    }
+                }
+                OpKind::Broadcast { dims, mapping } => {
+                    let src = g.inst(args[0]).expect("verified arg");
+                    let identity = src.ty.dims == *dims
+                        && mapping.len() == dims.len()
+                        && mapping.iter().enumerate().all(|(i, &m)| i == m);
+                    if identity {
+                        count += replace_uses(g, id, args[0])?;
+                    } else if let OpKind::Broadcast { mapping: inner, .. } = &src.kind {
+                        // Source dim i lands at mid dim inner[i], which
+                        // lands at output dim mapping[inner[i]]; replication
+                        // composes, so one broadcast with the composed
+                        // mapping is bit-identical.
+                        let composed: Vec<usize> =
+                            inner.iter().map(|&m| mapping[m]).collect();
+                        let base = src.args[0];
+                        g.rewrite_at(
+                            pos,
+                            OpKind::Broadcast { dims: dims.clone(), mapping: composed },
+                            &[base],
+                        )?;
+                        count += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(count)
+    }
+}
+
+/// Resolve `id` through data-movement ops to an all-same-bits constant;
+/// returns the shared bit pattern. Broadcast/reshape/transpose of a splat
+/// is the same splat, bit for bit.
+fn splat_bits(g: &Graph, id: ValueId) -> Option<u32> {
+    let inst = g.inst(id)?;
+    match &inst.kind {
+        OpKind::Constant { value } => {
+            let first = value.data().first()?.to_bits();
+            value.data().iter().all(|v| v.to_bits() == first).then_some(first)
+        }
+        OpKind::Broadcast { .. } | OpKind::Reshape { .. } | OpKind::Transpose { .. } => {
+            splat_bits(g, inst.args[0])
+        }
+        _ => None,
+    }
+}
+
+/// Rewire every use of `from` (argument slots and output slots) to `to`,
+/// which must be an equal-typed value defined no later than `from`.
+/// Returns the number of instructions/outputs changed.
+fn replace_uses(g: &mut Graph, from: ValueId, to: ValueId) -> Result<usize, IrError> {
+    let mut changed = 0;
+    for pos in 0..g.len() {
+        let args = g.inst_at(pos).args.clone();
+        if args.contains(&from) {
+            let mapped: Vec<ValueId> =
+                args.iter().map(|&a| if a == from { to } else { a }).collect();
+            g.try_set_args(pos, &mapped)?;
+            changed += 1;
+        }
+    }
+    for slot in 0..g.outputs().len() {
+        if g.outputs()[slot] == from {
+            g.replace_output(slot, to)?;
+            changed += 1;
+        }
+    }
+    Ok(changed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::eval;
+    use crate::ir::op::ReduceKind;
+    use crate::ir::types::TType;
+
+    fn bits_equal(a: &[Tensor], b: &[Tensor]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b.iter()).all(|(x, y)| {
+                x.dims() == y.dims()
+                    && x.data()
+                        .iter()
+                        .zip(y.data().iter())
+                        .all(|(p, q)| p.to_bits() == q.to_bits())
+            })
+    }
+
+    #[test]
+    fn fold_evaluates_constant_subtrees() {
+        let mut g = Graph::new("f");
+        let x = g.param(TType::of(&[2]));
+        let a = g.constant(Tensor::full(&[2], 2.0));
+        let b = g.constant(Tensor::full(&[2], 3.0));
+        let s = g.push(OpKind::Add, &[a, b]).unwrap();
+        let e = g.push(OpKind::Exponential, &[s]).unwrap();
+        let out = g.push(OpKind::Add, &[x, e]).unwrap();
+        g.set_outputs(&[out]);
+        let n = ConstantFold.run(&mut g).unwrap();
+        assert_eq!(n, 2, "add-of-constants and exp-of-constant both fold");
+        // s and e are now constants with their original ids; the folded
+        // exp holds exp(5.0) bit-exactly
+        let folded = g.inst(e).unwrap();
+        match &folded.kind {
+            OpKind::Constant { value } => {
+                assert_eq!(value.data()[0].to_bits(), 5.0f32.exp().to_bits());
+            }
+            other => panic!("expected folded constant, got {}", other.mnemonic()),
+        }
+        crate::ir::verify::verify(&g).unwrap();
+    }
+
+    #[test]
+    fn fold_respects_the_numel_cap() {
+        let mut g = Graph::new("f");
+        let big = FOLD_NUMEL_CAP + 1;
+        let c = g.constant_scalar(1.0);
+        let b = g
+            .push(OpKind::Broadcast { dims: vec![big], mapping: vec![] }, &[c])
+            .unwrap();
+        g.set_outputs(&[b]);
+        assert_eq!(ConstantFold.run(&mut g).unwrap(), 0, "oversized fold must be skipped");
+    }
+
+    #[test]
+    fn cse_merges_duplicates_but_not_sign_zero_constants() {
+        let mut g = Graph::new("c");
+        let x = g.param(TType::of(&[3]));
+        let e1 = g.push(OpKind::Exponential, &[x]).unwrap();
+        let e2 = g.push(OpKind::Exponential, &[x]).unwrap();
+        let pz = g.constant(Tensor::full(&[3], 0.0));
+        let nz = g.constant(Tensor::full(&[3], -0.0));
+        let s = g.push(OpKind::Add, &[e1, pz]).unwrap();
+        let t = g.push(OpKind::Add, &[e2, nz]).unwrap();
+        let o = g.push(OpKind::Multiply, &[s, t]).unwrap();
+        g.set_outputs(&[o]);
+        let n = Cse.run(&mut g).unwrap();
+        assert_eq!(n, 1, "only the duplicate exp merges; ±0.0 constants must stay apart");
+        // both adds now read e1
+        assert_eq!(g.inst(s).unwrap().args[0], e1);
+        assert_eq!(g.inst(t).unwrap().args[0], e1);
+        crate::ir::verify::verify(&g).unwrap();
+    }
+
+    #[test]
+    fn cse_rewires_outputs_and_carries_labels() {
+        let mut g = Graph::new("c");
+        let x = g.param(TType::of(&[2]));
+        let a = g.push(OpKind::Tanh, &[x]).unwrap();
+        let b = g.push_labeled(OpKind::Tanh, &[x], "act").unwrap();
+        g.set_outputs(&[a, b]);
+        assert_eq!(Cse.run(&mut g).unwrap(), 1);
+        assert_eq!(g.outputs(), &[a, a], "output slot must be rewired to the representative");
+        assert_eq!(g.find_label("act"), Some(a), "label must survive on the representative");
+    }
+
+    #[test]
+    fn algebraic_identities_are_bit_true() {
+        // out = ((x * 1) - 0) + (-0): all three collapse to x.
+        let mut g = Graph::new("a");
+        let x = g.param(TType::of(&[2, 2]));
+        let one = g.constant_scalar(1.0);
+        let oneb = g
+            .push(OpKind::Broadcast { dims: vec![2, 2], mapping: vec![] }, &[one])
+            .unwrap();
+        let m = g.push(OpKind::Multiply, &[x, oneb]).unwrap();
+        let pz = g.constant(Tensor::full(&[2, 2], 0.0));
+        let s = g.push(OpKind::Subtract, &[m, pz]).unwrap();
+        let nz = g.constant(Tensor::full(&[2, 2], -0.0));
+        let a = g.push(OpKind::Add, &[s, nz]).unwrap();
+        g.set_outputs(&[a]);
+
+        // input with the adversarial bit patterns
+        let input = Tensor::new(
+            crate::tensor::Shape::of(&[2, 2]),
+            vec![-0.0, f32::NAN, f32::INFINITY, 1.5],
+        );
+        let want = eval(&g, std::slice::from_ref(&input)).unwrap();
+
+        let n = Algebraic.run(&mut g).unwrap();
+        assert!(n >= 3, "three identities should fire, got {n}");
+        g.eliminate_dead_code();
+        assert_eq!(g.outputs(), &[x], "the chain must collapse onto the parameter");
+        let got = eval(&g, std::slice::from_ref(&input)).unwrap();
+        assert!(bits_equal(&want, &got));
+    }
+
+    #[test]
+    fn add_positive_zero_is_not_rewritten() {
+        // -0.0 + 0.0 == +0.0, so x + 0.0 is NOT the identity.
+        let mut g = Graph::new("a");
+        let x = g.param(TType::of(&[2]));
+        let pz = g.constant(Tensor::full(&[2], 0.0));
+        let a = g.push(OpKind::Add, &[x, pz]).unwrap();
+        g.set_outputs(&[a]);
+        assert_eq!(Algebraic.run(&mut g).unwrap(), 0);
+        assert_eq!(g.outputs(), &[a], "x + (+0.0) must stay");
+    }
+
+    #[test]
+    fn double_negate_and_double_transpose_collapse() {
+        let mut g = Graph::new("a");
+        let x = g.param(TType::of(&[2, 3]));
+        let n1 = g.push(OpKind::Negate, &[x]).unwrap();
+        let n2 = g.push(OpKind::Negate, &[n1]).unwrap();
+        let t1 = g.push(OpKind::Transpose { perm: vec![1, 0] }, &[n2]).unwrap();
+        let t2 = g.push(OpKind::Transpose { perm: vec![1, 0] }, &[t1]).unwrap();
+        g.set_outputs(&[t2]);
+        let input = Tensor::iota(&[2, 3]);
+        let want = eval(&g, std::slice::from_ref(&input)).unwrap();
+        let mut total = 0;
+        for _ in 0..4 {
+            let n = Algebraic.run(&mut g).unwrap();
+            total += n;
+            g.eliminate_dead_code();
+            if n == 0 {
+                break;
+            }
+        }
+        assert!(total >= 2);
+        assert_eq!(g.outputs(), &[x]);
+        let got = eval(&g, std::slice::from_ref(&input)).unwrap();
+        assert!(bits_equal(&want, &got));
+    }
+
+    #[test]
+    fn reshape_and_broadcast_chains_compose() {
+        let mut g = Graph::new("a");
+        let x = g.param(TType::of(&[6]));
+        let r1 = g.push(OpKind::Reshape { dims: vec![2, 3] }, &[x]).unwrap();
+        let r2 = g.push(OpKind::Reshape { dims: vec![3, 2] }, &[r1]).unwrap();
+        let c = g.constant(Tensor::iota(&[2]));
+        let b1 = g
+            .push(OpKind::Broadcast { dims: vec![3, 2], mapping: vec![1] }, &[c])
+            .unwrap();
+        let b2 = g
+            .push(
+                OpKind::Broadcast { dims: vec![4, 3, 2], mapping: vec![1, 2] },
+                &[b1],
+            )
+            .unwrap();
+        let rb = g
+            .push(OpKind::Broadcast { dims: vec![4, 3, 2], mapping: vec![1, 2] }, &[r2])
+            .unwrap();
+        let o = g.push(OpKind::Add, &[rb, b2]).unwrap();
+        g.set_outputs(&[o]);
+        let input = Tensor::iota(&[6]);
+        let want = eval(&g, std::slice::from_ref(&input)).unwrap();
+        let n = Algebraic.run(&mut g).unwrap();
+        assert!(n >= 2, "reshape chain and broadcast chain should both compose, got {n}");
+        // r2 now reads x directly; b2 now reads c directly
+        assert_eq!(g.inst(r2).unwrap().args, vec![x]);
+        assert_eq!(g.inst(b2).unwrap().args, vec![c]);
+        match &g.inst(b2).unwrap().kind {
+            OpKind::Broadcast { mapping, .. } => assert_eq!(mapping, &vec![2]),
+            other => panic!("expected broadcast, got {}", other.mnemonic()),
+        }
+        g.eliminate_dead_code();
+        crate::ir::verify::verify(&g).unwrap();
+        let got = eval(&g, std::slice::from_ref(&input)).unwrap();
+        assert!(bits_equal(&want, &got));
+    }
+
+    #[test]
+    fn compare_self_folds_to_zero() {
+        let mut g = Graph::new("a");
+        let x = g.param(TType::of(&[3]));
+        let c = g.push(OpKind::CompareGt, &[x, x]).unwrap();
+        let r = g
+            .push(OpKind::Reduce { dims: vec![0], kind: ReduceKind::Sum }, &[c])
+            .unwrap();
+        g.set_outputs(&[r]);
+        assert_eq!(Algebraic.run(&mut g).unwrap(), 1);
+        assert!(matches!(g.inst(c).unwrap().kind, OpKind::Constant { .. }));
+        let input = Tensor::new(crate::tensor::Shape::of(&[3]), vec![f32::NAN, 1.0, -0.0]);
+        let out = eval(&g, std::slice::from_ref(&input)).unwrap();
+        assert_eq!(out[0].item().to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn splat_detection_sees_through_data_movement() {
+        let mut g = Graph::new("s");
+        let c = g.constant_scalar(1.0);
+        let b = g
+            .push(OpKind::Broadcast { dims: vec![2, 2], mapping: vec![] }, &[c])
+            .unwrap();
+        let r = g.push(OpKind::Reshape { dims: vec![4] }, &[b]).unwrap();
+        g.set_outputs(&[r]);
+        assert_eq!(splat_bits(&g, r), Some(ONE));
+        assert_eq!(splat_bits(&g, b), Some(ONE));
+        // non-splat constant
+        let mut g2 = Graph::new("s2");
+        let c2 = g2.constant(Tensor::iota(&[3]));
+        g2.set_outputs(&[c2]);
+        assert_eq!(splat_bits(&g2, c2), None);
+    }
+}

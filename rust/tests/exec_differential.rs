@@ -157,6 +157,9 @@ fn search_deterministic_through_compiled_engine() {
         workers: 3,
         seed: 11,
         verbose: false,
+        // the workload below is built with `new` (an O0 program cache);
+        // the search cross-checks the two levels agree
+        opt_level: gevo_ml::opt::OptLevel::O0,
         ..Default::default()
     };
     let run_once = || {

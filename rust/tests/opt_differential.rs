@@ -1,0 +1,294 @@
+//! Differential testing of the optimizer pipeline ([`gevo_ml::opt`]):
+//! for hundreds of seeded random mutation chains over both paper workload
+//! graphs, the **optimized** graph — compiled and executed — must be
+//! **bit-identical** to the unoptimized graph interpreted by
+//! [`gevo_ml::interp`], at every opt level, and failing inputs must fail
+//! with the same [`EvalError`] class. This is the contract that lets the
+//! ProgramCache canonicalize graphs on the fitness hot path while the
+//! search's results stay byte-for-byte reproducible (mirrors
+//! `tests/exec_differential.rs`, which pins the compiled engine itself).
+
+use gevo_ml::evo::mutate::valid_random_edit;
+use gevo_ml::exec::cache::ProgramCache;
+use gevo_ml::exec::{Program, Scratch};
+use gevo_ml::interp::{eval, EvalError};
+use gevo_ml::ir::Graph;
+use gevo_ml::models::{mobilenet, twofc};
+use gevo_ml::opt::{optimize, OptLevel};
+use gevo_ml::tensor::Tensor;
+use gevo_ml::util::prop::run_prop;
+use gevo_ml::util::rng::Rng;
+
+fn twofc_base() -> Graph {
+    let spec = twofc::TwoFcSpec { batch: 4, input: 16, hidden: 8, classes: 4, lr: 0.1 };
+    twofc::train_step_graph(&spec)
+}
+
+fn mobilenet_base() -> Graph {
+    let spec =
+        mobilenet::MobileNetSpec { batch: 2, side: 8, classes: 4, width: 4, blocks: 2 };
+    let w = mobilenet::random_weights(&spec, 3);
+    mobilenet::predict_graph(&spec, &w)
+}
+
+/// Apply a random chain of 1..=4 valid edits to `base`.
+fn mutate_chain(base: &Graph, rng: &mut Rng) -> Graph {
+    let mut g = base.clone();
+    for _ in 0..rng.range(1, 5) {
+        if let Some((_, ng)) = valid_random_edit(&g, rng, 25) {
+            g = ng;
+        }
+    }
+    g
+}
+
+fn random_inputs(g: &Graph, rng: &mut Rng) -> Vec<Tensor> {
+    g.param_types()
+        .iter()
+        .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, rng))
+        .collect()
+}
+
+/// Outputs must agree bit-for-bit, NaN payloads included (mutants are
+/// often numerically broken; optimized and raw graphs must be broken
+/// identically).
+fn assert_bit_identical(want: &[Tensor], got: &[Tensor]) -> Result<(), String> {
+    if want.len() != got.len() {
+        return Err(format!("output count {} vs {}", want.len(), got.len()));
+    }
+    for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+        if w.dims() != g.dims() {
+            return Err(format!("output {i}: dims {:?} vs {:?}", w.dims(), g.dims()));
+        }
+        for (j, (a, b)) in w.data().iter().zip(g.data().iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "output {i}[{j}]: raw {a} ({:#010x}) vs optimized {b} ({:#010x})",
+                    a.to_bits(),
+                    b.to_bits()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn differential_case(base: &Graph, rng: &mut Rng) -> Result<(), String> {
+    let g = mutate_chain(base, rng);
+    let inputs = random_inputs(&g, rng);
+    let want = eval(&g, &inputs).map_err(|e| format!("interp failed: {e}"))?;
+    for level in [OptLevel::O1, OptLevel::O2] {
+        let (og, _) = optimize(&g, level);
+        gevo_ml::ir::verify::verify(&og)
+            .map_err(|e| format!("level {level}: optimized graph invalid: {e}"))?;
+        if og.param_types() != g.param_types() || og.output_types() != g.output_types() {
+            return Err(format!("level {level}: optimization changed the signature"));
+        }
+        // interpreted optimized graph
+        let got = eval(&og, &inputs).map_err(|e| format!("level {level}: interp: {e}"))?;
+        assert_bit_identical(&want, &got).map_err(|e| format!("level {level} interp: {e}"))?;
+        // compiled optimized graph, cold and warm scratch
+        let prog =
+            Program::compile(&og).map_err(|e| format!("level {level}: compile: {e}"))?;
+        let mut scratch = Scratch::new();
+        let got = prog
+            .run_with(&inputs, &mut scratch)
+            .map_err(|e| format!("level {level}: exec: {e}"))?;
+        assert_bit_identical(&want, &got).map_err(|e| format!("level {level} exec: {e}"))?;
+        let again = prog
+            .run_with(&inputs, &mut scratch)
+            .map_err(|e| format!("level {level}: warm exec: {e}"))?;
+        assert_bit_identical(&want, &again)
+            .map_err(|e| format!("level {level} warm exec: {e}"))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn twofc_mutation_chains_bit_identical_at_all_levels() {
+    let base = twofc_base();
+    run_prop(120, 0x09717, |rng| differential_case(&base, rng));
+}
+
+#[test]
+fn mobilenet_mutation_chains_bit_identical_at_all_levels() {
+    let base = mobilenet_base();
+    run_prop(80, 0x09718, |rng| differential_case(&base, rng));
+}
+
+/// `--opt-level 0` must reproduce current behavior bit-identically: the
+/// graph, its canonical hash, and the compiled program's results are
+/// exactly those of the unoptimized path.
+#[test]
+fn opt_level_zero_is_the_identity() {
+    let base = twofc_base();
+    run_prop(40, 0x09719, |rng| {
+        let g = mutate_chain(&base, rng);
+        let (og, stats) = optimize(&g, OptLevel::O0);
+        if stats.rewrites != 0 {
+            return Err("O0 applied rewrites".into());
+        }
+        if gevo_ml::ir::printer::print(&g) != gevo_ml::ir::printer::print(&og) {
+            return Err("O0 changed the printed graph".into());
+        }
+        if gevo_ml::ir::canon::graph_hash(&g) != gevo_ml::ir::canon::graph_hash(&og) {
+            return Err("O0 changed the canonical hash".into());
+        }
+        Ok(())
+    });
+}
+
+/// The pipeline is a deterministic fixed point: optimizing twice from the
+/// same input prints identically, and re-optimizing an optimized graph
+/// applies zero rewrites.
+#[test]
+fn optimizer_is_deterministic_and_idempotent() {
+    for base in [twofc_base(), mobilenet_base()] {
+        run_prop(40, 0x0971A, |rng| {
+            let g = mutate_chain(&base, rng);
+            for level in [OptLevel::O1, OptLevel::O2] {
+                let (a, sa) = optimize(&g, level);
+                let (b, sb) = optimize(&g, level);
+                if gevo_ml::ir::printer::print(&a) != gevo_ml::ir::printer::print(&b) {
+                    return Err(format!("level {level}: nondeterministic output"));
+                }
+                if sa.rewrites != sb.rewrites || sa.rounds != sb.rounds {
+                    return Err(format!("level {level}: nondeterministic stats"));
+                }
+                let (c, sc) = optimize(&a, level);
+                if sc.rewrites != 0 {
+                    return Err(format!(
+                        "level {level}: fixed point not reached ({} more rewrites)",
+                        sc.rewrites
+                    ));
+                }
+                if gevo_ml::ir::printer::print(&a) != gevo_ml::ir::printer::print(&c) {
+                    return Err(format!("level {level}: not idempotent"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Failing inputs fail identically: optimization never changes the entry
+/// signature, so wrong argument counts and wrong shapes raise the same
+/// `EvalError` class (and for shapes, the same error value) as the
+/// unoptimized graph interpreted.
+#[test]
+fn error_classes_agree_after_optimization() {
+    for base in [twofc_base(), mobilenet_base()] {
+        run_prop(30, 0x0971B, |rng| {
+            let g = mutate_chain(&base, rng);
+            let (og, _) = optimize(&g, OptLevel::O2);
+            let prog = Program::compile(&og).map_err(|e| format!("compile: {e}"))?;
+            let mut inputs = random_inputs(&g, rng);
+
+            // wrong count: drop one input
+            let dropped = inputs.pop().expect("graphs have parameters");
+            let ei = eval(&g, &inputs).expect_err("interp must reject short inputs");
+            let ec = prog.run(&inputs).expect_err("optimized exec must reject short inputs");
+            if std::mem::discriminant(&ei) != std::mem::discriminant(&ec) {
+                return Err(format!("count error class: raw {ei:?} vs optimized {ec:?}"));
+            }
+            if !matches!(ei, EvalError::ArgCount { .. }) {
+                return Err(format!("expected ArgCount, interp said {ei:?}"));
+            }
+            inputs.push(dropped);
+
+            // wrong shape: corrupt one random input's dims
+            let k = rng.below(inputs.len());
+            let mut dims = inputs[k].dims().to_vec();
+            if dims.is_empty() {
+                dims.push(2);
+            } else {
+                dims[0] += 1;
+            }
+            inputs[k] = Tensor::zeros(&dims);
+            let ei = eval(&g, &inputs).expect_err("interp must reject bad shape");
+            let ec = prog.run(&inputs).expect_err("optimized exec must reject bad shape");
+            if ei != ec {
+                return Err(format!("shape error mismatch: raw {ei:?} vs optimized {ec:?}"));
+            }
+            Ok(())
+        });
+    }
+}
+
+/// The tentpole cache claim: mutants that differ only by dead or
+/// redundant edits share one ProgramCache entry once the cache
+/// canonicalizes through the optimizer.
+#[test]
+fn optimizing_cache_collapses_redundant_mutants() {
+    let base = twofc_base();
+    // Twin A: the base plus an unused (dead) op.
+    let mut dead_twin = base.clone();
+    let anchor = dead_twin.insts()[0].id;
+    dead_twin.push(gevo_ml::ir::OpKind::Exponential, &[anchor]).unwrap();
+    // Twin B: the base plus a redundant recomputation of an existing op
+    // wired nowhere (CSE + DCE food).
+    let mut dup_twin = base.clone();
+    let (kind, args) = {
+        let inst = dup_twin
+            .insts()
+            .iter()
+            .find(|i| !i.args.is_empty())
+            .expect("graph has non-nullary ops")
+            .clone();
+        (inst.kind, inst.args)
+    };
+    let pos = dup_twin.len();
+    dup_twin.insert_at(pos, kind, &args).unwrap();
+
+    let o0 = ProgramCache::new();
+    for g in [&base, &dead_twin, &dup_twin] {
+        o0.get_or_compile(g).unwrap();
+    }
+    assert_eq!(o0.len(), 3, "at O0 the twins are distinct entries");
+
+    let o2 = ProgramCache::with_opt(OptLevel::O2);
+    let p0 = o2.get_or_compile(&base).unwrap();
+    let p1 = o2.get_or_compile(&dead_twin).unwrap();
+    let p2 = o2.get_or_compile(&dup_twin).unwrap();
+    assert_eq!(o2.len(), 1, "at O2 all three canonicalize to one entry");
+    assert!(std::sync::Arc::ptr_eq(&p0, &p1) && std::sync::Arc::ptr_eq(&p0, &p2));
+    let (hits, misses) = o2.stats();
+    assert_eq!((hits, misses), (2, 1), "one lowering serves all three mutants");
+}
+
+/// Search determinism through the optimized cache: with the deterministic
+/// `flops` metric, the same seed produces the same Pareto front at O0 and
+/// O2 — optimization changes evaluation cost, never results.
+#[test]
+fn search_front_is_opt_level_invariant_under_flops_metric() {
+    use gevo_ml::data::digits;
+    use gevo_ml::evo::search::{self, SearchConfig};
+    use gevo_ml::fitness::training::TrainingWorkload;
+    use gevo_ml::fitness::RuntimeMetric;
+
+    let spec = twofc::TwoFcSpec { batch: 8, input: 16, hidden: 8, classes: 4, lr: 0.1 };
+    let base = twofc::train_step_graph(&spec);
+    let run_at = |opt: OptLevel| {
+        let cfg = SearchConfig {
+            pop_size: 8,
+            generations: 3,
+            elites: 4,
+            workers: 3,
+            seed: 11,
+            verbose: false,
+            opt_level: opt,
+            ..Default::default()
+        };
+        let data = digits::generate(96, spec.side(), 7);
+        let (fit, test) = data.split(64);
+        let wl = TrainingWorkload::new_with_opt(
+            spec, &base, fit, test, 1, 1, RuntimeMetric::Flops, opt,
+        );
+        let res = search::run(&base, &wl, &cfg);
+        res.pareto.iter().map(|(_, o)| *o).collect::<Vec<_>>()
+    };
+    let front0 = run_at(OptLevel::O0);
+    let front2 = run_at(OptLevel::O2);
+    assert!(!front0.is_empty());
+    assert_eq!(front0, front2, "opt level must not change flops-metric search results");
+}
