@@ -1,14 +1,18 @@
 //! §Perf: the graph-optimizer pipeline on the fitness hot path —
-//! instruction-count reduction, ProgramCache hit-rate uplift and
-//! compile-path cost at `--opt-level 2` vs `0`, over a population-shaped
-//! stream of mutants. Writes a machine-readable summary to
-//! `BENCH_opt.json` next to the human-readable table.
+//! instruction-count reduction, ProgramCache hit-rate uplift, the
+//! optimize-memo effect, compile-path cost, and `--opt-level 3` kernel
+//! fusion (step-count / peak-buffer reduction and eval throughput vs
+//! O0/O2) on both seed workload graphs, over a population-shaped stream
+//! of mutants. Writes a machine-readable summary to `BENCH_opt.json`
+//! next to the human-readable table.
 
 use gevo_ml::evo::mutate::valid_random_edit;
 use gevo_ml::exec::cache::ProgramCache;
+use gevo_ml::exec::{Program, Scratch};
 use gevo_ml::ir::{Graph, OpKind};
-use gevo_ml::models::twofc;
+use gevo_ml::models::{mobilenet, twofc};
 use gevo_ml::opt::{optimize, OptLevel};
+use gevo_ml::tensor::Tensor;
 use gevo_ml::util::bench::{black_box, Bench};
 use gevo_ml::util::json::Json;
 use gevo_ml::util::rng::Rng;
@@ -61,16 +65,20 @@ fn main() {
         black_box(optimize(&base, OptLevel::O2));
     });
     b.case("compile train-step raw (O0 path)", || {
-        black_box(gevo_ml::exec::Program::compile(&base).unwrap());
+        black_box(Program::compile(&base).unwrap());
     });
     b.case("optimize O2 + compile train-step", || {
         let (og, _) = optimize(&base, OptLevel::O2);
-        black_box(gevo_ml::exec::Program::compile(&og).unwrap());
+        black_box(Program::compile(&og).unwrap());
+    });
+    b.case("optimize O3 + compile_fused train-step", || {
+        let (og, _) = optimize(&base, OptLevel::O3);
+        black_box(Program::compile_fused(&og).unwrap());
     });
 
-    // --- the population cache, cold, at both levels -------------------------
+    // --- the population cache, cold, at O0 / O2 / O3 ------------------------
     let mut level_rows: Vec<Json> = Vec::new();
-    for level in [OptLevel::O0, OptLevel::O2] {
+    for level in [OptLevel::O0, OptLevel::O2, OptLevel::O3] {
         let cache = ProgramCache::with_opt(level);
         let t0 = std::time::Instant::now();
         for g in &looks {
@@ -78,37 +86,68 @@ fn main() {
         }
         let cold_secs = t0.elapsed().as_secs_f64();
         let (hits, misses) = cache.stats();
-        let (ins_in, ins_out) = cache.opt_stats();
+        let o = cache.opt_stats();
         let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
-        let reduction = if ins_in > 0 {
-            1.0 - ins_out as f64 / ins_in as f64
+        let reduction = if o.insts_in > 0 {
+            1.0 - o.insts_out as f64 / o.insts_in as f64
         } else {
             0.0
         };
         b.note(&format!(
             "opt-level {level}: {} lookups -> {hits} hits / {misses} lowerings \
-             (hit rate {:.1}%), insts {ins_in} -> {ins_out} ({:.1}% removed), \
-             cold pass {:.3}s",
+             (hit rate {:.1}%), insts {} -> {} ({:.1}% removed), memo {} hits / {} \
+             pipeline runs, cold pass {:.3}s",
             looks.len(),
             hit_rate * 100.0,
+            o.insts_in,
+            o.insts_out,
             reduction * 100.0,
+            o.memo_hits,
+            o.memo_misses,
             cold_secs
         ));
-        level_rows.push(Json::obj(vec![
+        let mut row = vec![
             ("opt_level", Json::num(level.as_u8() as f64)),
             ("lookups", Json::num(looks.len() as f64)),
             ("hits", Json::num(hits as f64)),
             ("misses", Json::num(misses as f64)),
             ("hit_rate", Json::num(hit_rate)),
-            ("insts_in", Json::num(ins_in as f64)),
-            ("insts_out", Json::num(ins_out as f64)),
+            ("insts_in", Json::num(o.insts_in as f64)),
+            ("insts_out", Json::num(o.insts_out as f64)),
             ("instruction_reduction", Json::num(reduction)),
+            ("memo_hits", Json::num(o.memo_hits as f64)),
+            ("memo_misses", Json::num(o.memo_misses as f64)),
             ("cold_seconds", Json::num(cold_secs)),
-        ]));
+        ];
+        if let Some(f) = cache.fusion_stats() {
+            let step_reduction = if f.steps_before > 0 {
+                1.0 - f.steps_after as f64 / f.steps_before as f64
+            } else {
+                0.0
+            };
+            b.note(&format!(
+                "opt-level {level} fusion: {} regions / {} programs, steps {} -> {} \
+                 ({:.1}% fewer), peak buffers {} -> {}",
+                f.regions,
+                f.programs,
+                f.steps_before,
+                f.steps_after,
+                step_reduction * 100.0,
+                f.peak_before,
+                f.peak_after
+            ));
+            row.push(("fusion_regions", Json::num(f.regions as f64)));
+            row.push(("fusion_steps_before", Json::num(f.steps_before as f64)));
+            row.push(("fusion_steps_after", Json::num(f.steps_after as f64)));
+            row.push(("fusion_step_reduction", Json::num(step_reduction)));
+            row.push(("fusion_peak_before", Json::num(f.peak_before as f64)));
+            row.push(("fusion_peak_after", Json::num(f.peak_after as f64)));
+        }
+        level_rows.push(Json::obj(row));
     }
 
-    // --- warm cache throughput (everything hits) -----------------------------
-    for level in [OptLevel::O0, OptLevel::O2] {
+    // --- warm cache throughput (everything memo-hits) ------------------------
+    for level in [OptLevel::O0, OptLevel::O2, OptLevel::O3] {
         let cache = ProgramCache::with_opt(level);
         for g in &looks {
             let _ = cache.get_or_compile(g).unwrap();
@@ -120,11 +159,69 @@ fn main() {
         });
     }
 
+    // --- O3 fusion on both seed workload graphs ------------------------------
+    // Step-count / peak-buffer reduction and single-eval throughput of the
+    // fused lowering vs the unfused one, on the exact graphs the paper's
+    // two experiments evolve.
+    let mspec = mobilenet::MobileNetSpec { batch: 2, side: 8, classes: 4, width: 4, blocks: 2 };
+    let mweights = mobilenet::random_weights(&mspec, 3);
+    let workloads: Vec<(&str, Graph)> = vec![
+        ("2fcnet train-step", base.clone()),
+        ("mobilenet predict", mobilenet::predict_graph(&mspec, &mweights)),
+    ];
+    let mut fusion_rows: Vec<Json> = Vec::new();
+    for (name, g) in &workloads {
+        let (og, _) = optimize(g, OptLevel::O3);
+        let unfused = Program::compile(&og).unwrap();
+        let fused = Program::compile_fused(&og).unwrap();
+        let f = fused.fusion_stats().expect("fused compile records stats");
+        let mut rng = Rng::new(0x0F15E);
+        let inputs: Vec<Tensor> = og
+            .param_types()
+            .iter()
+            .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, &mut rng))
+            .collect();
+        let time_runs = |p: &Program| -> f64 {
+            let mut scratch = Scratch::new();
+            let _ = black_box(p.run_with(&inputs, &mut scratch).unwrap()); // warm-up
+            let t0 = std::time::Instant::now();
+            const RUNS: usize = 50;
+            for _ in 0..RUNS {
+                black_box(p.run_with(&inputs, &mut scratch).unwrap());
+            }
+            t0.elapsed().as_secs_f64() / RUNS as f64
+        };
+        let (t_unfused, t_fused) = (time_runs(&unfused), time_runs(&fused));
+        b.note(&format!(
+            "{name}: O3 fusion {} regions, steps {} -> {}, peak {} -> {}, \
+             eval {:.1}us -> {:.1}us ({:.2}x)",
+            f.regions,
+            f.steps_before,
+            f.steps_after,
+            f.peak_before,
+            f.peak_after,
+            t_unfused * 1e6,
+            t_fused * 1e6,
+            t_unfused / t_fused.max(1e-12)
+        ));
+        fusion_rows.push(Json::obj(vec![
+            ("workload", Json::str(*name)),
+            ("regions", Json::num(f.regions as f64)),
+            ("steps_before", Json::num(f.steps_before as f64)),
+            ("steps_after", Json::num(f.steps_after as f64)),
+            ("peak_before", Json::num(f.peak_before as f64)),
+            ("peak_after", Json::num(f.peak_after as f64)),
+            ("eval_seconds_unfused", Json::num(t_unfused)),
+            ("eval_seconds_fused", Json::num(t_fused)),
+        ]));
+    }
+
     let summary = Json::obj(vec![
         ("suite", Json::str("perf_opt")),
         ("workload", Json::str("2fcnet train-step")),
         ("population", Json::num(pop.len() as f64)),
         ("levels", Json::Arr(level_rows)),
+        ("fusion", Json::Arr(fusion_rows)),
     ]);
     std::fs::write("BENCH_opt.json", summary.to_pretty()).expect("write BENCH_opt.json");
     b.note("wrote BENCH_opt.json");

@@ -4,7 +4,7 @@
 //! a 1.90× speedup) when 2% test accuracy is sacrificed.
 //!
 //! Run: `cargo run --release --example evolve_mobilenet -- [--pop 32] [--gens 15] [--seed 42]
-//!       [--islands 4] [--migration-interval 4] [--checkpoint ck.json] [--opt-level 0|1|2]`
+//!       [--islands 4] [--migration-interval 4] [--checkpoint ck.json] [--opt-level 0|1|2|3]`
 
 use gevo_ml::coordinator::{self, report, ExperimentConfig, WorkloadKind};
 use gevo_ml::evo::search::SearchConfig;
@@ -27,7 +27,7 @@ fn main() {
             migration_interval: args.usize_or("migration-interval", 4),
             migrants: args.usize_or("migrants", 2),
             opt_level: gevo_ml::opt::OptLevel::parse(&args.get_or("opt-level", "2"))
-                .expect("--opt-level must be 0, 1 or 2"),
+                .expect("--opt-level must be 0, 1, 2 or 3"),
             verbose: !args.flag("quiet"),
             ..Default::default()
         },
@@ -70,6 +70,9 @@ fn main() {
     );
     if r.search.islands.len() > 1 {
         print!("{}", report::island_summary(&r));
+    }
+    if let Some(f) = r.search.program_fusion {
+        println!("{}", report::fusion_summary(&f));
     }
     if let Some(prefix) = args.get("out") {
         std::fs::write(format!("{prefix}.json"), report::to_json(&r).to_pretty()).unwrap();

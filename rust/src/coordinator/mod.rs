@@ -151,9 +151,15 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.checkpoint.as_deref(),
             );
             use crate::evo::search::Evaluator;
-            finish(t0, &baseline, res, cfg.minimize_front, |g| wl.evaluate(g), |g| {
-                wl.post_hoc(g)
-            })
+            finish(
+                t0,
+                &baseline,
+                res,
+                cfg.minimize_front,
+                cfg.search.workers,
+                |g| wl.evaluate(g),
+                |g| wl.post_hoc(g),
+            )
         }
         WorkloadKind::TwoFcTraining => {
             let spec = twofc::TwoFcSpec::default();
@@ -181,9 +187,15 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.checkpoint.as_deref(),
             );
             use crate::evo::search::Evaluator;
-            finish(t0, &baseline, res, cfg.minimize_front, |g| wl.evaluate(g), |g| {
-                wl.post_hoc(g)
-            })
+            finish(
+                t0,
+                &baseline,
+                res,
+                cfg.minimize_front,
+                cfg.search.workers,
+                |g| wl.evaluate(g),
+                |g| wl.post_hoc(g),
+            )
         }
     }
 }
@@ -193,6 +205,7 @@ fn finish(
     baseline: &Graph,
     res: SearchResult,
     minimize_front: bool,
+    workers: usize,
     eval_fit: impl Fn(&Graph) -> Option<Objectives> + Sync,
     eval_post: impl Fn(&Graph) -> Option<Objectives>,
 ) -> ExperimentResult {
@@ -202,43 +215,57 @@ fn finish(
     // front are often reached by many distinct genomes. Provenance rides
     // along so per-island contributions stay visible in reports.
     let mut seen = std::collections::HashSet::new();
-    let mut front = Vec::new();
+    let mut rows: Vec<(&crate::evo::patch::Individual, Objectives, usize)> = Vec::new();
     let q = |x: f64| crate::evo::search::quantize_at(x, 1e4);
     for ((ind, fit), &island) in res.pareto.iter().zip(res.pareto_islands.iter()) {
         if !seen.insert((q(fit.0), q(fit.1))) {
             continue;
         }
-        let post_hoc = ind
-            .materialize(baseline)
-            .ok()
-            .and_then(|g| eval_post(&g));
-        let minimized = if minimize_front {
-            // `eval_fit` is an `Evaluator` via the closure blanket impl;
-            // minimization candidates are scored on the fitness split
-            // only — the held-out evaluation would be discarded anyway.
-            crate::opt::minimize::minimize(baseline, ind, &eval_fit).map(|m| MinimizedPoint {
-                edits: m.minimized.edits.len(),
-                removed: m.removed,
-                start: m.start,
-                fit: m.objectives,
-                evaluations: m.evaluations,
-                attribution: m
-                    .attribution
-                    .iter()
-                    .map(|a| (a.edit.to_string(), a.delta))
-                    .collect(),
-            })
-        } else {
-            None
-        };
-        front.push(FrontPoint {
-            edits: ind.edits.len(),
-            island,
-            fit: *fit,
-            post_hoc,
-            minimized,
-        });
+        rows.push((ind, *fit, island));
     }
+    // Per-point delta-debug loops are independent, so they fan out over
+    // the evaluation worker pool; results land by index, which keeps
+    // front order and each point's attribution table deterministic.
+    // `eval_fit` is an `Evaluator` via the closure blanket impl;
+    // minimization candidates are scored on the fitness split only — the
+    // held-out evaluation would be discarded anyway.
+    let minimized: Vec<Option<MinimizedPoint>> = if minimize_front {
+        let inds: Vec<&crate::evo::patch::Individual> =
+            rows.iter().map(|(ind, _, _)| *ind).collect();
+        parallel_minimize(baseline, &inds, &eval_fit, workers)
+            .into_iter()
+            .map(|m| {
+                m.map(|m| MinimizedPoint {
+                    edits: m.minimized.edits.len(),
+                    removed: m.removed,
+                    start: m.start,
+                    fit: m.objectives,
+                    evaluations: m.evaluations,
+                    attribution: m
+                        .attribution
+                        .iter()
+                        .map(|a| (a.edit.to_string(), a.delta))
+                        .collect(),
+                })
+            })
+            .collect()
+    } else {
+        rows.iter().map(|_| None).collect()
+    };
+    let front = rows
+        .into_iter()
+        .zip(minimized)
+        .map(|((ind, fit, island), minimized)| {
+            let post_hoc = ind.materialize(baseline).ok().and_then(|g| eval_post(&g));
+            FrontPoint {
+                edits: ind.edits.len(),
+                island,
+                fit,
+                post_hoc,
+                minimized,
+            }
+        })
+        .collect();
     ExperimentResult {
         baseline_fit: bf.expect("baseline evaluates"),
         baseline_post_hoc: bp,
@@ -246,6 +273,38 @@ fn finish(
         search: res,
         wall_seconds: t0.elapsed().as_secs_f64(),
     }
+}
+
+/// Minimize every front point on the evaluation worker pool. Each point's
+/// delta-debug loop is internally sequential (and deterministic for a
+/// deterministic evaluator); across points they share nothing but the
+/// thread-safe workload, so results are independent of scheduling and are
+/// returned in input order.
+fn parallel_minimize(
+    baseline: &Graph,
+    inds: &[&crate::evo::patch::Individual],
+    eval_fit: &(impl Fn(&Graph) -> Option<Objectives> + Sync),
+    workers: usize,
+) -> Vec<Option<crate::opt::minimize::MinimizeResult>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let results: Vec<Mutex<Option<crate::opt::minimize::MinimizeResult>>> =
+        inds.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = workers.max(1).min(inds.len().max(1));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let w = next.fetch_add(1, Ordering::Relaxed);
+                if w >= inds.len() {
+                    break;
+                }
+                *results[w].lock().unwrap() =
+                    crate::opt::minimize::minimize(baseline, inds[w], eval_fit);
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap()).collect()
 }
 
 /// MobileNet weights: prefer the pretrained artifact, fall back to seeded
@@ -354,6 +413,82 @@ mod tests {
             assert_eq!(m.attribution.len(), m.edits);
         }
         assert!(saw_minimized, "flops metric re-evaluates deterministically");
+    }
+
+    #[test]
+    fn parallel_minimization_is_deterministic_and_order_preserving() {
+        // Minimization fans out across the worker pool; with the
+        // deterministic flops metric two runs must produce identical
+        // fronts, minimized-edit counts and attribution tables, in the
+        // same order, regardless of scheduling.
+        let cfg = ExperimentConfig {
+            kind: WorkloadKind::TwoFcTraining,
+            search: SearchConfig {
+                pop_size: 8,
+                generations: 2,
+                elites: 4,
+                workers: 3,
+                seed: 13,
+                ..Default::default()
+            },
+            fit_samples: 64,
+            test_samples: 32,
+            epochs: 1,
+            minimize_front: true,
+            ..Default::default()
+        };
+        let a = run_experiment(&cfg);
+        let b = run_experiment(&cfg);
+        assert_eq!(a.front.len(), b.front.len());
+        for (x, y) in a.front.iter().zip(b.front.iter()) {
+            assert_eq!(x.fit, y.fit);
+            assert_eq!(x.edits, y.edits);
+            match (&x.minimized, &y.minimized) {
+                (Some(mx), Some(my)) => {
+                    assert_eq!(mx.edits, my.edits);
+                    assert_eq!(mx.removed, my.removed);
+                    assert_eq!(mx.fit, my.fit);
+                    assert_eq!(mx.evaluations, my.evaluations);
+                    assert_eq!(mx.attribution, my.attribution);
+                }
+                (None, None) => {}
+                _ => panic!("minimization presence must be deterministic"),
+            }
+        }
+    }
+
+    #[test]
+    fn o3_experiment_reports_fusion_and_matches_o0_front() {
+        // End-to-end at --opt-level 3: fusion totals surface in the
+        // result, and the flops-metric front equals the O0 run's.
+        let run_at = |level: crate::opt::OptLevel| {
+            let cfg = ExperimentConfig {
+                kind: WorkloadKind::TwoFcTraining,
+                search: SearchConfig {
+                    pop_size: 6,
+                    generations: 2,
+                    elites: 3,
+                    workers: 2,
+                    seed: 5,
+                    opt_level: level,
+                    ..Default::default()
+                },
+                fit_samples: 64,
+                test_samples: 32,
+                epochs: 1,
+                ..Default::default()
+            };
+            run_experiment(&cfg)
+        };
+        let r0 = run_at(crate::opt::OptLevel::O0);
+        let r3 = run_at(crate::opt::OptLevel::O3);
+        assert!(r0.search.program_fusion.is_none());
+        let f = r3.search.program_fusion.expect("O3 run reports fusion totals");
+        assert!(f.programs > 0 && f.regions > 0);
+        assert!(f.steps_after < f.steps_before, "fusion must shrink compiled steps");
+        let fr0: Vec<_> = r0.front.iter().map(|p| p.fit).collect();
+        let fr3: Vec<_> = r3.front.iter().map(|p| p.fit).collect();
+        assert_eq!(fr0, fr3, "flops-metric front must be opt-level invariant");
     }
 
     #[test]

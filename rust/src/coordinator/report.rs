@@ -179,8 +179,43 @@ pub fn to_json(r: &ExperimentResult) -> Json {
         ("migrations", Json::num(r.search.migrations as f64)),
         ("evaluations", Json::num(r.search.total_evaluations as f64)),
         ("cache_hits", Json::num(r.search.cache_hits as f64)),
+        (
+            "program_cache",
+            r.search.program_cache.map_or(Json::Null, |(hits, misses)| {
+                Json::obj(vec![
+                    ("hits", Json::num(hits as f64)),
+                    ("lowerings", Json::num(misses as f64)),
+                ])
+            }),
+        ),
+        (
+            "fusion",
+            r.search.program_fusion.map_or(Json::Null, |f| {
+                Json::obj(vec![
+                    ("programs", Json::num(f.programs as f64)),
+                    ("regions", Json::num(f.regions as f64)),
+                    ("steps_before", Json::num(f.steps_before as f64)),
+                    ("steps_after", Json::num(f.steps_after as f64)),
+                    ("peak_before", Json::num(f.peak_before as f64)),
+                    ("peak_after", Json::num(f.peak_after as f64)),
+                ])
+            }),
+        ),
         ("wall_seconds", Json::num(r.wall_seconds)),
     ])
+}
+
+/// One-line fusion summary for terminal output (`--opt-level 3` runs).
+pub fn fusion_summary(f: &crate::exec::cache::FusionTotals) -> String {
+    let reduction = if f.steps_before > 0 {
+        100.0 * (1.0 - f.steps_after as f64 / f.steps_before as f64)
+    } else {
+        0.0
+    };
+    format!(
+        "fusion: {} regions across {} compiled programs, steps {} -> {} ({reduction:.1}% fewer), peak buffers {} -> {}",
+        f.regions, f.programs, f.steps_before, f.steps_after, f.peak_before, f.peak_after
+    )
 }
 
 /// ASCII scatter of the Fig. 4 plane: runtime (x) vs error (y). The
@@ -284,7 +319,15 @@ mod tests {
                     },
                 ],
                 migrations: 3,
-                program_cache: None,
+                program_cache: Some((100, 9)),
+                program_fusion: Some(crate::exec::cache::FusionTotals {
+                    programs: 9,
+                    regions: 27,
+                    steps_before: 540,
+                    steps_after: 360,
+                    peak_before: 90,
+                    peak_after: 63,
+                }),
             },
             wall_seconds: 1.5,
         }
@@ -324,6 +367,12 @@ mod tests {
         let j2 = Json::parse(&j.to_pretty()).unwrap();
         assert_eq!(j2.get("evaluations").unwrap().as_usize().unwrap(), 42);
         assert_eq!(j2.get("migrations").unwrap().as_usize().unwrap(), 3);
+        let pc = j2.get("program_cache").unwrap();
+        assert_eq!(pc.get("hits").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(pc.get("lowerings").unwrap().as_usize().unwrap(), 9);
+        let fu = j2.get("fusion").unwrap();
+        assert_eq!(fu.get("regions").unwrap().as_usize().unwrap(), 27);
+        assert_eq!(fu.get("steps_after").unwrap().as_usize().unwrap(), 360);
         assert_eq!(j2.get("islands").unwrap().as_arr().unwrap().len(), 2);
         let front = j2.get("front").unwrap().as_arr().unwrap();
         assert_eq!(front[1].get("island").unwrap().as_usize().unwrap(), 1);
@@ -339,6 +388,16 @@ mod tests {
         assert!(s.contains("island 0: 20 evals"));
         assert!(s.contains("island 1: 22 evals"));
         assert!(s.contains("migrations: 3"));
+    }
+
+    #[test]
+    fn fusion_summary_reports_reduction() {
+        let f = fake().search.program_fusion.unwrap();
+        let s = fusion_summary(&f);
+        assert!(s.contains("27 regions"));
+        assert!(s.contains("540 -> 360"));
+        assert!(s.contains("33.3% fewer"));
+        assert!(s.contains("90 -> 63"));
     }
 
     #[test]

@@ -139,6 +139,7 @@ pub fn run_with_checkpoint(
         islands: st.engines.iter().map(|e| e.island_stats()).collect(),
         migrations: st.migrations,
         program_cache: eval.exec_cache_stats(),
+        program_fusion: eval.fusion_stats(),
     }
 }
 
@@ -681,9 +682,33 @@ mod tests {
             restore_checkpoint(&j, &cfg, ghash).is_ok(),
             "legacy checkpoint must resume at opt-level 0"
         );
+        for level in [crate::opt::OptLevel::O2, crate::opt::OptLevel::O3] {
+            let other = SearchConfig { opt_level: level, ..cfg.clone() };
+            let err = restore_checkpoint(&j, &other, ghash).unwrap_err();
+            assert!(err.contains("mismatch"), "unexpected error at {level}: {err}");
+        }
+    }
+
+    #[test]
+    fn o3_checkpoints_pin_and_roundtrip_their_level() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 4,
+            generations: 0,
+            elites: 2,
+            workers: 1,
+            seed: 5,
+            opt_level: crate::opt::OptLevel::O3,
+            ..Default::default()
+        };
+        let ghash = crate::ir::canon::graph_hash(&g);
+        let engines = vec![Engine::new(0, &g, &eval, &cfg)];
+        let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
+        let j = checkpoint_json(&cfg, ghash, &st);
+        assert!(restore_checkpoint(&j, &cfg, ghash).is_ok(), "O3 roundtrips");
+        // resumed at any other level: refused
         let o2 = SearchConfig { opt_level: crate::opt::OptLevel::O2, ..cfg.clone() };
-        let err = restore_checkpoint(&j, &o2, ghash).unwrap_err();
-        assert!(err.contains("mismatch"), "unexpected error: {err}");
+        assert!(restore_checkpoint(&j, &o2, ghash).unwrap_err().contains("mismatch"));
     }
 
     #[test]

@@ -47,6 +47,13 @@ pub trait Evaluator: Sync {
     fn opt_level(&self) -> Option<crate::opt::OptLevel> {
         None
     }
+
+    /// Aggregate kernel-fusion totals of the workload's compiled-program
+    /// cache, when it lowers through the `--opt-level 3` fusion path.
+    /// Recorded in [`SearchResult::program_fusion`] for reports.
+    fn fusion_stats(&self) -> Option<crate::exec::cache::FusionTotals> {
+        None
+    }
 }
 
 impl<F: Fn(&Graph) -> Option<Objectives> + Sync> Evaluator for F {
@@ -89,8 +96,10 @@ pub struct SearchConfig {
     /// Optimizer level for the fitness workloads' compiled-program cache
     /// ([`crate::exec::cache::ProgramCache`]): graphs are canonicalized
     /// through the bit-identity-preserving pipeline in [`crate::opt`]
-    /// before hashing and lowering. Level 0 reproduces the historical
-    /// behavior exactly. Because the pipeline preserves output bits and
+    /// before hashing and lowering; level 3 additionally lowers fused
+    /// single-loop kernels ([`crate::opt::fuse`]). Level 0 reproduces the
+    /// historical behavior exactly. Because the pipeline preserves output
+    /// bits and
     /// the `flops` runtime objective is computed on the unoptimized
     /// graph, the search trajectory under the `flops` metric is identical
     /// at every level — only evaluation speed and cache sharing change.
@@ -172,6 +181,10 @@ pub struct SearchResult {
     /// the workload evaluates through [`crate::exec`]; `misses` counts
     /// actual graph lowerings across the whole run.
     pub program_cache: Option<(usize, usize)>,
+    /// Aggregate kernel-fusion totals of the evaluator's program cache
+    /// (step-count and peak-buffer reduction), when the run lowered at
+    /// `--opt-level 3`.
+    pub program_fusion: Option<crate::exec::cache::FusionTotals>,
 }
 
 /// Run the search. `original` is the unmutated program (the paper's

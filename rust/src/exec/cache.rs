@@ -12,10 +12,15 @@
 //! graph through the optimizer pipeline ([`crate::opt`]) *before* hashing
 //! and lowering: mutants that differ only by dead or redundant edits —
 //! the common case, since most raw edits are neutral — collapse onto one
-//! cache entry, and the programs that do get compiled are smaller. The
-//! pipeline is bit-identity-preserving, so execution results are
-//! unchanged at every level; `OptLevel::O0` bypasses it entirely and
-//! reproduces the historical keys and programs exactly.
+//! cache entry, and the programs that do get compiled are smaller. A
+//! raw-hash → canonical-hash memo fronts the pipeline so repeat genomes
+//! skip optimization entirely, and at `OptLevel::O3` lowering runs
+//! kernel fusion ([`crate::opt::fuse`] → [`Program::compile_fused`]),
+//! collapsing elementwise chains and dot+bias pairs into single-loop
+//! steps. The pipeline and the fusion lowering are both
+//! bit-identity-preserving, so execution results are unchanged at every
+//! level; `OptLevel::O0` bypasses everything and reproduces the
+//! historical keys and programs exactly.
 
 use super::Program;
 use crate::ir::types::IrError;
@@ -34,21 +39,71 @@ use std::sync::{Arc, Mutex};
 /// cheap next to re-evaluating them.
 const MAX_ENTRIES: usize = 1024;
 
+/// Cap on the raw-hash → canonical-hash memo. Entries are two `u128`s, so
+/// the cap is generous; like the program map it is flushed wholesale.
+const MEMO_MAX_ENTRIES: usize = 8192;
+
+/// Optimizer-side counters of a [`ProgramCache`] (all zero at `O0`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptStats {
+    /// Instructions seen / left across every *pipeline run* (memo hits
+    /// skip the pipeline and are excluded — that is the point).
+    pub insts_in: usize,
+    pub insts_out: usize,
+    /// Lookups whose raw graph hash resolved through the memo straight to
+    /// a resident compiled program, skipping the pass pipeline entirely.
+    pub memo_hits: usize,
+    /// Lookups that ran the pipeline (first sight, or the mapped program
+    /// had been flushed).
+    pub memo_misses: usize,
+}
+
+/// Aggregate kernel-fusion outcome across every program a cache compiled
+/// at `OptLevel::O3` (see [`super::FusionStats`] for the per-program
+/// form).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FusionTotals {
+    /// Fused compilations performed.
+    pub programs: usize,
+    pub regions: usize,
+    pub steps_before: usize,
+    pub steps_after: usize,
+    pub peak_before: usize,
+    pub peak_after: usize,
+}
+
 /// Thread-safe program cache shared by the evaluation worker pool.
 ///
 /// Keys are 128-bit canonical digests ([`crate::ir::canon::graph_hash`]);
 /// at that width accidental collisions are negligible (~n²·2⁻¹²⁹), so no
 /// equality check runs on hit.
+///
+/// At `OptLevel::O1+` a second, cheaper layer fronts the pass pipeline:
+/// a **raw-hash memo** mapping the unoptimized graph's canonical hash to
+/// the optimized one. Repeat genomes — elites re-materialized each
+/// generation, minimization probes, resumed runs — skip the whole
+/// pipeline (clone + fixed-point passes) and pay only one hash of the
+/// raw graph. The memo is pure (a raw form always canonicalizes to the
+/// same optimized form), so entries survive program-map flushes.
 #[derive(Debug)]
 pub struct ProgramCache {
     map: Mutex<HashMap<u128, Arc<Program>>>,
+    /// raw canonical hash → optimized canonical hash.
+    memo: Mutex<HashMap<u128, u128>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
     opt_level: OptLevel,
-    /// Instructions seen / instructions left after optimization, summed
-    /// over every lookup (0/0 at `O0`, which never optimizes).
+    /// Instructions seen / instructions left, summed over pipeline runs.
     opt_insts_in: AtomicUsize,
     opt_insts_out: AtomicUsize,
+    memo_hits: AtomicUsize,
+    memo_misses: AtomicUsize,
+    fuse_programs: AtomicUsize,
+    fuse_regions: AtomicUsize,
+    fuse_steps_before: AtomicUsize,
+    fuse_steps_after: AtomicUsize,
+    fuse_peak_before: AtomicUsize,
+    fuse_peak_after: AtomicUsize,
 }
 
 impl Default for ProgramCache {
@@ -65,15 +120,25 @@ impl ProgramCache {
     }
 
     /// A cache that canonicalizes every graph at `opt_level` before
-    /// hashing and lowering.
+    /// hashing and lowering; at `OptLevel::O3` lowering additionally runs
+    /// kernel fusion ([`Program::compile_fused`]).
     pub fn with_opt(opt_level: OptLevel) -> ProgramCache {
         ProgramCache {
             map: Mutex::new(HashMap::new()),
+            memo: Mutex::new(HashMap::new()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             opt_level,
             opt_insts_in: AtomicUsize::new(0),
             opt_insts_out: AtomicUsize::new(0),
+            memo_hits: AtomicUsize::new(0),
+            memo_misses: AtomicUsize::new(0),
+            fuse_programs: AtomicUsize::new(0),
+            fuse_regions: AtomicUsize::new(0),
+            fuse_steps_before: AtomicUsize::new(0),
+            fuse_steps_after: AtomicUsize::new(0),
+            fuse_peak_before: AtomicUsize::new(0),
+            fuse_peak_after: AtomicUsize::new(0),
         }
     }
 
@@ -85,22 +150,58 @@ impl ProgramCache {
     /// Optimization and compilation run outside the lock; a racing
     /// duplicate compile is possible (and harmless — first insert wins).
     pub fn get_or_compile(&self, g: &Graph) -> Result<Arc<Program>, IrError> {
-        let optimized;
-        let target: &Graph = if self.opt_level == OptLevel::O0 {
-            g
-        } else {
-            let (og, _) = crate::opt::optimize(g, self.opt_level);
-            self.opt_insts_in.fetch_add(g.len(), Ordering::Relaxed);
-            self.opt_insts_out.fetch_add(og.len(), Ordering::Relaxed);
-            optimized = og;
-            &optimized
-        };
-        let key = crate::ir::canon::graph_hash(target);
+        if self.opt_level == OptLevel::O0 {
+            let key = crate::ir::canon::graph_hash(g);
+            return self.fetch_or_insert(key, g);
+        }
+        // Memo front: one hash of the raw graph instead of a pipeline run.
+        // The memo guard is dropped before the program map is locked so a
+        // memo hit never serializes other threads' memo access behind the
+        // map lock.
+        let raw_key = crate::ir::canon::graph_hash(g);
+        let memo_canon = self.memo.lock().unwrap().get(&raw_key).copied();
+        if let Some(canon) = memo_canon {
+            if let Some(p) = self.map.lock().unwrap().get(&canon) {
+                self.memo_hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(p));
+            }
+            // The mapped program was flushed: fall through and re-run the
+            // pipeline (the memo entry stays valid and is re-written).
+        }
+        self.memo_misses.fetch_add(1, Ordering::Relaxed);
+        let (og, _) = crate::opt::optimize(g, self.opt_level);
+        self.opt_insts_in.fetch_add(g.len(), Ordering::Relaxed);
+        self.opt_insts_out.fetch_add(og.len(), Ordering::Relaxed);
+        let key = crate::ir::canon::graph_hash(&og);
+        {
+            let mut memo = self.memo.lock().unwrap();
+            if memo.len() >= MEMO_MAX_ENTRIES {
+                memo.clear();
+            }
+            memo.insert(raw_key, key);
+        }
+        self.fetch_or_insert(key, &og)
+    }
+
+    fn fetch_or_insert(&self, key: u128, target: &Graph) -> Result<Arc<Program>, IrError> {
         if let Some(p) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
         }
-        let compiled = Arc::new(Program::compile(target)?);
+        let compiled = Arc::new(if self.opt_level >= OptLevel::O3 {
+            Program::compile_fused(target)?
+        } else {
+            Program::compile(target)?
+        });
+        if let Some(f) = compiled.fusion_stats() {
+            self.fuse_programs.fetch_add(1, Ordering::Relaxed);
+            self.fuse_regions.fetch_add(f.regions, Ordering::Relaxed);
+            self.fuse_steps_before.fetch_add(f.steps_before, Ordering::Relaxed);
+            self.fuse_steps_after.fetch_add(f.steps_after, Ordering::Relaxed);
+            self.fuse_peak_before.fetch_add(f.peak_before, Ordering::Relaxed);
+            self.fuse_peak_after.fetch_add(f.peak_after, Ordering::Relaxed);
+        }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.map.lock().unwrap();
         if map.len() >= MAX_ENTRIES {
@@ -115,14 +216,31 @@ impl ProgramCache {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
-    /// `(instructions in, instructions out)` across every optimized
-    /// lookup — the aggregate instruction-count reduction the pipeline
-    /// delivered. Both zero at `OptLevel::O0`.
-    pub fn opt_stats(&self) -> (usize, usize) {
-        (
-            self.opt_insts_in.load(Ordering::Relaxed),
-            self.opt_insts_out.load(Ordering::Relaxed),
-        )
+    /// Optimizer counters: aggregate instruction reduction across
+    /// pipeline runs plus the memo's hit/miss split. All zero at `O0`.
+    pub fn opt_stats(&self) -> OptStats {
+        OptStats {
+            insts_in: self.opt_insts_in.load(Ordering::Relaxed),
+            insts_out: self.opt_insts_out.load(Ordering::Relaxed),
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
+            memo_misses: self.memo_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Aggregate fusion outcome across every compiled program; `None`
+    /// below `OptLevel::O3` (the cache never fuses there).
+    pub fn fusion_stats(&self) -> Option<FusionTotals> {
+        if self.opt_level < OptLevel::O3 {
+            return None;
+        }
+        Some(FusionTotals {
+            programs: self.fuse_programs.load(Ordering::Relaxed),
+            regions: self.fuse_regions.load(Ordering::Relaxed),
+            steps_before: self.fuse_steps_before.load(Ordering::Relaxed),
+            steps_after: self.fuse_steps_after.load(Ordering::Relaxed),
+            peak_before: self.fuse_peak_before.load(Ordering::Relaxed),
+            peak_after: self.fuse_peak_after.load(Ordering::Relaxed),
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -158,7 +276,8 @@ mod tests {
         assert!(Arc::ptr_eq(&p1, &p2), "identical graphs must share one program");
         assert_eq!(c.stats(), (1, 1));
         assert_eq!(c.len(), 1);
-        assert_eq!(c.opt_stats(), (0, 0), "O0 never optimizes");
+        assert_eq!(c.opt_stats(), OptStats::default(), "O0 never optimizes");
+        assert_eq!(c.fusion_stats(), None, "O0 never fuses");
     }
 
     #[test]
@@ -204,7 +323,7 @@ mod tests {
         let x = twin.insts()[0].id;
         twin.push(OpKind::Tanh, &[x]).unwrap(); // unused -> dead
         for (level, want_entries) in
-            [(OptLevel::O0, 2usize), (OptLevel::O1, 1), (OptLevel::O2, 1)]
+            [(OptLevel::O0, 2usize), (OptLevel::O1, 1), (OptLevel::O2, 1), (OptLevel::O3, 1)]
         {
             let c = ProgramCache::with_opt(level);
             let p1 = c.get_or_compile(&g).unwrap();
@@ -228,7 +347,7 @@ mod tests {
         g.set_outputs(&[a]);
         let input = Tensor::iota(&[2, 2]);
         let want = crate::interp::eval(&g, std::slice::from_ref(&input)).unwrap();
-        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3] {
             let c = ProgramCache::with_opt(level);
             let p = c.get_or_compile(&g).unwrap();
             let got = p.run(std::slice::from_ref(&input)).unwrap();
@@ -250,8 +369,76 @@ mod tests {
         twin.push(OpKind::Tanh, &[x]).unwrap();
         let c = ProgramCache::with_opt(OptLevel::O2);
         let _ = c.get_or_compile(&twin).unwrap();
-        let (ins, outs) = c.opt_stats();
-        assert_eq!(ins, 3);
-        assert_eq!(outs, 2, "the dead tanh must be optimized away");
+        let s = c.opt_stats();
+        assert_eq!(s.insts_in, 3);
+        assert_eq!(s.insts_out, 2, "the dead tanh must be optimized away");
+        assert_eq!((s.memo_hits, s.memo_misses), (0, 1));
+    }
+
+    #[test]
+    fn memo_skips_the_pipeline_for_repeat_genomes() {
+        let g = g1();
+        let c = ProgramCache::with_opt(OptLevel::O2);
+        let p1 = c.get_or_compile(&g).unwrap();
+        let before = c.opt_stats();
+        assert_eq!((before.memo_hits, before.memo_misses), (0, 1));
+        // The identical graph again: memo hit, no pipeline run, and the
+        // instruction counters must not move.
+        let p2 = c.get_or_compile(&g).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        let after = c.opt_stats();
+        assert_eq!((after.memo_hits, after.memo_misses), (1, 1));
+        assert_eq!(after.insts_in, before.insts_in, "memo hit must skip the pipeline");
+        assert_eq!(c.stats(), (1, 1), "the memo hit is also a cache hit");
+        // A structurally different graph misses the memo.
+        let mut other = g1();
+        let e = other.outputs()[0];
+        let t = other.push(OpKind::Tanh, &[e]).unwrap();
+        other.set_outputs(&[t]);
+        let _ = c.get_or_compile(&other).unwrap();
+        let s = c.opt_stats();
+        assert_eq!((s.memo_hits, s.memo_misses), (1, 2));
+    }
+
+    #[test]
+    fn o3_cache_fuses_and_reports_totals() {
+        // dense layer: dot + bias broadcast + add + relu(splat max) — the
+        // O3 cache must fold it and report the step reduction. Weights
+        // are parameters so the O2 constant folder cannot materialize the
+        // bias broadcast before fusion sees the pattern.
+        let mut g = Graph::new("dense");
+        let x = g.param(TType::of(&[4, 3]));
+        let w = g.param(TType::of(&[3, 2]));
+        let b = g.param(TType::of(&[2]));
+        let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+        let bb = g
+            .push(OpKind::Broadcast { dims: vec![4, 2], mapping: vec![1] }, &[b])
+            .unwrap();
+        let z = g.push(OpKind::Add, &[d, bb]).unwrap();
+        let zero = g.constant_scalar(0.0);
+        let zb = g
+            .push(OpKind::Broadcast { dims: vec![4, 2], mapping: vec![] }, &[zero])
+            .unwrap();
+        let r = g.push(OpKind::Maximum, &[z, zb]).unwrap();
+        g.set_outputs(&[r]);
+
+        let c = ProgramCache::with_opt(OptLevel::O3);
+        let p = c.get_or_compile(&g).unwrap();
+        let totals = c.fusion_stats().expect("O3 reports fusion totals");
+        assert_eq!(totals.programs, 1);
+        assert!(totals.regions >= 2, "dot-bias fold + fused relu");
+        assert!(totals.steps_after < totals.steps_before);
+        assert!(totals.peak_after <= totals.peak_before);
+        // and the fused program is bit-identical to the interpreter
+        let inputs =
+            vec![Tensor::iota(&[4, 3]), Tensor::iota(&[3, 2]), Tensor::iota(&[2])];
+        let want = crate::interp::eval(&g, &inputs).unwrap();
+        let got = p.run(&inputs).unwrap();
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert_eq!(a.dims(), b.dims());
+            for (x, y) in a.data().iter().zip(b.data().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "O3 cache changed bits");
+            }
+        }
     }
 }

@@ -31,10 +31,14 @@
 //! executed more than once. [`cache::ProgramCache`] keys compiled programs
 //! by canonical graph hash ([`crate::ir::canon::graph_hash`]) so elites
 //! and crossover-identical offspring skip recompilation entirely; at
-//! `--opt-level 1|2` it additionally canonicalizes each graph through the
-//! bit-identity-preserving optimizer pipeline ([`crate::opt`]) before
+//! `--opt-level 1|2|3` it additionally canonicalizes each graph through
+//! the bit-identity-preserving optimizer pipeline ([`crate::opt`]) before
 //! hashing, so mutants that differ only by dead or redundant edits share
-//! one entry and the lowered programs are smaller.
+//! one entry and the lowered programs are smaller. At `--opt-level 3`
+//! lowering runs kernel fusion ([`crate::opt::fuse`] →
+//! [`Program::compile_fused`]): elementwise-chain regions, dot+bias
+//! folds and sunk splat broadcasts become single-loop fused steps, still
+//! bit-identical to the interpreter.
 
 pub mod cache;
 
@@ -42,61 +46,15 @@ use crate::interp::EvalError;
 use crate::ir::graph::Graph;
 use crate::ir::op::OpKind;
 use crate::ir::types::{IrError, ValueId};
+use crate::opt::fuse::{FusionPlan, StepFusion};
 use crate::tensor::ops::{self, ReduceKind};
 use crate::tensor::{Shape, Tensor};
 
-/// Elementwise binary op, specialized at lowering time. `apply` matches
-/// the closures in [`crate::tensor::ops`] exactly (bit-identity).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum BinOp {
-    Add,
-    Sub,
-    Mul,
-    Div,
-    Max,
-    Min,
-    Gt,
-}
-
-impl BinOp {
-    #[inline]
-    fn apply(self) -> fn(f32, f32) -> f32 {
-        match self {
-            BinOp::Add => |x, y| x + y,
-            BinOp::Sub => |x, y| x - y,
-            BinOp::Mul => |x, y| x * y,
-            BinOp::Div => |x, y| x / y,
-            BinOp::Max => f32::max,
-            BinOp::Min => f32::min,
-            BinOp::Gt => |x, y| if x > y { 1.0 } else { 0.0 },
-        }
-    }
-}
-
-/// Elementwise unary op.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum UnOp {
-    Exp,
-    Log,
-    Neg,
-    Sqrt,
-    Rsqrt,
-    Tanh,
-}
-
-impl UnOp {
-    #[inline]
-    fn apply(self) -> fn(f32) -> f32 {
-        match self {
-            UnOp::Exp => f32::exp,
-            UnOp::Log => f32::ln,
-            UnOp::Neg => |x| -x,
-            UnOp::Sqrt => f32::sqrt,
-            UnOp::Rsqrt => |x| 1.0 / x.sqrt(),
-            UnOp::Tanh => f32::tanh,
-        }
-    }
-}
+// The scalar elementwise dispatch tables live in [`crate::tensor::ops`]
+// so that the per-step kernels here and the fused single-loop kernel
+// (`--opt-level 3`) share one set of closures — that sharing *is* the
+// bit-identity argument for fusion.
+use crate::tensor::ops::{ScalarBinOp as BinOp, ScalarUnOp as UnOp};
 
 /// Lowered operation: attributes resolved, dispatch shape precomputed.
 #[derive(Debug, Clone)]
@@ -122,6 +80,13 @@ enum StepKind {
     Conv2d { stride: usize, same: bool },
     DepthwiseConv2d { stride: usize, same: bool },
     GlobalAvgPool,
+    /// A fused elementwise region (`--opt-level 3`): the whole DAG runs
+    /// element-at-a-time in one pass over register-style scratch
+    /// ([`ops::fused_map_into`]); `splats` are broadcast-sunk constants.
+    FusedMap { splats: Vec<f32>, instrs: Vec<ops::FusedInstr> },
+    /// `dot(a, b) + broadcast(bias)` folded into one kernel
+    /// ([`ops::dot_bias_into`]); args are `[a, b, bias]`.
+    DotBias { bias_first: bool },
 }
 
 /// One lowered instruction.
@@ -156,6 +121,30 @@ pub struct Program {
     outputs: Vec<usize>,
     num_params: usize,
     peak_live: usize,
+    /// Set when compiled through [`Program::compile_fused`].
+    fusion: Option<FusionStats>,
+}
+
+/// What kernel fusion did to one compiled program (`--opt-level 3`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusionStats {
+    /// Fused regions lowered (elementwise + dot-bias).
+    pub regions: usize,
+    /// Instructions that emit no step (region interiors + sunk broadcast
+    /// chains).
+    pub absorbed: usize,
+    /// Steps an unfused lowering would have emitted (= instruction count).
+    pub steps_before: usize,
+    /// Steps actually emitted.
+    pub steps_after: usize,
+    /// Peak simultaneously-materialized buffers, unfused vs fused. On
+    /// contiguous regions (the seed workloads) fusion only lowers this;
+    /// it is **not** a universal invariant — a region whose inputs span
+    /// interleaved materializing steps extends their lifetimes to the
+    /// fused step, which can raise the peak. Reported so either direction
+    /// is visible.
+    pub peak_before: usize,
+    pub peak_after: usize,
 }
 
 /// Reusable per-thread run state: the register file and the buffer arena.
@@ -165,6 +154,10 @@ pub struct Program {
 pub struct Scratch {
     regs: Vec<Reg>,
     arena: Arena,
+    /// Reusable per-element register file for `FusedMap` steps
+    /// ([`ops::fused_map_into`]) — sized to the largest region seen, so
+    /// the fused hot loop never allocates.
+    fuse_regs: Vec<f32>,
 }
 
 impl Scratch {
@@ -201,6 +194,64 @@ impl Arena {
     }
 }
 
+/// Liveness over a step sequence given as `(dst register, arg registers,
+/// materializes)` triples: the per-step kill lists (each register freed
+/// right after the step holding its last use; dead defs at their own
+/// step; `outputs` pinned live to the end) plus the high-water mark of
+/// simultaneously-materialized result buffers — the no-aliasing upper
+/// bound the engine never exceeds. The single source of these rules:
+/// [`Program::compile_inner`] uses the kills for the emitted steps and,
+/// under fusion, calls it again on the raw instruction sequence for the
+/// unfused-baseline peak the stats compare against.
+fn liveness_over(
+    n: usize,
+    seq: &[(usize, Vec<usize>, bool)],
+    outputs: &[usize],
+) -> (Vec<Vec<usize>>, usize) {
+    let mut last_use: Vec<Option<usize>> = vec![None; n];
+    for (si, (_, args, _)) in seq.iter().enumerate() {
+        for &a in args {
+            last_use[a] = Some(si);
+        }
+    }
+    for &o in outputs {
+        last_use[o] = Some(usize::MAX);
+    }
+    let mut emitted_at: Vec<Option<usize>> = vec![None; n];
+    for (si, (dst, _, _)) in seq.iter().enumerate() {
+        emitted_at[*dst] = Some(si);
+    }
+    let mut kills: Vec<Vec<usize>> = vec![Vec::new(); seq.len()];
+    for reg in 0..n {
+        match last_use[reg] {
+            Some(usize::MAX) => {}             // output: lives to the end
+            Some(si) => kills[si].push(reg),   // freed right after step si
+            // dead def: freed immediately (absorbed regs never exist)
+            None => {
+                if let Some(si) = emitted_at[reg] {
+                    kills[si].push(reg);
+                }
+            }
+        }
+    }
+    let mut live = vec![false; n];
+    let (mut cur, mut peak) = (0usize, 0usize);
+    for (si, (dst, _, mat)) in seq.iter().enumerate() {
+        if *mat {
+            live[*dst] = true;
+            cur += 1;
+        }
+        peak = peak.max(cur);
+        for &k in &kills[si] {
+            if live[k] {
+                live[k] = false;
+                cur -= 1;
+            }
+        }
+    }
+    (kills, peak)
+}
+
 #[inline]
 fn get_reg<'a>(
     regs: &'a [Reg],
@@ -222,7 +273,26 @@ impl Program {
     /// marking. Fails iff the graph does not verify.
     pub fn compile(g: &Graph) -> Result<Program, IrError> {
         crate::ir::verify::verify(g)?;
+        Self::compile_inner(g, None)
+    }
 
+    /// Lower with kernel fusion (`--opt-level 3`): plan fused regions
+    /// ([`crate::opt::fuse::plan`]) and emit single-loop fused steps for
+    /// them; everything outside the legal patterns lowers exactly as
+    /// [`Program::compile`] would. Bit-identical to the unfused program
+    /// on every input (see the fusion module docs for the argument);
+    /// [`Program::fusion_stats`] reports what fusion bought.
+    pub fn compile_fused(g: &Graph) -> Result<Program, IrError> {
+        crate::ir::verify::verify(g)?;
+        let plan = crate::opt::fuse::plan(g);
+        Self::compile_inner(g, Some(plan))
+    }
+
+    /// Shared lowering over a pre-verified graph, with or without a
+    /// fusion plan. Liveness and the in-place marking run over the
+    /// *emitted* step list, so fused-away registers are never allocated
+    /// and region inputs die at the fused step that consumes them.
+    fn compile_inner(g: &Graph, plan: Option<FusionPlan>) -> Result<Program, IrError> {
         let slot_of: std::collections::HashMap<ValueId, usize> = g
             .insts()
             .iter()
@@ -230,147 +300,187 @@ impl Program {
             .map(|(p, i)| (i.id, p))
             .collect();
         let n = g.len();
+        let fused = plan.is_some();
+        let roles: Vec<StepFusion> = match plan {
+            Some(p) => p.steps,
+            None => vec![StepFusion::Normal; n],
+        };
 
-        // ---- liveness: last use per register --------------------------------
-        // `None` = never used; `usize::MAX` = live out (graph output).
-        let mut last_use: Vec<Option<usize>> = vec![None; n];
-        for (s, inst) in g.insts().iter().enumerate() {
-            for a in &inst.args {
-                last_use[slot_of[a]] = Some(s);
-            }
-        }
-        for o in g.outputs() {
-            last_use[slot_of[o]] = Some(usize::MAX);
-        }
-        let mut kills_of: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for slot in 0..n {
-            match last_use[slot] {
-                Some(usize::MAX) => {}            // output: lives to the end
-                Some(s) => kills_of[s].push(slot), // freed right after step s
-                None => kills_of[slot].push(slot), // dead def: freed immediately
-            }
-        }
-
-        // ---- lower each instruction ------------------------------------------
+        // ---- lower each non-absorbed instruction ---------------------------
         let mut consts = Vec::new();
-        let mut steps = Vec::with_capacity(n);
+        let mut steps: Vec<Step> = Vec::with_capacity(n);
         let mut num_params = 0;
+        let mut regions = 0usize;
         for (s, inst) in g.insts().iter().enumerate() {
-            let args: Vec<usize> = inst.args.iter().map(|a| slot_of[a]).collect();
-            let kind = match &inst.kind {
-                OpKind::Parameter { index } => {
-                    num_params += 1;
-                    StepKind::Param { index: *index }
+            let (kind, args): (StepKind, Vec<usize>) = match &roles[s] {
+                StepFusion::Absorbed => continue,
+                StepFusion::MapRoot(r) => {
+                    regions += 1;
+                    (
+                        StepKind::FusedMap {
+                            splats: r.splats.clone(),
+                            instrs: r.instrs.clone(),
+                        },
+                        r.inputs.clone(),
+                    )
                 }
-                OpKind::Constant { value } => {
-                    consts.push(value.clone());
-                    StepKind::Const { idx: consts.len() - 1 }
+                StepFusion::DotBiasRoot(r) => {
+                    regions += 1;
+                    (
+                        StepKind::DotBias { bias_first: r.bias_first },
+                        vec![r.a, r.b, r.bias],
+                    )
                 }
-                OpKind::Add => StepKind::Bin(BinOp::Add),
-                OpKind::Subtract => StepKind::Bin(BinOp::Sub),
-                OpKind::Multiply => StepKind::Bin(BinOp::Mul),
-                OpKind::Divide => StepKind::Bin(BinOp::Div),
-                OpKind::Maximum => StepKind::Bin(BinOp::Max),
-                OpKind::Minimum => StepKind::Bin(BinOp::Min),
-                OpKind::CompareGt => StepKind::Bin(BinOp::Gt),
-                OpKind::Exponential => StepKind::Un(UnOp::Exp),
-                OpKind::Log => StepKind::Un(UnOp::Log),
-                OpKind::Negate => StepKind::Un(UnOp::Neg),
-                OpKind::Sqrt => StepKind::Un(UnOp::Sqrt),
-                OpKind::Rsqrt => StepKind::Un(UnOp::Rsqrt),
-                OpKind::Tanh => StepKind::Un(UnOp::Tanh),
-                OpKind::Select => StepKind::Select,
-                OpKind::Dot => {
-                    let (ra, rb) = (
-                        g.ty(inst.args[0]).unwrap().rank(),
-                        g.ty(inst.args[1]).unwrap().rank(),
-                    );
-                    if ra == 2 && rb == 2 {
-                        StepKind::Dot2x2
-                    } else {
-                        StepKind::DotOther
-                    }
+                StepFusion::Normal => {
+                    let kind = match &inst.kind {
+                        OpKind::Parameter { index } => {
+                            num_params += 1;
+                            StepKind::Param { index: *index }
+                        }
+                        OpKind::Constant { value } => {
+                            consts.push(value.clone());
+                            StepKind::Const { idx: consts.len() - 1 }
+                        }
+                        OpKind::Add => StepKind::Bin(BinOp::Add),
+                        OpKind::Subtract => StepKind::Bin(BinOp::Sub),
+                        OpKind::Multiply => StepKind::Bin(BinOp::Mul),
+                        OpKind::Divide => StepKind::Bin(BinOp::Div),
+                        OpKind::Maximum => StepKind::Bin(BinOp::Max),
+                        OpKind::Minimum => StepKind::Bin(BinOp::Min),
+                        OpKind::CompareGt => StepKind::Bin(BinOp::Gt),
+                        OpKind::Exponential => StepKind::Un(UnOp::Exp),
+                        OpKind::Log => StepKind::Un(UnOp::Log),
+                        OpKind::Negate => StepKind::Un(UnOp::Neg),
+                        OpKind::Sqrt => StepKind::Un(UnOp::Sqrt),
+                        OpKind::Rsqrt => StepKind::Un(UnOp::Rsqrt),
+                        OpKind::Tanh => StepKind::Un(UnOp::Tanh),
+                        OpKind::Select => StepKind::Select,
+                        OpKind::Dot => {
+                            let (ra, rb) = (
+                                g.ty(inst.args[0]).unwrap().rank(),
+                                g.ty(inst.args[1]).unwrap().rank(),
+                            );
+                            if ra == 2 && rb == 2 {
+                                StepKind::Dot2x2
+                            } else {
+                                StepKind::DotOther
+                            }
+                        }
+                        OpKind::Reshape { .. } => StepKind::Reshape,
+                        OpKind::Broadcast { mapping, .. } => {
+                            StepKind::Broadcast { mapping: mapping.clone() }
+                        }
+                        OpKind::Transpose { perm } => {
+                            StepKind::Transpose { perm: perm.clone() }
+                        }
+                        OpKind::Pad { low, high, value } => StepKind::Pad {
+                            low: low.clone(),
+                            high: high.clone(),
+                            value: *value,
+                        },
+                        OpKind::Slice { starts, limits } => StepKind::Slice {
+                            starts: starts.clone(),
+                            limits: limits.clone(),
+                        },
+                        OpKind::Concat { dim } => StepKind::Concat { dim: *dim },
+                        OpKind::Reduce { dims, kind } => StepKind::Reduce {
+                            dims: dims.clone(),
+                            kind: *kind,
+                        },
+                        OpKind::Conv2d { stride, same } => StepKind::Conv2d {
+                            stride: *stride,
+                            same: *same,
+                        },
+                        OpKind::DepthwiseConv2d { stride, same } => {
+                            StepKind::DepthwiseConv2d { stride: *stride, same: *same }
+                        }
+                        OpKind::GlobalAvgPool => StepKind::GlobalAvgPool,
+                    };
+                    (kind, inst.args.iter().map(|a| slot_of[a]).collect())
                 }
-                OpKind::Reshape { .. } => StepKind::Reshape,
-                OpKind::Broadcast { mapping, .. } => {
-                    StepKind::Broadcast { mapping: mapping.clone() }
-                }
-                OpKind::Transpose { perm } => StepKind::Transpose { perm: perm.clone() },
-                OpKind::Pad { low, high, value } => StepKind::Pad {
-                    low: low.clone(),
-                    high: high.clone(),
-                    value: *value,
-                },
-                OpKind::Slice { starts, limits } => StepKind::Slice {
-                    starts: starts.clone(),
-                    limits: limits.clone(),
-                },
-                OpKind::Concat { dim } => StepKind::Concat { dim: *dim },
-                OpKind::Reduce { dims, kind } => StepKind::Reduce {
-                    dims: dims.clone(),
-                    kind: *kind,
-                },
-                OpKind::Conv2d { stride, same } => StepKind::Conv2d {
-                    stride: *stride,
-                    same: *same,
-                },
-                OpKind::DepthwiseConv2d { stride, same } => StepKind::DepthwiseConv2d {
-                    stride: *stride,
-                    same: *same,
-                },
-                OpKind::GlobalAvgPool => StepKind::GlobalAvgPool,
             };
-            let inplace0 = matches!(
-                kind,
-                StepKind::Bin(_) | StepKind::Un(_) | StepKind::Reshape
-            ) && kills_of[s].contains(&args[0])
-                && !args[1..].contains(&args[0]);
             steps.push(Step {
                 kind,
                 args,
                 dst: s,
                 out_dims: inst.ty.dims.clone(),
-                kills: std::mem::take(&mut kills_of[s]),
-                inplace0,
+                kills: Vec::new(),
+                inplace0: false,
             });
         }
 
-        // ---- peak materialized-buffer count -----------------------------------
-        // High-water mark of Owned registers, counted at the point a step's
-        // result exists but its kills have not yet been applied (the
-        // no-aliasing upper bound; in-place steps can only do better).
-        let materializes =
-            |s: &Step| !matches!(s.kind, StepKind::Param { .. } | StepKind::Const { .. });
-        let mut live = vec![false; n];
-        let mut cur = 0usize;
-        let mut peak = 0usize;
-        for step in &steps {
-            if materializes(step) {
-                live[step.dst] = true;
-                cur += 1;
-            }
-            peak = peak.max(cur);
-            for &k in &step.kills {
-                if live[k] {
-                    live[k] = false;
-                    cur -= 1;
-                }
-            }
+        // ---- liveness over the emitted steps --------------------------------
+        let outputs: Vec<usize> = g.outputs().iter().map(|o| slot_of[o]).collect();
+        let seq: Vec<(usize, Vec<usize>, bool)> = steps
+            .iter()
+            .map(|s| {
+                (
+                    s.dst,
+                    s.args.clone(),
+                    !matches!(s.kind, StepKind::Param { .. } | StepKind::Const { .. }),
+                )
+            })
+            .collect();
+        let (mut kills, peak) = liveness_over(n, &seq, &outputs);
+        for (si, step) in steps.iter_mut().enumerate() {
+            step.kills = std::mem::take(&mut kills[si]);
+            step.inplace0 = matches!(
+                step.kind,
+                StepKind::Bin(_) | StepKind::Un(_) | StepKind::Reshape
+            ) && step.kills.contains(&step.args[0])
+                && !step.args[1..].contains(&step.args[0]);
         }
+
+        let fusion = if fused {
+            let absorbed = n - steps.len();
+            let raw_seq: Vec<(usize, Vec<usize>, bool)> = g
+                .insts()
+                .iter()
+                .enumerate()
+                .map(|(s, inst)| {
+                    (
+                        s,
+                        inst.args.iter().map(|a| slot_of[a]).collect(),
+                        !matches!(
+                            inst.kind,
+                            OpKind::Parameter { .. } | OpKind::Constant { .. }
+                        ),
+                    )
+                })
+                .collect();
+            let (_, peak_before) = liveness_over(n, &raw_seq, &outputs);
+            Some(FusionStats {
+                regions,
+                absorbed,
+                steps_before: n,
+                steps_after: steps.len(),
+                peak_before,
+                peak_after: peak,
+            })
+        } else {
+            None
+        };
 
         Ok(Program {
             name: g.name.clone(),
             steps,
             consts,
             slot_vids: g.insts().iter().map(|i| i.id).collect(),
-            outputs: g.outputs().iter().map(|o| slot_of[o]).collect(),
+            outputs,
             num_params,
             peak_live: peak,
+            fusion,
         })
     }
 
     pub fn num_params(&self) -> usize {
         self.num_params
+    }
+
+    /// What kernel fusion did to this program; `None` when compiled
+    /// through the unfused [`Program::compile`].
+    pub fn fusion_stats(&self) -> Option<FusionStats> {
+        self.fusion
     }
 
     pub fn num_slots(&self) -> usize {
@@ -426,7 +536,10 @@ impl Program {
         }
 
         // Reset the register file, recycling buffers from the previous run.
-        let n = self.steps.len();
+        // Registers are indexed by instruction position (`Step::dst`), so
+        // the file is sized to the register space, not the emitted step
+        // count — under fusion the latter is smaller.
+        let n = self.slot_vids.len();
         for reg in scratch.regs.iter_mut() {
             if let Reg::Owned(t) = std::mem::replace(reg, Reg::Empty) {
                 scratch.arena.put(t.into_data());
@@ -508,7 +621,9 @@ impl Program {
             StepKind::Bin(_)
             | StepKind::Un(_)
             | StepKind::Dot2x2
-            | StepKind::Broadcast { .. } => Some(scratch.arena.take()),
+            | StepKind::Broadcast { .. }
+            | StepKind::FusedMap { .. }
+            | StepKind::DotBias { .. } => Some(scratch.arena.take()),
             _ => None,
         };
         let out: Tensor = {
@@ -561,6 +676,36 @@ impl Program {
                     ops::depthwise_conv2d(get(step.args[0])?, get(step.args[1])?, *stride, *same)
                 }
                 StepKind::GlobalAvgPool => ops::global_avg_pool(get(step.args[0])?),
+                StepKind::FusedMap { splats, instrs } => {
+                    let mut b = buf.take().unwrap();
+                    let mut ins: Vec<&[f32]> = Vec::with_capacity(step.args.len());
+                    for &a in &step.args {
+                        ins.push(get(a)?.data());
+                    }
+                    let numel: usize = step.out_dims.iter().product();
+                    // `regs` holds `scratch.regs`; `fuse_regs` is a
+                    // disjoint field, so the split borrow is fine.
+                    ops::fused_map_into(
+                        &ins,
+                        splats,
+                        instrs,
+                        numel,
+                        &mut scratch.fuse_regs,
+                        &mut b,
+                    );
+                    Tensor::new(Shape::of(&step.out_dims), b)
+                }
+                StepKind::DotBias { bias_first } => {
+                    let mut b = buf.take().unwrap();
+                    ops::dot_bias_into(
+                        get(step.args[0])?,
+                        get(step.args[1])?,
+                        get(step.args[2])?,
+                        *bias_first,
+                        &mut b,
+                    );
+                    Tensor::new(Shape::of(&step.out_dims), b)
+                }
             }
         };
         if let Some(b) = buf {
@@ -719,6 +864,95 @@ mod tests {
             let got = p.run(&inputs).unwrap();
             assert!(bits_equal(&want, &got), "graph '{}' diverged", g.name);
         }
+    }
+
+    #[test]
+    fn fused_workload_graphs_bit_identical_and_smaller() {
+        let spec = crate::models::twofc::TwoFcSpec {
+            batch: 4,
+            input: 9,
+            hidden: 6,
+            classes: 3,
+            lr: 0.1,
+        };
+        for g in [
+            crate::models::twofc::predict_graph(&spec),
+            crate::models::twofc::train_step_graph(&spec),
+        ] {
+            let unfused = Program::compile(&g).unwrap();
+            let fused = Program::compile_fused(&g).unwrap();
+            let stats = fused.fusion_stats().expect("fused compile records stats");
+            assert!(stats.regions > 0, "'{}' has fusible structure", g.name);
+            assert_eq!(stats.steps_before, unfused.num_slots());
+            assert_eq!(stats.steps_after, fused.num_slots());
+            assert!(
+                fused.num_slots() < unfused.num_slots(),
+                "'{}': fusion must shrink the step count",
+                g.name
+            );
+            // Not a universal invariant (see FusionStats), but on these
+            // contiguous-region seed graphs fusion must not raise it.
+            assert!(
+                stats.peak_after <= stats.peak_before,
+                "'{}': fusion raised the arena high-water mark",
+                g.name
+            );
+            assert_eq!(stats.peak_before, unfused.peak_live());
+            assert_eq!(stats.peak_after, fused.peak_live());
+            let mut rng = crate::util::rng::Rng::new(17);
+            let inputs: Vec<Tensor> = g
+                .param_types()
+                .iter()
+                .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, &mut rng))
+                .collect();
+            let want = eval(&g, &inputs).unwrap();
+            let mut scratch = Scratch::new();
+            for run in 0..3 {
+                let got = fused.run_with(&inputs, &mut scratch).unwrap();
+                assert!(bits_equal(&want, &got), "'{}' run {run} diverged fused", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_error_classes_match_interp() {
+        let g = diamond();
+        let p = Program::compile_fused(&g).unwrap();
+        let ei = eval(&g, &[]).unwrap_err();
+        let ec = p.run(&[]).unwrap_err();
+        assert_eq!(std::mem::discriminant(&ei), std::mem::discriminant(&ec));
+        let bad = Tensor::zeros(&[5, 5]);
+        let ei = eval(&g, std::slice::from_ref(&bad)).unwrap_err();
+        let ec = p.run(std::slice::from_ref(&bad)).unwrap_err();
+        assert_eq!(ei, ec, "shape error must match exactly under fusion");
+    }
+
+    #[test]
+    fn compile_fused_without_fusible_structure_matches_compile() {
+        // A graph of dots/reduces only: the plan is empty and the fused
+        // lowering must be step-for-step the unfused one.
+        let mut g = Graph::new("nofuse");
+        let a = g.param(TType::of(&[3, 4]));
+        let b = g.param(TType::of(&[4, 2]));
+        let d = g.push(OpKind::Dot, &[a, b]).unwrap();
+        let r = g
+            .push(
+                OpKind::Reduce { dims: vec![0], kind: ops::ReduceKind::Sum },
+                &[d],
+            )
+            .unwrap();
+        g.set_outputs(&[r]);
+        let unfused = Program::compile(&g).unwrap();
+        let fused = Program::compile_fused(&g).unwrap();
+        assert_eq!(fused.num_slots(), unfused.num_slots());
+        assert_eq!(fused.peak_live(), unfused.peak_live());
+        let stats = fused.fusion_stats().unwrap();
+        assert_eq!((stats.regions, stats.absorbed), (0, 0));
+        let x = Tensor::iota(&[3, 4]);
+        let y = Tensor::iota(&[4, 2]);
+        let want = unfused.run(&[x.clone(), y.clone()]).unwrap();
+        let got = fused.run(&[x, y]).unwrap();
+        assert!(bits_equal(&want, &got));
     }
 
     #[test]

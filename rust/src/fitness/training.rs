@@ -143,6 +143,10 @@ impl Evaluator for TrainingWorkload {
     fn opt_level(&self) -> Option<crate::opt::OptLevel> {
         Some(self.programs.opt_level())
     }
+
+    fn fusion_stats(&self) -> Option<crate::exec::cache::FusionTotals> {
+        self.programs.fusion_stats()
+    }
 }
 
 #[cfg(test)]

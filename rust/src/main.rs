@@ -46,14 +46,16 @@ USAGE: gevo-ml <subcommand> [flags]
            [--metric flops|wall|blend] [--fit N] [--test N] [--epochs N]
            [--workers N] [--islands K] [--migration-interval M]
            [--migrants N] [--checkpoint FILE] [--checkpoint-every N]
-           [--opt-level 0|1|2] [--out PREFIX] [--quiet]
+           [--opt-level 0|1|2|3] [--out PREFIX] [--quiet]
            --islands shards the population into K ring-connected
            subpopulations; --checkpoint saves resumable state every
            --checkpoint-every generations (an existing file is resumed,
            targeting --gens); --opt-level canonicalizes candidate graphs
            through the bit-identity-preserving optimizer pipeline before
            lowering (0 = off, reproduces historical behavior exactly;
-           default 2)
+           default 2; 3 = level 2 plus kernel fusion — elementwise
+           chains, dot+bias folds and broadcast sinking lower to
+           single-loop fused steps, still bit-identical)
   minimize same flags as search; after the search (or checkpoint resume)
            delta-debugs every Pareto-front edit list down to the edits
            that matter and prints the per-edit attribution table; never
@@ -85,7 +87,7 @@ fn search_config(args: &Args) -> SearchConfig {
         migrants: args.usize_or("migrants", 2),
         checkpoint_every: args.usize_or("checkpoint-every", 1),
         opt_level: OptLevel::parse(&args.get_or("opt-level", "2"))
-            .unwrap_or_else(|| panic!("--opt-level must be 0, 1 or 2")),
+            .unwrap_or_else(|| panic!("--opt-level must be 0, 1, 2 or 3")),
         verbose: !args.flag("quiet"),
     }
 }
@@ -139,6 +141,9 @@ fn cmd_search(args: &Args) {
     }
     if let Some((hits, misses)) = r.search.program_cache {
         println!("program cache: {hits} hits / {misses} lowerings");
+    }
+    if let Some(f) = r.search.program_fusion {
+        println!("{}", report::fusion_summary(&f));
     }
     write_out(args, &r);
 }

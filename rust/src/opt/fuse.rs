@@ -1,0 +1,639 @@
+//! Kernel fusion planning — the analysis behind `--opt-level 3`.
+//!
+//! The pass pipeline ([`super::passes`]) only *removes* work; this module
+//! *merges* it. [`plan`] groups a verified graph into fused regions that
+//! the compiled engine ([`crate::exec`]) lowers to single-loop kernels,
+//! shrinking the step count and the number of intermediate buffers every
+//! fitness evaluation touches. Three fusion families are implemented:
+//!
+//! * **Elementwise-chain fusion** — a maximal single-rooted DAG region of
+//!   binary/unary/`select` elementwise ops is compiled into one
+//!   `FusedMap` step that walks the elements once, evaluating the whole
+//!   region per element over register-style scratch
+//!   ([`crate::tensor::ops::fused_map_into`]). No intermediate arenas.
+//! * **Dot+bias folding** — `add(dot(a, b), broadcast_in_dim(bias, [1]))`
+//!   becomes one `DotBias` step: full GEMM accumulation first, then a
+//!   row-wise bias add ([`crate::tensor::ops::dot_bias_into`]), so the
+//!   `[m,n]` broadcast never materializes.
+//! * **Broadcast sinking** — an operand that is a data-movement chain
+//!   (`broadcast`/`reshape`/`transpose`) over an all-same-bits constant
+//!   is sunk into its fused consumer as a preloaded splat scratch slot;
+//!   when every use is fused the chain emits no steps at all, so
+//!   broadcasted constants never materialize.
+//!
+//! **Bit-identity.** Every family preserves output bits exactly:
+//! elementwise ops touch each element independently and the fused kernel
+//! runs the same scalar closures in the same per-element order
+//! ([`crate::tensor::ops::ScalarBinOp`] is the shared dispatch point);
+//! `DotBias` keeps the bias out of the GEMM accumulator and applies it in
+//! the original `add` operand order. Rules **excluded** for bit-safety
+//! (the analog of the pipeline's excluded `x + 0.0`):
+//!
+//! * the bias is never folded into the GEMM accumulator — `bias + Σ`
+//!   re-associates the sum and changes bits;
+//! * only *splat* (all-same-bits) constants are sunk — a non-splat
+//!   broadcast's per-element value depends on the element index, which an
+//!   index-free fused region cannot reproduce;
+//! * reductions, `dot`, and data-movement ops never join an elementwise
+//!   region — their output element order is not an elementwise map.
+//!
+//! **Legality.** A value is absorbed into a region only when *all* of its
+//! uses are inside the region and it is not a graph output; multi-use
+//! interior values therefore stay live as ordinary materialized steps and
+//! enter the region as external inputs (enforced by the tests below).
+//! Anything outside the legal patterns falls back to unfused lowering
+//! unchanged.
+
+use crate::ir::op::OpKind;
+use crate::ir::types::ValueId;
+use crate::ir::Graph;
+use crate::tensor::ops::{FusedInstr, ScalarBinOp, ScalarUnOp};
+use std::collections::{BTreeSet, HashMap};
+
+/// What the lowering should do with one instruction position.
+#[derive(Debug, Clone)]
+pub enum StepFusion {
+    /// Lower as an ordinary step.
+    Normal,
+    /// Absorbed into a fused region (or dead after broadcast sinking):
+    /// emit no step; the register is never materialized.
+    Absorbed,
+    /// Root of a fused elementwise region: emit one `FusedMap` step.
+    MapRoot(MapRegion),
+    /// Root of a dot+bias fold: emit one `DotBias` step.
+    DotBiasRoot(DotBiasRegion),
+}
+
+/// A fused elementwise region, ready for lowering.
+#[derive(Debug, Clone)]
+pub struct MapRegion {
+    /// Instruction positions of the region's external inputs, in scratch
+    /// slot order. Every input shares the region's element count (the
+    /// elementwise ops' typing guarantees it).
+    pub inputs: Vec<usize>,
+    /// Broadcast-sunk splat constants, one scratch slot each (preloaded
+    /// once — index-independent by construction).
+    pub splats: Vec<f32>,
+    /// Region body in original instruction order; operand indices address
+    /// `[inputs… | splats… | prior results…]`.
+    pub instrs: Vec<FusedInstr>,
+}
+
+/// A `dot(a, b) + broadcast(bias)` fold, ready for lowering.
+#[derive(Debug, Clone)]
+pub struct DotBiasRegion {
+    /// Instruction positions of the dot operands (`[m,k]`, `[k,n]`) and
+    /// the pre-broadcast `[n]` bias vector.
+    pub a: usize,
+    pub b: usize,
+    pub bias: usize,
+    /// The original add computed `bias + dot` (operand order is preserved
+    /// for NaN-payload fidelity).
+    pub bias_first: bool,
+}
+
+/// Fusion plan over a verified graph: one [`StepFusion`] per instruction
+/// position, plus discovery stats.
+#[derive(Debug, Clone)]
+pub struct FusionPlan {
+    pub steps: Vec<StepFusion>,
+    /// Fused regions discovered (elementwise + dot-bias).
+    pub regions: usize,
+    /// Instructions that emit no step: region interiors plus broadcast
+    /// chains made dead by sinking.
+    pub absorbed: usize,
+}
+
+/// Regions are capped at the `u16` scratch-slot space of
+/// [`FusedInstr`] — far above any real graph, but a mutant could in
+/// principle chain that many elementwise ops.
+const MAX_SLOTS: usize = u16::MAX as usize;
+
+fn bin_of(k: &OpKind) -> Option<ScalarBinOp> {
+    Some(match k {
+        OpKind::Add => ScalarBinOp::Add,
+        OpKind::Subtract => ScalarBinOp::Sub,
+        OpKind::Multiply => ScalarBinOp::Mul,
+        OpKind::Divide => ScalarBinOp::Div,
+        OpKind::Maximum => ScalarBinOp::Max,
+        OpKind::Minimum => ScalarBinOp::Min,
+        OpKind::CompareGt => ScalarBinOp::Gt,
+        _ => return None,
+    })
+}
+
+fn un_of(k: &OpKind) -> Option<ScalarUnOp> {
+    Some(match k {
+        OpKind::Exponential => ScalarUnOp::Exp,
+        OpKind::Log => ScalarUnOp::Log,
+        OpKind::Negate => ScalarUnOp::Neg,
+        OpKind::Sqrt => ScalarUnOp::Sqrt,
+        OpKind::Rsqrt => ScalarUnOp::Rsqrt,
+        OpKind::Tanh => ScalarUnOp::Tanh,
+        _ => return None,
+    })
+}
+
+fn is_elementwise(k: &OpKind) -> bool {
+    bin_of(k).is_some() || un_of(k).is_some() || matches!(k, OpKind::Select)
+}
+
+/// Compute the fusion plan for a verified graph. Deterministic: the
+/// result depends only on the graph's canonical structure, never on hash
+/// iteration order or RNG.
+pub fn plan(g: &Graph) -> FusionPlan {
+    let n = g.len();
+    let pos_of: HashMap<ValueId, usize> =
+        g.insts().iter().enumerate().map(|(p, i)| (i.id, p)).collect();
+    // users[p] = positions of instructions reading p (duplicates kept —
+    // only membership matters below).
+    let mut users: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (p, inst) in g.insts().iter().enumerate() {
+        for a in &inst.args {
+            users[pos_of[a]].push(p);
+        }
+    }
+    let mut is_output = vec![false; n];
+    for o in g.outputs() {
+        is_output[pos_of[o]] = true;
+    }
+
+    let mut steps: Vec<StepFusion> = vec![StepFusion::Normal; n];
+    let mut taken = vec![false; n];
+
+    // ---- dot + bias folding (most specific pattern first) -----------------
+    let single_use = |p: usize| users[p].len() == 1 && !is_output[p];
+    for pos in 0..n {
+        let inst = g.inst_at(pos);
+        if !matches!(inst.kind, OpKind::Add) {
+            continue;
+        }
+        let (x, y) = (pos_of[&inst.args[0]], pos_of[&inst.args[1]]);
+        if x == y {
+            continue;
+        }
+        // `dot_p` must be a 2-D × 2-D dot, `bcast_p` a `[n] -> [m,n]`
+        // mapping-[1] broadcast of an exactly-length-`n` bias (a size-1
+        // expansion would break the row-wise zip), both used only here.
+        let try_pair = |dot_p: usize, bcast_p: usize| -> Option<(usize, usize, usize)> {
+            if taken[dot_p] || taken[bcast_p] || !single_use(dot_p) || !single_use(bcast_p) {
+                return None;
+            }
+            let d = g.inst_at(dot_p);
+            if !matches!(d.kind, OpKind::Dot) {
+                return None;
+            }
+            let (a, b) = (pos_of[&d.args[0]], pos_of[&d.args[1]]);
+            if g.inst_at(a).ty.rank() != 2 || g.inst_at(b).ty.rank() != 2 {
+                return None;
+            }
+            let bc = g.inst_at(bcast_p);
+            let OpKind::Broadcast { dims, mapping } = &bc.kind else { return None };
+            if dims.len() != 2 || *mapping != [1] {
+                return None;
+            }
+            let bias = pos_of[&bc.args[0]];
+            if g.inst_at(bias).ty.dims != vec![dims[1]] {
+                return None;
+            }
+            Some((a, b, bias))
+        };
+        let fold = if let Some((a, b, bias)) = try_pair(x, y) {
+            Some((x, y, DotBiasRegion { a, b, bias, bias_first: false }))
+        } else {
+            try_pair(y, x).map(|(a, b, bias)| (y, x, DotBiasRegion { a, b, bias, bias_first: true }))
+        };
+        if let Some((dot_p, bcast_p, region)) = fold {
+            taken[pos] = true;
+            taken[dot_p] = true;
+            taken[bcast_p] = true;
+            steps[dot_p] = StepFusion::Absorbed;
+            steps[bcast_p] = StepFusion::Absorbed;
+            steps[pos] = StepFusion::DotBiasRoot(region);
+        }
+    }
+
+    // ---- elementwise regions, grown backward from each candidate root ----
+    for root in (0..n).rev() {
+        if taken[root] || !is_elementwise(&g.inst_at(root).kind) {
+            continue;
+        }
+        // Closure computation: absorb an operand iff it is elementwise,
+        // unclaimed, not an output, and *every* use is already inside the
+        // region (multi-use interior values stay live as inputs). The
+        // fixed point is unique, so iteration order cannot matter. A
+        // frontier worklist suffices to reach it: a value's absorbability
+        // changes only when one of its users joins the region, and that
+        // user's operands — which include the value — are rescanned when
+        // it comes off the frontier.
+        let mut members: BTreeSet<usize> = BTreeSet::new();
+        members.insert(root);
+        let mut frontier: Vec<usize> = vec![root];
+        while let Some(m) = frontier.pop() {
+            for a in &g.inst_at(m).args {
+                let p = pos_of[a];
+                if members.contains(&p)
+                    || taken[p]
+                    || is_output[p]
+                    || !is_elementwise(&g.inst_at(p).kind)
+                {
+                    continue;
+                }
+                if users[p].iter().all(|u| members.contains(u)) {
+                    members.insert(p);
+                    frontier.push(p);
+                }
+            }
+        }
+        let member_vec: Vec<usize> = members.iter().copied().collect(); // ascending == topo
+        debug_assert_eq!(*member_vec.last().unwrap(), root, "root defines last");
+
+        // Classify external operands: splat chains sink as preloaded
+        // constants; everything else is a materialized input.
+        let mut inputs: Vec<usize> = Vec::new();
+        let mut splat_bits: Vec<u32> = Vec::new();
+        for &m in &member_vec {
+            for a in &g.inst_at(m).args {
+                let p = pos_of[a];
+                if members.contains(&p) {
+                    continue;
+                }
+                match super::passes::splat_bits(g, *a) {
+                    Some(bits) => {
+                        if !splat_bits.contains(&bits) {
+                            splat_bits.push(bits);
+                        }
+                    }
+                    None => {
+                        if !inputs.contains(&p) {
+                            inputs.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        // Worth fusing when at least two ops collapse into one loop, or a
+        // single op absorbs a splat (the broadcast never materializes).
+        if member_vec.len() < 2 && splat_bits.is_empty() {
+            continue;
+        }
+        if inputs.len() + splat_bits.len() + member_vec.len() > MAX_SLOTS {
+            continue;
+        }
+
+        // Lower the body: slot(p) = input index | splat index | expr index.
+        let base = inputs.len() + splat_bits.len();
+        let expr_slot: HashMap<usize, usize> =
+            member_vec.iter().enumerate().map(|(j, &p)| (p, base + j)).collect();
+        let slot = |a: &ValueId| -> u16 {
+            let p = pos_of[a];
+            let s = if let Some(&s) = expr_slot.get(&p) {
+                s
+            } else if let Some(bits) = super::passes::splat_bits(g, *a) {
+                inputs.len() + splat_bits.iter().position(|&b| b == bits).unwrap()
+            } else {
+                inputs.iter().position(|&q| q == p).unwrap()
+            };
+            s as u16
+        };
+        let instrs: Vec<FusedInstr> = member_vec
+            .iter()
+            .map(|&m| {
+                let inst = g.inst_at(m);
+                if let Some(op) = bin_of(&inst.kind) {
+                    FusedInstr::Bin { op, a: slot(&inst.args[0]), b: slot(&inst.args[1]) }
+                } else if let Some(op) = un_of(&inst.kind) {
+                    FusedInstr::Un { op, a: slot(&inst.args[0]) }
+                } else {
+                    FusedInstr::Select {
+                        p: slot(&inst.args[0]),
+                        t: slot(&inst.args[1]),
+                        f: slot(&inst.args[2]),
+                    }
+                }
+            })
+            .collect();
+
+        for &m in &member_vec {
+            taken[m] = true;
+            steps[m] = StepFusion::Absorbed;
+        }
+        steps[root] = StepFusion::MapRoot(MapRegion {
+            inputs,
+            splats: splat_bits.iter().map(|&b| f32::from_bits(b)).collect(),
+            instrs,
+        });
+    }
+
+    // ---- sweep steps made dead by sinking ---------------------------------
+    // A fully-sunk broadcast chain is no longer referenced by any emitted
+    // step; drop it (and, transitively, its constants). Parameters always
+    // emit — they carry the entry-shape validation — and a chain with any
+    // unfused consumer stays: sinking happens *only into* fused consumers.
+    let mut live = vec![false; n];
+    let mut stack: Vec<usize> = g.outputs().iter().map(|o| pos_of[o]).collect();
+    while let Some(p) = stack.pop() {
+        if live[p] {
+            continue;
+        }
+        live[p] = true;
+        let deps: Vec<usize> = match &steps[p] {
+            StepFusion::MapRoot(r) => r.inputs.clone(),
+            StepFusion::DotBiasRoot(r) => vec![r.a, r.b, r.bias],
+            StepFusion::Absorbed => Vec::new(),
+            StepFusion::Normal => g.inst_at(p).args.iter().map(|a| pos_of[a]).collect(),
+        };
+        for d in deps {
+            if !live[d] {
+                stack.push(d);
+            }
+        }
+    }
+    for p in 0..n {
+        if !live[p] && !matches!(g.inst_at(p).kind, OpKind::Parameter { .. }) {
+            // Dead Normal steps (sunk chains) and — on graphs that did not
+            // go through DCE — dead region roots both emit nothing; a dead
+            // root must not survive here or it would read swept inputs.
+            steps[p] = StepFusion::Absorbed;
+        }
+    }
+
+    // Count after the sweep: a dead root's region no longer lowers.
+    let regions = steps
+        .iter()
+        .filter(|s| matches!(s, StepFusion::MapRoot(_) | StepFusion::DotBiasRoot(_)))
+        .count();
+    let absorbed = steps.iter().filter(|s| matches!(s, StepFusion::Absorbed)).count();
+    FusionPlan { steps, regions, absorbed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Program;
+    use crate::interp::eval;
+    use crate::ir::op::ReduceKind;
+    use crate::ir::types::TType;
+    use crate::tensor::Tensor;
+
+    fn bits_equal(a: &[Tensor], b: &[Tensor]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b.iter()).all(|(x, y)| {
+                x.dims() == y.dims()
+                    && x.data()
+                        .iter()
+                        .zip(y.data().iter())
+                        .all(|(p, q)| p.to_bits() == q.to_bits())
+            })
+    }
+
+    fn check_fused_matches(g: &Graph, inputs: &[Tensor]) {
+        let want = eval(g, inputs).unwrap();
+        let fused = Program::compile_fused(g).unwrap();
+        let got = fused.run(inputs).unwrap();
+        assert!(bits_equal(&want, &got), "fused program diverged on '{}'", g.name);
+    }
+
+    #[test]
+    fn chain_fuses_into_one_step() {
+        let mut g = Graph::new("chain");
+        let x = g.param(TType::of(&[3, 4]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let t = g.push(OpKind::Tanh, &[e]).unwrap();
+        let m = g.push(OpKind::Negate, &[t]).unwrap();
+        g.set_outputs(&[m]);
+        let p = plan(&g);
+        assert_eq!(p.regions, 1);
+        assert_eq!(p.absorbed, 2, "exp and tanh absorb into the negate root");
+        let prog = Program::compile_fused(&g).unwrap();
+        assert_eq!(prog.num_slots(), 2, "param + one fused step");
+        check_fused_matches(&g, &[Tensor::iota(&[3, 4])]);
+    }
+
+    #[test]
+    fn diamond_region_reads_shared_value_once() {
+        // m = exp(x) * (exp(x) + x): the whole DAG fuses; exp is computed
+        // into one scratch slot and read twice.
+        let mut g = Graph::new("diamond");
+        let x = g.param(TType::of(&[4]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let a = g.push(OpKind::Add, &[e, x]).unwrap();
+        let m = g.push(OpKind::Multiply, &[e, a]).unwrap();
+        g.set_outputs(&[m]);
+        let p = plan(&g);
+        assert_eq!(p.regions, 1);
+        assert_eq!(p.absorbed, 2);
+        check_fused_matches(&g, &[Tensor::new(crate::tensor::Shape::of(&[4]), vec![-0.5, 0.0, 1.5, -0.0])]);
+    }
+
+    #[test]
+    fn multi_use_interior_value_stays_live() {
+        // exp(x) feeds both a fusible tanh chain AND a reduce: it must
+        // stay a materialized step (region input), never be absorbed.
+        let mut g = Graph::new("multiuse");
+        let x = g.param(TType::of(&[2, 3]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let t = g.push(OpKind::Tanh, &[e]).unwrap();
+        let n = g.push(OpKind::Negate, &[t]).unwrap();
+        let r = g
+            .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[e])
+            .unwrap();
+        g.set_outputs(&[n, r]);
+        let p = plan(&g);
+        let epos = g.index_of(e).unwrap();
+        assert!(
+            matches!(p.steps[epos], StepFusion::Normal),
+            "multi-use interior value must stay live"
+        );
+        assert_eq!(p.regions, 1, "tanh → negate still fuse");
+        check_fused_matches(&g, &[Tensor::iota(&[2, 3])]);
+    }
+
+    #[test]
+    fn splat_broadcast_sinks_and_never_materializes() {
+        // relu: maximum(x, broadcast(0)) — the broadcast and its constant
+        // emit no steps at all.
+        let mut g = Graph::new("relu");
+        let x = g.param(TType::of(&[2, 3]));
+        let z = g.constant_scalar(0.0);
+        let zb = g
+            .push(OpKind::Broadcast { dims: vec![2, 3], mapping: vec![] }, &[z])
+            .unwrap();
+        let r = g.push(OpKind::Maximum, &[x, zb]).unwrap();
+        g.set_outputs(&[r]);
+        let p = plan(&g);
+        assert_eq!(p.regions, 1);
+        assert_eq!(p.absorbed, 2, "broadcast and constant both swept");
+        let prog = Program::compile_fused(&g).unwrap();
+        assert_eq!(prog.num_slots(), 2, "param + fused relu; broadcast never materializes");
+        let input = Tensor::new(crate::tensor::Shape::of(&[2, 3]), vec![-1.0, -0.0, 0.0, 2.5, f32::NAN, -7.0]);
+        check_fused_matches(&g, &[input]);
+    }
+
+    #[test]
+    fn broadcast_with_unfused_consumer_stays_materialized() {
+        // The same splat broadcast feeds a fused maximum AND a dot: it
+        // sinks into the region but must still emit its own step.
+        let mut g = Graph::new("shared-bcast");
+        let x = g.param(TType::of(&[4, 3]));
+        let one = g.constant_scalar(1.0);
+        let ob = g
+            .push(OpKind::Broadcast { dims: vec![4, 3], mapping: vec![] }, &[one])
+            .unwrap();
+        let mx = g.push(OpKind::Maximum, &[x, ob]).unwrap();
+        let e = g.push(OpKind::Exponential, &[mx]).unwrap();
+        let w = g.param(TType::of(&[4, 2]));
+        let obt = g.push(OpKind::Transpose { perm: vec![1, 0] }, &[ob]).unwrap();
+        let d = g.push(OpKind::Dot, &[obt, w]).unwrap();
+        g.set_outputs(&[e, d]);
+        let p = plan(&g);
+        let obpos = g.index_of(ob).unwrap();
+        assert!(
+            matches!(p.steps[obpos], StepFusion::Normal),
+            "broadcast with an unfused consumer must materialize"
+        );
+        assert_eq!(p.regions, 1);
+        check_fused_matches(&g, &[Tensor::iota(&[4, 3]), Tensor::iota(&[4, 2])]);
+    }
+
+    #[test]
+    fn reshape_breaks_a_chain() {
+        // exp([2,3]) → reshape([6]) → tanh: the shape change (a
+        // non-elementwise data-movement op) splits the chain and neither
+        // side alone is worth a region.
+        let mut g = Graph::new("reshaped");
+        let x = g.param(TType::of(&[2, 3]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let r = g.push(OpKind::Reshape { dims: vec![6] }, &[e]).unwrap();
+        let t = g.push(OpKind::Tanh, &[r]).unwrap();
+        g.set_outputs(&[t]);
+        let p = plan(&g);
+        assert_eq!(p.regions, 0, "shape-mismatched chain must not fuse");
+        assert_eq!(p.absorbed, 0);
+        check_fused_matches(&g, &[Tensor::iota(&[2, 3])]);
+    }
+
+    #[test]
+    fn dot_bias_folds_in_both_operand_orders() {
+        for bias_first in [false, true] {
+            let mut g = Graph::new("dense");
+            let x = g.param(TType::of(&[4, 3]));
+            let w = g.param(TType::of(&[3, 2]));
+            let b = g.param(TType::of(&[2]));
+            let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+            let bb = g
+                .push(OpKind::Broadcast { dims: vec![4, 2], mapping: vec![1] }, &[b])
+                .unwrap();
+            let args = if bias_first { [bb, d] } else { [d, bb] };
+            let z = g.push(OpKind::Add, &args).unwrap();
+            g.set_outputs(&[z]);
+            let p = plan(&g);
+            assert_eq!(p.regions, 1);
+            let zpos = g.index_of(z).unwrap();
+            match &p.steps[zpos] {
+                StepFusion::DotBiasRoot(r) => assert_eq!(r.bias_first, bias_first),
+                other => panic!("expected DotBiasRoot, got {other:?}"),
+            }
+            let prog = Program::compile_fused(&g).unwrap();
+            assert_eq!(prog.num_slots(), 4, "3 params + one DotBias step");
+            let mut rng = crate::util::rng::Rng::new(7);
+            let inputs: Vec<Tensor> = g
+                .param_types()
+                .iter()
+                .map(|t| Tensor::rand_uniform(&t.dims, -1.0, 1.0, &mut rng))
+                .collect();
+            check_fused_matches(&g, &inputs);
+        }
+    }
+
+    #[test]
+    fn dot_bias_requires_single_use_and_exact_bias_length() {
+        // multi-use dot: must stay unfused
+        let mut g = Graph::new("d1");
+        let x = g.param(TType::of(&[4, 3]));
+        let w = g.param(TType::of(&[3, 2]));
+        let b = g.param(TType::of(&[2]));
+        let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+        let bb = g
+            .push(OpKind::Broadcast { dims: vec![4, 2], mapping: vec![1] }, &[b])
+            .unwrap();
+        let z = g.push(OpKind::Add, &[d, bb]).unwrap();
+        g.set_outputs(&[z, d]);
+        let p = plan(&g);
+        let zpos = g.index_of(z).unwrap();
+        assert!(
+            !matches!(p.steps[zpos], StepFusion::DotBiasRoot(_)),
+            "multi-use dot must not fold"
+        );
+        let mut rng = crate::util::rng::Rng::new(8);
+        let inputs: Vec<Tensor> = g
+            .param_types()
+            .iter()
+            .map(|t| Tensor::rand_uniform(&t.dims, -1.0, 1.0, &mut rng))
+            .collect();
+        check_fused_matches(&g, &inputs);
+
+        // size-1 bias expanded to [4,2]: the row zip would be wrong, so
+        // the fold must refuse (it still fuses as a plain region or not at
+        // all — correctness by fallback).
+        let mut g = Graph::new("d2");
+        let x = g.param(TType::of(&[4, 3]));
+        let w = g.param(TType::of(&[3, 2]));
+        let b1 = g.param(TType::of(&[1]));
+        let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+        let bb = g
+            .push(OpKind::Broadcast { dims: vec![4, 2], mapping: vec![1] }, &[b1])
+            .unwrap();
+        let z = g.push(OpKind::Add, &[d, bb]).unwrap();
+        g.set_outputs(&[z]);
+        let p = plan(&g);
+        let zpos = g.index_of(z).unwrap();
+        assert!(
+            !matches!(p.steps[zpos], StepFusion::DotBiasRoot(_)),
+            "size-1-expanded bias must not fold"
+        );
+        let mut rng = crate::util::rng::Rng::new(9);
+        let inputs: Vec<Tensor> = g
+            .param_types()
+            .iter()
+            .map(|t| Tensor::rand_uniform(&t.dims, -1.0, 1.0, &mut rng))
+            .collect();
+        check_fused_matches(&g, &inputs);
+    }
+
+    #[test]
+    fn fused_root_can_be_an_output_and_members_cannot() {
+        let mut g = Graph::new("outs");
+        let x = g.param(TType::of(&[4]));
+        let e = g.push(OpKind::Exponential, &[x]).unwrap();
+        let t = g.push(OpKind::Tanh, &[e]).unwrap();
+        let m = g.push(OpKind::Negate, &[t]).unwrap();
+        g.set_outputs(&[m, e]); // e is an output: must stay live
+        let p = plan(&g);
+        assert_eq!(p.regions, 1, "tanh → negate fuse with the output m as root");
+        let epos = g.index_of(e).unwrap();
+        assert!(matches!(p.steps[epos], StepFusion::Normal), "output values never absorb");
+        let mpos = g.index_of(m).unwrap();
+        assert!(matches!(p.steps[mpos], StepFusion::MapRoot(_)));
+        check_fused_matches(&g, &[Tensor::iota(&[4])]);
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let spec = crate::models::twofc::TwoFcSpec {
+            batch: 4,
+            input: 9,
+            hidden: 6,
+            classes: 3,
+            lr: 0.1,
+        };
+        let g = crate::models::twofc::train_step_graph(&spec);
+        let (a, b) = (plan(&g), plan(&g));
+        assert_eq!(a.regions, b.regions);
+        assert_eq!(a.absorbed, b.absorbed);
+        for (x, y) in a.steps.iter().zip(b.steps.iter()) {
+            assert_eq!(format!("{x:?}"), format!("{y:?}"));
+        }
+        assert!(a.regions > 0, "the train-step graph has fusible structure");
+    }
+}

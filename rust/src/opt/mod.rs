@@ -18,6 +18,11 @@
 //!   `rust/tests/opt_differential.rs`). Rules that are algebraically true
 //!   but not bit-true for IEEE-754 `f32` — `x + 0.0` (breaks on `-0.0`),
 //!   `x * 0.0` (breaks on NaN/∞), `x - x` — are deliberately **excluded**.
+//! * [`fuse`] — kernel fusion planning for `--opt-level 3`: groups the
+//!   canonical graph into fused regions (elementwise chains, dot+bias,
+//!   broadcast sinking) that [`crate::exec`] lowers to single-loop fused
+//!   steps. Fusion is a *lowering* concern: the graph, and therefore the
+//!   canonical hash, stays exactly what the `O2` pipeline produced.
 //! * [`minimize`](minimize::minimize) — delta-debugging reduction of an
 //!   [`crate::evo::patch::Individual`]'s edit list that never degrades its
 //!   objective vector, plus a per-edit attribution table (the objective
@@ -32,6 +37,7 @@
 //! bypasses the pipeline entirely and reproduces the historical behavior
 //! bit-identically (same graph hashes, same cache keys, same results).
 
+pub mod fuse;
 pub mod minimize;
 pub mod passes;
 
@@ -53,6 +59,12 @@ pub enum OptLevel {
     /// Full pipeline: constant folding + CSE + algebraic simplification +
     /// dead-code elimination, to a fixed point.
     O2,
+    /// The `O2` pipeline plus kernel fusion at lowering time: the program
+    /// cache compiles fused regions ([`fuse`]) into single-loop steps
+    /// ([`crate::exec`]). The *graph* (and therefore the canonical hash)
+    /// is exactly `O2`'s — fusion changes how steps execute, never what
+    /// the graph says.
+    O3,
 }
 
 impl OptLevel {
@@ -61,6 +73,7 @@ impl OptLevel {
             "0" => Some(OptLevel::O0),
             "1" => Some(OptLevel::O1),
             "2" => Some(OptLevel::O2),
+            "3" => Some(OptLevel::O3),
             _ => None,
         }
     }
@@ -70,6 +83,7 @@ impl OptLevel {
             OptLevel::O0 => 0,
             OptLevel::O1 => 1,
             OptLevel::O2 => 2,
+            OptLevel::O3 => 3,
         }
     }
 
@@ -78,6 +92,7 @@ impl OptLevel {
             0 => Some(OptLevel::O0),
             1 => Some(OptLevel::O1),
             2 => Some(OptLevel::O2),
+            3 => Some(OptLevel::O3),
             _ => None,
         }
     }
@@ -162,7 +177,10 @@ impl PassManager {
         let passes: Vec<Box<dyn Pass>> = match level {
             OptLevel::O0 => vec![],
             OptLevel::O1 => vec![Box::new(Cse), Box::new(Dce)],
-            OptLevel::O2 => vec![
+            // O3 runs the same graph rewrites as O2: fusion is a lowering
+            // concern ([`fuse`], consumed by the program cache), not a
+            // graph rewrite, so the canonical form stays O2's.
+            OptLevel::O2 | OptLevel::O3 => vec![
                 Box::new(ConstantFold),
                 Box::new(Cse),
                 Box::new(Algebraic),
@@ -339,10 +357,27 @@ mod tests {
         assert_eq!(OptLevel::parse("0"), Some(OptLevel::O0));
         assert_eq!(OptLevel::parse("1"), Some(OptLevel::O1));
         assert_eq!(OptLevel::parse("2"), Some(OptLevel::O2));
-        assert_eq!(OptLevel::parse("3"), None);
-        for l in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+        assert_eq!(OptLevel::parse("3"), Some(OptLevel::O3));
+        assert_eq!(OptLevel::parse("4"), None);
+        for l in [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3] {
             assert_eq!(OptLevel::from_u8(l.as_u8()), Some(l));
             assert_eq!(OptLevel::parse(&l.to_string()), Some(l));
         }
+    }
+
+    #[test]
+    fn o3_graph_rewrites_equal_o2() {
+        // Fusion lives in the lowering, not the graph: the O3 pipeline's
+        // canonical form (and hash) must be exactly O2's.
+        let g = testbed();
+        let (g2, s2) = optimize(&g, OptLevel::O2);
+        let (g3, s3) = optimize(&g, OptLevel::O3);
+        assert_eq!(print(&g2), print(&g3));
+        assert_eq!(s2.rewrites, s3.rewrites);
+        assert_eq!(
+            crate::ir::canon::graph_hash(&g2),
+            crate::ir::canon::graph_hash(&g3),
+            "O3 must not change the canonical hash relative to O2"
+        );
     }
 }

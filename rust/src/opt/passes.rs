@@ -387,8 +387,9 @@ impl Pass for Algebraic {
 
 /// Resolve `id` through data-movement ops to an all-same-bits constant;
 /// returns the shared bit pattern. Broadcast/reshape/transpose of a splat
-/// is the same splat, bit for bit.
-fn splat_bits(g: &Graph, id: ValueId) -> Option<u32> {
+/// is the same splat, bit for bit. Shared with the fusion planner
+/// ([`super::fuse`]), whose broadcast sinking is only legal for splats.
+pub(crate) fn splat_bits(g: &Graph, id: ValueId) -> Option<u32> {
     let inst = g.inst(id)?;
     match &inst.kind {
         OpKind::Constant { value } => {

@@ -126,6 +126,152 @@ pub fn select(pred: &Tensor, on_true: &Tensor, on_false: &Tensor) -> Tensor {
 }
 
 // ---------------------------------------------------------------------------
+// fused elementwise kernels (the compiled engine's --opt-level 3 path)
+// ---------------------------------------------------------------------------
+
+/// Scalar binary op, specialized at lowering time. `apply` is the single
+/// source of truth for elementwise semantics: [`crate::exec`]'s per-step
+/// kernels and [`fused_map_into`] both dispatch through it, which is what
+/// keeps fused execution bit-identical to the unfused steps (same
+/// closures, same NaN/±0.0 behavior).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalarBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Gt,
+}
+
+impl ScalarBinOp {
+    #[inline]
+    pub fn apply(self) -> fn(f32, f32) -> f32 {
+        match self {
+            ScalarBinOp::Add => |x, y| x + y,
+            ScalarBinOp::Sub => |x, y| x - y,
+            ScalarBinOp::Mul => |x, y| x * y,
+            ScalarBinOp::Div => |x, y| x / y,
+            ScalarBinOp::Max => f32::max,
+            ScalarBinOp::Min => f32::min,
+            ScalarBinOp::Gt => |x, y| if x > y { 1.0 } else { 0.0 },
+        }
+    }
+}
+
+/// Scalar unary op (see [`ScalarBinOp`] for the bit-identity contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalarUnOp {
+    Exp,
+    Log,
+    Neg,
+    Sqrt,
+    Rsqrt,
+    Tanh,
+}
+
+impl ScalarUnOp {
+    #[inline]
+    pub fn apply(self) -> fn(f32) -> f32 {
+        match self {
+            ScalarUnOp::Exp => f32::exp,
+            ScalarUnOp::Log => f32::ln,
+            ScalarUnOp::Neg => |x| -x,
+            ScalarUnOp::Sqrt => f32::sqrt,
+            ScalarUnOp::Rsqrt => |x| 1.0 / x.sqrt(),
+            ScalarUnOp::Tanh => f32::tanh,
+        }
+    }
+}
+
+/// One scalar instruction of a fused elementwise region. Operand indices
+/// address the kernel's scratch slot space, laid out as
+/// `[inputs… | splats… | prior instruction results…]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusedInstr {
+    Bin { op: ScalarBinOp, a: u16, b: u16 },
+    Un { op: ScalarUnOp, a: u16 },
+    Select { p: u16, t: u16, f: u16 },
+}
+
+/// Execute a fused elementwise region in one pass: for each element
+/// index, load that element from every input, run the scalar instruction
+/// list over the register-style `scratch` (a caller-owned reusable
+/// buffer, resized here — the hot loop must not allocate per step), and
+/// emit the last instruction's result. `splats` are broadcast-sunk
+/// constants, preloaded once (their value is index-independent, which is
+/// why only all-same-bits constants may be sunk). Per element the ops run
+/// in the region's original instruction order through the
+/// [`ScalarBinOp::apply`]/[`ScalarUnOp::apply`] closures, and elementwise
+/// ops touch each element independently — so the output bits equal the
+/// unfused op-by-op execution exactly.
+pub fn fused_map_into(
+    inputs: &[&[f32]],
+    splats: &[f32],
+    instrs: &[FusedInstr],
+    numel: usize,
+    scratch: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    assert!(!instrs.is_empty(), "fused_map: empty instruction list");
+    for src in inputs {
+        assert_eq!(src.len(), numel, "fused_map: input length mismatch");
+    }
+    let base = inputs.len() + splats.len();
+    scratch.clear();
+    scratch.resize(base + instrs.len(), 0.0);
+    scratch[inputs.len()..base].copy_from_slice(splats);
+    out.clear();
+    out.reserve(numel);
+    for i in 0..numel {
+        for (slot, src) in inputs.iter().enumerate() {
+            scratch[slot] = src[i];
+        }
+        for (j, ins) in instrs.iter().enumerate() {
+            scratch[base + j] = match *ins {
+                FusedInstr::Bin { op, a, b } => {
+                    op.apply()(scratch[a as usize], scratch[b as usize])
+                }
+                FusedInstr::Un { op, a } => op.apply()(scratch[a as usize]),
+                // same predicate as [`select`]: pred != 0.0 picks `t`
+                FusedInstr::Select { p, t, f } => {
+                    if scratch[p as usize] != 0.0 {
+                        scratch[t as usize]
+                    } else {
+                        scratch[f as usize]
+                    }
+                }
+            };
+        }
+        out.push(scratch[base + instrs.len() - 1]);
+    }
+}
+
+/// `[m,k]·[k,n]` plus a `[n]` bias row, fused: the full GEMM accumulation
+/// runs first (identical blocking and accumulation order to
+/// [`matmul_into`]), then the bias is added row-wise in the same element
+/// order as `zip(add)` over a materialized `broadcast_in_dim` — so the
+/// result is bit-identical to the unfused dot → broadcast → add chain
+/// while the broadcast never materializes. The bias deliberately never
+/// enters the accumulator: folding it into the running sum would
+/// associate the additions differently and change bits (the fusion
+/// analog of the optimizer's excluded `x + 0.0` rule). `bias_first`
+/// preserves the original `add` operand order (`bias + dot` vs
+/// `dot + bias`) for NaN-payload fidelity.
+pub fn dot_bias_into(a: &Tensor, b: &Tensor, bias: &Tensor, bias_first: bool, out: &mut Vec<f32>) {
+    let n = b.dims()[1];
+    assert_eq!(bias.numel(), n, "dot_bias: bias length {} vs n {n}", bias.numel());
+    matmul_into(a, b, out);
+    let bd = bias.data();
+    for row in out.chunks_mut(n) {
+        for (c, &bv) in row.iter_mut().zip(bd.iter()) {
+            *c = if bias_first { bv + *c } else { *c + bv };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // dot (matmul)
 // ---------------------------------------------------------------------------
 
@@ -733,6 +879,74 @@ mod tests {
     fn bits_equal(a: &[f32], b: &[f32]) -> bool {
         a.len() == b.len()
             && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn fused_map_matches_op_by_op_bits() {
+        // relu6-ish: min(max(x + y, 0), 6) with 0/6 as sunk splats, over
+        // adversarial bit patterns.
+        let a = Tensor::new(
+            Shape::of(&[2, 3]),
+            vec![-0.0, f32::NAN, f32::INFINITY, -3.5, 7.25, 0.5],
+        );
+        let b = Tensor::new(
+            Shape::of(&[2, 3]),
+            vec![0.0, 1.0, f32::NEG_INFINITY, -0.25, 1.5, -0.5],
+        );
+        let want = {
+            let s = add(&a, &b);
+            let m = maximum(&s, &Tensor::full(&[2, 3], 0.0));
+            minimum(&m, &Tensor::full(&[2, 3], 6.0))
+        };
+        // slots: [a=0, b=1 | splat0=2 (0.0), splat1=3 (6.0) | exprs 4..]
+        let instrs = [
+            FusedInstr::Bin { op: ScalarBinOp::Add, a: 0, b: 1 },
+            FusedInstr::Bin { op: ScalarBinOp::Max, a: 4, b: 2 },
+            FusedInstr::Bin { op: ScalarBinOp::Min, a: 5, b: 3 },
+        ];
+        let mut out = vec![9.0f32; 64]; // stale recycled buffer
+        let mut scratch = vec![7.0f32; 2]; // stale, undersized scratch
+        fused_map_into(&[a.data(), b.data()], &[0.0, 6.0], &instrs, 6, &mut scratch, &mut out);
+        assert!(bits_equal(want.data(), &out));
+    }
+
+    #[test]
+    fn fused_map_select_and_unary_and_multi_read() {
+        // select(x > y, exp(x), x) — x read three times, exp result once.
+        let mut rng = crate::util::rng::Rng::new(31);
+        let x = Tensor::rand_uniform(&[17], -2.0, 2.0, &mut rng);
+        let y = Tensor::rand_uniform(&[17], -2.0, 2.0, &mut rng);
+        let want = {
+            let p = compare_gt(&x, &y);
+            let e = exp(&x);
+            select(&p, &e, &x)
+        };
+        let instrs = [
+            FusedInstr::Bin { op: ScalarBinOp::Gt, a: 0, b: 1 },
+            FusedInstr::Un { op: ScalarUnOp::Exp, a: 0 },
+            FusedInstr::Select { p: 2, t: 3, f: 0 },
+        ];
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        fused_map_into(&[x.data(), y.data()], &[], &instrs, 17, &mut scratch, &mut out);
+        assert!(bits_equal(want.data(), &out));
+    }
+
+    #[test]
+    fn dot_bias_matches_dot_broadcast_add_bits() {
+        let mut rng = crate::util::rng::Rng::new(33);
+        let a = Tensor::rand_uniform(&[5, 7], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand_uniform(&[7, 4], -1.0, 1.0, &mut rng);
+        let bias = Tensor::rand_uniform(&[4], -1.0, 1.0, &mut rng);
+        let bcast = broadcast_in_dim(&bias, &[5, 4], &[1]);
+        let want = add(&matmul(&a, &b), &bcast);
+        let mut out = Vec::new();
+        dot_bias_into(&a, &b, &bias, false, &mut out);
+        assert!(bits_equal(want.data(), &out));
+        // reversed operand order: bias + dot
+        let want = add(&bcast, &matmul(&a, &b));
+        dot_bias_into(&a, &b, &bias, true, &mut out);
+        assert!(bits_equal(want.data(), &out));
     }
 
     #[test]

@@ -73,11 +73,21 @@ fn assert_bit_identical(want: &[Tensor], got: &[Tensor]) -> Result<(), String> {
     Ok(())
 }
 
+/// Compile the way the program cache does at this level: `O3` lowers
+/// through the kernel-fusion path, everything below stays unfused.
+fn compile_at(g: &Graph, level: OptLevel) -> Result<Program, gevo_ml::ir::IrError> {
+    if level >= OptLevel::O3 {
+        Program::compile_fused(g)
+    } else {
+        Program::compile(g)
+    }
+}
+
 fn differential_case(base: &Graph, rng: &mut Rng) -> Result<(), String> {
     let g = mutate_chain(base, rng);
     let inputs = random_inputs(&g, rng);
     let want = eval(&g, &inputs).map_err(|e| format!("interp failed: {e}"))?;
-    for level in [OptLevel::O1, OptLevel::O2] {
+    for level in [OptLevel::O1, OptLevel::O2, OptLevel::O3] {
         let (og, _) = optimize(&g, level);
         gevo_ml::ir::verify::verify(&og)
             .map_err(|e| format!("level {level}: optimized graph invalid: {e}"))?;
@@ -87,9 +97,9 @@ fn differential_case(base: &Graph, rng: &mut Rng) -> Result<(), String> {
         // interpreted optimized graph
         let got = eval(&og, &inputs).map_err(|e| format!("level {level}: interp: {e}"))?;
         assert_bit_identical(&want, &got).map_err(|e| format!("level {level} interp: {e}"))?;
-        // compiled optimized graph, cold and warm scratch
+        // compiled optimized graph (fused at O3), cold and warm scratch
         let prog =
-            Program::compile(&og).map_err(|e| format!("level {level}: compile: {e}"))?;
+            compile_at(&og, level).map_err(|e| format!("level {level}: compile: {e}"))?;
         let mut scratch = Scratch::new();
         let got = prog
             .run_with(&inputs, &mut scratch)
@@ -146,7 +156,7 @@ fn optimizer_is_deterministic_and_idempotent() {
     for base in [twofc_base(), mobilenet_base()] {
         run_prop(40, 0x0971A, |rng| {
             let g = mutate_chain(&base, rng);
-            for level in [OptLevel::O1, OptLevel::O2] {
+            for level in [OptLevel::O1, OptLevel::O2, OptLevel::O3] {
                 let (a, sa) = optimize(&g, level);
                 let (b, sb) = optimize(&g, level);
                 if gevo_ml::ir::printer::print(&a) != gevo_ml::ir::printer::print(&b) {
@@ -180,38 +190,76 @@ fn error_classes_agree_after_optimization() {
     for base in [twofc_base(), mobilenet_base()] {
         run_prop(30, 0x0971B, |rng| {
             let g = mutate_chain(&base, rng);
-            let (og, _) = optimize(&g, OptLevel::O2);
-            let prog = Program::compile(&og).map_err(|e| format!("compile: {e}"))?;
-            let mut inputs = random_inputs(&g, rng);
+            for level in [OptLevel::O2, OptLevel::O3] {
+                let (og, _) = optimize(&g, level);
+                let prog = compile_at(&og, level)
+                    .map_err(|e| format!("level {level}: compile: {e}"))?;
+                let mut inputs = random_inputs(&g, rng);
 
-            // wrong count: drop one input
-            let dropped = inputs.pop().expect("graphs have parameters");
-            let ei = eval(&g, &inputs).expect_err("interp must reject short inputs");
-            let ec = prog.run(&inputs).expect_err("optimized exec must reject short inputs");
-            if std::mem::discriminant(&ei) != std::mem::discriminant(&ec) {
-                return Err(format!("count error class: raw {ei:?} vs optimized {ec:?}"));
-            }
-            if !matches!(ei, EvalError::ArgCount { .. }) {
-                return Err(format!("expected ArgCount, interp said {ei:?}"));
-            }
-            inputs.push(dropped);
+                // wrong count: drop one input
+                let dropped = inputs.pop().expect("graphs have parameters");
+                let ei = eval(&g, &inputs).expect_err("interp must reject short inputs");
+                let ec =
+                    prog.run(&inputs).expect_err("optimized exec must reject short inputs");
+                if std::mem::discriminant(&ei) != std::mem::discriminant(&ec) {
+                    return Err(format!(
+                        "level {level} count error class: raw {ei:?} vs optimized {ec:?}"
+                    ));
+                }
+                if !matches!(ei, EvalError::ArgCount { .. }) {
+                    return Err(format!("expected ArgCount, interp said {ei:?}"));
+                }
+                inputs.push(dropped);
 
-            // wrong shape: corrupt one random input's dims
-            let k = rng.below(inputs.len());
-            let mut dims = inputs[k].dims().to_vec();
-            if dims.is_empty() {
-                dims.push(2);
-            } else {
-                dims[0] += 1;
-            }
-            inputs[k] = Tensor::zeros(&dims);
-            let ei = eval(&g, &inputs).expect_err("interp must reject bad shape");
-            let ec = prog.run(&inputs).expect_err("optimized exec must reject bad shape");
-            if ei != ec {
-                return Err(format!("shape error mismatch: raw {ei:?} vs optimized {ec:?}"));
+                // wrong shape: corrupt one random input's dims
+                let k = rng.below(inputs.len());
+                let mut dims = inputs[k].dims().to_vec();
+                if dims.is_empty() {
+                    dims.push(2);
+                } else {
+                    dims[0] += 1;
+                }
+                inputs[k] = Tensor::zeros(&dims);
+                let ei = eval(&g, &inputs).expect_err("interp must reject bad shape");
+                let ec = prog.run(&inputs).expect_err("optimized exec must reject bad shape");
+                if ei != ec {
+                    return Err(format!(
+                        "level {level} shape error mismatch: raw {ei:?} vs optimized {ec:?}"
+                    ));
+                }
             }
             Ok(())
         });
+    }
+}
+
+/// The O3 headline: on both seed workload graphs, fused lowering strictly
+/// reduces the compiled step count and does not raise the arena
+/// high-water mark (their regions are contiguous; this is not a universal
+/// invariant — see `exec::FusionStats`) — while every fused program above
+/// already proved bit-identical.
+#[test]
+fn o3_reduces_compiled_step_count_on_both_seed_workloads() {
+    for g in [twofc_base(), mobilenet_base()] {
+        let (og, _) = optimize(&g, OptLevel::O3);
+        let unfused = Program::compile(&og).unwrap();
+        let fused = Program::compile_fused(&og).unwrap();
+        let stats = fused.fusion_stats().expect("fused compile records stats");
+        assert!(stats.regions > 0, "'{}' must contain fusible regions", g.name);
+        assert!(
+            fused.num_slots() < unfused.num_slots(),
+            "'{}': fusion must reduce step count ({} -> {})",
+            g.name,
+            unfused.num_slots(),
+            fused.num_slots()
+        );
+        assert!(
+            stats.peak_after <= stats.peak_before,
+            "'{}': fused peak {} exceeds unfused {}",
+            g.name,
+            stats.peak_after,
+            stats.peak_before
+        );
     }
 }
 
@@ -246,14 +294,16 @@ fn optimizing_cache_collapses_redundant_mutants() {
     }
     assert_eq!(o0.len(), 3, "at O0 the twins are distinct entries");
 
-    let o2 = ProgramCache::with_opt(OptLevel::O2);
-    let p0 = o2.get_or_compile(&base).unwrap();
-    let p1 = o2.get_or_compile(&dead_twin).unwrap();
-    let p2 = o2.get_or_compile(&dup_twin).unwrap();
-    assert_eq!(o2.len(), 1, "at O2 all three canonicalize to one entry");
-    assert!(std::sync::Arc::ptr_eq(&p0, &p1) && std::sync::Arc::ptr_eq(&p0, &p2));
-    let (hits, misses) = o2.stats();
-    assert_eq!((hits, misses), (2, 1), "one lowering serves all three mutants");
+    for level in [OptLevel::O2, OptLevel::O3] {
+        let c = ProgramCache::with_opt(level);
+        let p0 = c.get_or_compile(&base).unwrap();
+        let p1 = c.get_or_compile(&dead_twin).unwrap();
+        let p2 = c.get_or_compile(&dup_twin).unwrap();
+        assert_eq!(c.len(), 1, "at {level} all three canonicalize to one entry");
+        assert!(std::sync::Arc::ptr_eq(&p0, &p1) && std::sync::Arc::ptr_eq(&p0, &p2));
+        let (hits, misses) = c.stats();
+        assert_eq!((hits, misses), (2, 1), "one lowering serves all three at {level}");
+    }
 }
 
 /// Search determinism through the optimized cache: with the deterministic
@@ -289,6 +339,8 @@ fn search_front_is_opt_level_invariant_under_flops_metric() {
     };
     let front0 = run_at(OptLevel::O0);
     let front2 = run_at(OptLevel::O2);
+    let front3 = run_at(OptLevel::O3);
     assert!(!front0.is_empty());
     assert_eq!(front0, front2, "opt level must not change flops-metric search results");
+    assert_eq!(front0, front3, "fused O3 execution must not change search results");
 }
