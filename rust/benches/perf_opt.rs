@@ -7,6 +7,8 @@
 //! next to the human-readable table.
 
 use gevo_ml::evo::mutate::valid_random_edit;
+use gevo_ml::evo::nsga2::Objectives;
+use gevo_ml::evo::search::{self, SearchConfig};
 use gevo_ml::exec::cache::ProgramCache;
 use gevo_ml::exec::{Program, Scratch};
 use gevo_ml::ir::{Graph, OpKind};
@@ -216,12 +218,87 @@ fn main() {
         ]));
     }
 
+    // --- per-operator proposal economics (adaptive scheduler) ----------------
+    // A short full-registry adaptive search over the train-step graph with
+    // the deterministic flops/error toy objective: which operators propose,
+    // which get accepted, and what fraction of their evaluations move the
+    // objectives (the 2208.12350 non-neutral rate, per operator).
+    let op_rows: Vec<Json> = {
+        let base_flops = base.total_flops() as f64;
+        let mut in_rng = Rng::new(0x0B5);
+        let inputs: Vec<Tensor> = base
+            .param_types()
+            .iter()
+            .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, &mut in_rng))
+            .collect();
+        let baseline_out = gevo_ml::interp::eval(&base, &inputs).expect("baseline runs");
+        let eval = move |vg: &Graph| -> Option<Objectives> {
+            let out = gevo_ml::interp::eval(vg, &inputs).ok()?;
+            let mut err = 0.0f64;
+            for (o, b) in out.iter().zip(baseline_out.iter()) {
+                if o.has_non_finite() {
+                    return None;
+                }
+                err += o.max_abs_diff(b) as f64;
+            }
+            Some((vg.total_flops() as f64 / base_flops, err))
+        };
+        let cfg = SearchConfig {
+            pop_size: 16,
+            generations: 6,
+            elites: 6,
+            workers: 1,
+            seed: 0x0917,
+            adapt: true,
+            operators: gevo_ml::evo::operators::registry()
+                .iter()
+                .map(|(n, _, _)| (*n).to_string())
+                .collect(),
+            verbose: false,
+            ..Default::default()
+        };
+        let r = search::run(&base, &eval, &cfg);
+        r.operators
+            .iter()
+            .map(|o| {
+                let nn_frac = if o.evals > 0 {
+                    o.non_neutral as f64 / o.evals as f64
+                } else {
+                    0.0
+                };
+                b.note(&format!(
+                    "operator {:<10} weight {:<6} proposals {:>4} accepts {:>4} \
+                     evals {:>4} non-neutral {:>4} ({:.0}%) inserts {:>3}",
+                    o.name,
+                    o.weight.map_or("-".into(), |w| format!("{w:.3}")),
+                    o.proposals,
+                    o.accepts,
+                    o.evals,
+                    o.non_neutral,
+                    nn_frac * 100.0,
+                    o.inserts
+                ));
+                Json::obj(vec![
+                    ("operator", Json::str(o.name.clone())),
+                    ("weight", o.weight.map_or(Json::Null, Json::num)),
+                    ("proposals", Json::num(o.proposals as f64)),
+                    ("accepts", Json::num(o.accepts as f64)),
+                    ("evaluated", Json::num(o.evals as f64)),
+                    ("non_neutral", Json::num(o.non_neutral as f64)),
+                    ("non_neutral_fraction", Json::num(nn_frac)),
+                    ("archive_inserts", Json::num(o.inserts as f64)),
+                ])
+            })
+            .collect()
+    };
+
     let summary = Json::obj(vec![
         ("suite", Json::str("perf_opt")),
         ("workload", Json::str("2fcnet train-step")),
         ("population", Json::num(pop.len() as f64)),
         ("levels", Json::Arr(level_rows)),
         ("fusion", Json::Arr(fusion_rows)),
+        ("operators", Json::Arr(op_rows)),
     ]);
     std::fs::write("BENCH_opt.json", summary.to_pretty()).expect("write BENCH_opt.json");
     b.note("wrote BENCH_opt.json");

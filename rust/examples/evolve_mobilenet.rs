@@ -4,7 +4,9 @@
 //! a 1.90× speedup) when 2% test accuracy is sacrificed.
 //!
 //! Run: `cargo run --release --example evolve_mobilenet -- [--pop 32] [--gens 15] [--seed 42]
-//!       [--islands 4] [--migration-interval 4] [--checkpoint ck.json] [--opt-level 0|1|2|3]`
+//!       [--islands 4] [--migration-interval 4] [--checkpoint ck.json] [--opt-level 0|1|2|3]
+//!       [--operators copy,delete,swap,replace,perturb] [--adapt] [--filter-neutral]
+//!       [--reseed-minimized]`
 
 use gevo_ml::coordinator::{self, report, ExperimentConfig, WorkloadKind};
 use gevo_ml::evo::search::SearchConfig;
@@ -28,6 +30,14 @@ fn main() {
             migrants: args.usize_or("migrants", 2),
             opt_level: gevo_ml::opt::OptLevel::parse(&args.get_or("opt-level", "2"))
                 .expect("--opt-level must be 0, 1, 2 or 3"),
+            operators: match args.get("operators") {
+                None => gevo_ml::evo::operators::default_names(),
+                Some(list) => gevo_ml::evo::operators::parse_cli_list(list)
+                    .unwrap_or_else(|e| panic!("--operators: {e}")),
+            },
+            adapt: args.flag("adapt"),
+            filter_neutral: args.flag("filter-neutral"),
+            reseed_minimized: args.flag("reseed-minimized"),
             verbose: !args.flag("quiet"),
             ..Default::default()
         },
@@ -70,6 +80,9 @@ fn main() {
     );
     if r.search.islands.len() > 1 {
         print!("{}", report::island_summary(&r));
+    }
+    if cfg.search.adapt || cfg.search.operators != gevo_ml::evo::operators::default_names() {
+        println!("{}", report::operator_markdown(&r));
     }
     if let Some(f) = r.search.program_fusion {
         println!("{}", report::fusion_summary(&f));

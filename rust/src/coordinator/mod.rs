@@ -492,6 +492,45 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_full_set_experiment_reports_operator_rows() {
+        // End-to-end with every registered operator + adaptive weights:
+        // the result carries one row per operator plus crossover, the
+        // counts are self-consistent, and the run is seed-deterministic.
+        let cfg = ExperimentConfig {
+            kind: WorkloadKind::TwoFcTraining,
+            search: SearchConfig {
+                pop_size: 8,
+                generations: 3,
+                elites: 3,
+                workers: 2,
+                seed: 11,
+                adapt: true,
+                operators: crate::evo::operators::registry()
+                    .iter()
+                    .map(|(n, _, _)| (*n).to_string())
+                    .collect(),
+                ..Default::default()
+            },
+            fit_samples: 64,
+            test_samples: 32,
+            epochs: 1,
+            ..Default::default()
+        };
+        let r = run_experiment(&cfg);
+        assert!(!r.front.is_empty());
+        let ops = &r.search.operators;
+        assert_eq!(ops.len(), crate::evo::operators::registry().len() + 1);
+        assert_eq!(ops.last().unwrap().name, "crossover");
+        assert!(ops.last().unwrap().weight.is_none());
+        assert!(ops.iter().take(ops.len() - 1).all(|o| o.weight.is_some()));
+        assert!(ops.iter().map(|o| o.proposals).sum::<usize>() > 0);
+        let r2 = run_experiment(&cfg);
+        for (a, b) in r.search.operators.iter().zip(r2.search.operators.iter()) {
+            assert_eq!(a, b, "operator accounting must be seed-deterministic");
+        }
+    }
+
+    #[test]
     fn workload_kind_parses() {
         assert_eq!(WorkloadKind::parse("mobilenet"), Some(WorkloadKind::MobilenetPrediction));
         assert_eq!(WorkloadKind::parse("2fcnet"), Some(WorkloadKind::TwoFcTraining));

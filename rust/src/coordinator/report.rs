@@ -89,6 +89,56 @@ pub fn attribution_markdown(r: &ExperimentResult) -> String {
     s
 }
 
+/// Per-operator markdown table: proposal economics and scheduler weights
+/// (the ISSUE's "which edits get proposed, and which pay off" view).
+/// `weight` is `-` for the crossover row (its rate is `--crossover`, not
+/// a scheduler weight).
+pub fn operator_markdown(r: &ExperimentResult) -> String {
+    let mut s = String::new();
+    s.push_str(
+        "| operator | weight | proposals | accepts | evaluated | non-neutral | archive inserts |\n",
+    );
+    s.push_str("|---|---|---|---|---|---|---|\n");
+    for o in &r.search.operators {
+        let frac = if o.evals > 0 {
+            format!(" ({:.0}%)", 100.0 * o.non_neutral as f64 / o.evals as f64)
+        } else {
+            String::new()
+        };
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {}{} | {} |\n",
+            o.name,
+            o.weight.map_or("-".into(), |w| format!("{w:.3}")),
+            o.proposals,
+            o.accepts,
+            o.evals,
+            o.non_neutral,
+            frac,
+            o.inserts,
+        ));
+    }
+    s
+}
+
+/// CSV form of [`operator_markdown`] for plotting / diffing.
+pub fn operators_csv(r: &ExperimentResult) -> String {
+    let mut s =
+        String::from("operator,weight,proposals,accepts,evaluated,non_neutral,archive_inserts\n");
+    for o in &r.search.operators {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{}\n",
+            o.name,
+            o.weight.map_or("-".to_string(), |w| format!("{w}")),
+            o.proposals,
+            o.accepts,
+            o.evals,
+            o.non_neutral,
+            o.inserts,
+        ));
+    }
+    s
+}
+
 /// Per-island summary rows for terminal output.
 pub fn island_summary(r: &ExperimentResult) -> String {
     let mut s = String::new();
@@ -200,6 +250,38 @@ pub fn to_json(r: &ExperimentResult) -> Json {
                     ("peak_after", Json::num(f.peak_after as f64)),
                 ])
             }),
+        ),
+        (
+            "opt_stats",
+            r.search.program_opt.map_or(Json::Null, |o| {
+                Json::obj(vec![
+                    ("insts_in", Json::num(o.insts_in as f64)),
+                    ("insts_out", Json::num(o.insts_out as f64)),
+                    ("memo_hits", Json::num(o.memo_hits as f64)),
+                    ("memo_misses", Json::num(o.memo_misses as f64)),
+                    ("filtered_neutral", Json::num(o.filtered_neutral as f64)),
+                ])
+            }),
+        ),
+        (
+            "operators",
+            Json::Arr(
+                r.search
+                    .operators
+                    .iter()
+                    .map(|o| {
+                        Json::obj(vec![
+                            ("name", Json::str(o.name.clone())),
+                            ("weight", o.weight.map_or(Json::Null, Json::num)),
+                            ("proposals", Json::num(o.proposals as f64)),
+                            ("accepts", Json::num(o.accepts as f64)),
+                            ("evaluated", Json::num(o.evals as f64)),
+                            ("non_neutral", Json::num(o.non_neutral as f64)),
+                            ("archive_inserts", Json::num(o.inserts as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
         ),
         ("wall_seconds", Json::num(r.wall_seconds)),
     ])
@@ -328,6 +410,42 @@ mod tests {
                     peak_before: 90,
                     peak_after: 63,
                 }),
+                program_opt: Some(crate::exec::cache::OptStats {
+                    insts_in: 400,
+                    insts_out: 300,
+                    memo_hits: 50,
+                    memo_misses: 20,
+                    filtered_neutral: 12,
+                }),
+                operators: vec![
+                    crate::evo::operators::OperatorStats {
+                        name: "copy".into(),
+                        weight: Some(1.25),
+                        proposals: 40,
+                        accepts: 30,
+                        evals: 28,
+                        non_neutral: 7,
+                        inserts: 3,
+                    },
+                    crate::evo::operators::OperatorStats {
+                        name: "delete".into(),
+                        weight: Some(0.75),
+                        proposals: 38,
+                        accepts: 20,
+                        evals: 18,
+                        non_neutral: 9,
+                        inserts: 1,
+                    },
+                    crate::evo::operators::OperatorStats {
+                        name: "crossover".into(),
+                        weight: None,
+                        proposals: 22,
+                        accepts: 17,
+                        evals: 17,
+                        non_neutral: 4,
+                        inserts: 2,
+                    },
+                ],
             },
             wall_seconds: 1.5,
         }
@@ -380,6 +498,32 @@ mod tests {
         assert_eq!(m.get("edits").unwrap().as_usize().unwrap(), 2);
         assert_eq!(m.get("attribution").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(*front[1].get("minimized").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn operator_tables_list_every_row() {
+        let md = operator_markdown(&fake());
+        assert!(md.contains("| copy | 1.250 | 40 | 30 | 28 | 7 (25%) | 3 |"), "{md}");
+        assert!(md.contains("| delete | 0.750 |"), "{md}");
+        assert!(md.contains("| crossover | - | 22 | 17 |"), "{md}");
+        let csv = operators_csv(&fake());
+        assert_eq!(csv.lines().count(), 1 + 3);
+        assert!(csv.starts_with("operator,weight,proposals,"));
+        assert!(csv.contains("copy,1.25,40,30,28,7,3"));
+        assert!(csv.contains("crossover,-,22,17,17,4,2"));
+    }
+
+    #[test]
+    fn json_carries_operator_and_opt_sections() {
+        let j = Json::parse(&to_json(&fake()).to_pretty()).unwrap();
+        let ops = j.get("operators").unwrap().as_arr().unwrap();
+        assert_eq!(ops.len(), 3);
+        assert_eq!(ops[0].get("name").unwrap().as_str().unwrap(), "copy");
+        assert_eq!(ops[0].get("proposals").unwrap().as_usize().unwrap(), 40);
+        assert_eq!(*ops[2].get("weight").unwrap(), Json::Null);
+        let o = j.get("opt_stats").unwrap();
+        assert_eq!(o.get("filtered_neutral").unwrap().as_usize().unwrap(), 12);
+        assert_eq!(o.get("memo_hits").unwrap().as_usize().unwrap(), 50);
     }
 
     #[test]

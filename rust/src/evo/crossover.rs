@@ -9,6 +9,7 @@
 
 use super::patch::{Edit, Individual};
 use crate::util::rng::Rng;
+use std::collections::BTreeSet;
 
 /// Recombine two edit lists into two children (unvalidated).
 pub fn messy_one_point(a: &Individual, b: &Individual, rng: &mut Rng) -> (Individual, Individual) {
@@ -17,6 +18,35 @@ pub fn messy_one_point(a: &Individual, b: &Individual, rng: &mut Rng) -> (Indivi
     let cut = if pool.is_empty() { 0 } else { rng.below(pool.len() + 1) };
     let (left, right) = pool.split_at(cut);
     (Individual::new(left.to_vec()), Individual::new(right.to_vec()))
+}
+
+/// [`messy_one_point`] with attribution protection: edits
+/// [`crate::opt::minimize`] proved load-bearing stay pinned to their
+/// originating child (prepended, in parent order) while only the
+/// unprotected remainder is shuffled and cut. With an empty protected
+/// set this is `messy_one_point` exactly — same children, same RNG
+/// draws — which is why the scheduler can call it unconditionally only
+/// when hints exist ([`super::operators::MessyCrossover`]).
+pub fn messy_one_point_protected(
+    a: &Individual,
+    b: &Individual,
+    rng: &mut Rng,
+    protected: &BTreeSet<Edit>,
+) -> (Individual, Individual) {
+    let split = |ind: &Individual| -> (Vec<Edit>, Vec<Edit>) {
+        ind.edits.iter().copied().partition(|e| protected.contains(e))
+    };
+    let (keep_a, rest_a) = split(a);
+    let (keep_b, rest_b) = split(b);
+    let mut pool: Vec<Edit> = rest_a.into_iter().chain(rest_b).collect();
+    rng.shuffle(&mut pool);
+    let cut = if pool.is_empty() { 0 } else { rng.below(pool.len() + 1) };
+    let (left, right) = pool.split_at(cut);
+    let mut c1 = keep_a;
+    c1.extend_from_slice(left);
+    let mut c2 = keep_b;
+    c2.extend_from_slice(right);
+    (Individual::new(c1), Individual::new(c2))
 }
 
 #[cfg(test)]
@@ -55,6 +85,43 @@ mod tests {
         let mut rng = Rng::new(2);
         let (c, d) = messy_one_point(&Individual::original(), &Individual::original(), &mut rng);
         assert!(c.edits.is_empty() && d.edits.is_empty());
+    }
+
+    #[test]
+    fn protected_edits_stay_with_their_parent() {
+        let mut rng = Rng::new(4);
+        let a = ind(&[1, 2, 3]);
+        let b = ind(&[4, 5, 6]);
+        let protected: BTreeSet<Edit> = [a.edits[0], b.edits[2]].into_iter().collect();
+        for _ in 0..50 {
+            let (c, d) = messy_one_point_protected(&a, &b, &mut rng, &protected);
+            // still a partition of the pool
+            let mut all: Vec<u64> =
+                c.edits.iter().chain(d.edits.iter()).map(|e| e.seed).collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![1, 2, 3, 4, 5, 6]);
+            // protected edits pinned to their originating child
+            assert_eq!(c.edits[0], a.edits[0], "a's protected edit leads child 1");
+            assert_eq!(d.edits[0], b.edits[2], "b's protected edit leads child 2");
+            assert!(!d.edits.contains(&a.edits[0]));
+            assert!(!c.edits.contains(&b.edits[2]));
+        }
+    }
+
+    #[test]
+    fn empty_protected_set_is_plain_messy_one_point() {
+        // Same children AND the same RNG stream afterwards.
+        let a = ind(&[1, 2, 3]);
+        let b = ind(&[4, 5]);
+        for seed in 0..30u64 {
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let plain = messy_one_point(&a, &b, &mut r1);
+            let prot = messy_one_point_protected(&a, &b, &mut r2, &BTreeSet::new());
+            assert_eq!(plain.0.edits, prot.0.edits, "seed {seed}");
+            assert_eq!(plain.1.edits, prot.1.edits, "seed {seed}");
+            assert_eq!(r1.state(), r2.state(), "seed {seed}");
+        }
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //! exact.
 
 use super::nsga2::{pareto_front, rank_and_crowd, select_best, Objectives};
+use super::operators::{
+    harvest_hints, OpCounters, OperatorSet, OperatorStats, OpHints, OpSchedState,
+};
 use super::patch::{Edit, EditKind, Individual};
 use super::search::{Engine, Evaluator, GenStats, SearchConfig, SearchResult};
 use crate::ir::types::ValueId;
@@ -50,6 +53,10 @@ pub fn run_with_checkpoint(
     checkpoint: Option<&Path>,
 ) -> SearchResult {
     let k = cfg.islands.max(1);
+    // The operator registry for this run. Resolution failures are caller
+    // bugs (the CLI validates names before building a config).
+    let ops = OperatorSet::from_names(&cfg.operators)
+        .unwrap_or_else(|e| panic!("SearchConfig::operators: {e}"));
     // The level a checkpoint pins must be the level actually in effect:
     // workloads that run a program cache report its optimizer level, and
     // a disagreement with the config is a caller bug, caught here rather
@@ -60,6 +67,23 @@ pub fn run_with_checkpoint(
             "SearchConfig::opt_level ({}) disagrees with the workload's program cache \
              ({wl_level}); build the workload with new_with_opt(cfg.opt_level)",
             cfg.opt_level
+        );
+    }
+    // The neutral filter compares canonical keys through the workload's
+    // program cache; without a cache, or at level 0 (which never
+    // canonicalizes), no applied-and-verified edit can ever be filtered
+    // — fail fast instead of running a silently inert flag.
+    if cfg.filter_neutral {
+        assert!(
+            cfg.opt_level != crate::opt::OptLevel::O0,
+            "--filter-neutral requires --opt-level 1+ (level 0 never canonicalizes, so no \
+             proposal can be detected as neutral)"
+        );
+        assert!(
+            eval.program_cache().is_some(),
+            "SearchConfig::filter_neutral requires an evaluator that exposes its program \
+             cache (Evaluator::program_cache); this evaluator has none, so the filter \
+             could never fire"
         );
     }
     // Identity of the baseline program: resuming against a different
@@ -76,7 +100,7 @@ pub fn run_with_checkpoint(
                 .unwrap_or_else(|e| panic!("checkpoint {}: {e}", p.display()))
         }
         _ => {
-            let engines = (0..k).map(|i| Engine::new(i, original, eval, cfg)).collect();
+            let engines = (0..k).map(|i| Engine::new(i, original, eval, cfg, &ops)).collect();
             let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
             if let Some(p) = checkpoint {
                 save_checkpoint(p, cfg, ghash, &st);
@@ -89,7 +113,7 @@ pub fn run_with_checkpoint(
     while st.completed < cfg.generations {
         let gen = st.completed;
         for e in st.engines.iter_mut() {
-            let s = e.step(original, eval, cfg, gen);
+            let s = e.step(original, eval, cfg, gen, &ops);
             if cfg.verbose {
                 eprintln!(
                     "[isl {} gen {:>3}] evals=+{:<5} front={:<3} best_time={:.4} best_err={:.4}",
@@ -99,7 +123,9 @@ pub fn run_with_checkpoint(
             st.history.push(s);
         }
         if k > 1 && cfg.migration_interval > 0 && (gen + 1) % cfg.migration_interval == 0 {
-            st.migrations += migrate(&mut st.engines, cfg.migrants);
+            let minimize_with =
+                if cfg.reseed_minimized { Some((original, eval)) } else { None };
+            st.migrations += migrate(&mut st.engines, cfg.migrants, minimize_with);
         }
         st.completed += 1;
         if let Some(p) = checkpoint {
@@ -140,7 +166,62 @@ pub fn run_with_checkpoint(
         migrations: st.migrations,
         program_cache: eval.exec_cache_stats(),
         program_fusion: eval.fusion_stats(),
+        program_opt: eval.program_cache().map(|c| c.opt_stats()),
+        operators: operator_rows(&ops, &st.engines),
     }
+}
+
+/// Per-operator report rows: counts summed across islands, final weight
+/// as the cross-island mean, plus the crossover row (unweighted — its
+/// rate is `crossover_prob`).
+fn operator_rows(ops: &OperatorSet, engines: &[Engine]) -> Vec<OperatorStats> {
+    let k = engines.len().max(1) as f64;
+    let mut rows: Vec<OperatorStats> = ops
+        .names()
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let mut row = OperatorStats {
+                name: (*name).to_string(),
+                weight: Some(
+                    engines.iter().map(|e| e.sched.weights[i]).sum::<f64>() / k,
+                ),
+                proposals: 0,
+                accepts: 0,
+                evals: 0,
+                non_neutral: 0,
+                inserts: 0,
+            };
+            for e in engines {
+                let c = &e.sched.mutation[i];
+                row.proposals += c.proposals;
+                row.accepts += c.accepts;
+                row.evals += c.evals;
+                row.non_neutral += c.non_neutral;
+                row.inserts += c.inserts;
+            }
+            row
+        })
+        .collect();
+    let mut cross = OperatorStats {
+        name: "crossover".to_string(),
+        weight: None,
+        proposals: 0,
+        accepts: 0,
+        evals: 0,
+        non_neutral: 0,
+        inserts: 0,
+    };
+    for e in engines {
+        let c = &e.sched.crossover;
+        cross.proposals += c.proposals;
+        cross.accepts += c.accepts;
+        cross.evals += c.evals;
+        cross.non_neutral += c.non_neutral;
+        cross.inserts += c.inserts;
+    }
+    rows.push(cross);
+    rows
 }
 
 // ---------------------------------------------------------------------------
@@ -152,14 +233,26 @@ pub fn run_with_checkpoint(
 /// the archive — archives only grow). Entirely deterministic and
 /// RNG-free, so it cannot perturb the islands' streams. Returns the
 /// number of individuals actually placed.
-pub(crate) fn migrate(engines: &mut [Engine], n: usize) -> usize {
+///
+/// With `minimize_with` (the `--reseed-minimized` mode) every outgoing
+/// elite is first reduced by [`crate::opt::minimize`] against the
+/// workload: migrants travel as their load-bearing cores (objectives
+/// never degraded), the minimization evaluations are charged to the
+/// sending island, and the attribution feeds both islands' [`OpHints`]
+/// (sender learns neutral-delete targets and protected edits; receiver
+/// protects the edits of the migrants it now hosts). Still RNG-free.
+pub(crate) fn migrate(
+    engines: &mut [Engine],
+    n: usize,
+    minimize_with: Option<(&Graph, &dyn Evaluator)>,
+) -> usize {
     let k = engines.len();
     if k < 2 || n == 0 {
         return 0;
     }
     // Select every outgoing set from the pre-migration snapshot first so
     // the ring direction cannot create order dependence.
-    let outgoing: Vec<Vec<Individual>> = engines
+    let mut outgoing: Vec<Vec<Individual>> = engines
         .iter()
         .map(|e| {
             let idx: Vec<usize> =
@@ -172,6 +265,17 @@ pub(crate) fn migrate(engines: &mut [Engine], n: usize) -> usize {
                 .collect()
         })
         .collect();
+    if let Some((original, eval)) = minimize_with {
+        for (i, migrants) in outgoing.iter_mut().enumerate() {
+            for m in migrants.iter_mut() {
+                if let Some(res) = crate::opt::minimize::minimize(original, m, eval) {
+                    engines[i].evals += res.evaluations;
+                    harvest_hints(&mut engines[i].hints, m, &res);
+                    *m = res.minimized;
+                }
+            }
+        }
+    }
     let mut moved = 0;
     for to in 0..k {
         let from = (to + k - 1) % k;
@@ -187,6 +291,13 @@ pub(crate) fn migrate(engines: &mut [Engine], n: usize) -> usize {
             for (m, &slot) in incoming.iter().zip(slots.iter()) {
                 if let Some(obj) = m.objectives {
                     e.archive.entry(m.cache_key()).or_insert_with(|| ((*m).clone(), obj));
+                }
+                if minimize_with.is_some() {
+                    // the migrant arrives pre-minimized: its edits are
+                    // load-bearing, protect them in the host's crossover
+                    for edit in &m.edits {
+                        e.hints.protected.insert(*edit);
+                    }
                 }
                 e.pop[slot] = (*m).clone();
                 placed += 1;
@@ -262,6 +373,13 @@ fn parse_obj(j: &Json) -> Result<Option<Objectives>, String> {
 }
 
 fn edit_json(e: &Edit) -> Json {
+    let tagged = |t: &str, target: ValueId| {
+        Json::obj(vec![
+            ("t", Json::str(t)),
+            ("target", Json::num(target.0 as f64)),
+            ("seed", hex_u64(e.seed)),
+        ])
+    };
     match e.kind {
         EditKind::Copy { src, after } => Json::obj(vec![
             ("t", Json::str("copy")),
@@ -269,11 +387,10 @@ fn edit_json(e: &Edit) -> Json {
             ("after", Json::num(after.0 as f64)),
             ("seed", hex_u64(e.seed)),
         ]),
-        EditKind::Delete { target } => Json::obj(vec![
-            ("t", Json::str("del")),
-            ("target", Json::num(target.0 as f64)),
-            ("seed", hex_u64(e.seed)),
-        ]),
+        EditKind::Delete { target } => tagged("del", target),
+        EditKind::SwapOperands { target } => tagged("swap", target),
+        EditKind::ReplaceOperand { target } => tagged("repl", target),
+        EditKind::PerturbConstant { target } => tagged("pert", target),
     }
 }
 
@@ -285,6 +402,9 @@ fn parse_edit(j: &Json) -> Result<Edit, String> {
     let kind = match jerr(j.get("t").and_then(|v| v.as_str()))? {
         "copy" => EditKind::Copy { src: vid("src")?, after: vid("after")? },
         "del" => EditKind::Delete { target: vid("target")? },
+        "swap" => EditKind::SwapOperands { target: vid("target")? },
+        "repl" => EditKind::ReplaceOperand { target: vid("target")? },
+        "pert" => EditKind::PerturbConstant { target: vid("target")? },
         other => return Err(format!("unknown edit kind '{other}'")),
     };
     Ok(Edit { kind, seed })
@@ -330,6 +450,81 @@ fn parse_stats(j: &Json) -> Result<GenStats, String> {
     })
 }
 
+fn counters_json(c: &OpCounters) -> Json {
+    Json::obj(vec![
+        ("p", Json::num(c.proposals as f64)),
+        ("a", Json::num(c.accepts as f64)),
+        ("e", Json::num(c.evals as f64)),
+        ("nn", Json::num(c.non_neutral as f64)),
+        ("i", Json::num(c.inserts as f64)),
+    ])
+}
+
+fn parse_counters(j: &Json) -> Result<OpCounters, String> {
+    let u = |key: &str| jerr(j.get(key).and_then(|v| v.as_usize()));
+    Ok(OpCounters {
+        proposals: u("p")?,
+        accepts: u("a")?,
+        evals: u("e")?,
+        non_neutral: u("nn")?,
+        inserts: u("i")?,
+    })
+}
+
+/// Scheduler state: weights as hex bit patterns (the adaptive update is
+/// pure `f64` arithmetic, so an exact round trip is what makes a resumed
+/// adaptive run bit-identical), counters as plain numbers.
+fn sched_json(s: &OpSchedState) -> Json {
+    Json::obj(vec![
+        ("weights", Json::Arr(s.weights.iter().map(|&w| hex_f64(w)).collect())),
+        ("mutation", Json::Arr(s.mutation.iter().map(counters_json).collect())),
+        ("crossover", counters_json(&s.crossover)),
+    ])
+}
+
+fn parse_sched(j: &Json, n_ops: usize) -> Result<OpSchedState, String> {
+    let weights = jerr(j.get("weights").and_then(|v| v.as_arr()))?
+        .iter()
+        .map(parse_f64)
+        .collect::<Result<Vec<_>, _>>()?;
+    let mutation = jerr(j.get("mutation").and_then(|v| v.as_arr()))?
+        .iter()
+        .map(parse_counters)
+        .collect::<Result<Vec<_>, _>>()?;
+    if weights.len() != n_ops || mutation.len() != n_ops {
+        return Err(format!(
+            "checkpoint has scheduler state for {} operators, this run enables {n_ops}",
+            weights.len()
+        ));
+    }
+    Ok(OpSchedState {
+        weights,
+        mutation,
+        crossover: parse_counters(jerr(j.get("crossover"))?)?,
+    })
+}
+
+fn hints_json(h: &OpHints) -> Json {
+    Json::obj(vec![
+        ("protected", Json::Arr(h.protected.iter().map(edit_json).collect())),
+        (
+            "neutral_deletes",
+            Json::Arr(h.neutral_deletes.iter().map(|v| Json::num(v.0 as f64)).collect()),
+        ),
+    ])
+}
+
+fn parse_hints(j: &Json) -> Result<OpHints, String> {
+    let mut h = OpHints::default();
+    for ej in jerr(j.get("protected").and_then(|v| v.as_arr()))? {
+        h.protected.insert(parse_edit(ej)?);
+    }
+    for vj in jerr(j.get("neutral_deletes").and_then(|v| v.as_arr()))? {
+        h.neutral_deletes.insert(ValueId(jerr(vj.as_usize())? as u32));
+    }
+    Ok(h)
+}
+
 fn engine_json(e: &Engine) -> Json {
     // archive / cache entries sorted by key so the file itself is
     // deterministic (useful for diffing two checkpoints).
@@ -344,6 +539,8 @@ fn engine_json(e: &Engine) -> Json {
         ("cache_hits", Json::num(e.cache_hits as f64)),
         ("sent", Json::num(e.migrants_sent as f64)),
         ("received", Json::num(e.migrants_received as f64)),
+        ("ops", sched_json(&e.sched)),
+        ("hints", hints_json(&e.hints)),
         ("pop", Json::Arr(e.pop.iter().map(ind_json).collect())),
         (
             "archive",
@@ -361,7 +558,7 @@ fn engine_json(e: &Engine) -> Json {
     ])
 }
 
-fn parse_engine(j: &Json) -> Result<Engine, String> {
+fn parse_engine(j: &Json, n_ops: usize) -> Result<Engine, String> {
     let u = |key: &str| jerr(j.get(key).and_then(|v| v.as_usize()));
     let rng_words = jerr(j.get("rng").and_then(|v| v.as_arr()))?;
     if rng_words.len() != 4 {
@@ -389,6 +586,17 @@ fn parse_engine(j: &Json) -> Result<Engine, String> {
         }
         cache.insert(parse_u64(&pair[0])?, parse_obj(&pair[1])?);
     }
+    // Checkpoints written before the operator API carry no scheduler or
+    // hint state; those runs always used the classic pair with static
+    // uniform weights, so the defaults restore them exactly.
+    let sched = match j.get("ops") {
+        Ok(sj) => parse_sched(sj, n_ops)?,
+        Err(_) => OpSchedState::uniform(n_ops),
+    };
+    let hints = match j.get("hints") {
+        Ok(hj) => parse_hints(hj)?,
+        Err(_) => OpHints::default(),
+    };
     Ok(Engine {
         id: u("id")?,
         rng: Rng::from_state(state),
@@ -399,6 +607,8 @@ fn parse_engine(j: &Json) -> Result<Engine, String> {
         cache_hits: u("cache_hits")?,
         migrants_sent: u("sent")?,
         migrants_received: u("received")?,
+        sched,
+        hints,
     })
 }
 
@@ -424,6 +634,21 @@ fn config_json(cfg: &SearchConfig) -> Json {
         // resume under a different level would change wall-clock-metric
         // objectives and cache keys mid-run, so it is pinned like the rest.
         ("opt_level", Json::num(cfg.opt_level.as_u8() as f64)),
+        // Operator-API knobs: all four steer the stochastic process
+        // (operator selection, proposal filtering, migration contents),
+        // so a resume must match. Names are canonicalized so `insert`
+        // vs `copy` spelling cannot cause a spurious mismatch.
+        (
+            "operators",
+            Json::Str(
+                crate::evo::operators::canonicalize_names(&cfg.operators)
+                    .map(|v| v.join(","))
+                    .unwrap_or_else(|_| cfg.operators.join(",")),
+            ),
+        ),
+        ("adapt", Json::Bool(cfg.adapt)),
+        ("filter_neutral", Json::Bool(cfg.filter_neutral)),
+        ("reseed_minimized", Json::Bool(cfg.reseed_minimized)),
     ])
 }
 
@@ -463,13 +688,27 @@ pub(crate) fn restore_checkpoint(
     }
     let want = config_json(cfg);
     let got = jerr(j.get("config"))?;
-    // Checkpoints written before the optimizer existed carry no
-    // `opt_level` key; those runs always executed unoptimized, so the
-    // missing key means level 0 — resumable iff this run uses 0 too.
+    // Older checkpoints carry fewer config keys; each missing key means
+    // the run used that feature's historical default, so the echo is
+    // patched with that default and the comparison still catches real
+    // mismatches. `opt_level` predates the optimizer (missing = 0); the
+    // operator-API keys predate the operator registry (missing = the
+    // classic pair, static weights, no filter, raw migration).
     let got = match got {
-        Json::Obj(map) if !map.contains_key("opt_level") => {
+        Json::Obj(map) => {
             let mut map = map.clone();
-            map.insert("opt_level".to_string(), Json::num(0.0));
+            let defaults: [(&str, Json); 5] = [
+                ("opt_level", Json::num(0.0)),
+                ("operators", Json::str("copy,delete")),
+                ("adapt", Json::Bool(false)),
+                ("filter_neutral", Json::Bool(false)),
+                ("reseed_minimized", Json::Bool(false)),
+            ];
+            for (key, value) in defaults {
+                if !map.contains_key(key) {
+                    map.insert(key.to_string(), value);
+                }
+            }
             Json::Obj(map)
         }
         other => other.clone(),
@@ -481,9 +720,12 @@ pub(crate) fn restore_checkpoint(
             want.to_string()
         ));
     }
+    let n_ops = crate::evo::operators::canonicalize_names(&cfg.operators)
+        .map(|v| v.len())
+        .unwrap_or(cfg.operators.len());
     let engines = jerr(j.get("engines").and_then(|v| v.as_arr()))?
         .iter()
-        .map(parse_engine)
+        .map(|e| parse_engine(e, n_ops))
         .collect::<Result<Vec<_>, _>>()?;
     if engines.len() != cfg.islands.max(1) {
         return Err(format!(
@@ -556,6 +798,7 @@ mod tests {
     #[test]
     fn prop_migration_never_loses_archive_entries() {
         let (g, eval) = toy();
+        let ops = OperatorSet::classic();
         run_prop(12, 0x15_1A_4D, |rng: &mut Rng| {
             let cfg = SearchConfig {
                 pop_size: rng.range(4, 9),
@@ -567,15 +810,15 @@ mod tests {
                 ..Default::default()
             };
             let mut engines: Vec<Engine> =
-                (0..cfg.islands).map(|i| Engine::new(i, &g, &eval, &cfg)).collect();
+                (0..cfg.islands).map(|i| Engine::new(i, &g, &eval, &cfg, &ops)).collect();
             for gen in 0..rng.range(1, 3) {
                 for e in engines.iter_mut() {
-                    e.step(&g, &eval, &cfg, gen);
+                    e.step(&g, &eval, &cfg, gen, &ops);
                 }
             }
             let before = archive_keys(&engines);
             let migrants = rng.range(1, 4);
-            migrate(&mut engines, migrants);
+            migrate(&mut engines, migrants, None);
             let after = archive_keys(&engines);
             for (i, (b, a)) in before.iter().zip(after.iter()).enumerate() {
                 if !b.is_subset(a) {
@@ -604,12 +847,13 @@ mod tests {
             islands: 3,
             ..Default::default()
         };
+        let ops = OperatorSet::classic();
         let mut engines: Vec<Engine> =
-            (0..3).map(|i| Engine::new(i, &g, &eval, &cfg)).collect();
+            (0..3).map(|i| Engine::new(i, &g, &eval, &cfg, &ops)).collect();
         for e in engines.iter_mut() {
-            e.step(&g, &eval, &cfg, 0);
+            e.step(&g, &eval, &cfg, 0, &ops);
         }
-        let moved = migrate(&mut engines, 2);
+        let moved = migrate(&mut engines, 2, None);
         assert!(moved > 0, "distinct seeds should always have migrants to exchange");
         let sent: usize = engines.iter().map(|e| e.migrants_sent).sum();
         let recv: usize = engines.iter().map(|e| e.migrants_received).sum();
@@ -629,12 +873,13 @@ mod tests {
             islands: 2,
             ..Default::default()
         };
+        let ops = OperatorSet::classic();
         let mut engines: Vec<Engine> =
-            (0..2).map(|i| Engine::new(i, &g, &eval, &cfg)).collect();
+            (0..2).map(|i| Engine::new(i, &g, &eval, &cfg, &ops)).collect();
         let mut history = Vec::new();
         for gen in 0..2 {
             for e in engines.iter_mut() {
-                history.push(e.step(&g, &eval, &cfg, gen));
+                history.push(e.step(&g, &eval, &cfg, gen, &ops));
             }
         }
         let ghash = crate::ir::canon::graph_hash(&g);
@@ -648,10 +893,165 @@ mod tests {
         // … and stepping both copies onward stays in lockstep.
         let mut st = st;
         for (a, b) in st.engines.iter_mut().zip(restored.engines.iter_mut()) {
-            a.step(&g, &eval, &cfg, 2);
-            b.step(&g, &eval, &cfg, 2);
+            a.step(&g, &eval, &cfg, 2, &ops);
+            b.step(&g, &eval, &cfg, 2, &ops);
         }
         assert_eq!(checkpoint_json(&cfg, ghash, &st), checkpoint_json(&cfg, ghash, &restored));
+    }
+
+    #[test]
+    fn adaptive_scheduler_state_roundtrips_and_stays_in_lockstep() {
+        // The adaptive analog of the roundtrip test: weights drift away
+        // from uniform, serialize as bit patterns, and a restored engine
+        // continues the exact same trajectory (weights included).
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 8,
+            generations: 0,
+            elites: 3,
+            workers: 1,
+            seed: 23,
+            adapt: true,
+            operators: vec!["copy".into(), "delete".into(), "swap".into(), "perturb".into()],
+            ..Default::default()
+        };
+        let ops = OperatorSet::from_names(&cfg.operators).unwrap();
+        let mut engines = vec![Engine::new(0, &g, &eval, &cfg, &ops)];
+        let mut history = Vec::new();
+        for gen in 0..3 {
+            history.push(engines[0].step(&g, &eval, &cfg, gen, &ops));
+        }
+        assert!(
+            engines[0].sched.weights.iter().any(|w| (*w - 1.0).abs() > 1e-12),
+            "three adaptive generations should move some weight off uniform"
+        );
+        let ghash = crate::ir::canon::graph_hash(&g);
+        let st = RunState { engines, history, completed: 3, migrations: 0 };
+        let j = checkpoint_json(&cfg, ghash, &st);
+        let mut restored =
+            restore_checkpoint(&Json::parse(&j.to_string()).unwrap(), &cfg, ghash).unwrap();
+        assert_eq!(
+            restored.engines[0].sched, st.engines[0].sched,
+            "scheduler state must round-trip exactly"
+        );
+        let mut st = st;
+        st.engines[0].step(&g, &eval, &cfg, 3, &ops);
+        restored.engines[0].step(&g, &eval, &cfg, 3, &ops);
+        assert_eq!(checkpoint_json(&cfg, ghash, &st), checkpoint_json(&cfg, ghash, &restored));
+    }
+
+    #[test]
+    fn legacy_checkpoints_without_operator_keys_resume_with_uniform_weights() {
+        // A pre-operator-API checkpoint has neither the config keys nor
+        // the per-engine scheduler/hints state. Under the default config
+        // it must restore with uniform weights, zero counters and empty
+        // hints; under --adapt (or a different operator set) it must be
+        // refused as a config mismatch.
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 4,
+            generations: 0,
+            elites: 2,
+            workers: 1,
+            seed: 5,
+            ..Default::default()
+        };
+        let ops = OperatorSet::classic();
+        let ghash = crate::ir::canon::graph_hash(&g);
+        let engines = vec![Engine::new(0, &g, &eval, &cfg, &ops)];
+        let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
+        let mut j = checkpoint_json(&cfg, ghash, &st);
+        if let Json::Obj(ref mut top) = j {
+            if let Some(Json::Obj(ref mut c)) = top.get_mut("config") {
+                for key in ["operators", "adapt", "filter_neutral", "reseed_minimized"] {
+                    c.remove(key);
+                }
+            }
+            if let Some(Json::Arr(ref mut engines)) = top.get_mut("engines") {
+                for e in engines.iter_mut() {
+                    if let Json::Obj(em) = e {
+                        em.remove("ops");
+                        em.remove("hints");
+                    }
+                }
+            }
+        }
+        let restored = restore_checkpoint(&j, &cfg, ghash)
+            .expect("legacy checkpoint must resume under the default config");
+        assert_eq!(restored.engines[0].sched, OpSchedState::uniform(2));
+        assert!(restored.engines[0].hints.is_empty());
+        // non-default operator knobs are refused
+        for other in [
+            SearchConfig { adapt: true, ..cfg.clone() },
+            SearchConfig { filter_neutral: true, ..cfg.clone() },
+            SearchConfig { reseed_minimized: true, ..cfg.clone() },
+            SearchConfig {
+                operators: vec!["copy".into(), "delete".into(), "swap".into()],
+                ..cfg.clone()
+            },
+        ] {
+            let err = restore_checkpoint(&j, &other, ghash).unwrap_err();
+            assert!(err.contains("mismatch"), "unexpected error: {err}");
+        }
+        // alias spellings of the same set are NOT a mismatch
+        let aliased = SearchConfig {
+            operators: vec!["insert".into(), "delete".into()],
+            ..cfg.clone()
+        };
+        assert!(restore_checkpoint(&j, &aliased, ghash).is_ok());
+    }
+
+    #[test]
+    fn minimized_migration_sends_reduced_elites_and_harvests_hints() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 8,
+            generations: 0,
+            elites: 2,
+            workers: 1,
+            seed: 6,
+            islands: 2,
+            init_mutations: 4,
+            reseed_minimized: true,
+            ..Default::default()
+        };
+        let ops = OperatorSet::classic();
+        let mut engines: Vec<Engine> =
+            (0..2).map(|i| Engine::new(i, &g, &eval, &cfg, &ops)).collect();
+        for e in engines.iter_mut() {
+            e.step(&g, &eval, &cfg, 0, &ops);
+        }
+        let evals_before: usize = engines.iter().map(|e| e.evals).sum();
+        let before = archive_keys(&engines);
+        let moved = migrate(&mut engines, 2, Some((&g, &eval)));
+        assert!(moved > 0, "two distinct islands should exchange migrants");
+        // archives still only grow
+        for (b, a) in before.iter().zip(archive_keys(&engines).iter()) {
+            assert!(b.is_subset(a));
+        }
+        // minimization work is charged to the islands
+        let evals_after: usize = engines.iter().map(|e| e.evals).sum();
+        assert!(evals_after > evals_before, "minimization evaluations must be counted");
+        // arriving migrants' edits are protected on the receiving side
+        // (unless every migrant minimized to the empty patch)
+        let any_edits = engines.iter().any(|e| !e.hints.protected.is_empty());
+        let any_deletes = engines.iter().any(|e| !e.hints.neutral_deletes.is_empty());
+        assert!(
+            any_edits || any_deletes,
+            "migration minimization should harvest at least one hint"
+        );
+        // determinism: the same setup migrates identically
+        let mut engines2: Vec<Engine> =
+            (0..2).map(|i| Engine::new(i, &g, &eval, &cfg, &ops)).collect();
+        for e in engines2.iter_mut() {
+            e.step(&g, &eval, &cfg, 0, &ops);
+        }
+        let moved2 = migrate(&mut engines2, 2, Some((&g, &eval)));
+        assert_eq!(moved, moved2);
+        for (a, b) in engines.iter().zip(engines2.iter()) {
+            assert_eq!(a.hints, b.hints, "hint harvesting must be deterministic");
+            assert_eq!(a.evals, b.evals);
+        }
     }
 
     #[test]
@@ -670,7 +1070,7 @@ mod tests {
             ..Default::default()
         };
         let ghash = crate::ir::canon::graph_hash(&g);
-        let engines = vec![Engine::new(0, &g, &eval, &cfg)];
+        let engines = vec![Engine::new(0, &g, &eval, &cfg, &OperatorSet::classic())];
         let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
         let mut j = checkpoint_json(&cfg, ghash, &st);
         if let Json::Obj(ref mut top) = j {
@@ -702,7 +1102,7 @@ mod tests {
             ..Default::default()
         };
         let ghash = crate::ir::canon::graph_hash(&g);
-        let engines = vec![Engine::new(0, &g, &eval, &cfg)];
+        let engines = vec![Engine::new(0, &g, &eval, &cfg, &OperatorSet::classic())];
         let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
         let j = checkpoint_json(&cfg, ghash, &st);
         assert!(restore_checkpoint(&j, &cfg, ghash).is_ok(), "O3 roundtrips");
@@ -723,7 +1123,7 @@ mod tests {
             ..Default::default()
         };
         let ghash = crate::ir::canon::graph_hash(&g);
-        let engines = vec![Engine::new(0, &g, &eval, &cfg)];
+        let engines = vec![Engine::new(0, &g, &eval, &cfg, &OperatorSet::classic())];
         let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
         let j = checkpoint_json(&cfg, ghash, &st);
         let other = SearchConfig { seed: 6, ..cfg.clone() };

@@ -3,9 +3,18 @@
 //! * [`patch`] — the patch genome: an individual is a list of edits
 //!   applied to the original program (§4.2), each replayable from its
 //!   recorded seed.
-//! * [`mutate`] — the two mutation operators, `Copy` and `Delete`, with
-//!   use-def repair and tensor-resize repair (§4.1, Fig. 3).
-//! * [`crossover`] — one-point *messy* crossover (§4.2).
+//! * [`operators`] — the pluggable mutation-operator API: a
+//!   [`operators::MutationOp`] trait, the [`operators::OperatorSet`]
+//!   registry (`copy`/`delete` — the paper's pair and the default — plus
+//!   `swap`, `replace`, `perturb`, and crossover folded in), an
+//!   [`operators::OpContext`] exposing the optimizer's canonical form
+//!   and `opt::minimize` attribution to proposals, and the adaptive
+//!   per-island scheduler ([`operators::OpSchedState`]).
+//! * [`mutate`] — edit *application* with use-def repair and
+//!   tensor-resize repair (§4.1, Fig. 3), keyed by [`patch::EditKind`]
+//!   so edits survive crossover.
+//! * [`crossover`] — one-point *messy* crossover (§4.2), plus the
+//!   attribution-protected variant.
 //! * [`nsga2`] — NSGA-II: fast non-dominated sort, crowding distance,
 //!   crowded-comparison operator (§4.4, citing Deb et al.).
 //! * [`search`] — the generation engine: init population with 3 mutations
@@ -15,6 +24,7 @@
 //!   on a ring, with checkpoint/resume of the full search state.
 
 pub mod patch;
+pub mod operators;
 pub mod mutate;
 pub mod crossover;
 pub mod nsga2;
@@ -22,5 +32,6 @@ pub mod search;
 pub mod island;
 
 pub use island::run_with_checkpoint;
+pub use operators::{MutationOp, OpContext, OperatorSet, OperatorStats};
 pub use patch::{Edit, EditKind, Individual};
 pub use search::{SearchConfig, SearchResult};

@@ -1,6 +1,9 @@
-//! Mutation operators (paper §4.1).
+//! Edit application (paper §4.1) — the replay half of the mutation API.
 //!
-//! Two operators, exactly as in GEVO-ML:
+//! *Proposing* edits is the job of the pluggable operator registry in
+//! [`super::operators`]; this module owns *applying* them, keyed by
+//! [`EditKind`] alone so an edit stays applicable after crossover moves
+//! it between individuals. The paper's pair:
 //!
 //! * **Copy** — clone an existing operation, insert it elsewhere, repair
 //!   its operands with random type-compatible values (falling back to the
@@ -10,14 +13,27 @@
 //! * **Delete** — remove an operation and repair every dangling use with
 //!   a random substitute of the same type (resized if necessary).
 //!
+//! plus the extended registry's kinds: **SwapOperands** (exchange two
+//! same-type operands), **ReplaceOperand** (rewire one input to a
+//! type-compatible earlier value, resize-chain fallback) and
+//! **PerturbConstant** (scale an embedded constant by a seeded factor).
+//!
 //! All randomness is drawn from the edit's recorded seed, so edits replay
 //! deterministically when a patch is re-applied after crossover.
+//!
+//! [`random_edit`] / [`valid_random_edit`] remain as thin wrappers over
+//! the default (`copy`, `delete`) operator set — they reproduce the
+//! historical RNG stream bit-for-bit (pinned in
+//! [`super::operators::tests`]).
 
+use super::operators::{OpContext, OperatorSet, OpSchedState};
 use super::patch::{Edit, EditKind};
 use crate::ir::graph::Use;
+use crate::ir::op::OpKind;
 use crate::ir::resize::resize_chain;
 use crate::ir::types::{IrError, TType, ValueId};
 use crate::ir::Graph;
+use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Why an edit failed to apply.
@@ -64,6 +80,9 @@ pub fn apply_edit(g: &mut Graph, e: &Edit) -> Result<(), MutateError> {
     match e.kind {
         EditKind::Copy { src, after } => apply_copy(g, src, after, &mut rng),
         EditKind::Delete { target } => apply_delete(g, target, &mut rng),
+        EditKind::SwapOperands { target } => apply_swap(g, target, &mut rng),
+        EditKind::ReplaceOperand { target } => apply_replace(g, target, &mut rng),
+        EditKind::PerturbConstant { target } => apply_perturb(g, target, &mut rng),
     }
 }
 
@@ -255,6 +274,105 @@ fn apply_delete(g: &mut Graph, target: ValueId, rng: &mut Rng) -> Result<(), Mut
     Ok(())
 }
 
+/// The SwapOperands mutation: exchange two same-type operands of one
+/// instruction. Which pair is swapped is the seed's choice; `try_set_args`
+/// re-infers the type, so shape-coupled ops that reject the swap fail the
+/// edit cleanly (the proposal loop simply retries elsewhere).
+fn apply_swap(g: &mut Graph, target: ValueId, rng: &mut Rng) -> Result<(), MutateError> {
+    let pos = g.index_of(target).ok_or(MutateError::MissingValue(target))?;
+    let inst = g.inst_at(pos).clone();
+    if !inst.kind.is_mutable() {
+        return Err(MutateError::CannotRepair("cannot swap a parameter".into()));
+    }
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    for i in 0..inst.args.len() {
+        for j in i + 1..inst.args.len() {
+            if inst.args[i] != inst.args[j] && g.ty(inst.args[i]) == g.ty(inst.args[j]) {
+                pairs.push((i, j));
+            }
+        }
+    }
+    let Some((i, j)) = pick(rng, &pairs) else {
+        return Err(MutateError::CannotRepair("no same-type operand pair to swap".into()));
+    };
+    let mut new_args = inst.args.clone();
+    new_args.swap(i, j);
+    g.try_set_args(pos, &new_args).map_err(MutateError::Invalid)
+}
+
+/// The ReplaceOperand mutation: rewire one operand of `target`'s
+/// instruction to a random type-compatible earlier value, falling back to
+/// a resize chain on a random donor (the §4.1 repair) on the final
+/// attempt — the same ladder the Delete repair walks.
+fn apply_replace(g: &mut Graph, target: ValueId, rng: &mut Rng) -> Result<(), MutateError> {
+    let pos = g.index_of(target).ok_or(MutateError::MissingValue(target))?;
+    if !g.inst_at(pos).kind.is_mutable() {
+        return Err(MutateError::CannotRepair("cannot rewire a parameter".into()));
+    }
+    let nargs = g.inst_at(pos).args.len();
+    if nargs == 0 {
+        return Err(MutateError::CannotRepair("instruction has no operands".into()));
+    }
+    for attempt in 0..4 {
+        // Resize chains inserted by earlier attempts shift positions;
+        // re-resolve the target every round.
+        let pos = g.index_of(target).expect("target still present");
+        let slot = rng.below(nargs);
+        let cur = g.inst_at(pos).args[slot];
+        let want = g.ty(cur).unwrap().clone();
+        let exact: Vec<ValueId> = g
+            .values_before(pos, Some(&want))
+            .into_iter()
+            .filter(|&v| v != cur && v != target)
+            .collect();
+        if let (Some(v), true) = (pick(rng, &exact), attempt < 3) {
+            if g.replace_arg(pos, slot, v).is_ok() {
+                return Ok(());
+            }
+        } else {
+            // final attempt (or no exact match): resize a random donor
+            let donors: Vec<ValueId> = g
+                .values_before(pos, None)
+                .into_iter()
+                .filter(|&v| v != cur && v != target)
+                .collect();
+            let Some(donor) = pick(rng, &donors) else {
+                continue;
+            };
+            let (adapted, _, inserted) = resize_chain(g, pos, donor, &want)?;
+            let pos = pos + inserted;
+            debug_assert_eq!(g.inst_at(pos).id, target);
+            if g.replace_arg(pos, slot, adapted).is_ok() {
+                return Ok(());
+            }
+        }
+    }
+    Err(MutateError::CannotRepair("no substitute operand found".into()))
+}
+
+/// Scale factors the PerturbConstant mutation draws from. Chosen to give
+/// the search halving/doubling, sign flips and gentle nudges — all exact
+/// or deterministic `f32` multiplies.
+const PERTURB_FACTORS: [f32; 5] = [2.0, 0.5, -1.0, 1.25, 0.8];
+
+/// The PerturbConstant mutation: rewrite a constant in place (same
+/// [`ValueId`], same shape — [`Graph::rewrite_at`]) with its data scaled
+/// by a seeded factor.
+fn apply_perturb(g: &mut Graph, target: ValueId, rng: &mut Rng) -> Result<(), MutateError> {
+    let pos = g.index_of(target).ok_or(MutateError::MissingValue(target))?;
+    let OpKind::Constant { value } = &g.inst_at(pos).kind else {
+        return Err(MutateError::CannotRepair("perturb target is not a constant".into()));
+    };
+    let factor = PERTURB_FACTORS[rng.below(PERTURB_FACTORS.len())];
+    let mut data = value.data().to_vec();
+    for v in &mut data {
+        *v *= factor;
+    }
+    let perturbed = Tensor::new(value.shape().clone(), data);
+    g.rewrite_at(pos, OpKind::Constant { value: perturbed }, &[])
+        .map_err(MutateError::Invalid)
+}
+
 fn dangling_uses(g: &Graph, missing: ValueId) -> Vec<Use> {
     let mut out = Vec::new();
     for (pos, inst) in g.insts().iter().enumerate() {
@@ -273,53 +391,39 @@ fn dangling_uses(g: &Graph, missing: ValueId) -> Vec<Use> {
 }
 
 /// Propose a random edit against the materialized graph `g` (referencing
-/// its value ids). The caller applies it to a clone and checks validity —
-/// the paper's mutate-until-valid loop lives in [`super::search`].
+/// its value ids), using the paper's default operator pair. A
+/// compatibility wrapper over [`OperatorSet::classic`] that reproduces
+/// the historical RNG stream bit-for-bit (pinned in
+/// [`super::operators`]'s tests); the search itself drives the
+/// configured [`OperatorSet`] directly.
 pub fn random_edit(g: &Graph, rng: &mut Rng) -> Option<Edit> {
-    let mutable: Vec<ValueId> = g
-        .insts()
-        .iter()
-        .filter(|i| i.kind.is_mutable())
-        .map(|i| i.id)
-        .collect();
-    let all: Vec<ValueId> = g.insts().iter().map(|i| i.id).collect();
-    if mutable.is_empty() || all.is_empty() {
-        return None;
-    }
-    let seed = rng.next_u64();
-    let kind = if rng.chance(0.5) {
-        EditKind::Copy {
-            src: *rng.choose(&mutable),
-            after: *rng.choose(&all),
-        }
-    } else {
-        EditKind::Delete {
-            target: *rng.choose(&mutable),
-        }
-    };
-    Some(Edit { kind, seed })
+    let ops = classic_set();
+    let mut sched = OpSchedState::uniform(ops.len());
+    ops.propose(g, rng, &OpContext::default(), &mut sched).map(|(e, _)| e)
+}
+
+/// The shared default operator set: built once, reused by every wrapper
+/// call so benches and the validate loop don't pay registry construction
+/// per edit.
+fn classic_set() -> &'static OperatorSet {
+    static CLASSIC: std::sync::OnceLock<OperatorSet> = std::sync::OnceLock::new();
+    CLASSIC.get_or_init(OperatorSet::classic)
 }
 
 /// Keep proposing random edits until one applies and verifies (§4.1:
 /// "If it fails, the mutation operator selects another mutation until it
 /// finds a valid MLIR variant"). Returns the edit and the mutated graph.
+/// Compatibility wrapper over [`OperatorSet::classic`], bit-identical to
+/// the historical implementation.
 pub fn valid_random_edit(
     base: &Graph,
     rng: &mut Rng,
     max_tries: usize,
 ) -> Option<(Edit, Graph)> {
-    for _ in 0..max_tries {
-        let Some(edit) = random_edit(base, rng) else {
-            return None;
-        };
-        let mut candidate = base.clone();
-        if apply_edit(&mut candidate, &edit).is_ok()
-            && crate::ir::verify::verify(&candidate).is_ok()
-        {
-            return Some((edit, candidate));
-        }
-    }
-    None
+    let ops = classic_set();
+    let mut sched = OpSchedState::uniform(ops.len());
+    ops.valid_proposal(base, rng, max_tries, &OpContext::default(), &mut sched)
+        .map(|(e, g, _)| (e, g))
 }
 
 #[cfg(test)]
@@ -468,5 +572,105 @@ mod tests {
         let mut cand = g.clone();
         let e = Edit { kind: EditKind::Delete { target: ValueId(9999) }, seed: 1 };
         assert!(matches!(apply_edit(&mut cand, &e), Err(MutateError::MissingValue(_))));
+    }
+
+    /// Value id of the first instruction matching `pred`.
+    fn find(g: &Graph, pred: impl Fn(&crate::ir::Inst) -> bool) -> ValueId {
+        g.insts().iter().find(|i| pred(i)).expect("testbed has the op").id
+    }
+
+    #[test]
+    fn swap_exchanges_same_type_operands() {
+        let g = testbed();
+        // `subtract(dot, labels)`: both operands are [4,3] — swappable.
+        let sub = find(&g, |i| matches!(i.kind, OpKind::Subtract));
+        let before = g.inst(sub).unwrap().args.clone();
+        let mut cand = g.clone();
+        let e = Edit { kind: EditKind::SwapOperands { target: sub }, seed: 9 };
+        apply_edit(&mut cand, &e).unwrap();
+        verify(&cand).unwrap();
+        let after = cand.inst(sub).unwrap().args.clone();
+        assert_eq!(after, vec![before[1], before[0]], "operands must be exchanged");
+        // replay determinism
+        let mut replay = g.clone();
+        apply_edit(&mut replay, &e).unwrap();
+        assert_eq!(
+            crate::ir::printer::print(&cand),
+            crate::ir::printer::print(&replay)
+        );
+    }
+
+    #[test]
+    fn swap_rejects_instructions_without_a_pair() {
+        let g = testbed();
+        // `exp` has one operand — nothing to swap.
+        let e_id = find(&g, |i| matches!(i.kind, OpKind::Exponential));
+        let mut cand = g.clone();
+        let e = Edit { kind: EditKind::SwapOperands { target: e_id }, seed: 1 };
+        assert!(matches!(apply_edit(&mut cand, &e), Err(MutateError::CannotRepair(_))));
+    }
+
+    #[test]
+    fn replace_rewires_an_operand_and_verifies() {
+        let g = testbed();
+        let mut successes = 0;
+        for seed in 0..40u64 {
+            // multiply(sub, cb): plenty of earlier same-type values around
+            let m = find(&g, |i| matches!(i.kind, OpKind::Multiply));
+            let mut cand = g.clone();
+            let e = Edit { kind: EditKind::ReplaceOperand { target: m }, seed };
+            if apply_edit(&mut cand, &e).is_ok() {
+                verify(&cand).unwrap_or_else(|err| panic!("replace seed {seed}: {err}"));
+                assert_ne!(
+                    cand.inst(m).unwrap().args,
+                    g.inst(m).unwrap().args,
+                    "seed {seed}: replace must change an operand"
+                );
+                successes += 1;
+            }
+        }
+        assert!(successes > 20, "replace almost never applies ({successes}/40)");
+    }
+
+    #[test]
+    fn perturb_scales_the_constant_in_place() {
+        let g = testbed();
+        let c = find(&g, |i| matches!(i.kind, OpKind::Constant { .. }));
+        let before = match &g.inst(c).unwrap().kind {
+            OpKind::Constant { value } => value.data()[0],
+            _ => unreachable!(),
+        };
+        let mut saw_change = false;
+        for seed in 0..8u64 {
+            let mut cand = g.clone();
+            let e = Edit { kind: EditKind::PerturbConstant { target: c }, seed };
+            apply_edit(&mut cand, &e).unwrap();
+            verify(&cand).unwrap();
+            let after = match &cand.inst(c).unwrap().kind {
+                OpKind::Constant { value } => value.data()[0],
+                _ => unreachable!(),
+            };
+            assert_eq!(cand.inst(c).unwrap().id, c, "perturb must keep the value id");
+            if after.to_bits() != before.to_bits() {
+                saw_change = true;
+            }
+            // mutated graph still executes
+            let ins = vec![
+                crate::tensor::Tensor::iota(&[4, 6]),
+                crate::tensor::Tensor::iota(&[6, 3]),
+                crate::tensor::Tensor::iota(&[4, 3]),
+            ];
+            crate::interp::eval(&cand, &ins).expect("perturbed graph executes");
+        }
+        assert!(saw_change, "every factor left the constant's bits unchanged");
+    }
+
+    #[test]
+    fn perturb_rejects_non_constants() {
+        let g = testbed();
+        let d = find(&g, |i| matches!(i.kind, OpKind::Dot));
+        let mut cand = g.clone();
+        let e = Edit { kind: EditKind::PerturbConstant { target: d }, seed: 2 };
+        assert!(matches!(apply_edit(&mut cand, &e), Err(MutateError::CannotRepair(_))));
     }
 }

@@ -1,0 +1,991 @@
+//! The pluggable mutation-operator API and its adaptive scheduler.
+//!
+//! GEVO-ML fixes a hand-picked operator pair (§4.1: Copy and Delete), and
+//! the follow-up analysis ("Understanding the Power of Evolutionary
+//! Computation for GPU Code Optimization", arXiv:2208.12350) measures
+//! that most proposed edits are neutral or lethal — wasted evaluations.
+//! This module turns mutation into a first-class API so the search can
+//! (a) carry a richer operator set, (b) learn per-island which operators
+//! pay off, and (c) consume what the rest of the system already knows
+//! (the optimizer's canonical form, `opt::minimize` attribution):
+//!
+//! * [`MutationOp`] — one operator: `name()`, `applicable()`, and
+//!   `propose(graph, rng, ctx) -> Option<EditKind>`. Proposal draws come
+//!   from the search RNG; the per-edit repair seed is drawn by the
+//!   [`OperatorSet`] *before* operator selection so the default
+//!   configuration replays the historical stream bit-for-bit (see below).
+//! * [`OperatorSet`] — the registry. Built-ins: `copy` (the paper's
+//!   copy/insert), `delete`, `swap` (operand swap), `replace`
+//!   (operand replacement) and `perturb` (constant perturbation), plus
+//!   messy one-point crossover folded in as [`MessyCrossover`] so
+//!   [`super::crossover`] joins the same API and the same per-operator
+//!   accounting.
+//! * [`OpContext`] — what proposals may consult: the workload's
+//!   [`ProgramCache`] (whose raw-hash → canonical-hash memo lets the
+//!   proposal loop discard edits the `O2` pass pipeline provably erases)
+//!   and [`OpHints`] harvested from [`crate::opt::minimize`] attribution
+//!   (`delete` avoids re-proposing targets whose deletion minimization
+//!   already found neutral; crossover protects load-bearing edits).
+//! * [`OpSchedState`] — per-island operator weights plus
+//!   proposal/accept/evaluation/non-neutral/archive-insertion counters.
+//!   With `SearchConfig::adapt` the weights are updated once per
+//!   generation by deterministic credit assignment; they are serialized
+//!   into checkpoints so a killed run resumes bit-identically.
+//!
+//! **Bit-identity of the default configuration.** The historical
+//! `random_edit` drew, in order: the edit seed (`next_u64`), one
+//! `chance(0.5)` word selecting Copy vs Delete, then the operator's own
+//! choices. `chance(0.5)` is true iff the top bit of the raw draw is 0,
+//! and the weighted selection below reduces to exactly that comparison
+//! for the default `[copy, delete]` set with uniform weights (one `f64`
+//! draw, `f64()*2.0 < 1.0 ⟺ f64() < 0.5`). With adaptation off, hints
+//! empty and the neutral filter off, every draw — count, order and
+//! mapping — is identical to the pre-redesign code, which is what keeps
+//! existing seeds, tests and checkpoints reproducing historical results.
+
+use super::mutate::apply_edit;
+use super::patch::{Edit, EditKind, Individual};
+use crate::exec::cache::ProgramCache;
+use crate::ir::op::OpKind;
+use crate::ir::types::ValueId;
+use crate::ir::Graph;
+use crate::opt::minimize::MinimizeResult;
+use crate::util::rng::Rng;
+use std::collections::BTreeSet;
+
+// ---------------------------------------------------------------------------
+// Context and hints
+// ---------------------------------------------------------------------------
+
+/// What a proposal may consult beyond the graph itself. Everything here
+/// is optional: a bare context (`OpContext::default()`) reproduces the
+/// context-free historical behavior exactly.
+#[derive(Default, Clone, Copy)]
+pub struct OpContext<'a> {
+    /// The workload's compiled-program cache, when the search runs one
+    /// and `SearchConfig::filter_neutral` is on. Its memo-backed
+    /// [`ProgramCache::canonical_key`] is how the proposal loop detects
+    /// edits the optimizer pipeline provably erases (dead copies,
+    /// redundant recomputations): a candidate whose canonical key equals
+    /// the base graph's is discarded before it can waste an evaluation,
+    /// counted as `filtered_neutral` in
+    /// [`crate::exec::cache::OptStats`].
+    pub cache: Option<&'a ProgramCache>,
+    /// Attribution hints harvested from [`crate::opt::minimize`] runs
+    /// (`--reseed-minimized` migrations / reseeds). `None` or empty hints
+    /// leave every operator's draws untouched.
+    pub hints: Option<&'a OpHints>,
+}
+
+/// Attribution knowledge accumulated from patch minimization, consumed
+/// by operators and crossover. Both sets use `BTree` collections so
+/// iteration (and therefore serialization) is deterministic.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct OpHints {
+    /// Edits that survived 1-minimal reduction of an elite: individually
+    /// load-bearing, so crossover keeps them pinned to their originating
+    /// child instead of shuffling them into the cut pool.
+    pub protected: BTreeSet<Edit>,
+    /// Targets of `Delete` edits that minimization removed as neutral
+    /// hitchhikers: deleting these instructions contributed nothing, so
+    /// the `delete` operator avoids re-proposing them while other
+    /// targets remain.
+    pub neutral_deletes: BTreeSet<ValueId>,
+}
+
+impl OpHints {
+    pub fn is_empty(&self) -> bool {
+        self.protected.is_empty() && self.neutral_deletes.is_empty()
+    }
+}
+
+/// Fold one [`crate::opt::minimize`] outcome into `hints`: surviving
+/// edits are load-bearing (protect them in crossover); `Delete` edits
+/// the reduction removed were neutral (stop re-proposing their targets).
+pub fn harvest_hints(hints: &mut OpHints, raw: &Individual, res: &MinimizeResult) {
+    for e in &res.minimized.edits {
+        hints.protected.insert(*e);
+    }
+    // Multiset difference raw − minimized: what the reduction removed.
+    let mut surviving: Vec<Edit> = res.minimized.edits.clone();
+    for e in &raw.edits {
+        if let Some(p) = surviving.iter().position(|s| s == e) {
+            surviving.remove(p);
+            continue;
+        }
+        if let EditKind::Delete { target } = e.kind {
+            hints.neutral_deletes.insert(target);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The operator trait and the built-in operators
+// ---------------------------------------------------------------------------
+
+/// One mutation operator. `propose` returns the edit *kind* only — the
+/// replayable repair seed is drawn by the [`OperatorSet`] before operator
+/// selection, which is what keeps the default set's RNG stream identical
+/// to the historical `random_edit`. Implementations must draw from `rng`
+/// deterministically and must not mutate the graph (application lives in
+/// [`super::mutate::apply_edit`], keyed by [`EditKind`], so edits remain
+/// applicable after crossover moves them between individuals).
+/// `Send + Sync` so operator sets can live in statics and be shared by
+/// the evaluation worker pool.
+pub trait MutationOp: Send + Sync {
+    /// Canonical registry name (`--operators` tokens).
+    fn name(&self) -> &'static str;
+    /// Cheap test: can `propose` return `Some` on this graph? The set
+    /// draws **nothing** from the RNG when no operator is applicable, so
+    /// this must be exact, not optimistic.
+    fn applicable(&self, g: &Graph) -> bool;
+    /// Propose an edit kind against `g` (referencing its value ids).
+    fn propose(&self, g: &Graph, rng: &mut Rng, ctx: &OpContext) -> Option<EditKind>;
+}
+
+fn mutable_ids(g: &Graph) -> Vec<ValueId> {
+    g.insts().iter().filter(|i| i.kind.is_mutable()).map(|i| i.id).collect()
+}
+
+/// The paper's Copy mutation (§4.1, Fig. 5): clone an instruction,
+/// insert it after a random anchor, repair operands, connect the result
+/// downstream.
+pub struct CopyOp;
+
+impl MutationOp for CopyOp {
+    fn name(&self) -> &'static str {
+        "copy"
+    }
+
+    fn applicable(&self, g: &Graph) -> bool {
+        !g.insts().is_empty() && g.insts().iter().any(|i| i.kind.is_mutable())
+    }
+
+    fn propose(&self, g: &Graph, rng: &mut Rng, _ctx: &OpContext) -> Option<EditKind> {
+        let mutable = mutable_ids(g);
+        let all: Vec<ValueId> = g.insts().iter().map(|i| i.id).collect();
+        if mutable.is_empty() || all.is_empty() {
+            return None;
+        }
+        Some(EditKind::Copy { src: *rng.choose(&mutable), after: *rng.choose(&all) })
+    }
+}
+
+/// The paper's Delete mutation (§4.1): remove an instruction, repair
+/// every dangling use. With attribution hints, targets whose deletion
+/// minimization already proved neutral are skipped while other targets
+/// remain (falling back to the full list so the operator never starves).
+pub struct DeleteOp;
+
+impl MutationOp for DeleteOp {
+    fn name(&self) -> &'static str {
+        "delete"
+    }
+
+    fn applicable(&self, g: &Graph) -> bool {
+        g.insts().iter().any(|i| i.kind.is_mutable())
+    }
+
+    fn propose(&self, g: &Graph, rng: &mut Rng, ctx: &OpContext) -> Option<EditKind> {
+        let mutable = mutable_ids(g);
+        if mutable.is_empty() {
+            return None;
+        }
+        let target = match ctx.hints {
+            Some(h) if !h.neutral_deletes.is_empty() => {
+                let biased: Vec<ValueId> = mutable
+                    .iter()
+                    .copied()
+                    .filter(|v| !h.neutral_deletes.contains(v))
+                    .collect();
+                if biased.is_empty() {
+                    *rng.choose(&mutable)
+                } else {
+                    *rng.choose(&biased)
+                }
+            }
+            _ => *rng.choose(&mutable),
+        };
+        Some(EditKind::Delete { target })
+    }
+}
+
+fn has_swappable_pair(g: &Graph, args: &[ValueId]) -> bool {
+    for i in 0..args.len() {
+        for j in i + 1..args.len() {
+            if args[i] != args[j] && g.ty(args[i]) == g.ty(args[j]) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Operand swap: exchange two same-type operands of one instruction
+/// (e.g. the two sides of a subtract, the predicate branches of a
+/// select). Commutative targets produce neutral edits — exactly the kind
+/// the neutral filter discards and the scheduler learns to down-weight.
+pub struct SwapOp;
+
+impl SwapOp {
+    fn candidates(g: &Graph) -> Vec<ValueId> {
+        g.insts()
+            .iter()
+            .filter(|i| i.kind.is_mutable() && has_swappable_pair(g, &i.args))
+            .map(|i| i.id)
+            .collect()
+    }
+}
+
+impl MutationOp for SwapOp {
+    fn name(&self) -> &'static str {
+        "swap"
+    }
+
+    fn applicable(&self, g: &Graph) -> bool {
+        g.insts().iter().any(|i| i.kind.is_mutable() && has_swappable_pair(g, &i.args))
+    }
+
+    fn propose(&self, g: &Graph, rng: &mut Rng, _ctx: &OpContext) -> Option<EditKind> {
+        let cands = Self::candidates(g);
+        if cands.is_empty() {
+            return None;
+        }
+        Some(EditKind::SwapOperands { target: *rng.choose(&cands) })
+    }
+}
+
+/// Operand replacement: rewire one input of an instruction to a random
+/// type-compatible earlier value (resize-chain fallback as in §4.1's
+/// repair) — the classic GEVO operand mutation.
+pub struct ReplaceOp;
+
+impl MutationOp for ReplaceOp {
+    fn name(&self) -> &'static str {
+        "replace"
+    }
+
+    fn applicable(&self, g: &Graph) -> bool {
+        g.insts().iter().any(|i| i.kind.is_mutable() && !i.args.is_empty())
+    }
+
+    fn propose(&self, g: &Graph, rng: &mut Rng, _ctx: &OpContext) -> Option<EditKind> {
+        let cands: Vec<ValueId> = g
+            .insts()
+            .iter()
+            .filter(|i| i.kind.is_mutable() && !i.args.is_empty())
+            .map(|i| i.id)
+            .collect();
+        if cands.is_empty() {
+            return None;
+        }
+        Some(EditKind::ReplaceOperand { target: *rng.choose(&cands) })
+    }
+}
+
+/// Constant perturbation: scale an embedded constant by a seeded factor
+/// — the knob behind learning-rate/scale discoveries like the paper's
+/// §6.2 gradient-scale mutation, without waiting for a lucky copy chain.
+pub struct PerturbOp;
+
+impl MutationOp for PerturbOp {
+    fn name(&self) -> &'static str {
+        "perturb"
+    }
+
+    fn applicable(&self, g: &Graph) -> bool {
+        g.insts().iter().any(|i| matches!(i.kind, OpKind::Constant { .. }))
+    }
+
+    fn propose(&self, g: &Graph, rng: &mut Rng, _ctx: &OpContext) -> Option<EditKind> {
+        let consts: Vec<ValueId> = g
+            .insts()
+            .iter()
+            .filter(|i| matches!(i.kind, OpKind::Constant { .. }))
+            .map(|i| i.id)
+            .collect();
+        if consts.is_empty() {
+            return None;
+        }
+        Some(EditKind::PerturbConstant { target: *rng.choose(&consts) })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Crossover as an operator
+// ---------------------------------------------------------------------------
+
+/// Messy one-point crossover (§4.2) folded into the operator API: same
+/// name/stat accounting as the mutation operators, plus attribution
+/// awareness — with non-empty hints, edits minimization proved
+/// load-bearing stay pinned to their originating child instead of being
+/// shuffled into the cut pool.
+pub struct MessyCrossover;
+
+impl MessyCrossover {
+    pub fn name(&self) -> &'static str {
+        "crossover"
+    }
+
+    pub fn recombine(
+        &self,
+        a: &Individual,
+        b: &Individual,
+        rng: &mut Rng,
+        hints: Option<&OpHints>,
+    ) -> (Individual, Individual) {
+        match hints {
+            Some(h) if !h.protected.is_empty() => {
+                super::crossover::messy_one_point_protected(a, b, rng, &h.protected)
+            }
+            _ => super::crossover::messy_one_point(a, b, rng),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// `(canonical name, aliases, description)` of every built-in operator,
+/// in registry order. `copy` and `delete` — the paper's pair — lead, and
+/// the default enabled set is exactly those two (anything else would
+/// change historical streams).
+pub fn registry() -> &'static [(&'static str, &'static [&'static str], &'static str)] {
+    &[
+        ("copy", &["insert"], "clone an instruction, repair operands, connect downstream (§4.1)"),
+        ("delete", &[], "remove an instruction, repair dangling uses (§4.1)"),
+        ("swap", &["swap-operands"], "exchange two same-type operands of one instruction"),
+        ("replace", &["replace-operand"], "rewire one operand to a type-compatible earlier value"),
+        ("perturb", &["const-perturb"], "scale an embedded constant by a seeded factor"),
+    ]
+}
+
+/// The default enabled set: the paper's pair, in the historical
+/// selection order.
+pub fn default_names() -> Vec<String> {
+    vec!["copy".to_string(), "delete".to_string()]
+}
+
+/// Resolve user-supplied operator names (aliases allowed) to canonical
+/// registry names, rejecting unknowns, duplicates and the empty set with
+/// a message that lists what *is* registered.
+pub fn canonicalize_names<S: AsRef<str>>(names: &[S]) -> Result<Vec<String>, String> {
+    let known = || {
+        registry()
+            .iter()
+            .map(|(n, aliases, _)| {
+                if aliases.is_empty() {
+                    (*n).to_string()
+                } else {
+                    format!("{n} (alias {})", aliases.join(", "))
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    if names.is_empty() {
+        return Err(format!("empty operator set; known operators: {}", known()));
+    }
+    let mut out = Vec::with_capacity(names.len());
+    for raw in names {
+        let raw = raw.as_ref().trim();
+        let hit = registry()
+            .iter()
+            .find(|(n, aliases, _)| *n == raw || aliases.iter().any(|a| *a == raw))
+            .map(|(n, _, _)| (*n).to_string());
+        match hit {
+            Some(name) => {
+                if out.contains(&name) {
+                    return Err(format!("duplicate operator '{name}' in --operators"));
+                }
+                out.push(name);
+            }
+            None => {
+                return Err(format!(
+                    "unknown operator '{raw}'; known operators: {}",
+                    known()
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Parse a CLI `--operators` value (comma-separated names, aliases
+/// allowed, stray whitespace and empty segments tolerated) into
+/// canonical registry names. The one place the flag's syntax lives —
+/// `gevo-ml` and both evolve examples share it.
+pub fn parse_cli_list(list: &str) -> Result<Vec<String>, String> {
+    let names: Vec<&str> = list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    canonicalize_names(&names)
+}
+
+/// The enabled operator registry for one run: mutation operators in
+/// selection order plus the crossover operator. Stateless and shared
+/// across islands — per-island weights and counters live in
+/// [`OpSchedState`], which checkpoints.
+pub struct OperatorSet {
+    ops: Vec<Box<dyn MutationOp>>,
+    names: Vec<&'static str>,
+    crossover: MessyCrossover,
+}
+
+impl OperatorSet {
+    /// Build from canonical-or-alias names (see [`canonicalize_names`]).
+    pub fn from_names<S: AsRef<str>>(names: &[S]) -> Result<OperatorSet, String> {
+        let canon = canonicalize_names(names)?;
+        let mut ops: Vec<Box<dyn MutationOp>> = Vec::with_capacity(canon.len());
+        for name in &canon {
+            ops.push(match name.as_str() {
+                "copy" => Box::new(CopyOp),
+                "delete" => Box::new(DeleteOp),
+                "swap" => Box::new(SwapOp),
+                "replace" => Box::new(ReplaceOp),
+                "perturb" => Box::new(PerturbOp),
+                other => unreachable!("canonicalize_names admitted '{other}'"),
+            });
+        }
+        let names = ops.iter().map(|o| o.name()).collect();
+        Ok(OperatorSet { ops, names, crossover: MessyCrossover })
+    }
+
+    /// The paper's historical pair (`copy`, `delete`) — the default set.
+    pub fn classic() -> OperatorSet {
+        OperatorSet::from_names(&default_names()).expect("built-in names resolve")
+    }
+
+    /// Every registered operator, registry order.
+    pub fn full() -> OperatorSet {
+        let names: Vec<&str> = registry().iter().map(|(n, _, _)| *n).collect();
+        OperatorSet::from_names(&names).expect("built-in names resolve")
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn names(&self) -> &[&'static str] {
+        &self.names
+    }
+
+    pub fn crossover(&self) -> &MessyCrossover {
+        &self.crossover
+    }
+
+    /// Propose one edit. Draw order (the historical contract): the edit
+    /// seed first, then one weighted-selection draw (skipped when only a
+    /// single operator is applicable), then the chosen operator's own
+    /// draws. Returns `None` — consuming nothing — when no operator is
+    /// applicable.
+    pub fn propose(
+        &self,
+        g: &Graph,
+        rng: &mut Rng,
+        ctx: &OpContext,
+        sched: &mut OpSchedState,
+    ) -> Option<(Edit, usize)> {
+        debug_assert_eq!(sched.weights.len(), self.ops.len());
+        let applicable: Vec<usize> =
+            (0..self.ops.len()).filter(|&i| self.ops[i].applicable(g)).collect();
+        if applicable.is_empty() {
+            return None;
+        }
+        let seed = rng.next_u64();
+        let idx = if applicable.len() == 1 {
+            applicable[0]
+        } else {
+            pick_weighted(&applicable, &sched.weights, rng)
+        };
+        sched.mutation[idx].proposals += 1;
+        let kind = self.ops[idx].propose(g, rng, ctx)?;
+        Some((Edit { kind, seed }, idx))
+    }
+
+    /// Keep proposing until an edit applies, verifies and — when the
+    /// context carries a program cache — is not erased by the optimizer
+    /// pipeline (canonical key unchanged ⇒ provably neutral ⇒ discarded
+    /// and counted as `filtered_neutral`). The paper's mutate-until-valid
+    /// loop (§4.1), generalized. Returns the edit, the mutated graph and
+    /// the proposing operator's index.
+    pub fn valid_proposal(
+        &self,
+        base: &Graph,
+        rng: &mut Rng,
+        max_tries: usize,
+        ctx: &OpContext,
+        sched: &mut OpSchedState,
+    ) -> Option<(Edit, Graph, usize)> {
+        let base_key = ctx.cache.map(|c| c.canonical_key(base));
+        for _ in 0..max_tries {
+            let Some((edit, idx)) = self.propose(base, rng, ctx, sched) else {
+                // No operator applicable: permanent for this graph, bail
+                // without consuming draws (the historical contract). A
+                // `propose` returning `None` *after* claiming
+                // applicability is a custom-operator bug; its seed and
+                // selection draws are spent either way, so burn the try
+                // and keep the remaining attempts alive.
+                if self.ops.iter().any(|op| op.applicable(base)) {
+                    continue;
+                }
+                return None;
+            };
+            let mut cand = base.clone();
+            if apply_edit(&mut cand, &edit).is_ok()
+                && crate::ir::verify::verify(&cand).is_ok()
+            {
+                if let (Some(cache), Some(bk)) = (ctx.cache, base_key) {
+                    if cache.canonical_key(&cand) == bk {
+                        cache.count_filtered_neutral();
+                        continue;
+                    }
+                }
+                sched.mutation[idx].accepts += 1;
+                return Some((edit, cand, idx));
+            }
+        }
+        None
+    }
+}
+
+/// Cumulative-weight selection over the applicable indices. One `f64`
+/// draw; for the default two-op uniform case `r = f64()·2 < 1.0` is
+/// exactly the historical `chance(0.5)` comparison (scaling by a power
+/// of two is exact), so index 0 (`copy`) is chosen on precisely the same
+/// raw words as before.
+fn pick_weighted(applicable: &[usize], weights: &[f64], rng: &mut Rng) -> usize {
+    let total: f64 = applicable.iter().map(|&i| weights[i]).sum();
+    let r = rng.f64() * total;
+    let mut acc = 0.0;
+    for &i in applicable {
+        acc += weights[i];
+        if r < acc {
+            return i;
+        }
+    }
+    *applicable.last().expect("applicable is non-empty")
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler state
+// ---------------------------------------------------------------------------
+
+/// Per-operator accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounters {
+    /// `propose` calls routed to this operator (valid or not).
+    pub proposals: usize,
+    /// Proposals that applied, verified and survived the neutral filter.
+    pub accepts: usize,
+    /// Offspring carrying this operator's newest edit that evaluated to
+    /// a valid objective vector.
+    pub evals: usize,
+    /// Of those, evaluations whose objectives differ bitwise from the
+    /// parent they were derived from (the analysis papers' non-neutral
+    /// rate, measured against the tournament parent).
+    pub non_neutral: usize,
+    /// Of those, evaluations that put a brand-new genome into the
+    /// island's Pareto archive.
+    pub inserts: usize,
+}
+
+/// Weight floor/ceiling: no operator is ever starved to zero (the search
+/// must keep exploring) or allowed to monopolize the stream.
+const WEIGHT_MIN: f64 = 0.05;
+const WEIGHT_MAX: f64 = 20.0;
+/// Exponential-smoothing rate of the per-generation weight update.
+const ADAPT_RATE: f64 = 0.25;
+/// Archive insertions are worth this many non-neutral evaluations.
+const INSERT_BONUS: f64 = 2.0;
+/// Additive prior keeping idle operators at a nonzero score.
+const SCORE_PRIOR: f64 = 0.25;
+
+/// One island's scheduler state: current operator weights plus lifetime
+/// counters (mutation operators indexed like the [`OperatorSet`];
+/// crossover tracked separately — its *rate* stays
+/// `SearchConfig::crossover_prob`, only its accounting joins the table).
+/// Serialized into checkpoints; legacy checkpoints without the keys
+/// restore as [`OpSchedState::uniform`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpSchedState {
+    /// Selection weights, one per mutation operator. Static `1.0` unless
+    /// `SearchConfig::adapt` updates them.
+    pub weights: Vec<f64>,
+    pub mutation: Vec<OpCounters>,
+    pub crossover: OpCounters,
+}
+
+impl OpSchedState {
+    /// Uniform weights, zero counters — the historical behavior.
+    pub fn uniform(n: usize) -> OpSchedState {
+        OpSchedState {
+            weights: vec![1.0; n],
+            mutation: vec![OpCounters::default(); n],
+            crossover: OpCounters::default(),
+        }
+    }
+
+    /// Deterministic credit assignment over one generation's counter
+    /// deltas (`snap` is the generation-start snapshot of `mutation`):
+    ///
+    /// ```text
+    /// score_i = (Δnon_neutral_i + 2·Δinserts_i + ¼) / (Δevals_i + 1)
+    /// w_i ← clamp((1−η)·w_i + η·N·score_i/Σscore, 0.05, 20)      η = ¼
+    /// ```
+    ///
+    /// Operators whose edits keep evaluating neutral decay toward the
+    /// floor; operators that move objectives or feed the archive gain
+    /// share. Pure `f64` arithmetic in fixed index order — bit-for-bit
+    /// reproducible, and the weights round-trip through checkpoints as
+    /// hex bit patterns.
+    pub fn adapt(&mut self, snap: &[OpCounters]) {
+        debug_assert_eq!(snap.len(), self.mutation.len());
+        let n = self.mutation.len();
+        if n == 0 {
+            return;
+        }
+        let scores: Vec<f64> = self
+            .mutation
+            .iter()
+            .zip(snap.iter())
+            .map(|(now, before)| {
+                let d_nn = (now.non_neutral - before.non_neutral) as f64;
+                let d_ins = (now.inserts - before.inserts) as f64;
+                let d_ev = (now.evals - before.evals) as f64;
+                (d_nn + INSERT_BONUS * d_ins + SCORE_PRIOR) / (d_ev + 1.0)
+            })
+            .collect();
+        let total: f64 = scores.iter().sum();
+        if !(total > 0.0) {
+            return; // unreachable with the positive prior; belt and braces
+        }
+        for (w, s) in self.weights.iter_mut().zip(scores.iter()) {
+            let target = s / total * n as f64;
+            *w = ((1.0 - ADAPT_RATE) * *w + ADAPT_RATE * target).clamp(WEIGHT_MIN, WEIGHT_MAX);
+        }
+    }
+}
+
+/// One row of the end-of-run per-operator report (counts summed across
+/// islands; `weight` is the final mean across islands, `None` for the
+/// crossover row — its rate is `crossover_prob`, not a scheduler weight).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OperatorStats {
+    pub name: String,
+    pub weight: Option<f64>,
+    pub proposals: usize,
+    pub accepts: usize,
+    pub evals: usize,
+    pub non_neutral: usize,
+    pub inserts: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::ReduceKind;
+    use crate::ir::types::TType;
+    use crate::opt::OptLevel;
+
+    /// The mutate.rs testbed: mixed types, constants, enough surface for
+    /// every operator.
+    fn testbed() -> Graph {
+        let mut g = Graph::new("tb");
+        let x = g.param(TType::of(&[4, 6]));
+        let w = g.param(TType::of(&[6, 3]));
+        let lbl = g.param(TType::of(&[4, 3]));
+        let d = g.push(OpKind::Dot, &[x, w]).unwrap();
+        let sub = g.push(OpKind::Subtract, &[d, lbl]).unwrap();
+        let c = g.constant_scalar(0.25);
+        let cb = g
+            .push(OpKind::Broadcast { dims: vec![4, 3], mapping: vec![] }, &[c])
+            .unwrap();
+        let scaled = g.push(OpKind::Multiply, &[sub, cb]).unwrap();
+        let r = g
+            .push(OpKind::Reduce { dims: vec![0], kind: ReduceKind::Sum }, &[scaled])
+            .unwrap();
+        let e = g.push(OpKind::Exponential, &[r]).unwrap();
+        g.set_outputs(&[scaled, e]);
+        g
+    }
+
+    /// Byte-for-byte replica of the pre-redesign `random_edit`: the
+    /// contract the default [`OperatorSet`] must reproduce.
+    fn legacy_random_edit(g: &Graph, rng: &mut Rng) -> Option<Edit> {
+        let mutable: Vec<ValueId> =
+            g.insts().iter().filter(|i| i.kind.is_mutable()).map(|i| i.id).collect();
+        let all: Vec<ValueId> = g.insts().iter().map(|i| i.id).collect();
+        if mutable.is_empty() || all.is_empty() {
+            return None;
+        }
+        let seed = rng.next_u64();
+        let kind = if rng.chance(0.5) {
+            EditKind::Copy { src: *rng.choose(&mutable), after: *rng.choose(&all) }
+        } else {
+            EditKind::Delete { target: *rng.choose(&mutable) }
+        };
+        Some(Edit { kind, seed })
+    }
+
+    fn legacy_valid_random_edit(
+        base: &Graph,
+        rng: &mut Rng,
+        max_tries: usize,
+    ) -> Option<(Edit, Graph)> {
+        for _ in 0..max_tries {
+            let Some(edit) = legacy_random_edit(base, rng) else {
+                return None;
+            };
+            let mut candidate = base.clone();
+            if apply_edit(&mut candidate, &edit).is_ok()
+                && crate::ir::verify::verify(&candidate).is_ok()
+            {
+                return Some((edit, candidate));
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn default_set_reproduces_the_legacy_stream_bit_for_bit() {
+        // The pin behind "default config is bit-identical to the
+        // pre-redesign search path": same edits, same graphs, and —
+        // the strongest form — the same RNG state afterwards, for many
+        // independent streams.
+        let g = testbed();
+        let ops = OperatorSet::classic();
+        for seed in 0..60u64 {
+            let mut legacy_rng = Rng::new(seed);
+            let mut new_rng = Rng::new(seed);
+            let mut sched = OpSchedState::uniform(ops.len());
+            let legacy = legacy_valid_random_edit(&g, &mut legacy_rng, 25);
+            let new = ops.valid_proposal(&g, &mut new_rng, 25, &OpContext::default(), &mut sched);
+            match (legacy, new) {
+                (Some((le, lg)), Some((ne, ng, _))) => {
+                    assert_eq!(le, ne, "seed {seed}: different edit");
+                    assert_eq!(
+                        crate::ir::printer::print(&lg),
+                        crate::ir::printer::print(&ng),
+                        "seed {seed}: different graph"
+                    );
+                }
+                (None, None) => {}
+                (l, n) => panic!("seed {seed}: legacy {l:?} vs new {:?}", n.map(|t| t.0)),
+            }
+            assert_eq!(
+                legacy_rng.state(),
+                new_rng.state(),
+                "seed {seed}: RNG streams diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn propose_draws_nothing_when_no_operator_applies() {
+        let mut g = Graph::new("params-only");
+        g.param(TType::of(&[2, 2]));
+        let ops = OperatorSet::classic();
+        let mut rng = Rng::new(7);
+        let before = rng.state();
+        let mut sched = OpSchedState::uniform(ops.len());
+        assert!(ops.propose(&g, &mut rng, &OpContext::default(), &mut sched).is_none());
+        assert_eq!(rng.state(), before, "inapplicable propose must not consume RNG");
+        assert!(sched.mutation.iter().all(|c| c.proposals == 0));
+    }
+
+    #[test]
+    fn every_builtin_operator_produces_valid_edits() {
+        let g = testbed();
+        let full = OperatorSet::full();
+        for (i, name) in full.names().to_vec().into_iter().enumerate() {
+            let solo = OperatorSet::from_names(&[name]).unwrap();
+            let mut rng = Rng::new(0xC0FFEE + i as u64);
+            let mut sched = OpSchedState::uniform(1);
+            let mut ok = 0;
+            for _ in 0..40 {
+                if let Some((edit, cand, idx)) =
+                    solo.valid_proposal(&g, &mut rng, 25, &OpContext::default(), &mut sched)
+                {
+                    assert_eq!(idx, 0);
+                    crate::ir::verify::verify(&cand)
+                        .unwrap_or_else(|e| panic!("{name}: {edit} -> invalid graph: {e}"));
+                    assert_eq!(
+                        cand.output_types(),
+                        g.output_types(),
+                        "{name}: output signature changed"
+                    );
+                    ok += 1;
+                }
+            }
+            assert!(ok > 5, "operator {name} almost never applies ({ok}/40)");
+            assert!(sched.mutation[0].proposals >= sched.mutation[0].accepts);
+            assert_eq!(sched.mutation[0].accepts, ok);
+        }
+    }
+
+    #[test]
+    fn unknown_and_duplicate_names_are_rejected_with_known_list() {
+        let err = canonicalize_names(&["copy", "bogus"]).unwrap_err();
+        assert!(err.contains("unknown operator 'bogus'"), "{err}");
+        assert!(err.contains("copy") && err.contains("perturb"), "{err}");
+        let err = canonicalize_names(&["copy", "insert"]).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        let err = canonicalize_names::<&str>(&[]).unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+        // aliases resolve to canonical names
+        assert_eq!(
+            canonicalize_names(&["insert", "replace-operand", "const-perturb"]).unwrap(),
+            vec!["copy", "replace", "perturb"]
+        );
+    }
+
+    #[test]
+    fn cli_list_parsing_tolerates_whitespace_and_trailing_commas() {
+        assert_eq!(
+            parse_cli_list(" copy , delete,swap,").unwrap(),
+            vec!["copy", "delete", "swap"]
+        );
+        assert_eq!(parse_cli_list("insert,perturb").unwrap(), vec!["copy", "perturb"]);
+        assert!(parse_cli_list("copy,bogus").unwrap_err().contains("unknown operator"));
+        assert!(parse_cli_list(",, ,").unwrap_err().contains("empty"));
+    }
+
+    #[test]
+    fn neutral_filter_discards_pipeline_erased_edits() {
+        // A graph with a dead instruction: deleting it cannot change the
+        // O2 canonical form, so the filter must discard that proposal and
+        // count it, and every accepted proposal must change the key.
+        let mut g = testbed();
+        let x = g.insts()[0].id;
+        g.push(OpKind::Tanh, &[x]).unwrap(); // unused -> dead at O2
+        let cache = ProgramCache::with_opt(OptLevel::O2);
+        let ctx = OpContext { cache: Some(&cache), hints: None };
+        let ops = OperatorSet::classic();
+        let mut sched = OpSchedState::uniform(ops.len());
+        let mut rng = Rng::new(0xF1);
+        // deterministic-certain core: deleting the dead op cannot change
+        // the canonical form, so its key is the filter's trigger
+        let mut no_dead = g.clone();
+        no_dead.eliminate_dead_code();
+        let base_key = cache.canonical_key(&g);
+        assert_eq!(cache.canonical_key(&no_dead), base_key, "dead op must not affect the key");
+        let mut accepted = 0;
+        for _ in 0..300 {
+            if let Some((_, cand, _)) = ops.valid_proposal(&g, &mut rng, 25, &ctx, &mut sched) {
+                assert_ne!(
+                    cache.canonical_key(&cand),
+                    base_key,
+                    "accepted proposal is canonically neutral"
+                );
+                accepted += 1;
+            }
+        }
+        assert!(accepted > 50, "filter starved the proposal loop ({accepted}/300)");
+        assert!(
+            cache.opt_stats().filtered_neutral > 0,
+            "across 300 proposal rounds a dead-instruction delete must occur and be filtered"
+        );
+    }
+
+    #[test]
+    fn delete_hints_skip_neutral_targets() {
+        let g = testbed();
+        // mark every mutable target except one as known-neutral
+        let mutable: Vec<ValueId> =
+            g.insts().iter().filter(|i| i.kind.is_mutable()).map(|i| i.id).collect();
+        let keep = mutable[0];
+        let mut hints = OpHints::default();
+        for &v in &mutable[1..] {
+            hints.neutral_deletes.insert(v);
+        }
+        let ctx = OpContext { cache: None, hints: Some(&hints) };
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            match DeleteOp.propose(&g, &mut rng, &ctx) {
+                Some(EditKind::Delete { target }) => assert_eq!(target, keep),
+                other => panic!("unexpected proposal {other:?}"),
+            }
+        }
+        // all targets neutral -> fall back to the full list, never starve
+        for &v in &mutable {
+            hints.neutral_deletes.insert(v);
+        }
+        let ctx = OpContext { cache: None, hints: Some(&hints) };
+        assert!(DeleteOp.propose(&g, &mut rng, &ctx).is_some());
+    }
+
+    #[test]
+    fn adapt_rewards_productive_operators_deterministically() {
+        let mut a = OpSchedState::uniform(2);
+        let snap = a.mutation.clone();
+        // op 0: 10 evals, all neutral; op 1: 10 evals, 8 non-neutral + 2 inserts
+        a.mutation[0].evals = 10;
+        a.mutation[1].evals = 10;
+        a.mutation[1].non_neutral = 8;
+        a.mutation[1].inserts = 2;
+        let mut b = a.clone();
+        a.adapt(&snap);
+        b.adapt(&snap);
+        assert_eq!(a.weights, b.weights, "adaptation must be deterministic");
+        assert!(
+            a.weights[1] > a.weights[0],
+            "productive operator must gain weight: {:?}",
+            a.weights
+        );
+        assert!(a.weights.iter().all(|w| (WEIGHT_MIN..=WEIGHT_MAX).contains(w)));
+        // repeated all-neutral generations drive toward the floor, never to 0
+        for _ in 0..100 {
+            let snap = a.mutation.clone();
+            a.mutation[0].evals += 5;
+            a.mutation[1].evals += 5;
+            a.mutation[1].non_neutral += 5;
+            a.adapt(&snap);
+        }
+        assert!(a.weights[0] >= WEIGHT_MIN);
+        assert!(a.weights[1] <= WEIGHT_MAX);
+    }
+
+    #[test]
+    fn harvest_hints_splits_survivors_from_neutral_deletes() {
+        let del = |v: u32, s: u64| Edit { kind: EditKind::Delete { target: ValueId(v) }, seed: s };
+        let cp = |v: u32, s: u64| Edit {
+            kind: EditKind::Copy { src: ValueId(v), after: ValueId(v) },
+            seed: s,
+        };
+        let raw = Individual::new(vec![del(1, 10), cp(2, 11), del(3, 12)]);
+        let mut minimized = Individual::new(vec![cp(2, 11)]);
+        minimized.objectives = Some((0.5, 0.0));
+        let res = MinimizeResult {
+            minimized: minimized.clone(),
+            start: (0.5, 0.0),
+            objectives: (0.5, 0.0),
+            removed: 2,
+            evaluations: 4,
+            attribution: vec![],
+        };
+        let mut hints = OpHints::default();
+        harvest_hints(&mut hints, &raw, &res);
+        assert!(hints.protected.contains(&cp(2, 11)));
+        assert_eq!(hints.protected.len(), 1);
+        assert!(hints.neutral_deletes.contains(&ValueId(1)));
+        assert!(hints.neutral_deletes.contains(&ValueId(3)));
+        assert_eq!(hints.neutral_deletes.len(), 2);
+    }
+
+    #[test]
+    fn weighted_pick_is_exactly_the_legacy_coin_for_two_uniform_ops() {
+        // f64()*2 < 1.0 must equal chance(0.5) on the same raw word.
+        for seed in 0..200u64 {
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let idx = pick_weighted(&[0, 1], &[1.0, 1.0], &mut r1);
+            let legacy = if r2.chance(0.5) { 0 } else { 1 };
+            assert_eq!(idx, legacy, "seed {seed}");
+            assert_eq!(r1.state(), r2.state());
+        }
+    }
+}

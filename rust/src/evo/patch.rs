@@ -11,8 +11,12 @@ use super::mutate::{apply_edit, MutateError};
 use crate::ir::types::ValueId;
 use crate::ir::Graph;
 
-/// What an edit does.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// What an edit does. `Copy` and `Delete` are the paper's §4.1 pair; the
+/// remaining kinds are proposed by the extended operator registry
+/// ([`super::operators`]) and ride the same replay/crossover machinery.
+/// `Ord` exists so attribution hints can hold edits in deterministic
+/// `BTree` collections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum EditKind {
     /// Copy the instruction that defines `src`, inserting the clone right
     /// after the instruction that defines `after`; repair operands; then
@@ -21,11 +25,20 @@ pub enum EditKind {
     /// Delete the instruction that defines `target`; repair every
     /// dangling use with a type-compatible (possibly resized) substitute.
     Delete { target: ValueId },
+    /// Swap two same-type operands of the instruction that defines
+    /// `target` (the pair is chosen by the edit's seed).
+    SwapOperands { target: ValueId },
+    /// Replace one operand of the instruction that defines `target` with
+    /// a type-compatible earlier value (slot and substitute chosen by the
+    /// edit's seed, with the §4.1 resize-chain fallback).
+    ReplaceOperand { target: ValueId },
+    /// Scale the constant that defines `target` by a seeded factor.
+    PerturbConstant { target: ValueId },
 }
 
 /// One replayable edit: the kind plus the seed that drives all random
 /// repair choices.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Edit {
     pub kind: EditKind,
     pub seed: u64,
@@ -36,6 +49,9 @@ impl std::fmt::Display for Edit {
         match self.kind {
             EditKind::Copy { src, after } => write!(f, "copy({src} after {after})"),
             EditKind::Delete { target } => write!(f, "delete({target})"),
+            EditKind::SwapOperands { target } => write!(f, "swap({target})"),
+            EditKind::ReplaceOperand { target } => write!(f, "replace({target})"),
+            EditKind::PerturbConstant { target } => write!(f, "perturb({target})"),
         }
     }
 }
@@ -99,6 +115,18 @@ impl Individual {
                     mix(2);
                     mix(target.0 as u64);
                 }
+                EditKind::SwapOperands { target } => {
+                    mix(3);
+                    mix(target.0 as u64);
+                }
+                EditKind::ReplaceOperand { target } => {
+                    mix(4);
+                    mix(target.0 as u64);
+                }
+                EditKind::PerturbConstant { target } => {
+                    mix(5);
+                    mix(target.0 as u64);
+                }
             }
             mix(e.seed);
         }
@@ -146,5 +174,26 @@ mod tests {
         assert_ne!(a.cache_key(), b.cache_key());
         assert_ne!(a.cache_key(), c.cache_key());
         assert_eq!(a.cache_key(), a.clone().cache_key());
+    }
+
+    #[test]
+    fn cache_key_distinguishes_every_edit_kind() {
+        // Same target + seed across kinds must never collide (the kind
+        // tag is part of the mix).
+        let kinds = [
+            EditKind::Delete { target: ValueId(1) },
+            EditKind::SwapOperands { target: ValueId(1) },
+            EditKind::ReplaceOperand { target: ValueId(1) },
+            EditKind::PerturbConstant { target: ValueId(1) },
+        ];
+        let keys: Vec<u64> = kinds
+            .iter()
+            .map(|&kind| Individual::new(vec![Edit { kind, seed: 7 }]).cache_key())
+            .collect();
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j], "kinds {:?} / {:?}", kinds[i], kinds[j]);
+            }
+        }
     }
 }

@@ -15,10 +15,12 @@
 //! population to completion; the island model in [`super::island`] runs K
 //! engines with migration and checkpointing on top of the same `Engine`.
 
-use super::crossover::messy_one_point;
-use super::mutate::valid_random_edit;
 use super::nsga2::{crowded_less, pareto_front, rank_and_crowd, select_best, Objectives};
+use super::operators::{
+    harvest_hints, OpContext, OperatorSet, OperatorStats, OpHints, OpSchedState,
+};
 use super::patch::Individual;
+use crate::exec::cache::ProgramCache;
 use crate::ir::Graph;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -52,6 +54,17 @@ pub trait Evaluator: Sync {
     /// cache, when it lowers through the `--opt-level 3` fusion path.
     /// Recorded in [`SearchResult::program_fusion`] for reports.
     fn fusion_stats(&self) -> Option<crate::exec::cache::FusionTotals> {
+        None
+    }
+
+    /// The workload's compiled-program cache itself, if it runs one. The
+    /// search hands it to the mutation operators through
+    /// [`OpContext`]: with [`SearchConfig::filter_neutral`] the proposal
+    /// loop uses [`ProgramCache::canonical_key`] to discard edits the
+    /// optimizer pipeline provably erases before they waste an
+    /// evaluation, and its [`crate::exec::cache::OptStats`] (including
+    /// `filtered_neutral`) surface in [`SearchResult::program_opt`].
+    fn program_cache(&self) -> Option<&ProgramCache> {
         None
     }
 }
@@ -108,6 +121,34 @@ pub struct SearchConfig {
     /// `Default` is level 0 to agree with the workloads' `new()`
     /// constructors (the CLI tools and examples default to 2).
     pub opt_level: crate::opt::OptLevel,
+    /// Enabled mutation operators, by registry name
+    /// ([`crate::evo::operators::registry`]; aliases accepted). The
+    /// default — `copy, delete` — is the paper's pair and reproduces the
+    /// historical proposal stream bit-for-bit. Echoed into checkpoints
+    /// (canonicalized) and verified on resume.
+    pub operators: Vec<String>,
+    /// Adaptive operator scheduling: per-island operator weights updated
+    /// once per generation by deterministic credit assignment
+    /// (non-neutral-evaluation rate and Pareto-archive insertions per
+    /// operator — [`OpSchedState::adapt`]). Off (the default) keeps
+    /// static uniform weights: bit-identical to the pre-scheduler search.
+    /// Weights are checkpointed, so a killed adaptive run resumes
+    /// bit-identically.
+    pub adapt: bool,
+    /// Opt-aware proposal filter: discard candidate edits whose
+    /// canonical key (via the workload's [`ProgramCache`] memo) equals
+    /// the base graph's — the pass pipeline provably erases them, so
+    /// evaluating them is wasted work. Requires a workload exposing
+    /// [`Evaluator::program_cache`] at `--opt-level 1+`; counted as
+    /// `filtered_neutral` in [`SearchResult::program_opt`]. Off by
+    /// default (it changes the search trajectory).
+    pub filter_neutral: bool,
+    /// Attribution-guided reseeding: island migration and
+    /// degenerate-generation reseeds carry [`crate::opt::minimize`]d
+    /// elites instead of raw ones, and the attribution from those
+    /// reductions feeds [`OpHints`] (crossover protects load-bearing
+    /// edits; `delete` avoids known-neutral targets). Off by default.
+    pub reseed_minimized: bool,
     pub verbose: bool,
 }
 
@@ -129,6 +170,10 @@ impl Default for SearchConfig {
             migrants: 2,
             checkpoint_every: 1,
             opt_level: crate::opt::OptLevel::O0,
+            operators: super::operators::default_names(),
+            adapt: false,
+            filter_neutral: false,
+            reseed_minimized: false,
             verbose: false,
         }
     }
@@ -185,6 +230,16 @@ pub struct SearchResult {
     /// (step-count and peak-buffer reduction), when the run lowered at
     /// `--opt-level 3`.
     pub program_fusion: Option<crate::exec::cache::FusionTotals>,
+    /// Optimizer counters of the evaluator's program cache (instruction
+    /// reduction, memo hit/miss split, `filtered_neutral` proposals),
+    /// when the workload runs one.
+    pub program_opt: Option<crate::exec::cache::OptStats>,
+    /// Per-operator accounting: proposals, accepts, evaluated offspring,
+    /// non-neutral evaluations and archive insertions, summed across
+    /// islands, plus the final scheduler weight (mean across islands;
+    /// `None` for the crossover row). One row per enabled mutation
+    /// operator followed by the crossover row.
+    pub operators: Vec<OperatorStats>,
 }
 
 /// Run the search. `original` is the unmutated program (the paper's
@@ -230,7 +285,45 @@ pub(crate) struct Engine {
     pub(crate) cache_hits: usize,
     pub(crate) migrants_sent: usize,
     pub(crate) migrants_received: usize,
+    /// Operator weights + per-operator counters for this island's
+    /// scheduler (uniform/static unless `cfg.adapt`). Checkpointed.
+    pub(crate) sched: OpSchedState,
+    /// Attribution hints harvested from `opt::minimize` runs
+    /// (`cfg.reseed_minimized`). Checkpointed; empty otherwise.
+    pub(crate) hints: OpHints,
 }
+
+/// The program cache handed to operator proposals, when the neutral
+/// filter is on and the workload runs one.
+fn filter_cache<'a>(eval: &'a dyn Evaluator, cfg: &SearchConfig) -> Option<&'a ProgramCache> {
+    if cfg.filter_neutral {
+        eval.program_cache()
+    } else {
+        None
+    }
+}
+
+/// What produced an offspring this generation, for credit assignment.
+enum Credit {
+    Crossover,
+    Mutation(usize),
+}
+
+/// Per-offspring bookkeeping for the scheduler's credit pass.
+struct OffMeta {
+    credit: Vec<Credit>,
+    /// Objectives of the tournament parent the offspring was derived
+    /// from — the baseline for the non-neutral test.
+    parent_obj: Option<Objectives>,
+}
+
+/// Minimized archive elites injected into a degenerate-generation reseed
+/// under `SearchConfig::reseed_minimized`. A constant, deliberately not
+/// `SearchConfig::migrants` — that knob belongs to island migration and
+/// is documented as irrelevant for single-island runs, which can still
+/// hit the reseed path. Each injected elite costs one `opt::minimize`
+/// pass, so the count stays small.
+const RESEED_MINIMIZED_ELITES: usize = 2;
 
 /// Per-island RNG seed: island 0 keeps the user seed unchanged so a
 /// one-island run reproduces the historical single-population stream.
@@ -245,19 +338,28 @@ impl Engine {
         original: &Graph,
         eval: &dyn Evaluator,
         cfg: &SearchConfig,
+        ops: &OperatorSet,
     ) -> Engine {
+        let mut rng = Rng::new(island_seed(cfg.seed, id));
+        let mut sched = OpSchedState::uniform(ops.len());
+        let hints = OpHints::default();
+        let pop = {
+            let ctx = OpContext { cache: filter_cache(eval, cfg), hints: Some(&hints) };
+            seed_population(original, &mut rng, cfg, ops, &ctx, &mut sched)
+        };
         let mut e = Engine {
             id,
-            rng: Rng::new(island_seed(cfg.seed, id)),
-            pop: Vec::new(),
+            rng,
+            pop,
             archive: HashMap::new(),
             cache: HashMap::new(),
             evals: 0,
             cache_hits: 0,
             migrants_sent: 0,
             migrants_received: 0,
+            sched,
+            hints,
         };
-        e.pop = seed_population(original, &mut e.rng, cfg);
         e.evaluate_pop(original, eval, cfg);
         e.absorb_pop();
         e
@@ -275,22 +377,68 @@ impl Engine {
 
     /// Replace the population with a fresh seeding from the original
     /// program (the recovery path when a generation degenerates to zero
-    /// valid individuals) and evaluate it.
-    fn reseed(&mut self, original: &Graph, eval: &dyn Evaluator, cfg: &SearchConfig) {
-        self.pop = seed_population(original, &mut self.rng, cfg);
+    /// valid individuals) and evaluate it. With `cfg.reseed_minimized`
+    /// and a non-empty archive, the new population's lead slots carry
+    /// [`crate::opt::minimize`]d archive elites instead of raw reseeds —
+    /// the attribution from those reductions also feeds the hint sets.
+    fn reseed(
+        &mut self,
+        original: &Graph,
+        eval: &dyn Evaluator,
+        cfg: &SearchConfig,
+        ops: &OperatorSet,
+    ) {
+        let elites: Vec<Individual> = if cfg.reseed_minimized && !self.archive.is_empty() {
+            // archive iteration order is a HashMap's — sort by key first
+            let mut items: Vec<(&u64, &(Individual, Objectives))> =
+                self.archive.iter().collect();
+            items.sort_by_key(|(k, _)| **k);
+            let pts: Vec<Objectives> = items.iter().map(|(_, (_, o))| *o).collect();
+            select_best(&pts, RESEED_MINIMIZED_ELITES.min(items.len()))
+                .into_iter()
+                .map(|i| items[i].1 .0.clone())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        self.pop = {
+            let ctx = OpContext { cache: filter_cache(eval, cfg), hints: Some(&self.hints) };
+            seed_population(original, &mut self.rng, cfg, ops, &ctx, &mut self.sched)
+        };
+        // slot 0 keeps the unmutated original; minimized elites take the
+        // slots after it (RNG-free — the fresh seeds they replace were
+        // already drawn, so the stream is untouched).
+        let mut slot = 1;
+        for raw in elites {
+            if slot >= self.pop.len() {
+                break;
+            }
+            if let Some(res) = crate::opt::minimize::minimize(original, &raw, eval) {
+                self.evals += res.evaluations;
+                harvest_hints(&mut self.hints, &raw, &res);
+                self.pop[slot] = res.minimized;
+                slot += 1;
+            }
+        }
         self.evaluate_pop(original, eval, cfg);
         self.absorb_pop();
     }
 
-    /// Advance one generation: rank, recombine, mutate, evaluate, select.
+    /// Advance one generation: rank, recombine, mutate, evaluate, assign
+    /// operator credit, select.
     pub(crate) fn step(
         &mut self,
         original: &Graph,
         eval: &dyn Evaluator,
         cfg: &SearchConfig,
         gen: usize,
+        ops: &OperatorSet,
     ) -> GenStats {
         let evals_before = self.evals;
+        // Generation-start counter snapshot: the adaptive update works on
+        // this generation's deltas only.
+        let sched_snap = self.sched.mutation.clone();
+        let cache = filter_cache(eval, cfg);
 
         // ---- rank current population --------------------------------------
         let mut scored: Vec<usize> =
@@ -299,7 +447,7 @@ impl Engine {
             // Every individual failed evaluation; tournament selection has
             // nothing to draw from. Fall back to reseeding from the
             // original program instead of panicking.
-            self.reseed(original, eval, cfg);
+            self.reseed(original, eval, cfg, ops);
             scored =
                 (0..self.pop.len()).filter(|&i| self.pop[i].objectives.is_some()).collect();
         }
@@ -313,31 +461,64 @@ impl Engine {
 
         // ---- offspring ------------------------------------------------------
         let mut offspring: Vec<Individual> = Vec::with_capacity(cfg.pop_size);
+        let mut meta: Vec<OffMeta> = Vec::with_capacity(cfg.pop_size);
         let mut guard = 0usize;
         while offspring.len() < cfg.pop_size && guard < cfg.pop_size * 20 {
             guard += 1;
             let pa = tournament(&scored, &rc, cfg.tournament_size, &mut self.rng);
             let pb = tournament(&scored, &rc, cfg.tournament_size, &mut self.rng);
-            let (mut c1, mut c2) = if self.rng.chance(cfg.crossover_prob) {
-                messy_one_point(&self.pop[pa], &self.pop[pb], &mut self.rng)
+            let did_cross = self.rng.chance(cfg.crossover_prob);
+            let (mut c1, mut c2) = if did_cross {
+                ops.crossover().recombine(
+                    &self.pop[pa],
+                    &self.pop[pb],
+                    &mut self.rng,
+                    Some(&self.hints),
+                )
             } else {
                 (self.pop[pa].clone(), self.pop[pb].clone())
             };
-            for c in [&mut c1, &mut c2] {
+            for (c, parent) in [(&mut c1, pa), (&mut c2, pb)] {
+                // A child past capacity is still processed in full — its
+                // RNG draws are part of the historical stream — but its
+                // counters go to a throwaway scratch so the per-operator
+                // accept/eval funnel only counts offspring that actually
+                // reach evaluation. (`offspring.len()` cannot change
+                // between here and the push below.)
+                let kept = offspring.len() < cfg.pop_size;
+                if did_cross && kept {
+                    self.sched.crossover.proposals += 1;
+                }
                 // §4.2: re-apply the patch to the original; invalid
                 // recombinations are discarded and retried.
                 let Ok(mut g) = c.materialize(original) else { continue };
+                let mut credit: Vec<Credit> = Vec::new();
+                if did_cross {
+                    if kept {
+                        self.sched.crossover.accepts += 1;
+                    }
+                    credit.push(Credit::Crossover);
+                }
                 if self.rng.chance(cfg.mutation_prob) {
-                    if let Some((edit, ng)) = valid_random_edit(&g, &mut self.rng, cfg.max_tries)
-                    {
+                    let mut scratch = if kept { None } else { Some(self.sched.clone()) };
+                    let proposal = ops.valid_proposal(
+                        &g,
+                        &mut self.rng,
+                        cfg.max_tries,
+                        &OpContext { cache, hints: Some(&self.hints) },
+                        scratch.as_mut().unwrap_or(&mut self.sched),
+                    );
+                    if let Some((edit, ng, op_idx)) = proposal {
                         c.edits.push(edit);
                         g = ng;
+                        credit.push(Credit::Mutation(op_idx));
                     }
                 }
                 let _ = g;
                 c.objectives = None;
-                if offspring.len() < cfg.pop_size {
+                if kept {
                     offspring.push(c.clone());
+                    meta.push(OffMeta { credit, parent_obj: self.pop[parent].objectives });
                 }
             }
         }
@@ -345,6 +526,7 @@ impl Engine {
         let (evals, hits) = evaluate_all(original, eval, &mut offspring, cfg, &mut self.cache);
         self.evals += evals;
         self.cache_hits += hits;
+        self.assign_credit(&offspring, &meta);
         absorb(&mut self.archive, &offspring);
 
         // ---- environmental selection: elites + tournament (§4.4) ----------
@@ -370,7 +552,7 @@ impl Engine {
         if combined.is_empty() {
             // Unreachable when `scored` was non-empty above, but keep the
             // degenerate path panic-free: reseed rather than unwrap.
-            self.reseed(original, eval, cfg);
+            self.reseed(original, eval, cfg, ops);
             return self.stats(gen, evals_before);
         }
         let cpts: Vec<Objectives> = combined.iter().map(|i| i.objectives.unwrap()).collect();
@@ -384,7 +566,42 @@ impl Engine {
         }
         self.pop = next;
 
+        if cfg.adapt {
+            self.sched.adapt(&sched_snap);
+        }
+
         self.stats(gen, evals_before)
+    }
+
+    /// Credit this generation's evaluated offspring back to the operators
+    /// that produced them: valid evaluation, non-neutral movement against
+    /// the tournament parent, and first-sight Pareto-archive insertions.
+    /// Must run after `evaluate_all` and *before* `absorb` (insertion
+    /// novelty is judged against the pre-absorb archive).
+    fn assign_credit(&mut self, offspring: &[Individual], meta: &[OffMeta]) {
+        debug_assert_eq!(offspring.len(), meta.len());
+        let mut counted: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        for (ind, m) in offspring.iter().zip(meta.iter()) {
+            let Some(o) = ind.objectives else { continue };
+            let key = ind.cache_key();
+            let fresh = !self.archive.contains_key(&key) && counted.insert(key);
+            let neutral = m
+                .parent_obj
+                .map_or(false, |p| p.0.to_bits() == o.0.to_bits() && p.1.to_bits() == o.1.to_bits());
+            for c in &m.credit {
+                let row = match c {
+                    Credit::Crossover => &mut self.sched.crossover,
+                    Credit::Mutation(i) => &mut self.sched.mutation[*i],
+                };
+                row.evals += 1;
+                if !neutral {
+                    row.non_neutral += 1;
+                }
+                if fresh {
+                    row.inserts += 1;
+                }
+            }
+        }
     }
 
     /// Generation stats from the current population + archive state.
@@ -420,11 +637,17 @@ impl Engine {
 }
 
 /// The initial population: the unmutated original plus `pop_size - 1`
-/// individuals carrying `init_mutations` random edits each.
+/// individuals carrying `init_mutations` random edits each, proposed by
+/// the configured operator set (seeding counts toward proposal/accept
+/// stats but earns no evaluation credit — there is no parent to compare
+/// against).
 pub(crate) fn seed_population(
     original: &Graph,
     rng: &mut Rng,
     cfg: &SearchConfig,
+    ops: &OperatorSet,
+    ctx: &OpContext,
+    sched: &mut OpSchedState,
 ) -> Vec<Individual> {
     let mut pop: Vec<Individual> = Vec::with_capacity(cfg.pop_size);
     pop.push(Individual::original()); // keep the baseline in the race
@@ -432,7 +655,7 @@ pub(crate) fn seed_population(
         let mut ind = Individual::original();
         let mut g = original.clone();
         for _ in 0..cfg.init_mutations {
-            if let Some((edit, ng)) = valid_random_edit(&g, rng, cfg.max_tries) {
+            if let Some((edit, ng, _)) = ops.valid_proposal(&g, rng, cfg.max_tries, ctx, sched) {
                 ind.edits.push(edit);
                 g = ng;
             }

@@ -43,6 +43,12 @@ const MAX_ENTRIES: usize = 1024;
 /// the cap is generous; like the program map it is flushed wholesale.
 const MEMO_MAX_ENTRIES: usize = 8192;
 
+/// Cap on optimized graphs retained by [`ProgramCache::canonical_key`]
+/// probes for the eventual compile (each holds a constant-pool clone, so
+/// the cap is small; flushed wholesale). Probe→compile is nearly
+/// adjacent in the search loop, so a small window captures the reuse.
+const OPT_GRAPH_MAX_ENTRIES: usize = 64;
+
 /// Optimizer-side counters of a [`ProgramCache`] (all zero at `O0`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct OptStats {
@@ -50,12 +56,19 @@ pub struct OptStats {
     /// skip the pipeline and are excluded — that is the point).
     pub insts_in: usize,
     pub insts_out: usize,
-    /// Lookups whose raw graph hash resolved through the memo straight to
-    /// a resident compiled program, skipping the pass pipeline entirely.
+    /// Lookups (compiles *and* [`ProgramCache::canonical_key`] probes)
+    /// whose raw graph hash resolved through the memo, skipping the pass
+    /// pipeline entirely.
     pub memo_hits: usize,
     /// Lookups that ran the pipeline (first sight, or the mapped program
     /// had been flushed).
     pub memo_misses: usize,
+    /// Mutation proposals the search discarded because the candidate's
+    /// canonical key equalled its base graph's — the optimizer pipeline
+    /// provably erases the edit, so evaluating it would be wasted work
+    /// (`SearchConfig::filter_neutral`; counted via
+    /// [`ProgramCache::count_filtered_neutral`]).
+    pub filtered_neutral: usize,
 }
 
 /// Aggregate kernel-fusion outcome across every program a cache compiled
@@ -90,6 +103,10 @@ pub struct ProgramCache {
     map: Mutex<HashMap<u128, Arc<Program>>>,
     /// raw canonical hash → optimized canonical hash.
     memo: Mutex<HashMap<u128, u128>>,
+    /// raw canonical hash → the optimized graph a [`ProgramCache::canonical_key`]
+    /// probe produced, retained so the eventual compile of that same
+    /// genome reuses the pipeline run instead of repeating it.
+    opt_graphs: Mutex<HashMap<u128, Graph>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
     opt_level: OptLevel,
@@ -98,6 +115,7 @@ pub struct ProgramCache {
     opt_insts_out: AtomicUsize,
     memo_hits: AtomicUsize,
     memo_misses: AtomicUsize,
+    filtered_neutral: AtomicUsize,
     fuse_programs: AtomicUsize,
     fuse_regions: AtomicUsize,
     fuse_steps_before: AtomicUsize,
@@ -126,6 +144,7 @@ impl ProgramCache {
         ProgramCache {
             map: Mutex::new(HashMap::new()),
             memo: Mutex::new(HashMap::new()),
+            opt_graphs: Mutex::new(HashMap::new()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             opt_level,
@@ -133,6 +152,7 @@ impl ProgramCache {
             opt_insts_out: AtomicUsize::new(0),
             memo_hits: AtomicUsize::new(0),
             memo_misses: AtomicUsize::new(0),
+            filtered_neutral: AtomicUsize::new(0),
             fuse_programs: AtomicUsize::new(0),
             fuse_regions: AtomicUsize::new(0),
             fuse_steps_before: AtomicUsize::new(0),
@@ -166,10 +186,27 @@ impl ProgramCache {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok(Arc::clone(p));
             }
+            // No resident program under that key. If a `canonical_key`
+            // probe left its optimized graph behind, compile from it —
+            // still a memo hit, the pipeline is not re-run.
+            if let Some(og) = self.opt_graphs.lock().unwrap().remove(&raw_key) {
+                self.memo_hits.fetch_add(1, Ordering::Relaxed);
+                return self.fetch_or_insert(canon, &og);
+            }
             // The mapped program was flushed: fall through and re-run the
             // pipeline (the memo entry stays valid and is re-written).
         }
         self.memo_misses.fetch_add(1, Ordering::Relaxed);
+        let (key, og) = self.run_pipeline_and_memo(raw_key, g, false);
+        self.fetch_or_insert(key, &og)
+    }
+
+    /// Run the pass pipeline on `g`, record the instruction counters, and
+    /// memoize `raw_key → canonical key`. With `retain` the optimized
+    /// graph is also parked in `opt_graphs` so a later compile of the
+    /// same genome skips the pipeline (the [`ProgramCache::canonical_key`]
+    /// probe path). Shared by the compile path and the probe.
+    fn run_pipeline_and_memo(&self, raw_key: u128, g: &Graph, retain: bool) -> (u128, Graph) {
         let (og, _) = crate::opt::optimize(g, self.opt_level);
         self.opt_insts_in.fetch_add(g.len(), Ordering::Relaxed);
         self.opt_insts_out.fetch_add(og.len(), Ordering::Relaxed);
@@ -181,7 +218,43 @@ impl ProgramCache {
             }
             memo.insert(raw_key, key);
         }
-        self.fetch_or_insert(key, &og)
+        if retain {
+            let mut held = self.opt_graphs.lock().unwrap();
+            if held.len() >= OPT_GRAPH_MAX_ENTRIES {
+                held.clear();
+            }
+            held.insert(raw_key, og.clone());
+        }
+        (key, og)
+    }
+
+    /// The canonical cache key of `g` — what [`ProgramCache::get_or_compile`]
+    /// would file it under — *without* lowering anything. At `O0` this is
+    /// the plain canonical hash; above, the raw-hash memo answers repeat
+    /// genomes in one hash, and a first-sighter pays one pipeline run
+    /// whose optimized graph is parked for the eventual compile of the
+    /// same genome (so probe + compile still cost one pipeline run
+    /// total). This is the probe behind the search's opt-aware proposal
+    /// filter (`SearchConfig::filter_neutral`): two graphs share a key
+    /// iff the pipeline canonicalizes them identically, so `key(mutant)
+    /// == key(base)` proves the optimizer erases the edit.
+    pub fn canonical_key(&self, g: &Graph) -> u128 {
+        let raw = crate::ir::canon::graph_hash(g);
+        if self.opt_level == OptLevel::O0 {
+            return raw;
+        }
+        if let Some(k) = self.memo.lock().unwrap().get(&raw).copied() {
+            self.memo_hits.fetch_add(1, Ordering::Relaxed);
+            return k;
+        }
+        self.memo_misses.fetch_add(1, Ordering::Relaxed);
+        self.run_pipeline_and_memo(raw, g, true).0
+    }
+
+    /// Record one proposal discarded by the opt-aware neutral filter
+    /// (reported as [`OptStats::filtered_neutral`]).
+    pub fn count_filtered_neutral(&self) {
+        self.filtered_neutral.fetch_add(1, Ordering::Relaxed);
     }
 
     fn fetch_or_insert(&self, key: u128, target: &Graph) -> Result<Arc<Program>, IrError> {
@@ -224,6 +297,7 @@ impl ProgramCache {
             insts_out: self.opt_insts_out.load(Ordering::Relaxed),
             memo_hits: self.memo_hits.load(Ordering::Relaxed),
             memo_misses: self.memo_misses.load(Ordering::Relaxed),
+            filtered_neutral: self.filtered_neutral.load(Ordering::Relaxed),
         }
     }
 
@@ -398,6 +472,47 @@ mod tests {
         let _ = c.get_or_compile(&other).unwrap();
         let s = c.opt_stats();
         assert_eq!((s.memo_hits, s.memo_misses), (1, 2));
+    }
+
+    #[test]
+    fn canonical_key_matches_the_compile_key_and_shares_the_memo() {
+        let g = g1();
+        let mut twin = g.clone();
+        let x = twin.insts()[0].id;
+        twin.push(OpKind::Tanh, &[x]).unwrap(); // unused -> dead at O1+
+        for level in [OptLevel::O0, OptLevel::O2] {
+            let c = ProgramCache::with_opt(level);
+            let kg = c.canonical_key(&g);
+            let kt = c.canonical_key(&twin);
+            if level == OptLevel::O0 {
+                assert_ne!(kg, kt, "O0 must not erase the dead op");
+            } else {
+                assert_eq!(kg, kt, "the dead-op twin must canonicalize onto g");
+            }
+            // no programs were compiled by key probes alone
+            assert_eq!(c.stats(), (0, 0));
+            assert_eq!(c.len(), 0);
+        }
+        // probe then compile: the probe's pipeline run is the ONLY one —
+        // the compile picks up the parked optimized graph (memo hit),
+        // and further probes/compiles answer from the memo/map.
+        let c = ProgramCache::with_opt(OptLevel::O2);
+        let k = c.canonical_key(&g);
+        let probe = c.opt_stats();
+        assert_eq!((probe.memo_hits, probe.memo_misses), (0, 1));
+        let _ = c.get_or_compile(&g).unwrap(); // compiles from the parked graph
+        let mid = c.opt_stats();
+        assert_eq!((mid.memo_hits, mid.memo_misses), (1, 1));
+        assert_eq!(mid.insts_in, probe.insts_in, "compile must reuse the probe's pipeline run");
+        assert_eq!(c.canonical_key(&g), k, "probe and compile must agree on the key");
+        let _ = c.get_or_compile(&g).unwrap();
+        let after = c.opt_stats();
+        assert_eq!((after.memo_hits, after.memo_misses), (3, 1));
+        assert_eq!(after.insts_in, probe.insts_in, "memo hits must skip the pipeline");
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.opt_stats().filtered_neutral, 0);
+        c.count_filtered_neutral();
+        assert_eq!(c.opt_stats().filtered_neutral, 1);
     }
 
     #[test]

@@ -147,6 +147,10 @@ impl Evaluator for TrainingWorkload {
     fn fusion_stats(&self) -> Option<crate::exec::cache::FusionTotals> {
         self.programs.fusion_stats()
     }
+
+    fn program_cache(&self) -> Option<&ProgramCache> {
+        Some(&self.programs)
+    }
 }
 
 #[cfg(test)]

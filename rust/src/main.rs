@@ -46,7 +46,9 @@ USAGE: gevo-ml <subcommand> [flags]
            [--metric flops|wall|blend] [--fit N] [--test N] [--epochs N]
            [--workers N] [--islands K] [--migration-interval M]
            [--migrants N] [--checkpoint FILE] [--checkpoint-every N]
-           [--opt-level 0|1|2|3] [--out PREFIX] [--quiet]
+           [--opt-level 0|1|2|3] [--operators LIST] [--adapt]
+           [--filter-neutral] [--reseed-minimized] [--list-operators]
+           [--out PREFIX] [--quiet]
            --islands shards the population into K ring-connected
            subpopulations; --checkpoint saves resumable state every
            --checkpoint-every generations (an existing file is resumed,
@@ -55,7 +57,18 @@ USAGE: gevo-ml <subcommand> [flags]
            lowering (0 = off, reproduces historical behavior exactly;
            default 2; 3 = level 2 plus kernel fusion — elementwise
            chains, dot+bias folds and broadcast sinking lower to
-           single-loop fused steps, still bit-identical)
+           single-loop fused steps, still bit-identical).
+           Operator API: --operators picks the enabled mutation-operator
+           set (comma list; default copy,delete — the paper's pair,
+           bit-identical to historical runs; see --list-operators);
+           --adapt turns on per-island adaptive operator weights (credit
+           assignment by non-neutral-evaluation rate and Pareto-archive
+           insertions, checkpointed for bit-identical resume);
+           --filter-neutral discards proposals the optimizer pipeline
+           provably erases (needs --opt-level 1+; counted in opt_stats);
+           --reseed-minimized makes island migration/reseeds carry
+           delta-debugged elites and feeds their attribution back into
+           the operators; --list-operators prints the registry and exits
   minimize same flags as search; after the search (or checkpoint resume)
            delta-debugs every Pareto-front edit list down to the edits
            that matter and prints the per-edit attribution table; never
@@ -65,6 +78,22 @@ USAGE: gevo-ml <subcommand> [flags]
   show     --workload 2fcnet|mobilenet [--hlo]   print IR or emitted HLO
   validate [--mutants N]   interpreter vs XLA-PJRT cross-check"
     );
+}
+
+/// Resolve `--operators` (comma list, aliases allowed) to canonical
+/// names, exiting with the known-operator list on a bad name instead of
+/// silently falling back to the default set.
+fn operator_names(args: &Args) -> Vec<String> {
+    match args.get("operators") {
+        None => gevo_ml::evo::operators::default_names(),
+        Some(list) => match gevo_ml::evo::operators::parse_cli_list(list) {
+            Ok(canon) => canon,
+            Err(e) => {
+                eprintln!("error: --operators: {e}");
+                std::process::exit(2);
+            }
+        },
+    }
 }
 
 fn search_config(args: &Args) -> SearchConfig {
@@ -88,8 +117,35 @@ fn search_config(args: &Args) -> SearchConfig {
         checkpoint_every: args.usize_or("checkpoint-every", 1),
         opt_level: OptLevel::parse(&args.get_or("opt-level", "2"))
             .unwrap_or_else(|| panic!("--opt-level must be 0, 1, 2 or 3")),
+        operators: operator_names(args),
+        adapt: args.flag("adapt"),
+        filter_neutral: args.flag("filter-neutral"),
+        reseed_minimized: args.flag("reseed-minimized"),
         verbose: !args.flag("quiet"),
     }
+}
+
+/// `gevo-ml search --list-operators`: the registered operator set, which
+/// entries the current flags enable, and their (initial) weights.
+fn list_operators(args: &Args) {
+    let enabled = operator_names(args);
+    println!("registered mutation operators ('*' = enabled; initial weight 1.000, uniform):");
+    for (name, aliases, desc) in gevo_ml::evo::operators::registry() {
+        let mark = if enabled.iter().any(|e| e == name) { '*' } else { ' ' };
+        let weight =
+            if enabled.iter().any(|e| e == name) { "1.000" } else { "    -" };
+        let alias = if aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (alias {})", aliases.join(", "))
+        };
+        println!(" {mark} {name:<10} weight {weight}  {desc}{alias}");
+    }
+    println!("   crossover  rate --crossover (messy one-point; joins the per-operator stats)");
+    println!(
+        "enabled set: {} — static uniform weights unless --adapt updates them per island",
+        enabled.join(",")
+    );
 }
 
 fn experiment_config(args: &Args, minimize_front: bool) -> ExperimentConfig {
@@ -114,24 +170,32 @@ fn write_out(args: &Args, r: &coordinator::ExperimentResult) {
     if let Some(prefix) = args.get("out") {
         std::fs::write(format!("{prefix}.json"), report::to_json(r).to_pretty()).unwrap();
         std::fs::write(format!("{prefix}.csv"), report::front_csv(r)).unwrap();
-        eprintln!("[gevo-ml] wrote {prefix}.json / {prefix}.csv");
+        std::fs::write(format!("{prefix}_ops.csv"), report::operators_csv(r)).unwrap();
+        eprintln!("[gevo-ml] wrote {prefix}.json / {prefix}.csv / {prefix}_ops.csv");
     }
 }
 
 fn cmd_search(args: &Args) {
+    if args.flag("list-operators") {
+        list_operators(args);
+        return;
+    }
     let cfg = experiment_config(args, false);
     eprintln!(
-        "[gevo-ml] running {:?} search: pop={} gens={} seed={} islands={} opt-level={}",
+        "[gevo-ml] running {:?} search: pop={} gens={} seed={} islands={} opt-level={} operators={}{}",
         cfg.kind,
         cfg.search.pop_size,
         cfg.search.generations,
         cfg.search.seed,
         cfg.search.islands,
-        cfg.search.opt_level
+        cfg.search.opt_level,
+        cfg.search.operators.join(","),
+        if cfg.search.adapt { " (adaptive)" } else { "" }
     );
     let r = coordinator::run_experiment(&cfg);
     println!("{}", report::ascii_scatter(&r, 64, 16));
     println!("{}", report::front_markdown(&r));
+    println!("{}", report::operator_markdown(&r));
     println!(
         "evaluations: {}   cache hits: {}   wall: {:.1}s",
         r.search.total_evaluations, r.search.cache_hits, r.wall_seconds
@@ -141,6 +205,12 @@ fn cmd_search(args: &Args) {
     }
     if let Some((hits, misses)) = r.search.program_cache {
         println!("program cache: {hits} hits / {misses} lowerings");
+    }
+    if let Some(o) = r.search.program_opt {
+        println!(
+            "opt: memo {} hits / {} pipeline runs, {} proposals filtered as neutral",
+            o.memo_hits, o.memo_misses, o.filtered_neutral
+        );
     }
     if let Some(f) = r.search.program_fusion {
         println!("{}", report::fusion_summary(&f));
