@@ -1,15 +1,49 @@
 //! §Perf L3: evolutionary-machinery micro-benchmarks — mutation+repair
-//! throughput, crossover, NSGA-II sorting, and a full evaluated
-//! generation (the end-to-end unit of search cost).
+//! throughput, crossover, NSGA-II sorting, a full evaluated generation
+//! (the end-to-end unit of search cost), and the threaded island
+//! runtime's generations/sec scaling at 1 vs N island threads (summary
+//! committed as `BENCH_evo.json`).
 
 use gevo_ml::evo::crossover::messy_one_point;
+use gevo_ml::evo::island::run_with_checkpoint;
 use gevo_ml::evo::mutate::valid_random_edit;
 use gevo_ml::evo::nsga2;
 use gevo_ml::evo::patch::Individual;
-use gevo_ml::evo::search::{self, SearchConfig};
+use gevo_ml::evo::search::{self, Evaluator, SearchConfig};
+use gevo_ml::ir::op::{OpKind, ReduceKind};
+use gevo_ml::ir::types::TType;
+use gevo_ml::ir::Graph;
 use gevo_ml::models::twofc;
 use gevo_ml::util::bench::{black_box, Bench};
+use gevo_ml::util::json::Json;
 use gevo_ml::util::rng::Rng;
+
+/// An interpreter-backed workload heavy enough that island stepping (not
+/// bench overhead) dominates: elementwise chains + reduce over 128×128.
+fn island_workload() -> (Graph, impl Evaluator) {
+    let mut g = Graph::new("bench");
+    let x = g.param(TType::of(&[128, 128]));
+    let e = g.push(OpKind::Exponential, &[x]).unwrap();
+    let t = g.push(OpKind::Tanh, &[e]).unwrap();
+    let m = g.push(OpKind::Multiply, &[t, x]).unwrap();
+    let a = g.push(OpKind::Add, &[m, e]).unwrap();
+    let r = g
+        .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[a])
+        .unwrap();
+    g.set_outputs(&[r]);
+    let base_flops = g.total_flops() as f64;
+    let input = gevo_ml::tensor::Tensor::iota(&[128, 128]);
+    let baseline = gevo_ml::interp::eval(&g, &[input.clone()]).unwrap()[0].item() as f64;
+    let eval = move |vg: &Graph| -> Option<(f64, f64)> {
+        let out = gevo_ml::interp::eval(vg, &[input.clone()]).ok()?;
+        if out[0].has_non_finite() {
+            return None;
+        }
+        let err = (out[0].item() as f64 - baseline).abs() / baseline.abs().max(1e-9);
+        Some((vg.total_flops() as f64 / base_flops, err))
+    };
+    (g, eval)
+}
 
 fn main() {
     let mut b = Bench::new("perf_evo");
@@ -75,5 +109,62 @@ fn main() {
     b.case("one full generation (pop=16, flops-only eval)", || {
         black_box(search::run(&base, &eval, &cfg));
     });
+
+    // --- threaded island runtime: generations/sec at 1 vs N threads -----------
+    // The search is bit-identical at every `island_threads`, so the only
+    // thing this section measures is wall clock. `workers: 1` keeps the
+    // within-island evaluation serial — island threads are the sole
+    // source of parallelism — and the per-thread summary is committed as
+    // BENCH_evo.json so the perf trajectory has an artifact in CI.
+    let (ig, ieval) = island_workload();
+    let island_cfg = SearchConfig {
+        pop_size: 8,
+        generations: 6,
+        elites: 4,
+        workers: 1,
+        seed: 17,
+        islands: 4,
+        migration_interval: 2,
+        migrants: 1,
+        verbose: false,
+        ..Default::default()
+    };
+    let gens_total = (island_cfg.generations * island_cfg.islands) as f64;
+    let mut rows: Vec<Json> = Vec::new();
+    let mut p50_at_one = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let cfg = SearchConfig { island_threads: threads, ..island_cfg.clone() };
+        let p50 = b.case_with_work(
+            &format!("island search (K=4, gens=6, island_threads={threads})"),
+            Some(gens_total),
+            || {
+                black_box(run_with_checkpoint(&ig, &ieval, &cfg, None));
+            },
+        );
+        if threads == 1 {
+            p50_at_one = p50;
+        }
+        let speedup = if p50 > 0.0 { p50_at_one / p50 } else { 0.0 };
+        b.note(&format!(
+            "island_threads={threads}: {:.1} gens/s, speedup {speedup:.2}x vs sequential",
+            gens_total / p50.max(1e-12)
+        ));
+        rows.push(Json::obj(vec![
+            ("island_threads", Json::num(threads as f64)),
+            ("islands", Json::num(island_cfg.islands as f64)),
+            ("generations", Json::num(island_cfg.generations as f64)),
+            ("seconds_p50", Json::num(p50)),
+            ("gens_per_sec", Json::num(gens_total / p50.max(1e-12))),
+            ("speedup_vs_sequential", Json::num(speedup)),
+        ]));
+    }
+    let summary = Json::obj(vec![
+        ("suite", Json::str("perf_evo")),
+        ("section", Json::str("threaded-island-runtime")),
+        ("island_scaling", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_evo.json", summary.to_pretty())
+        .expect("write BENCH_evo.json");
+    b.note("wrote BENCH_evo.json");
     b.finish();
 }

@@ -4,9 +4,12 @@
 //! runtime, via the gradient-scale mutation of §6.2/Fig. 5.
 //!
 //! Run: `cargo run --release --example evolve_2fcnet -- [--pop 32] [--gens 12] [--seed 42]
-//!       [--islands 4] [--migration-interval 4] [--checkpoint ck.json] [--opt-level 0|1|2|3]
-//!       [--operators copy,delete,swap,replace,perturb] [--adapt] [--filter-neutral]
-//!       [--reseed-minimized]`
+//!       [--islands 4] [--island-threads 4] [--migration-interval 4] [--checkpoint ck.json]
+//!       [--opt-level 0|1|2|3] [--operators copy,delete,swap,replace,perturb] [--adapt]
+//!       [--filter-neutral] [--reseed-minimized]`
+//!
+//! `--island-threads` steps islands on parallel OS threads between
+//! migration barriers — bit-identical results, faster wall clock.
 
 use gevo_ml::coordinator::{self, report, ExperimentConfig, WorkloadKind};
 use gevo_ml::evo::search::SearchConfig;
@@ -26,6 +29,7 @@ fn main() {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             ),
             islands: args.usize_or("islands", 1),
+            island_threads: args.usize_or("island-threads", 1),
             migration_interval: args.usize_or("migration-interval", 4),
             migrants: args.usize_or("migrants", 2),
             opt_level: gevo_ml::opt::OptLevel::parse(&args.get_or("opt-level", "2"))

@@ -121,8 +121,20 @@ pub struct ExperimentResult {
     pub wall_seconds: f64,
 }
 
-/// Run a full experiment (the paper's §5 protocol, scaled).
+/// Run a full experiment (the paper's §5 protocol, scaled). Panicking
+/// wrapper over [`try_run_experiment`]; checkpoint I/O failures become
+/// panics carrying the [`CheckpointError`] text.
 pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
+    try_run_experiment(cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`run_experiment`] with checkpoint I/O failures (unreadable/corrupt
+/// checkpoint file, durable-write failure after retry) returned as
+/// [`CheckpointError`] so CLI callers can exit cleanly instead of
+/// unwinding.
+pub fn try_run_experiment(
+    cfg: &ExperimentConfig,
+) -> Result<ExperimentResult, crate::evo::island::CheckpointError> {
     let t0 = std::time::Instant::now();
     match cfg.kind {
         WorkloadKind::MobilenetPrediction => {
@@ -144,14 +156,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.metric,
                 cfg.search.opt_level,
             );
-            let res = crate::evo::island::run_with_checkpoint(
+            let res = crate::evo::island::try_run_with_checkpoint(
                 &baseline,
                 &wl,
                 &cfg.search,
                 cfg.checkpoint.as_deref(),
-            );
+            )?;
             use crate::evo::search::Evaluator;
-            finish(
+            Ok(finish(
                 t0,
                 &baseline,
                 res,
@@ -159,7 +171,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.search.workers,
                 |g| wl.evaluate(g),
                 |g| wl.post_hoc(g),
-            )
+            ))
         }
         WorkloadKind::TwoFcTraining => {
             let spec = twofc::TwoFcSpec::default();
@@ -180,14 +192,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.metric,
                 cfg.search.opt_level,
             );
-            let res = crate::evo::island::run_with_checkpoint(
+            let res = crate::evo::island::try_run_with_checkpoint(
                 &baseline,
                 &wl,
                 &cfg.search,
                 cfg.checkpoint.as_deref(),
-            );
+            )?;
             use crate::evo::search::Evaluator;
-            finish(
+            Ok(finish(
                 t0,
                 &baseline,
                 res,
@@ -195,7 +207,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
                 cfg.search.workers,
                 |g| wl.evaluate(g),
                 |g| wl.post_hoc(g),
-            )
+            ))
         }
     }
 }
@@ -299,12 +311,17 @@ fn parallel_minimize(
                 if w >= inds.len() {
                     break;
                 }
-                *results[w].lock().unwrap() =
+                // Poison-tolerant: a panicking sibling minimizer must not
+                // cascade (the slot value is whole-or-absent either way).
+                *results[w].lock().unwrap_or_else(|p| p.into_inner()) =
                     crate::opt::minimize::minimize(baseline, inds[w], eval_fit);
             });
         }
     });
-    results.into_iter().map(|m| m.into_inner().unwrap()).collect()
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
+        .collect()
 }
 
 /// MobileNet weights: prefer the pretrained artifact, fall back to seeded

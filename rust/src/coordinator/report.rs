@@ -260,6 +260,7 @@ pub fn to_json(r: &ExperimentResult) -> Json {
                     ("memo_hits", Json::num(o.memo_hits as f64)),
                     ("memo_misses", Json::num(o.memo_misses as f64)),
                     ("filtered_neutral", Json::num(o.filtered_neutral as f64)),
+                    ("lock_contended", Json::num(o.lock_contended as f64)),
                 ])
             }),
         ),
@@ -416,6 +417,7 @@ mod tests {
                     memo_hits: 50,
                     memo_misses: 20,
                     filtered_neutral: 12,
+                    lock_contended: 3,
                 }),
                 operators: vec![
                     crate::evo::operators::OperatorStats {
@@ -524,6 +526,7 @@ mod tests {
         let o = j.get("opt_stats").unwrap();
         assert_eq!(o.get("filtered_neutral").unwrap().as_usize().unwrap(), 12);
         assert_eq!(o.get("memo_hits").unwrap().as_usize().unwrap(), 50);
+        assert_eq!(o.get("lock_contended").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

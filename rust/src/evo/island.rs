@@ -8,13 +8,34 @@
 //! degenerates to the classic single-population search, bit-identically:
 //! island 0 keeps the user seed and migration is skipped.
 //!
+//! With `SearchConfig::island_threads > 1` the islands actually run in
+//! parallel: the driver splits the run into *segments* — the stretches of
+//! generations between migration events and checkpoint dues — steps every
+//! island through the segment on its own scoped OS thread, and joins at
+//! the segment boundary (the **migration barrier**) before migrating,
+//! splicing history and snapshotting. Between barriers the islands share
+//! no mutable search state (each [`Engine`] owns its RNG stream, fitness
+//! cache, archive and counters; the only shared structure is the
+//! workload's [`crate::exec::cache::ProgramCache`], whose contents are
+//! keyed by canonical graph hash and therefore scheduling-independent),
+//! so the threaded schedule is **bit-for-bit identical** to the
+//! sequential one — pinned by differential tests here and in
+//! `rust/tests/threaded_islands.rs`. Only the program cache's
+//! hit/miss/contention *performance counters* may differ across
+//! schedules (racing compiles of the same key are possible and harmless:
+//! first insert wins).
+//!
 //! Long searches are restartable: [`run_with_checkpoint`] serializes the
 //! full search state (per-island populations as edit lists, RNG states,
 //! archives, fitness caches, generation counters) through [`crate::util::json`]
 //! after every generation, and a killed run resumed from that file
 //! produces the same result as an uninterrupted one. All `u64` words and
 //! `f64` objectives are stored as hex bit patterns so the round trip is
-//! exact.
+//! exact. The JSON tree is snapshotted at the barrier but rendered and
+//! written by a dedicated writer thread ([`CheckpointWriter`]) so
+//! serialization stays off the generation path; writes are durable
+//! (unique temp file + fsync + rename + parent-directory fsync), retried
+//! once, and surfaced as [`CheckpointError`] instead of panics.
 
 use super::nsga2::{pareto_front, rank_and_crowd, select_best, Objectives};
 use super::operators::{
@@ -27,7 +48,10 @@ use crate::ir::Graph;
 use crate::util::json::{Json, JsonError};
 use crate::util::rng::Rng;
 use std::collections::{BTreeMap, HashSet};
-use std::path::Path;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
 
 /// In-flight search state: what a checkpoint captures.
 pub(crate) struct RunState {
@@ -39,6 +63,20 @@ pub(crate) struct RunState {
     pub(crate) migrations: usize,
 }
 
+/// A checkpoint I/O failure: reading, parsing or validating an existing
+/// checkpoint, or durably writing a new one (after one retry). The
+/// message names the path and the underlying OS error.
+#[derive(Debug)]
+pub struct CheckpointError(String);
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
 /// Run the (possibly multi-island) search, checkpointing after every
 /// generation when `checkpoint` is given. If the file already exists the
 /// run resumes from it — `cfg.generations` is the *target*, so resuming
@@ -46,12 +84,28 @@ pub(crate) struct RunState {
 /// written by a run with the same stochastic configuration (seed,
 /// population shape, operator probabilities); anything else panics with a
 /// description of the mismatch.
+///
+/// Panicking wrapper over [`try_run_with_checkpoint`] for callers without
+/// a recovery path; the panic message is the [`CheckpointError`] text.
 pub fn run_with_checkpoint(
     original: &Graph,
     eval: &dyn Evaluator,
     cfg: &SearchConfig,
     checkpoint: Option<&Path>,
 ) -> SearchResult {
+    try_run_with_checkpoint(original, eval, cfg, checkpoint).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`run_with_checkpoint`] with checkpoint I/O failures returned as
+/// [`CheckpointError`] instead of panics. Configuration errors (unknown
+/// operator names, an opt-level disagreeing with the workload's cache)
+/// are still caller bugs and still panic.
+pub fn try_run_with_checkpoint(
+    original: &Graph,
+    eval: &dyn Evaluator,
+    cfg: &SearchConfig,
+    checkpoint: Option<&Path>,
+) -> Result<SearchResult, CheckpointError> {
     let k = cfg.islands.max(1);
     // The operator registry for this run. Resolution failures are caller
     // bugs (the CLI validates names before building a config).
@@ -90,49 +144,32 @@ pub fn run_with_checkpoint(
     // workload graph would silently reinterpret cached objectives, so the
     // canonical graph hash is echoed into the checkpoint and verified.
     let ghash = crate::ir::canon::graph_hash(original);
+    let mut writer = match checkpoint {
+        Some(p) => Some(CheckpointWriter::spawn(p)?),
+        None => None,
+    };
     let mut st = match checkpoint {
         Some(p) if p.exists() => {
             let text = std::fs::read_to_string(p)
-                .unwrap_or_else(|e| panic!("read checkpoint {}: {e}", p.display()));
+                .map_err(|e| CheckpointError(format!("read checkpoint {}: {e}", p.display())))?;
             let j = Json::parse(&text)
-                .unwrap_or_else(|e| panic!("parse checkpoint {}: {e}", p.display()));
+                .map_err(|e| CheckpointError(format!("parse checkpoint {}: {e}", p.display())))?;
             restore_checkpoint(&j, cfg, ghash)
-                .unwrap_or_else(|e| panic!("checkpoint {}: {e}", p.display()))
+                .map_err(|e| CheckpointError(format!("checkpoint {}: {e}", p.display())))?
         }
         _ => {
             let engines = (0..k).map(|i| Engine::new(i, original, eval, cfg, &ops)).collect();
             let st = RunState { engines, history: Vec::new(), completed: 0, migrations: 0 };
-            if let Some(p) = checkpoint {
-                save_checkpoint(p, cfg, ghash, &st);
+            if let Some(w) = writer.as_mut() {
+                w.submit(checkpoint_json(cfg, ghash, &st))?;
             }
             st
         }
     };
 
-    let every = cfg.checkpoint_every.max(1);
-    while st.completed < cfg.generations {
-        let gen = st.completed;
-        for e in st.engines.iter_mut() {
-            let s = e.step(original, eval, cfg, gen, &ops);
-            if cfg.verbose {
-                eprintln!(
-                    "[isl {} gen {:>3}] evals=+{:<5} front={:<3} best_time={:.4} best_err={:.4}",
-                    s.island, s.gen, s.evaluated, s.front_size, s.best_time, s.best_error
-                );
-            }
-            st.history.push(s);
-        }
-        if k > 1 && cfg.migration_interval > 0 && (gen + 1) % cfg.migration_interval == 0 {
-            let minimize_with =
-                if cfg.reseed_minimized { Some((original, eval)) } else { None };
-            st.migrations += migrate(&mut st.engines, cfg.migrants, minimize_with);
-        }
-        st.completed += 1;
-        if let Some(p) = checkpoint {
-            if st.completed % every == 0 || st.completed >= cfg.generations {
-                save_checkpoint(p, cfg, ghash, &st);
-            }
-        }
+    drive(&mut st, original, eval, cfg, &ops, ghash, writer.as_mut())?;
+    if let Some(mut w) = writer {
+        w.drain()?;
     }
 
     // ---- merge the island archives into the global Pareto front ----------
@@ -156,7 +193,7 @@ pub fn run_with_checkpoint(
             .then(a.0.cache_key().cmp(&b.0.cache_key()))
     });
 
-    SearchResult {
+    Ok(SearchResult {
         pareto_islands: front.iter().map(|&(_, _, i)| i).collect(),
         pareto: front.into_iter().map(|(ind, o, _)| (ind, o)).collect(),
         history: st.history,
@@ -168,7 +205,133 @@ pub fn run_with_checkpoint(
         program_fusion: eval.fusion_stats(),
         program_opt: eval.program_cache().map(|c| c.opt_stats()),
         operators: operator_rows(&ops, &st.engines),
+    })
+}
+
+/// The generation driver: advance `st` to `cfg.generations`, migrating
+/// and checkpointing on schedule. The run is split into *segments* — the
+/// stretches between consecutive sync points (migration events, and
+/// checkpoint dues when a writer is attached) — and each segment is
+/// stepped by [`step_block`], sequentially or on island threads. The
+/// segment boundary is the migration barrier: migration, history
+/// splicing and the checkpoint snapshot all happen there, on the driver
+/// thread, so the schedule of events is identical to the historical
+/// one-generation-at-a-time loop.
+fn drive(
+    st: &mut RunState,
+    original: &Graph,
+    eval: &dyn Evaluator,
+    cfg: &SearchConfig,
+    ops: &OperatorSet,
+    ghash: u128,
+    mut writer: Option<&mut CheckpointWriter>,
+) -> Result<(), CheckpointError> {
+    let k = st.engines.len();
+    let every = cfg.checkpoint_every.max(1);
+    let mi = cfg.migration_interval;
+    while st.completed < cfg.generations {
+        let start = st.completed;
+        // Next sync point: the earliest of the next migration event, the
+        // next checkpoint due, and the end of the run. Between `start`
+        // and `end` the islands are fully independent.
+        let mut end = cfg.generations;
+        if k > 1 && mi > 0 {
+            end = end.min((start / mi + 1) * mi);
+        }
+        if writer.is_some() {
+            end = end.min((start / every + 1) * every);
+        }
+        let stats = step_block(&mut st.engines, original, eval, cfg, start..end, ops);
+        st.history.extend(stats);
+        // ---- migration barrier ------------------------------------------
+        if k > 1 && mi > 0 && end % mi == 0 {
+            let minimize_with =
+                if cfg.reseed_minimized { Some((original, eval)) } else { None };
+            st.migrations += migrate(&mut st.engines, cfg.migrants, minimize_with);
+        }
+        st.completed = end;
+        if let Some(w) = writer.as_mut() {
+            if st.completed % every == 0 || st.completed >= cfg.generations {
+                // The snapshot (the JSON tree) is built here, at the
+                // barrier; rendering and the durable write happen on the
+                // writer thread.
+                w.submit(checkpoint_json(cfg, ghash, st))?;
+            }
+        }
     }
+    Ok(())
+}
+
+/// Step every engine through `gens`. With `cfg.island_threads <= 1` this
+/// is the historical nested loop (generation-major, island-minor). Above
+/// 1 the engines are split into up to `island_threads` contiguous chunks,
+/// each stepped to the end of the segment on its own scoped thread; the
+/// per-island stat rows are then spliced back into the exact sequential
+/// order. Engines share no mutable state, so the interleaving cannot
+/// affect any island's trajectory — only the order work happens in.
+fn step_block(
+    engines: &mut [Engine],
+    original: &Graph,
+    eval: &dyn Evaluator,
+    cfg: &SearchConfig,
+    gens: std::ops::Range<usize>,
+    ops: &OperatorSet,
+) -> Vec<GenStats> {
+    let k = engines.len();
+    let verbose = |s: &GenStats| {
+        if cfg.verbose {
+            eprintln!(
+                "[isl {} gen {:>3}] evals=+{:<5} front={:<3} best_time={:.4} best_err={:.4}",
+                s.island, s.gen, s.evaluated, s.front_size, s.best_time, s.best_error
+            );
+        }
+    };
+    let mut out = Vec::with_capacity(gens.len() * k);
+    if cfg.island_threads <= 1 || k <= 1 {
+        for gen in gens {
+            for e in engines.iter_mut() {
+                let s = e.step(original, eval, cfg, gen, ops);
+                verbose(&s);
+                out.push(s);
+            }
+        }
+        return out;
+    }
+    let threads = cfg.island_threads.min(k);
+    let chunk = k.div_ceil(threads);
+    // One stats vector per island, in island order (chunks are contiguous).
+    let per_island: Vec<Vec<GenStats>> = std::thread::scope(|s| {
+        let handles: Vec<_> = engines
+            .chunks_mut(chunk)
+            .map(|chunk_engines| {
+                let gens = gens.clone();
+                s.spawn(move || {
+                    chunk_engines
+                        .iter_mut()
+                        .map(|e| {
+                            gens.clone()
+                                .map(|gen| e.step(original, eval, cfg, gen, ops))
+                                .collect::<Vec<GenStats>>()
+                        })
+                        .collect::<Vec<Vec<GenStats>>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
+    });
+    // Splice back into the sequential order: generation-major,
+    // island-minor — bit-identical history to the single-threaded loop.
+    for (gi, _) in gens.enumerate() {
+        for rows in &per_island {
+            let s = rows[gi].clone();
+            verbose(&s);
+            out.push(s);
+        }
+    }
+    out
 }
 
 /// Per-operator report rows: counts summed across islands, final weight
@@ -615,8 +778,10 @@ fn parse_engine(j: &Json, n_ops: usize) -> Result<Engine, String> {
 /// The fields of [`SearchConfig`] that drive the stochastic process; a
 /// resume is only bit-identical when every one of them matches, so they
 /// are echoed into the checkpoint and verified on load. `generations` is
-/// deliberately absent (resume may extend the run), as are `workers`
-/// (scheduling only) and `verbose`.
+/// deliberately absent (resume may extend the run), as are `workers`,
+/// `island_threads` and `checkpoint_every` (scheduling only — any value
+/// yields the same bits, so a resume may change them freely) and
+/// `verbose`.
 fn config_json(cfg: &SearchConfig) -> Json {
     Json::obj(vec![
         ("seed", hex_u64(cfg.seed)),
@@ -746,17 +911,143 @@ pub(crate) fn restore_checkpoint(
     })
 }
 
-/// Write the checkpoint atomically (temp file + rename) so a kill during
-/// the write can never corrupt the previous checkpoint. Compact JSON: the
-/// file scales with the archive + fitness cache, so pretty-printing long
-/// runs would multiply an already-large write.
-fn save_checkpoint(path: &Path, cfg: &SearchConfig, graph_hash: u128, st: &RunState) {
-    let j = checkpoint_json(cfg, graph_hash, st);
-    let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, j.to_string())
-        .unwrap_or_else(|e| panic!("write checkpoint {}: {e}", tmp.display()));
-    std::fs::rename(&tmp, path)
-        .unwrap_or_else(|e| panic!("install checkpoint {}: {e}", path.display()));
+// ---------------------------------------------------------------------------
+// Async checkpoint writer + durable file installation
+// ---------------------------------------------------------------------------
+
+/// Dedicated checkpoint-writer thread. The driver snapshots the run state
+/// into a [`Json`] tree at the barrier (cheap — no I/O, no rendering) and
+/// hands it over a bounded channel; this thread renders and durably
+/// installs it off the generation path. The channel holds at most one
+/// pending snapshot, so at most one write is in flight plus one queued;
+/// if the writer falls behind, the driver blocks at the *next* barrier
+/// rather than dropping a snapshot. Write failures are retried once, then
+/// the thread exits with the error, which surfaces at the next
+/// [`CheckpointWriter::submit`] or at [`CheckpointWriter::drain`].
+struct CheckpointWriter {
+    tx: Option<mpsc::SyncSender<Json>>,
+    handle: Option<std::thread::JoinHandle<Result<(), CheckpointError>>>,
+}
+
+impl CheckpointWriter {
+    fn spawn(path: &Path) -> Result<CheckpointWriter, CheckpointError> {
+        let path: PathBuf = path.to_path_buf();
+        let (tx, rx) = mpsc::sync_channel::<Json>(1);
+        let handle = std::thread::Builder::new()
+            .name("gevo-checkpoint-writer".into())
+            .spawn(move || -> Result<(), CheckpointError> {
+                while let Ok(j) = rx.recv() {
+                    // Compact JSON: the file scales with the archive +
+                    // fitness cache, so pretty-printing long runs would
+                    // multiply an already-large write.
+                    let text = j.to_string();
+                    if let Err(first) = write_durable(&path, text.as_bytes()) {
+                        write_durable(&path, text.as_bytes()).map_err(|e| {
+                            CheckpointError(format!(
+                                "write checkpoint {}: {e} (first attempt: {first})",
+                                path.display()
+                            ))
+                        })?;
+                    }
+                }
+                Ok(())
+            })
+            .map_err(|e| CheckpointError(format!("spawn checkpoint writer: {e}")))?;
+        Ok(CheckpointWriter { tx: Some(tx), handle: Some(handle) })
+    }
+
+    /// Queue a snapshot for writing. Blocks only when a write is already
+    /// in flight *and* one snapshot is queued behind it. If the writer
+    /// thread has died, report why.
+    fn submit(&mut self, j: Json) -> Result<(), CheckpointError> {
+        let alive = match self.tx.as_ref() {
+            Some(tx) => tx.send(j).is_ok(),
+            None => false,
+        };
+        if alive {
+            return Ok(());
+        }
+        // The receiver is gone: the writer exited. Join it for the cause.
+        self.drain()?;
+        Err(CheckpointError("checkpoint writer exited unexpectedly".into()))
+    }
+
+    /// Close the channel and wait for every queued snapshot to reach disk.
+    /// Idempotent; returns the writer's terminal error, if any.
+    fn drain(&mut self) -> Result<(), CheckpointError> {
+        self.tx = None; // close the channel so the writer loop ends
+        match self.handle.take() {
+            Some(h) => h
+                .join()
+                .unwrap_or_else(|_| Err(CheckpointError("checkpoint writer panicked".into()))),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        // Best effort on abnormal exits (panic unwinds, early returns):
+        // make sure queued snapshots still land before the process moves
+        // on. Errors here were either already reported or unreportable.
+        let _ = self.drain();
+    }
+}
+
+/// Monotonic discriminator for temp-file names, so two checkpoints in the
+/// same process (e.g. `front.json` + `front.csv`, which share a stem) can
+/// never collide on one `.tmp` path.
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A temp path unique across processes (pid) and within this process
+/// (counter), appended to the *full* filename — `front.json` and
+/// `front.csv` must map to different temp files.
+fn unique_tmp_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "checkpoint".to_string());
+    let n = TMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    path.with_file_name(format!("{name}.tmp.{}.{n}", std::process::id()))
+}
+
+/// Install `contents` at `path` durably: write a unique temp file, fsync
+/// it, rename it into place, then fsync the parent directory so the
+/// rename itself survives a crash. A kill at any point leaves either the
+/// old checkpoint or the new one — never a torn file — and the temp file
+/// is removed on error.
+pub(crate) fn write_durable(path: &Path, contents: &[u8]) -> io::Result<()> {
+    let tmp = unique_tmp_path(path);
+    let res = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        std::io::Write::write_all(&mut f, contents)?;
+        // Data must be on disk *before* the rename can make it visible.
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        sync_parent_dir(path)
+    })();
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    res
+}
+
+/// Fsync the directory containing `path` so the rename that installed it
+/// is itself durable. Directory fsync is a Unix-ism; elsewhere this is a
+/// best-effort no-op.
+#[cfg(unix)]
+fn sync_parent_dir(path: &Path) -> io::Result<()> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    std::fs::File::open(parent)?.sync_all()
+}
+
+#[cfg(not(unix))]
+fn sync_parent_dir(_path: &Path) -> io::Result<()> {
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1139,5 +1430,140 @@ mod tests {
         let err = restore_checkpoint(&j, &cfg, ghash ^ 1).unwrap_err();
         assert!(err.contains("baseline program mismatch"), "unexpected error: {err}");
         assert!(restore_checkpoint(&j, &cfg, ghash).is_ok());
+    }
+
+    #[test]
+    fn threaded_driver_matches_sequential_bitwise() {
+        // The tentpole determinism claim at the driver level: for every
+        // island count and thread count, `drive` leaves byte-identical
+        // state — populations, archives, fitness caches, RNG streams,
+        // history and migration counters — which checkpoint_json captures
+        // exhaustively (all f64/u64 as hex bit patterns).
+        let (g, eval) = toy();
+        let ops = OperatorSet::classic();
+        let ghash = crate::ir::canon::graph_hash(&g);
+        for k in [1usize, 2, 4] {
+            let cfg = SearchConfig {
+                pop_size: 6,
+                generations: 4,
+                elites: 2,
+                workers: 1,
+                seed: 31,
+                islands: k,
+                migration_interval: 2,
+                migrants: 1,
+                island_threads: 1,
+                ..Default::default()
+            };
+            let mut seq = RunState {
+                engines: (0..k).map(|i| Engine::new(i, &g, &eval, &cfg, &ops)).collect(),
+                history: Vec::new(),
+                completed: 0,
+                migrations: 0,
+            };
+            drive(&mut seq, &g, &eval, &cfg, &ops, ghash, None).unwrap();
+            let want = checkpoint_json(&cfg, ghash, &seq);
+            for threads in [2usize, 4] {
+                let tcfg = SearchConfig { island_threads: threads, ..cfg.clone() };
+                let mut thr = RunState {
+                    engines: (0..k).map(|i| Engine::new(i, &g, &eval, &tcfg, &ops)).collect(),
+                    history: Vec::new(),
+                    completed: 0,
+                    migrations: 0,
+                };
+                drive(&mut thr, &g, &eval, &tcfg, &ops, ghash, None).unwrap();
+                // serialize the threaded state under the sequential cfg so
+                // only the *state* is compared, not the config echo
+                assert_eq!(
+                    want,
+                    checkpoint_json(&cfg, ghash, &thr),
+                    "islands={k} island_threads={threads} diverged from sequential"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unique_tmp_paths_never_collide() {
+        // `front.json` and `front.csv` share a stem — with_extension("tmp")
+        // used to map both onto `front.tmp`. The unique suffix must keep
+        // them apart, and repeated calls for the *same* path apart too.
+        let a = unique_tmp_path(Path::new("/x/front.json"));
+        let b = unique_tmp_path(Path::new("/x/front.csv"));
+        let c = unique_tmp_path(Path::new("/x/front.json"));
+        assert_ne!(a, b, "different files must not share a temp path");
+        assert_ne!(a, c, "repeat writers of one file must not share a temp path");
+        let name = a.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(name.starts_with("front.json.tmp."), "suffix must extend the full filename");
+        assert!(name.contains(&std::process::id().to_string()), "pid must discriminate");
+        assert_eq!(a.parent(), Path::new("/x/front.json").parent());
+    }
+
+    #[test]
+    fn write_durable_installs_content_and_leaves_no_temp_files() {
+        let dir = std::env::temp_dir().join(format!("gevo_durable_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("ck.json");
+        write_durable(&target, b"first").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"first");
+        // overwrite: the new content replaces the old atomically
+        write_durable(&target, b"second").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"second");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must not survive: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+        // a target whose directory does not exist fails with Err, no panic
+        let bad = dir.join("nope").join("ck.json");
+        assert!(write_durable(&bad, b"x").is_err());
+    }
+
+    #[test]
+    fn try_run_surfaces_checkpoint_write_failure_as_err() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 4,
+            generations: 1,
+            elites: 2,
+            workers: 1,
+            seed: 7,
+            ..Default::default()
+        };
+        let bad = std::env::temp_dir()
+            .join(format!("gevo_missing_dir_{}", std::process::id()))
+            .join("ck.json");
+        let err = try_run_with_checkpoint(&g, &eval, &cfg, Some(&bad))
+            .expect_err("an unwritable checkpoint path must fail the run");
+        assert!(
+            err.to_string().contains("checkpoint"),
+            "error must name the checkpoint: {err}"
+        );
+    }
+
+    #[test]
+    fn try_run_surfaces_corrupt_checkpoint_as_err() {
+        let path = std::env::temp_dir()
+            .join(format!("gevo_corrupt_ck_{}.json", std::process::id()));
+        std::fs::write(&path, "{ this is not json").unwrap();
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 4,
+            generations: 1,
+            elites: 2,
+            workers: 1,
+            seed: 7,
+            ..Default::default()
+        };
+        let err = try_run_with_checkpoint(&g, &eval, &cfg, Some(&path))
+            .expect_err("a corrupt checkpoint must fail the run");
+        assert!(
+            err.to_string().contains("parse checkpoint"),
+            "error must say the parse failed: {err}"
+        );
+        let _ = std::fs::remove_file(&path);
     }
 }

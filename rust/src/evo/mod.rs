@@ -21,7 +21,11 @@
 //!   per individual, rank, recombine, mutate, elitism (top 16),
 //!   tournament selection.
 //! * [`island`] — K independent subpopulations exchanging elite migrants
-//!   on a ring, with checkpoint/resume of the full search state.
+//!   on a ring, with checkpoint/resume of the full search state; islands
+//!   step on parallel OS threads between migration barriers
+//!   (`SearchConfig::island_threads`), bit-identically to the sequential
+//!   schedule, and checkpoints are written durably off the generation
+//!   path by a dedicated writer thread.
 
 pub mod patch;
 pub mod operators;
@@ -31,7 +35,7 @@ pub mod nsga2;
 pub mod search;
 pub mod island;
 
-pub use island::run_with_checkpoint;
+pub use island::{run_with_checkpoint, try_run_with_checkpoint, CheckpointError};
 pub use operators::{MutationOp, OpContext, OperatorSet, OperatorStats};
 pub use patch::{Edit, EditKind, Individual};
 pub use search::{SearchConfig, SearchResult};

@@ -106,6 +106,14 @@ pub struct SearchConfig {
     /// process, so it is excluded from the checkpoint's config echo and a
     /// resume may use a different value.
     pub checkpoint_every: usize,
+    /// OS threads stepping islands in parallel between migration barriers
+    /// (1 = the historical sequential schedule). Scheduling only: islands
+    /// share no mutable search state between barriers, so any value
+    /// produces a bit-identical front, archives and RNG states — like
+    /// `workers` and `checkpoint_every` it is excluded from the
+    /// checkpoint's config echo. Capped at `islands`; values above
+    /// `available_parallelism` just oversubscribe cores.
+    pub island_threads: usize,
     /// Optimizer level for the fitness workloads' compiled-program cache
     /// ([`crate::exec::cache::ProgramCache`]): graphs are canonicalized
     /// through the bit-identity-preserving pipeline in [`crate::opt`]
@@ -169,6 +177,7 @@ impl Default for SearchConfig {
             migration_interval: 4,
             migrants: 2,
             checkpoint_every: 1,
+            island_threads: 1,
             opt_level: crate::opt::OptLevel::O0,
             operators: super::operators::default_names(),
             adapt: false,
@@ -691,6 +700,12 @@ fn tournament(scored: &[usize], rc: &[(usize, f64)], k: usize, rng: &mut Rng) ->
 /// a shared fitness cache keyed by the edit list. Non-finite objectives
 /// are rejected here — NaN/inf never enters ranking, crowding or dedup.
 /// Returns `(evaluator calls, cache hits)` for this batch.
+///
+/// A panicking evaluator does not take the batch down: the panic is
+/// caught, the candidate scores `None` (same as any invalid variant), and
+/// every lock is acquired poison-tolerantly, so one bad worker can't
+/// cascade into panics on its siblings or on other islands. (The caches'
+/// invariant survives a mid-panic guard: entries are insert-only.)
 fn evaluate_all(
     original: &Graph,
     eval: &dyn Evaluator,
@@ -698,6 +713,9 @@ fn evaluate_all(
     cfg: &SearchConfig,
     cache: &mut HashMap<u64, Option<Objectives>>,
 ) -> (usize, usize) {
+    fn unpoisoned<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
+        r.unwrap_or_else(|p| p.into_inner())
+    }
     let shared = Mutex::new(std::mem::take(cache));
     let cache_hits = AtomicUsize::new(0);
     let total_evals = AtomicUsize::new(0);
@@ -715,27 +733,31 @@ fn evaluate_all(
                 }
                 let ind = &pop[todo[w]];
                 let key = ind.cache_key();
-                if let Some(hit) = shared.lock().unwrap().get(&key).copied() {
+                if let Some(hit) = unpoisoned(shared.lock()).get(&key).copied() {
                     cache_hits.fetch_add(1, Ordering::Relaxed);
-                    *results[w].lock().unwrap() = Some(hit);
+                    *unpoisoned(results[w].lock()) = Some(hit);
                     continue;
                 }
                 let obj = match ind.materialize(original) {
                     Ok(g) => {
                         total_evals.fetch_add(1, Ordering::Relaxed);
-                        eval.evaluate(&g).filter(|o| o.0.is_finite() && o.1.is_finite())
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            eval.evaluate(&g)
+                        }))
+                        .unwrap_or(None)
+                        .filter(|o| o.0.is_finite() && o.1.is_finite())
                     }
                     Err(_) => None,
                 };
-                shared.lock().unwrap().insert(key, obj);
-                *results[w].lock().unwrap() = Some(obj);
+                unpoisoned(shared.lock()).insert(key, obj);
+                *unpoisoned(results[w].lock()) = Some(obj);
             });
         }
     });
     for (w, &i) in todo.iter().enumerate() {
-        pop[i].objectives = results[w].lock().unwrap().flatten();
+        pop[i].objectives = unpoisoned(results[w].lock()).flatten();
     }
-    *cache = shared.into_inner().unwrap();
+    *cache = unpoisoned(shared.into_inner());
     (total_evals.into_inner(), cache_hits.into_inner())
 }
 

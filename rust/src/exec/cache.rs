@@ -21,6 +21,23 @@
 //! bit-identity-preserving, so execution results are unchanged at every
 //! level; `OptLevel::O0` bypasses everything and reproduces the
 //! historical keys and programs exactly.
+//!
+//! # Cross-island concurrency
+//!
+//! This cache is the **one** structure shared across island threads
+//! (`SearchConfig::island_threads`) as well as across evaluation workers:
+//! everything else an island touches is owned by its `Engine`. That is
+//! safe for determinism because entries are keyed by canonical graph hash
+//! — what a key maps to is independent of which thread inserted it first
+//! — and it makes the cache the place where scheduling shows up as
+//! *contention*: every lock acquisition that would block is counted in
+//! [`OptStats::lock_contended`] (surfaced in reports), so an
+//! over-subscribed `--island-threads`×`--workers` product is visible
+//! instead of silently serializing. Locks are acquired poison-tolerantly:
+//! the maps are insert-only (a panicking holder can at worst lose its own
+//! insert, never leave a half-written entry observable), so a panic in
+//! one evaluation worker must not cascade into panics on every other
+//! island.
 
 use super::Program;
 use crate::ir::types::IrError;
@@ -69,6 +86,11 @@ pub struct OptStats {
     /// (`SearchConfig::filter_neutral`; counted via
     /// [`ProgramCache::count_filtered_neutral`]).
     pub filtered_neutral: usize,
+    /// Lock acquisitions on the cache's internal mutexes that found the
+    /// lock held and had to wait. A scheduling observable, not part of
+    /// the search trajectory: it varies with `--workers` /
+    /// `--island-threads` even when every search result bit is identical.
+    pub lock_contended: usize,
 }
 
 /// Aggregate kernel-fusion outcome across every program a cache compiled
@@ -116,6 +138,7 @@ pub struct ProgramCache {
     memo_hits: AtomicUsize,
     memo_misses: AtomicUsize,
     filtered_neutral: AtomicUsize,
+    lock_contended: AtomicUsize,
     fuse_programs: AtomicUsize,
     fuse_regions: AtomicUsize,
     fuse_steps_before: AtomicUsize,
@@ -153,6 +176,7 @@ impl ProgramCache {
             memo_hits: AtomicUsize::new(0),
             memo_misses: AtomicUsize::new(0),
             filtered_neutral: AtomicUsize::new(0),
+            lock_contended: AtomicUsize::new(0),
             fuse_programs: AtomicUsize::new(0),
             fuse_regions: AtomicUsize::new(0),
             fuse_steps_before: AtomicUsize::new(0),
@@ -164,6 +188,25 @@ impl ProgramCache {
 
     pub fn opt_level(&self) -> OptLevel {
         self.opt_level
+    }
+
+    /// Acquire one of the cache's internal mutexes, counting contention
+    /// and recovering from poisoning. Uncontended acquisitions (the vast
+    /// majority) stay on the `try_lock` fast path; a `WouldBlock` bumps
+    /// [`OptStats::lock_contended`] before falling back to a blocking
+    /// lock. A poisoned guard is taken anyway: the maps are insert-only,
+    /// so a panic mid-holder cannot leave an entry half-written, and
+    /// cascading the panic into every other worker and island is the bug
+    /// this defends against.
+    fn lock<'a, T>(&self, m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+        match m.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.lock_contended.fetch_add(1, Ordering::Relaxed);
+                m.lock().unwrap_or_else(|p| p.into_inner())
+            }
+        }
     }
 
     /// Fetch the compiled program for `g`, lowering it on first sight.
@@ -179,9 +222,9 @@ impl ProgramCache {
         // memo hit never serializes other threads' memo access behind the
         // map lock.
         let raw_key = crate::ir::canon::graph_hash(g);
-        let memo_canon = self.memo.lock().unwrap().get(&raw_key).copied();
+        let memo_canon = self.lock(&self.memo).get(&raw_key).copied();
         if let Some(canon) = memo_canon {
-            if let Some(p) = self.map.lock().unwrap().get(&canon) {
+            if let Some(p) = self.lock(&self.map).get(&canon) {
                 self.memo_hits.fetch_add(1, Ordering::Relaxed);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok(Arc::clone(p));
@@ -189,7 +232,7 @@ impl ProgramCache {
             // No resident program under that key. If a `canonical_key`
             // probe left its optimized graph behind, compile from it —
             // still a memo hit, the pipeline is not re-run.
-            if let Some(og) = self.opt_graphs.lock().unwrap().remove(&raw_key) {
+            if let Some(og) = self.lock(&self.opt_graphs).remove(&raw_key) {
                 self.memo_hits.fetch_add(1, Ordering::Relaxed);
                 return self.fetch_or_insert(canon, &og);
             }
@@ -212,14 +255,14 @@ impl ProgramCache {
         self.opt_insts_out.fetch_add(og.len(), Ordering::Relaxed);
         let key = crate::ir::canon::graph_hash(&og);
         {
-            let mut memo = self.memo.lock().unwrap();
+            let mut memo = self.lock(&self.memo);
             if memo.len() >= MEMO_MAX_ENTRIES {
                 memo.clear();
             }
             memo.insert(raw_key, key);
         }
         if retain {
-            let mut held = self.opt_graphs.lock().unwrap();
+            let mut held = self.lock(&self.opt_graphs);
             if held.len() >= OPT_GRAPH_MAX_ENTRIES {
                 held.clear();
             }
@@ -243,7 +286,7 @@ impl ProgramCache {
         if self.opt_level == OptLevel::O0 {
             return raw;
         }
-        if let Some(k) = self.memo.lock().unwrap().get(&raw).copied() {
+        if let Some(k) = self.lock(&self.memo).get(&raw).copied() {
             self.memo_hits.fetch_add(1, Ordering::Relaxed);
             return k;
         }
@@ -258,7 +301,7 @@ impl ProgramCache {
     }
 
     fn fetch_or_insert(&self, key: u128, target: &Graph) -> Result<Arc<Program>, IrError> {
-        if let Some(p) = self.map.lock().unwrap().get(&key) {
+        if let Some(p) = self.lock(&self.map).get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
         }
@@ -276,7 +319,7 @@ impl ProgramCache {
             self.fuse_peak_after.fetch_add(f.peak_after, Ordering::Relaxed);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.map.lock().unwrap();
+        let mut map = self.lock(&self.map);
         if map.len() >= MAX_ENTRIES {
             map.clear();
         }
@@ -290,7 +333,9 @@ impl ProgramCache {
     }
 
     /// Optimizer counters: aggregate instruction reduction across
-    /// pipeline runs plus the memo's hit/miss split. All zero at `O0`.
+    /// pipeline runs plus the memo's hit/miss split. The optimizer
+    /// counters are all zero at `O0`; `lock_contended` covers every
+    /// internal mutex and can be non-zero at any level under concurrency.
     pub fn opt_stats(&self) -> OptStats {
         OptStats {
             insts_in: self.opt_insts_in.load(Ordering::Relaxed),
@@ -298,6 +343,7 @@ impl ProgramCache {
             memo_hits: self.memo_hits.load(Ordering::Relaxed),
             memo_misses: self.memo_misses.load(Ordering::Relaxed),
             filtered_neutral: self.filtered_neutral.load(Ordering::Relaxed),
+            lock_contended: self.lock_contended.load(Ordering::Relaxed),
         }
     }
 
@@ -318,7 +364,7 @@ impl ProgramCache {
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.lock(&self.map).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -555,5 +601,59 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "O3 cache changed bits");
             }
         }
+    }
+
+    #[test]
+    fn poisoned_locks_recover_instead_of_cascading() {
+        // Poison every internal mutex the way a panicking evaluation
+        // worker would — mid-hold — then check the cache still serves
+        // compiles, probes and stats without propagating the panic.
+        let c = ProgramCache::with_opt(OptLevel::O2);
+        let k_before = c.canonical_key(&g1());
+        for poison in [0usize, 1, 2] {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _g0;
+                let _g1;
+                let _g2;
+                match poison {
+                    0 => _g0 = c.map.lock().unwrap(),
+                    1 => _g1 = c.memo.lock().unwrap(),
+                    _ => _g2 = c.opt_graphs.lock().unwrap(),
+                }
+                panic!("worker dies holding a cache lock");
+            }));
+            assert!(r.is_err());
+        }
+        assert!(c.map.is_poisoned() && c.memo.is_poisoned() && c.opt_graphs.is_poisoned());
+        let p1 = c.get_or_compile(&g1()).expect("compile must survive poisoned locks");
+        let p2 = c.get_or_compile(&g1()).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "the cache must still dedup after recovery");
+        assert_eq!(c.canonical_key(&g1()), k_before, "keys must be unchanged by poisoning");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn contended_locks_are_counted() {
+        // Hold the program map from one thread while another probes it;
+        // the prober must fall off the try_lock fast path and count the
+        // contention. Bounded retries keep the test deterministic-enough
+        // without assuming scheduler timing.
+        let c = ProgramCache::new();
+        assert_eq!(c.opt_stats().lock_contended, 0);
+        let mut contended = 0;
+        for _ in 0..50 {
+            std::thread::scope(|s| {
+                let guard = c.lock(&c.map);
+                let prober = s.spawn(|| c.len());
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                drop(guard);
+                prober.join().unwrap();
+            });
+            contended = c.opt_stats().lock_contended;
+            if contended > 0 {
+                break;
+            }
+        }
+        assert!(contended > 0, "a blocked acquisition must be counted");
     }
 }

@@ -44,15 +44,21 @@ USAGE: gevo-ml <subcommand> [flags]
 
   search   --workload 2fcnet|mobilenet [--pop N] [--gens N] [--seed S]
            [--metric flops|wall|blend] [--fit N] [--test N] [--epochs N]
-           [--workers N] [--islands K] [--migration-interval M]
-           [--migrants N] [--checkpoint FILE] [--checkpoint-every N]
+           [--workers N] [--islands K] [--island-threads T]
+           [--migration-interval M] [--migrants N] [--checkpoint FILE]
+           [--checkpoint-every N]
            [--opt-level 0|1|2|3] [--operators LIST] [--adapt]
            [--filter-neutral] [--reseed-minimized] [--list-operators]
            [--out PREFIX] [--quiet]
            --islands shards the population into K ring-connected
-           subpopulations; --checkpoint saves resumable state every
+           subpopulations; --island-threads steps islands on T parallel
+           OS threads between migration barriers (default 1; any value
+           is bit-identical to sequential — use it with --workers 1 to
+           parallelize across islands instead of within a population);
+           --checkpoint saves resumable state every
            --checkpoint-every generations (an existing file is resumed,
-           targeting --gens); --opt-level canonicalizes candidate graphs
+           targeting --gens; writes are fsynced and happen on a
+           background writer thread); --opt-level canonicalizes candidate graphs
            through the bit-identity-preserving optimizer pipeline before
            lowering (0 = off, reproduces historical behavior exactly;
            default 2; 3 = level 2 plus kernel fusion — elementwise
@@ -115,6 +121,7 @@ fn search_config(args: &Args) -> SearchConfig {
         migration_interval: args.usize_or("migration-interval", 4),
         migrants: args.usize_or("migrants", 2),
         checkpoint_every: args.usize_or("checkpoint-every", 1),
+        island_threads: args.usize_or("island-threads", 1),
         opt_level: OptLevel::parse(&args.get_or("opt-level", "2"))
             .unwrap_or_else(|| panic!("--opt-level must be 0, 1, 2 or 3")),
         operators: operator_names(args),
@@ -166,6 +173,16 @@ fn experiment_config(args: &Args, minimize_front: bool) -> ExperimentConfig {
     }
 }
 
+/// Run the experiment, turning checkpoint I/O failures (unreadable or
+/// corrupt checkpoint, durable write failing after its retry) into a
+/// clean error exit instead of a panic backtrace.
+fn run_or_exit(cfg: &ExperimentConfig) -> coordinator::ExperimentResult {
+    coordinator::try_run_experiment(cfg).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    })
+}
+
 fn write_out(args: &Args, r: &coordinator::ExperimentResult) {
     if let Some(prefix) = args.get("out") {
         std::fs::write(format!("{prefix}.json"), report::to_json(r).to_pretty()).unwrap();
@@ -192,7 +209,7 @@ fn cmd_search(args: &Args) {
         cfg.search.operators.join(","),
         if cfg.search.adapt { " (adaptive)" } else { "" }
     );
-    let r = coordinator::run_experiment(&cfg);
+    let r = run_or_exit(&cfg);
     println!("{}", report::ascii_scatter(&r, 64, 16));
     println!("{}", report::front_markdown(&r));
     println!("{}", report::operator_markdown(&r));
@@ -208,8 +225,9 @@ fn cmd_search(args: &Args) {
     }
     if let Some(o) = r.search.program_opt {
         println!(
-            "opt: memo {} hits / {} pipeline runs, {} proposals filtered as neutral",
-            o.memo_hits, o.memo_misses, o.filtered_neutral
+            "opt: memo {} hits / {} pipeline runs, {} proposals filtered as neutral, \
+             {} contended locks",
+            o.memo_hits, o.memo_misses, o.filtered_neutral, o.lock_contended
         );
     }
     if let Some(f) = r.search.program_fusion {
@@ -228,7 +246,7 @@ fn cmd_minimize(args: &Args) {
         cfg.search.seed,
         cfg.search.opt_level
     );
-    let r = coordinator::run_experiment(&cfg);
+    let r = run_or_exit(&cfg);
     println!("{}", report::front_markdown(&r));
     println!("{}", report::attribution_markdown(&r));
     // The minimizer's contract, re-checked at the CLI boundary so the CI

@@ -1,0 +1,223 @@
+//! Integration: the threaded island runtime over the public API —
+//! bit-identity with the sequential schedule, kill/resume through the
+//! async durable checkpoint writer, and survival of a panicking
+//! evaluation worker.
+
+use gevo_ml::evo::island::run_with_checkpoint;
+use gevo_ml::evo::nsga2::Objectives;
+use gevo_ml::evo::search::{Evaluator, SearchConfig, SearchResult};
+use gevo_ml::ir::op::{OpKind, ReduceKind};
+use gevo_ml::ir::types::TType;
+use gevo_ml::ir::Graph;
+
+/// The toy workload from the island unit tests: runtime = normalized
+/// FLOPs, error = |output − baseline| on one input.
+fn toy() -> (Graph, impl Evaluator) {
+    let mut g = Graph::new("toy");
+    let x = g.param(TType::of(&[4, 4]));
+    let e1 = g.push(OpKind::Exponential, &[x]).unwrap();
+    let t = g.push(OpKind::Tanh, &[e1]).unwrap();
+    let a = g.push(OpKind::Add, &[t, x]).unwrap();
+    let r = g
+        .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[a])
+        .unwrap();
+    g.set_outputs(&[r]);
+    let base_flops = g.total_flops() as f64;
+    let input = gevo_ml::tensor::Tensor::iota(&[4, 4]);
+    let baseline = gevo_ml::interp::eval(&g, &[input.clone()]).unwrap()[0].item() as f64;
+    let eval = move |vg: &Graph| -> Option<Objectives> {
+        let out = gevo_ml::interp::eval(vg, &[input.clone()]).ok()?;
+        if out[0].has_non_finite() {
+            return None;
+        }
+        let err = (out[0].item() as f64 - baseline).abs() / baseline.abs().max(1e-9);
+        let time = vg.total_flops() as f64 / base_flops;
+        Some((time, err))
+    };
+    (g, eval)
+}
+
+/// Everything observable about a search outcome that must be
+/// schedule-independent, with objectives as exact bit patterns.
+/// (Program-cache *performance* counters are deliberately excluded:
+/// racing compiles of one key legitimately vary with scheduling.)
+fn fingerprint(r: &SearchResult) -> (Vec<(u64, u64)>, Vec<usize>, usize, usize, usize) {
+    (
+        r.pareto.iter().map(|(_, o)| (o.0.to_bits(), o.1.to_bits())).collect(),
+        r.pareto_islands.clone(),
+        r.total_evaluations,
+        r.cache_hits,
+        r.migrations,
+    )
+}
+
+fn assert_bit_identical(a: &SearchResult, b: &SearchResult, label: &str) {
+    assert_eq!(fingerprint(a), fingerprint(b), "{label}: result fingerprints diverged");
+    assert_eq!(a.history.len(), b.history.len(), "{label}: history length");
+    for (x, y) in a.history.iter().zip(b.history.iter()) {
+        assert_eq!(
+            (x.gen, x.island, x.evaluated, x.valid, x.front_size),
+            (y.gen, y.island, y.evaluated, y.valid, y.front_size),
+            "{label}: history row diverged"
+        );
+        assert_eq!(x.best_time.to_bits(), y.best_time.to_bits(), "{label}: best_time bits");
+        assert_eq!(x.best_error.to_bits(), y.best_error.to_bits(), "{label}: best_error bits");
+    }
+    assert_eq!(a.islands.len(), b.islands.len(), "{label}: island count");
+    for (x, y) in a.islands.iter().zip(b.islands.iter()) {
+        assert_eq!(
+            (x.island, x.evaluations, x.cache_hits, x.front_size, x.migrants_sent, x.migrants_received),
+            (y.island, y.evaluations, y.cache_hits, y.front_size, y.migrants_sent, y.migrants_received),
+            "{label}: per-island stats diverged"
+        );
+    }
+}
+
+#[test]
+fn threaded_runs_are_bit_identical_to_sequential() {
+    let (g, eval) = toy();
+    for k in [1usize, 2, 4] {
+        let cfg = SearchConfig {
+            pop_size: 6,
+            generations: 4,
+            elites: 3,
+            workers: 1,
+            seed: 19,
+            islands: k,
+            migration_interval: 2,
+            migrants: 1,
+            island_threads: 1,
+            ..Default::default()
+        };
+        let sequential = run_with_checkpoint(&g, &eval, &cfg, None);
+        for threads in [2usize, 4, 8] {
+            let threaded = run_with_checkpoint(
+                &g,
+                &eval,
+                &SearchConfig { island_threads: threads, ..cfg.clone() },
+                None,
+            );
+            assert_bit_identical(
+                &sequential,
+                &threaded,
+                &format!("islands={k} island_threads={threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_kill_resume_is_bit_identical_and_leaves_no_temp_files() {
+    let (g, eval) = toy();
+    let dir = std::env::temp_dir().join(format!("gevo_thr_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("ck.json");
+    let cfg = SearchConfig {
+        pop_size: 6,
+        generations: 5,
+        elites: 3,
+        workers: 1,
+        seed: 29,
+        islands: 3,
+        migration_interval: 2,
+        migrants: 1,
+        island_threads: 3,
+        checkpoint_every: 2,
+        ..Default::default()
+    };
+    let uninterrupted = run_with_checkpoint(&g, &eval, &cfg, None);
+
+    // "kill" after three generations (mid-segment relative to the full
+    // 5-generation target), then resume from the async-written checkpoint
+    let partial_cfg = SearchConfig { generations: 3, ..cfg.clone() };
+    let partial = run_with_checkpoint(&g, &eval, &partial_cfg, Some(&ck));
+    assert!(ck.exists(), "the writer thread must have installed the checkpoint");
+    assert!(partial.history.len() < uninterrupted.history.len());
+    let resumed = run_with_checkpoint(&g, &eval, &cfg, Some(&ck));
+    assert_bit_identical(&uninterrupted, &resumed, "threaded resume");
+
+    // durable-write hygiene: no abandoned temp files next to the target
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.contains(".tmp."))
+        .collect();
+    assert!(leftovers.is_empty(), "temp files must not survive: {leftovers:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An evaluator that panics on every variant cheaper than the baseline —
+/// deterministic, so the surviving trajectory is too.
+fn panicky() -> (Graph, impl Evaluator) {
+    let (g, inner) = toy();
+    let baseline_flops = g.total_flops();
+    let eval = move |vg: &Graph| -> Option<Objectives> {
+        if vg.total_flops() < baseline_flops {
+            panic!("injected worker panic (variant cheaper than baseline)");
+        }
+        inner.evaluate(vg)
+    };
+    (g, eval)
+}
+
+#[test]
+fn search_survives_a_panicking_evaluation_worker() {
+    // One panicking evaluation must not take down the batch, the island
+    // thread, the checkpoint writer, or the run: the panicking candidate
+    // scores None (exactly like an invalid variant) and the search
+    // completes across parallel workers and parallel islands.
+    let (g, eval) = panicky();
+    let dir = std::env::temp_dir().join(format!("gevo_panic_ck_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("ck.json");
+    let cfg = SearchConfig {
+        pop_size: 6,
+        generations: 3,
+        elites: 3,
+        workers: 2,
+        seed: 23,
+        islands: 2,
+        migration_interval: 2,
+        migrants: 1,
+        island_threads: 2,
+        ..Default::default()
+    };
+    let r = run_with_checkpoint(&g, &eval, &cfg, Some(&ck));
+    assert!(ck.exists(), "the checkpoint writer must survive evaluator panics");
+    assert_eq!(r.history.len(), 3 * 2, "every generation must complete on every island");
+    assert!(
+        r.pareto.iter().all(|(_, o)| o.0.to_bits() >= 1.0f64.to_bits()),
+        "panicked (cheaper-than-baseline) variants must never reach the front"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn panicking_evaluator_trajectory_is_deterministic() {
+    // With one worker the panic set is deterministic, so two runs (and a
+    // threaded run) must agree bit-for-bit even while panics are caught.
+    let (g, eval) = panicky();
+    let cfg = SearchConfig {
+        pop_size: 6,
+        generations: 3,
+        elites: 3,
+        workers: 1,
+        seed: 23,
+        islands: 2,
+        migration_interval: 2,
+        migrants: 1,
+        island_threads: 1,
+        ..Default::default()
+    };
+    let a = run_with_checkpoint(&g, &eval, &cfg, None);
+    let b = run_with_checkpoint(&g, &eval, &cfg, None);
+    assert_bit_identical(&a, &b, "panicky repeat");
+    let t = run_with_checkpoint(
+        &g,
+        &eval,
+        &SearchConfig { island_threads: 2, ..cfg.clone() },
+        None,
+    );
+    assert_bit_identical(&a, &t, "panicky threaded");
+}
