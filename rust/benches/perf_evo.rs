@@ -1,7 +1,8 @@
 //! §Perf L3: evolutionary-machinery micro-benchmarks — mutation+repair
 //! throughput, crossover, NSGA-II sorting, a full evaluated generation
-//! (the end-to-end unit of search cost), and the threaded island
-//! runtime's generations/sec scaling at 1 vs N island threads (summary
+//! (the end-to-end unit of search cost), the threaded island
+//! runtime's generations/sec scaling at 1 vs N island threads, and the
+//! batched cohort engine's evals/sec at stacked widths 1/8/32 (summary
 //! committed as `BENCH_evo.json`).
 
 use gevo_ml::evo::crossover::messy_one_point;
@@ -10,10 +11,12 @@ use gevo_ml::evo::mutate::valid_random_edit;
 use gevo_ml::evo::nsga2;
 use gevo_ml::evo::patch::Individual;
 use gevo_ml::evo::search::{self, Evaluator, SearchConfig};
+use gevo_ml::exec::{BatchScratch, Program, Scratch};
 use gevo_ml::ir::op::{OpKind, ReduceKind};
 use gevo_ml::ir::types::TType;
 use gevo_ml::ir::Graph;
 use gevo_ml::models::twofc;
+use gevo_ml::tensor::Tensor;
 use gevo_ml::util::bench::{black_box, Bench};
 use gevo_ml::util::json::Json;
 use gevo_ml::util::rng::Rng;
@@ -158,10 +161,74 @@ fn main() {
             ("speedup_vs_sequential", Json::num(speedup)),
         ]));
     }
+    // --- batched cohort execution: evals/sec at width 1 vs 8 vs 32 ------------
+    // Width 1 is the scalar `run_refs` path (genome-at-a-time baseline);
+    // wider rows stack replicated input lanes through one `run_lanes`
+    // call. Same compiled program, same inputs, bit-identical outputs —
+    // the ratio is pure scheduling gain. Every row executes 32 lane
+    // evaluations total so `evals_per_sec` is directly comparable.
+    let prog = Program::compile(&base).expect("train step compiles");
+    let mut irng = Rng::new(23);
+    let inputs: Vec<Tensor> = base
+        .param_types()
+        .iter()
+        .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, &mut irng))
+        .collect();
+    let input_refs: Vec<&Tensor> = inputs.iter().collect();
+    let mut batch_rows: Vec<Json> = Vec::new();
+    let mut eps_at_one = 0.0f64;
+    for width in [1usize, 8, 32] {
+        let p50 = if width == 1 {
+            let mut scratch = Scratch::new();
+            b.case_with_work("batched eval width=1 (scalar run_refs, x32)", Some(32.0), || {
+                for _ in 0..32 {
+                    black_box(prog.run_refs(&input_refs, &mut scratch).unwrap());
+                }
+            })
+        } else {
+            let lanes: Vec<&[&Tensor]> =
+                (0..width).map(|_| input_refs.as_slice()).collect();
+            let reps = 32 / width;
+            let mut scratch = BatchScratch::new();
+            b.case_with_work(
+                &format!("batched eval width={width} (run_lanes, x32 lanes)"),
+                Some(32.0),
+                || {
+                    for _ in 0..reps {
+                        black_box(prog.run_lanes(&lanes, &mut scratch));
+                    }
+                },
+            )
+        };
+        let eps = 32.0 / p50.max(1e-12);
+        if width == 1 {
+            eps_at_one = eps;
+        }
+        let speedup = if eps_at_one > 0.0 { eps / eps_at_one } else { 0.0 };
+        b.note(&format!(
+            "batch width={width}: {eps:.1} evals/s, {speedup:.2}x vs scalar"
+        ));
+        batch_rows.push(Json::obj(vec![
+            ("width", Json::num(width as f64)),
+            ("seconds_p50", Json::num(p50)),
+            ("evals_per_sec", Json::num(eps)),
+            ("speedup_vs_scalar", Json::num(speedup)),
+        ]));
+    }
+
     let summary = Json::obj(vec![
         ("suite", Json::str("perf_evo")),
-        ("section", Json::str("threaded-island-runtime")),
+        ("section", Json::str("threaded-island-runtime+batched-eval")),
         ("island_scaling", Json::Arr(rows)),
+        ("batch_scaling", Json::Arr(batch_rows)),
+        (
+            "provenance",
+            Json::str(
+                "generated by `cargo bench --bench perf_evo`; the committed file is a \
+                 structural baseline — CI regenerates it and checks sections, not \
+                 absolute timings",
+            ),
+        ),
     ]);
     std::fs::write("BENCH_evo.json", summary.to_pretty())
         .expect("write BENCH_evo.json");

@@ -265,6 +265,21 @@ pub fn to_json(r: &ExperimentResult) -> Json {
             }),
         ),
         (
+            "batch",
+            r.search.program_batch.map_or(Json::Null, |b| {
+                let mean = if b.cohorts > 0 { b.lanes as f64 / b.cohorts as f64 } else { 0.0 };
+                Json::obj(vec![
+                    ("cohorts", Json::num(b.cohorts as f64)),
+                    ("lanes", Json::num(b.lanes as f64)),
+                    ("mean_width", Json::num(mean)),
+                    ("max_width", Json::num(b.max_width as f64)),
+                    ("singletons", Json::num(b.singletons as f64)),
+                    ("batched_evals", Json::num(b.batched_evals as f64)),
+                    ("scalar_evals", Json::num(b.scalar_evals as f64)),
+                ])
+            }),
+        ),
+        (
             "operators",
             Json::Arr(
                 r.search
@@ -298,6 +313,17 @@ pub fn fusion_summary(f: &crate::exec::cache::FusionTotals) -> String {
     format!(
         "fusion: {} regions across {} compiled programs, steps {} -> {} ({reduction:.1}% fewer), peak buffers {} -> {}",
         f.regions, f.programs, f.steps_before, f.steps_after, f.peak_before, f.peak_after
+    )
+}
+
+/// One-line cohort-batching summary for terminal output. `mean/max`
+/// describe stacked-cohort lane widths; `singleton` classes fell back to
+/// the scalar path.
+pub fn batch_summary(b: &crate::exec::cache::BatchStats) -> String {
+    let mean = if b.cohorts > 0 { b.lanes as f64 / b.cohorts as f64 } else { 0.0 };
+    format!(
+        "batch: {} cohorts (mean width {mean:.1}, max {}), {} singleton fallbacks, {} batched / {} scalar evals",
+        b.cohorts, b.max_width, b.singletons, b.batched_evals, b.scalar_evals
     )
 }
 
@@ -418,6 +444,14 @@ mod tests {
                     memo_misses: 20,
                     filtered_neutral: 12,
                     lock_contended: 3,
+                }),
+                program_batch: Some(crate::exec::cache::BatchStats {
+                    cohorts: 6,
+                    lanes: 24,
+                    max_width: 8,
+                    singletons: 5,
+                    batched_evals: 24,
+                    scalar_evals: 5,
                 }),
                 operators: vec![
                     crate::evo::operators::OperatorStats {
@@ -545,6 +579,27 @@ mod tests {
         assert!(s.contains("540 -> 360"));
         assert!(s.contains("33.3% fewer"));
         assert!(s.contains("90 -> 63"));
+    }
+
+    #[test]
+    fn batch_summary_and_json_report_cohorts() {
+        let r = fake();
+        let b = r.search.program_batch.unwrap();
+        let s = batch_summary(&b);
+        assert!(s.starts_with("batch: "), "CI greps the line prefix: {s}");
+        assert!(s.contains("6 cohorts"));
+        assert!(s.contains("mean width 4.0"));
+        assert!(s.contains("max 8"));
+        assert!(s.contains("5 singleton fallbacks"));
+        assert!(s.contains("24 batched / 5 scalar evals"));
+        let j = Json::parse(&to_json(&r).to_pretty()).unwrap();
+        let bj = j.get("batch").unwrap();
+        assert_eq!(bj.get("cohorts").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(bj.get("lanes").unwrap().as_usize().unwrap(), 24);
+        assert_eq!(bj.get("max_width").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(bj.get("singletons").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(bj.get("batched_evals").unwrap().as_usize().unwrap(), 24);
+        assert_eq!(bj.get("scalar_evals").unwrap().as_usize().unwrap(), 5);
     }
 
     #[test]

@@ -204,6 +204,7 @@ pub fn try_run_with_checkpoint(
         program_cache: eval.exec_cache_stats(),
         program_fusion: eval.fusion_stats(),
         program_opt: eval.program_cache().map(|c| c.opt_stats()),
+        program_batch: eval.program_cache().map(|c| c.batch_stats()),
         operators: operator_rows(&ops, &st.engines),
     })
 }
@@ -779,9 +780,9 @@ fn parse_engine(j: &Json, n_ops: usize) -> Result<Engine, String> {
 /// resume is only bit-identical when every one of them matches, so they
 /// are echoed into the checkpoint and verified on load. `generations` is
 /// deliberately absent (resume may extend the run), as are `workers`,
-/// `island_threads` and `checkpoint_every` (scheduling only — any value
-/// yields the same bits, so a resume may change them freely) and
-/// `verbose`.
+/// `island_threads`, `batch` and `checkpoint_every` (scheduling only —
+/// any value yields the same bits, so a resume may change them freely)
+/// and `verbose`.
 fn config_json(cfg: &SearchConfig) -> Json {
     Json::obj(vec![
         ("seed", hex_u64(cfg.seed)),

@@ -4,9 +4,82 @@
 //!
 //! Objectives are minimized: for GEVO-ML, `(runtime, model error)` —
 //! `argmin(time, error)` per §4.3.
+//!
+//! The algorithms run over a **flat objectives matrix** ([`ObjMatrix`]:
+//! one `Vec<f64>` with stride = number of objectives, EvoX/EvoMO-style)
+//! rather than per-individual values, so a whole cohort's objective
+//! vectors sit contiguously and the dominance/crowding loops stride over
+//! one buffer. The historical two-objective tuple API is kept as thin
+//! wrappers over the matrix core; every comparison and `total_cmp`
+//! tie-break is identical, so results are bit-for-bit unchanged.
 
 /// A point in objective space (all objectives minimized).
 pub type Objectives = (f64, f64);
+
+/// A row-major `rows × n_obj` matrix of objective vectors in one flat
+/// `Vec<f64>` — row `i` is `data[i * n_obj .. (i + 1) * n_obj]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjMatrix {
+    data: Vec<f64>,
+    n_obj: usize,
+}
+
+impl ObjMatrix {
+    /// An empty matrix with `n_obj` objectives per row (`n_obj ≥ 1`).
+    pub fn new(n_obj: usize) -> ObjMatrix {
+        assert!(n_obj >= 1, "objective vectors must have at least one component");
+        ObjMatrix { data: Vec::new(), n_obj }
+    }
+
+    /// Stack two-objective points into a matrix (stride 2, row order
+    /// preserved).
+    pub fn from_pairs(points: &[Objectives]) -> ObjMatrix {
+        let mut m = ObjMatrix { data: Vec::with_capacity(points.len() * 2), n_obj: 2 };
+        for &(a, b) in points {
+            m.data.push(a);
+            m.data.push(b);
+        }
+        m
+    }
+
+    /// Append one objective vector; its length must equal `n_obj`.
+    pub fn push(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.n_obj, "objective vector arity mismatch");
+        self.data.extend_from_slice(row);
+    }
+
+    /// Number of rows (points).
+    pub fn len(&self) -> usize {
+        self.data.len() / self.n_obj
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Objectives per row.
+    pub fn n_obj(&self) -> usize {
+        self.n_obj
+    }
+
+    /// Row `i` as a slice view into the flat buffer.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n_obj..(i + 1) * self.n_obj]
+    }
+
+    /// Component `obj` of row `i`.
+    pub fn at(&self, i: usize, obj: usize) -> f64 {
+        self.data[i * self.n_obj + obj]
+    }
+}
+
+/// True if objective vector `a` dominates `b` (no worse in all
+/// objectives, strictly better in at least one). Any NaN component makes
+/// both comparisons false, exactly like the tuple form.
+pub fn dominates_rows(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).all(|(x, y)| x <= y) && a.iter().zip(b.iter()).any(|(x, y)| x < y)
+}
 
 /// True if `a` dominates `b` (no worse in all objectives, strictly better
 /// in at least one).
@@ -14,18 +87,19 @@ pub fn dominates(a: Objectives, b: Objectives) -> bool {
     a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1)
 }
 
-/// Fast non-dominated sort: partition indices into fronts; front 0 is the
-/// Pareto set.
-pub fn non_dominated_sort(points: &[Objectives]) -> Vec<Vec<usize>> {
+/// Fast non-dominated sort over an objectives matrix: partition row
+/// indices into fronts; front 0 is the Pareto set. Index order within a
+/// front follows row order, exactly as the tuple form always has.
+pub fn non_dominated_sort_mat(points: &ObjMatrix) -> Vec<Vec<usize>> {
     let n = points.len();
     let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
     let mut count = vec![0usize; n]; // how many dominate i
     for i in 0..n {
         for j in (i + 1)..n {
-            if dominates(points[i], points[j]) {
+            if dominates_rows(points.row(i), points.row(j)) {
                 dominated_by[i].push(j);
                 count[j] += 1;
-            } else if dominates(points[j], points[i]) {
+            } else if dominates_rows(points.row(j), points.row(i)) {
                 dominated_by[j].push(i);
                 count[i] += 1;
             }
@@ -49,16 +123,24 @@ pub fn non_dominated_sort(points: &[Objectives]) -> Vec<Vec<usize>> {
     fronts
 }
 
-/// Crowding distance of each member of a front (Deb et al. §III-B).
-/// Boundary points get `f64::INFINITY`.
-pub fn crowding_distance(points: &[Objectives], front: &[usize]) -> Vec<f64> {
+/// Fast non-dominated sort: partition indices into fronts; front 0 is the
+/// Pareto set.
+pub fn non_dominated_sort(points: &[Objectives]) -> Vec<Vec<usize>> {
+    non_dominated_sort_mat(&ObjMatrix::from_pairs(points))
+}
+
+/// Crowding distance of each member of a front over an objectives matrix
+/// (Deb et al. §III-B). Boundary points get `f64::INFINITY`; fronts of
+/// one or two members are all-boundary. Sorts use `total_cmp`, so ties
+/// and non-finite values break identically to the tuple form.
+pub fn crowding_distance_mat(points: &ObjMatrix, front: &[usize]) -> Vec<f64> {
     let m = front.len();
     let mut dist = vec![0.0f64; m];
     if m <= 2 {
         return vec![f64::INFINITY; m];
     }
-    for obj in 0..2usize {
-        let key = |i: usize| if obj == 0 { points[i].0 } else { points[i].1 };
+    for obj in 0..points.n_obj() {
+        let key = |i: usize| points.at(i, obj);
         let mut order: Vec<usize> = (0..m).collect();
         order.sort_by(|&a, &b| key(front[a]).total_cmp(&key(front[b])));
         dist[order[0]] = f64::INFINITY;
@@ -76,13 +158,20 @@ pub fn crowding_distance(points: &[Objectives], front: &[usize]) -> Vec<f64> {
     dist
 }
 
-/// Rank + crowding for a whole population: returns `(rank, distance)` per
-/// index; lower rank is better, higher distance is better within a rank.
-pub fn rank_and_crowd(points: &[Objectives]) -> Vec<(usize, f64)> {
-    let fronts = non_dominated_sort(points);
+/// Crowding distance of each member of a front (Deb et al. §III-B).
+/// Boundary points get `f64::INFINITY`.
+pub fn crowding_distance(points: &[Objectives], front: &[usize]) -> Vec<f64> {
+    crowding_distance_mat(&ObjMatrix::from_pairs(points), front)
+}
+
+/// Rank + crowding for every row of an objectives matrix: `(rank,
+/// distance)` per index; lower rank is better, higher distance is better
+/// within a rank.
+pub fn rank_and_crowd_mat(points: &ObjMatrix) -> Vec<(usize, f64)> {
+    let fronts = non_dominated_sort_mat(points);
     let mut out = vec![(usize::MAX, 0.0); points.len()];
     for (rank, front) in fronts.iter().enumerate() {
-        let d = crowding_distance(points, front);
+        let d = crowding_distance_mat(points, front);
         for (k, &i) in front.iter().enumerate() {
             out[i] = (rank, d[k]);
         }
@@ -90,21 +179,28 @@ pub fn rank_and_crowd(points: &[Objectives]) -> Vec<(usize, f64)> {
     out
 }
 
+/// Rank + crowding for a whole population: returns `(rank, distance)` per
+/// index; lower rank is better, higher distance is better within a rank.
+pub fn rank_and_crowd(points: &[Objectives]) -> Vec<(usize, f64)> {
+    rank_and_crowd_mat(&ObjMatrix::from_pairs(points))
+}
+
 /// Crowded-comparison: true if `a` is preferred over `b`.
 pub fn crowded_less(a: (usize, f64), b: (usize, f64)) -> bool {
     a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
 }
 
-/// Environmental selection: pick the `k` best indices by (rank, crowding),
-/// filling whole fronts then truncating the last by crowding distance.
-pub fn select_best(points: &[Objectives], k: usize) -> Vec<usize> {
-    let fronts = non_dominated_sort(points);
+/// Environmental selection over an objectives matrix: pick the `k` best
+/// row indices by (rank, crowding), filling whole fronts then truncating
+/// the last by crowding distance (`total_cmp`, descending).
+pub fn select_best_mat(points: &ObjMatrix, k: usize) -> Vec<usize> {
+    let fronts = non_dominated_sort_mat(points);
     let mut chosen = Vec::with_capacity(k);
     for front in &fronts {
         if chosen.len() + front.len() <= k {
             chosen.extend_from_slice(front);
         } else {
-            let d = crowding_distance(points, front);
+            let d = crowding_distance_mat(points, front);
             let mut order: Vec<usize> = (0..front.len()).collect();
             order.sort_by(|&a, &b| d[b].total_cmp(&d[a]));
             for &w in order.iter().take(k - chosen.len()) {
@@ -116,9 +212,20 @@ pub fn select_best(points: &[Objectives], k: usize) -> Vec<usize> {
     chosen
 }
 
+/// Environmental selection: pick the `k` best indices by (rank, crowding),
+/// filling whole fronts then truncating the last by crowding distance.
+pub fn select_best(points: &[Objectives], k: usize) -> Vec<usize> {
+    select_best_mat(&ObjMatrix::from_pairs(points), k)
+}
+
+/// The Pareto front (front-0 row indices) of an objectives matrix.
+pub fn pareto_front_mat(points: &ObjMatrix) -> Vec<usize> {
+    non_dominated_sort_mat(points).into_iter().next().unwrap_or_default()
+}
+
 /// The Pareto front (front-0 indices) of a point set.
 pub fn pareto_front(points: &[Objectives]) -> Vec<usize> {
-    non_dominated_sort(points).into_iter().next().unwrap_or_default()
+    pareto_front_mat(&ObjMatrix::from_pairs(points))
 }
 
 #[cfg(test)]
@@ -198,6 +305,161 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The pre-matrix two-objective implementations, kept verbatim as the
+    /// historical reference: the matrix core must reproduce their output
+    /// — fronts, distances, selections — bit-for-bit.
+    mod reference {
+        use super::super::{dominates, Objectives};
+
+        pub fn non_dominated_sort(points: &[Objectives]) -> Vec<Vec<usize>> {
+            let n = points.len();
+            let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n];
+            let mut count = vec![0usize; n];
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if dominates(points[i], points[j]) {
+                        dominated_by[i].push(j);
+                        count[j] += 1;
+                    } else if dominates(points[j], points[i]) {
+                        dominated_by[j].push(i);
+                        count[i] += 1;
+                    }
+                }
+            }
+            let mut fronts = Vec::new();
+            let mut current: Vec<usize> = (0..n).filter(|&i| count[i] == 0).collect();
+            while !current.is_empty() {
+                let mut next = Vec::new();
+                for &i in &current {
+                    for &j in &dominated_by[i] {
+                        count[j] -= 1;
+                        if count[j] == 0 {
+                            next.push(j);
+                        }
+                    }
+                }
+                fronts.push(std::mem::take(&mut current));
+                current = next;
+            }
+            fronts
+        }
+
+        pub fn crowding_distance(points: &[Objectives], front: &[usize]) -> Vec<f64> {
+            let m = front.len();
+            let mut dist = vec![0.0f64; m];
+            if m <= 2 {
+                return vec![f64::INFINITY; m];
+            }
+            for obj in 0..2usize {
+                let key = |i: usize| if obj == 0 { points[i].0 } else { points[i].1 };
+                let mut order: Vec<usize> = (0..m).collect();
+                order.sort_by(|&a, &b| key(front[a]).total_cmp(&key(front[b])));
+                dist[order[0]] = f64::INFINITY;
+                dist[order[m - 1]] = f64::INFINITY;
+                let span = key(front[order[m - 1]]) - key(front[order[0]]);
+                if span <= 0.0 {
+                    continue;
+                }
+                for w in 1..m - 1 {
+                    let prev = key(front[order[w - 1]]);
+                    let next = key(front[order[w + 1]]);
+                    dist[order[w]] += (next - prev) / span;
+                }
+            }
+            dist
+        }
+
+        pub fn select_best(points: &[Objectives], k: usize) -> Vec<usize> {
+            let fronts = non_dominated_sort(points);
+            let mut chosen = Vec::with_capacity(k);
+            for front in &fronts {
+                if chosen.len() + front.len() <= k {
+                    chosen.extend_from_slice(front);
+                } else {
+                    let d = crowding_distance(points, front);
+                    let mut order: Vec<usize> = (0..front.len()).collect();
+                    order.sort_by(|&a, &b| d[b].total_cmp(&d[a]));
+                    for &w in order.iter().take(k - chosen.len()) {
+                        chosen.push(front[w]);
+                    }
+                    break;
+                }
+            }
+            chosen
+        }
+    }
+
+    #[test]
+    fn prop_matrix_core_reproduces_tuple_reference_bit_for_bit() {
+        run_prop(200, 0x3A7, |rng: &mut Rng| {
+            let n = rng.range(1, 40);
+            // Duplicate-heavy coordinates so total_cmp tie-breaks actually
+            // fire, plus occasional non-finite values.
+            let coord = |rng: &mut Rng| {
+                let r = rng.range(0, 10);
+                if r == 0 {
+                    f64::INFINITY
+                } else {
+                    (rng.range(0, 5) as f64) / 2.0
+                }
+            };
+            let pts: Vec<Objectives> = (0..n).map(|_| (coord(rng), coord(rng))).collect();
+            let want_fronts = reference::non_dominated_sort(&pts);
+            let got_fronts = non_dominated_sort(&pts);
+            if want_fronts != got_fronts {
+                return Err(format!("fronts diverged: {want_fronts:?} vs {got_fronts:?}"));
+            }
+            for front in &want_fronts {
+                let want_d = reference::crowding_distance(&pts, front);
+                let got_d = crowding_distance(&pts, front);
+                let same = want_d.len() == got_d.len()
+                    && want_d
+                        .iter()
+                        .zip(got_d.iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    return Err(format!("crowding diverged: {want_d:?} vs {got_d:?}"));
+                }
+            }
+            let k = rng.range(1, n + 1);
+            if reference::select_best(&pts, k) != select_best(&pts, k) {
+                return Err("select_best diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn obj_matrix_round_trips_pairs() {
+        let pts = vec![(0.5, 3.0), (1.0, 1.0)];
+        let m = ObjMatrix::from_pairs(&pts);
+        assert_eq!((m.len(), m.n_obj()), (2, 2));
+        assert_eq!(m.row(0), &[0.5, 3.0]);
+        assert_eq!(m.at(1, 1), 1.0);
+        let mut built = ObjMatrix::new(2);
+        built.push(&[0.5, 3.0]);
+        built.push(&[1.0, 1.0]);
+        assert_eq!(m, built);
+    }
+
+    #[test]
+    fn matrix_core_generalizes_to_three_objectives() {
+        let mut m = ObjMatrix::new(3);
+        m.push(&[0.0, 0.0, 0.0]); // dominates everything
+        m.push(&[1.0, 2.0, 3.0]);
+        m.push(&[2.0, 1.0, 3.0]); // incomparable with the previous row
+        m.push(&[2.0, 2.0, 3.0]); // dominated by both middle rows
+        assert!(dominates_rows(m.row(0), m.row(1)));
+        assert!(!dominates_rows(m.row(1), m.row(2)));
+        assert!(!dominates_rows(m.row(2), m.row(1)));
+        let fronts = non_dominated_sort_mat(&m);
+        assert_eq!(fronts, vec![vec![0], vec![1, 2], vec![3]]);
+        let d = crowding_distance_mat(&m, &fronts[1]);
+        assert!(d.iter().all(|x| x.is_infinite()), "two-member fronts are all-boundary");
+        assert_eq!(select_best_mat(&m, 3), vec![0, 1, 2]);
+        assert_eq!(pareto_front_mat(&m), vec![0]);
     }
 
     #[test]

@@ -33,6 +33,20 @@ use std::sync::Mutex;
 pub trait Evaluator: Sync {
     fn evaluate(&self, g: &Graph) -> Option<Objectives>;
 
+    /// Evaluate a cohort of variants that all share one canonical
+    /// equivalence class (the search groups them by
+    /// [`ProgramCache::canonical_key`], so every graph here compiles to
+    /// the same program). Workloads that execute through [`crate::exec`]
+    /// override this to compile once and run the class's test batches as
+    /// one stacked [`crate::exec::Program::run_lanes`] execution; the
+    /// default just evaluates each graph in turn, so closures and custom
+    /// evaluators keep working unchanged. Implementations MUST be
+    /// bit-identical to per-graph [`Evaluator::evaluate`] calls and
+    /// return exactly `graphs.len()` entries in order.
+    fn evaluate_cohort(&self, graphs: &[&Graph]) -> Vec<Option<Objectives>> {
+        graphs.iter().map(|&g| self.evaluate(g)).collect()
+    }
+
     /// `(hits, misses)` of the workload's compiled-program cache
     /// ([`crate::exec::cache::ProgramCache`]), if it runs one. The search
     /// loop records this in [`SearchResult::program_cache`] so experiment
@@ -114,6 +128,17 @@ pub struct SearchConfig {
     /// checkpoint's config echo. Capped at `islands`; values above
     /// `available_parallelism` just oversubscribe cores.
     pub island_threads: usize,
+    /// Maximum stacked width of a batched-evaluation cohort: offspring
+    /// that collapse onto one canonical equivalence class (same
+    /// [`ProgramCache::canonical_key`]) are evaluated together through
+    /// [`Evaluator::evaluate_cohort`], up to this many per stacked
+    /// execution. `0` or `1` disables batching (genome-at-a-time, the
+    /// historical path). Scheduling only: cohort grouping changes *how*
+    /// evaluations are executed, never their results or order of
+    /// scattering, so any value produces bit-identical fronts, histories
+    /// and RNG states — like `workers` it is excluded from the
+    /// checkpoint's config echo.
+    pub batch: usize,
     /// Optimizer level for the fitness workloads' compiled-program cache
     /// ([`crate::exec::cache::ProgramCache`]): graphs are canonicalized
     /// through the bit-identity-preserving pipeline in [`crate::opt`]
@@ -178,6 +203,7 @@ impl Default for SearchConfig {
             migrants: 2,
             checkpoint_every: 1,
             island_threads: 1,
+            batch: 32,
             opt_level: crate::opt::OptLevel::O0,
             operators: super::operators::default_names(),
             adapt: false,
@@ -243,6 +269,12 @@ pub struct SearchResult {
     /// reduction, memo hit/miss split, `filtered_neutral` proposals),
     /// when the workload runs one.
     pub program_opt: Option<crate::exec::cache::OptStats>,
+    /// Cohort-batching counters of the evaluator's program cache (stacked
+    /// cohorts formed, lane widths, singleton fallbacks, batched vs
+    /// scalar evaluations), when the workload runs one. Scheduling
+    /// observables only — they vary with `--batch` while every search
+    /// result bit stays identical.
+    pub program_batch: Option<crate::exec::cache::BatchStats>,
     /// Per-operator accounting: proposals, accepts, evaluated offspring,
     /// non-neutral evaluations and archive insertions, summed across
     /// islands, plus the final scheduler weight (mean across islands;
@@ -696,16 +728,31 @@ fn tournament(scored: &[usize], rc: &[(usize, f64)], k: usize, rng: &mut Rng) ->
     scored[best_slot]
 }
 
-/// Materialize + evaluate every unevaluated individual, in parallel, with
-/// a shared fitness cache keyed by the edit list. Non-finite objectives
-/// are rejected here — NaN/inf never enters ranking, crowding or dedup.
-/// Returns `(evaluator calls, cache hits)` for this batch.
+/// Materialize + evaluate every unevaluated individual through the
+/// three-stage cohort pipeline, with a shared fitness cache keyed by the
+/// edit list. Non-finite objectives are rejected here — NaN/inf never
+/// enters ranking, crowding or dedup. Returns `(evaluator calls, cache
+/// hits)` for this batch.
+///
+/// **Stage 1 (sequential)** dedups the cohort: fitness-cache hits resolve
+/// immediately; each *unique* unevaluated edit list is materialized once,
+/// replaying the in-order hit/miss sequence of the historical
+/// genome-at-a-time path exactly, so the returned counters are identical
+/// at every `workers`/`batch` setting. **Stage 2 (parallel)** groups the
+/// unique genomes by canonical key ([`ProgramCache::canonical_key`]) into
+/// stacked cohorts of at most `cfg.batch` lanes — one compile, one
+/// [`Evaluator::evaluate_cohort`] call per class — fanned out across the
+/// worker pool; singletons (and everything, with batching off) go through
+/// plain [`Evaluator::evaluate`]. **Stage 3 (sequential)** scatters each
+/// class's objective vector back to every individual that mapped to it
+/// and publishes the results into the fitness cache. Batching is pure
+/// scheduling: results, counters and scatter order are bit-identical to
+/// the per-genome path.
 ///
 /// A panicking evaluator does not take the batch down: the panic is
-/// caught, the candidate scores `None` (same as any invalid variant), and
-/// every lock is acquired poison-tolerantly, so one bad worker can't
-/// cascade into panics on its siblings or on other islands. (The caches'
-/// invariant survives a mid-panic guard: entries are insert-only.)
+/// caught, its class scores `None` (same as any invalid variant), and
+/// result slots are acquired poison-tolerantly, so one bad worker can't
+/// cascade into panics on its siblings or on other islands.
 fn evaluate_all(
     original: &Graph,
     eval: &dyn Evaluator,
@@ -716,49 +763,157 @@ fn evaluate_all(
     fn unpoisoned<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
         r.unwrap_or_else(|p| p.into_inner())
     }
-    let shared = Mutex::new(std::mem::take(cache));
-    let cache_hits = AtomicUsize::new(0);
-    let total_evals = AtomicUsize::new(0);
     let todo: Vec<usize> = (0..pop.len()).filter(|&i| pop[i].objectives.is_none()).collect();
-    let results: Vec<Mutex<Option<Option<Objectives>>>> =
-        todo.iter().map(|_| Mutex::new(None)).collect();
+
+    // Stage 1 — dedup. `slots[w]` says where todo member `w`'s result
+    // comes from: a cache hit, or a unique genome evaluated this round.
+    enum Slot {
+        Done(Option<Objectives>),
+        Pending(usize), // index into `uniques`
+    }
+    struct UniqueGenome {
+        key: u64,
+        /// `None` when the edit list failed to materialize (scores `None`
+        /// without an evaluator call, like the historical path).
+        graph: Option<Graph>,
+        result: Option<Objectives>,
+    }
+    let mut cache_hits = 0usize;
+    let mut total_evals = 0usize;
+    let mut uniques: Vec<UniqueGenome> = Vec::new();
+    let mut pending: HashMap<u64, usize> = HashMap::new();
+    let slots: Vec<Slot> = todo
+        .iter()
+        .map(|&i| {
+            let key = pop[i].cache_key();
+            if let Some(hit) = cache.get(&key).copied() {
+                cache_hits += 1;
+                return Slot::Done(hit);
+            }
+            if let Some(&u) = pending.get(&key) {
+                // Duplicate edit list within this generation: the
+                // in-order path would find the first occurrence's
+                // freshly-inserted cache entry, so it counts as a hit.
+                cache_hits += 1;
+                return Slot::Pending(u);
+            }
+            let graph = match pop[i].materialize(original) {
+                Ok(g) => {
+                    total_evals += 1;
+                    Some(g)
+                }
+                Err(_) => None,
+            };
+            let u = uniques.len();
+            uniques.push(UniqueGenome { key, graph, result: None });
+            pending.insert(key, u);
+            Slot::Pending(u)
+        })
+        .collect();
+
+    // Group unique genomes into classes of canonically-equivalent graphs
+    // (they share one compiled program), capped at `cfg.batch` lanes; a
+    // full class stays closed and a fresh one opens for the overflow.
+    // With batching off every materialized genome is its own class.
+    let pc = eval.program_cache();
+    let use_batch = cfg.batch >= 2 && pc.is_some();
+    let mut classes: Vec<Vec<usize>> = Vec::new();
+    if use_batch {
+        let pc = pc.expect("use_batch checked program_cache");
+        let mut open: HashMap<u128, usize> = HashMap::new();
+        for (u, uq) in uniques.iter().enumerate() {
+            let Some(g) = &uq.graph else { continue };
+            let canon = pc.canonical_key(g);
+            match open.get(&canon) {
+                Some(&c) if classes[c].len() < cfg.batch => classes[c].push(u),
+                _ => {
+                    open.insert(canon, classes.len());
+                    classes.push(vec![u]);
+                }
+            }
+        }
+    } else {
+        classes.extend(
+            uniques
+                .iter()
+                .enumerate()
+                .filter(|(_, uq)| uq.graph.is_some())
+                .map(|(u, _)| vec![u]),
+        );
+    }
+
+    // Stage 2 — one evaluation per class, classes fanned out across the
+    // worker pool.
+    let class_results: Vec<Mutex<Option<Vec<Option<Objectives>>>>> =
+        classes.iter().map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
-    let workers = cfg.workers.max(1).min(todo.len().max(1));
+    let workers = cfg.workers.max(1).min(classes.len().max(1));
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
-                let w = next.fetch_add(1, Ordering::Relaxed);
-                if w >= todo.len() {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                if c >= classes.len() {
                     break;
                 }
-                let ind = &pop[todo[w]];
-                let key = ind.cache_key();
-                if let Some(hit) = unpoisoned(shared.lock()).get(&key).copied() {
-                    cache_hits.fetch_add(1, Ordering::Relaxed);
-                    *unpoisoned(results[w].lock()) = Some(hit);
-                    continue;
-                }
-                let obj = match ind.materialize(original) {
-                    Ok(g) => {
-                        total_evals.fetch_add(1, Ordering::Relaxed);
-                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                            eval.evaluate(&g)
-                        }))
-                        .unwrap_or(None)
-                        .filter(|o| o.0.is_finite() && o.1.is_finite())
+                let members = &classes[c];
+                let graphs: Vec<&Graph> = members
+                    .iter()
+                    .map(|&u| {
+                        uniques[u].graph.as_ref().expect("classes hold materialized graphs")
+                    })
+                    .collect();
+                let raw: Vec<Option<Objectives>> = if graphs.len() == 1 {
+                    if let Some(pc) = pc {
+                        if use_batch {
+                            pc.record_batch_singleton();
+                        } else {
+                            pc.record_scalar_eval();
+                        }
                     }
-                    Err(_) => None,
+                    vec![std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        eval.evaluate(graphs[0])
+                    }))
+                    .unwrap_or(None)]
+                } else {
+                    if let Some(pc) = pc {
+                        pc.record_batch_cohort(graphs.len());
+                    }
+                    let mut out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        eval.evaluate_cohort(&graphs)
+                    }))
+                    .unwrap_or_default();
+                    // A misbehaving implementation must not desync the
+                    // scatter: clamp to exactly one result per lane.
+                    out.resize(graphs.len(), None);
+                    out
                 };
-                unpoisoned(shared.lock()).insert(key, obj);
-                *unpoisoned(results[w].lock()) = Some(obj);
+                let filtered: Vec<Option<Objectives>> = raw
+                    .into_iter()
+                    .map(|o| o.filter(|o| o.0.is_finite() && o.1.is_finite()))
+                    .collect();
+                *unpoisoned(class_results[c].lock()) = Some(filtered);
             });
         }
     });
-    for (w, &i) in todo.iter().enumerate() {
-        pop[i].objectives = unpoisoned(results[w].lock()).flatten();
+
+    // Stage 3 — scatter class results to unique genomes, publish them
+    // into the fitness cache, then scatter to individuals.
+    for (c, members) in classes.iter().enumerate() {
+        let results = unpoisoned(class_results[c].lock()).take().unwrap_or_default();
+        for (k, &u) in members.iter().enumerate() {
+            uniques[u].result = results.get(k).copied().flatten();
+        }
     }
-    *cache = unpoisoned(shared.into_inner());
-    (total_evals.into_inner(), cache_hits.into_inner())
+    for uq in &uniques {
+        cache.insert(uq.key, uq.result);
+    }
+    for (w, &i) in todo.iter().enumerate() {
+        pop[i].objectives = match &slots[w] {
+            Slot::Done(r) => *r,
+            Slot::Pending(u) => uniques[*u].result,
+        };
+    }
+    (total_evals, cache_hits)
 }
 
 #[cfg(test)]

@@ -93,6 +93,30 @@ pub struct OptStats {
     pub lock_contended: usize,
 }
 
+/// Batched-evaluation counters of a [`ProgramCache`]: how the cohort
+/// pipeline (`evo/search.rs::evaluate_all`) grouped the population into
+/// stacked [`super::Program::run_lanes`] executions. Pure scheduling
+/// observables — every value here can change with `--batch` while the
+/// search trajectory stays bit-identical.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Stacked cohorts executed (width ≥ 2).
+    pub cohorts: usize,
+    /// Total lanes across those cohorts; `lanes / cohorts` is the mean
+    /// stacked width.
+    pub lanes: usize,
+    /// Widest single cohort.
+    pub max_width: usize,
+    /// Equivalence classes of width 1 that fell back to the scalar path
+    /// while batching was on.
+    pub singletons: usize,
+    /// Individual evaluations that went through a stacked cohort.
+    pub batched_evals: usize,
+    /// Individual evaluations that ran genome-at-a-time (singleton
+    /// fallbacks, or batching off).
+    pub scalar_evals: usize,
+}
+
 /// Aggregate kernel-fusion outcome across every program a cache compiled
 /// at `OptLevel::O3` (see [`super::FusionStats`] for the per-program
 /// form).
@@ -145,6 +169,12 @@ pub struct ProgramCache {
     fuse_steps_after: AtomicUsize,
     fuse_peak_before: AtomicUsize,
     fuse_peak_after: AtomicUsize,
+    batch_cohorts: AtomicUsize,
+    batch_lanes: AtomicUsize,
+    batch_max_width: AtomicUsize,
+    batch_singletons: AtomicUsize,
+    batched_evals: AtomicUsize,
+    scalar_evals: AtomicUsize,
 }
 
 impl Default for ProgramCache {
@@ -183,6 +213,12 @@ impl ProgramCache {
             fuse_steps_after: AtomicUsize::new(0),
             fuse_peak_before: AtomicUsize::new(0),
             fuse_peak_after: AtomicUsize::new(0),
+            batch_cohorts: AtomicUsize::new(0),
+            batch_lanes: AtomicUsize::new(0),
+            batch_max_width: AtomicUsize::new(0),
+            batch_singletons: AtomicUsize::new(0),
+            batched_evals: AtomicUsize::new(0),
+            scalar_evals: AtomicUsize::new(0),
         }
     }
 
@@ -361,6 +397,40 @@ impl ProgramCache {
             peak_before: self.fuse_peak_before.load(Ordering::Relaxed),
             peak_after: self.fuse_peak_after.load(Ordering::Relaxed),
         })
+    }
+
+    /// Record one stacked cohort of `width` lanes executed through
+    /// [`super::Program::run_lanes`].
+    pub fn record_batch_cohort(&self, width: usize) {
+        self.batch_cohorts.fetch_add(1, Ordering::Relaxed);
+        self.batch_lanes.fetch_add(width, Ordering::Relaxed);
+        self.batched_evals.fetch_add(width, Ordering::Relaxed);
+        self.batch_max_width.fetch_max(width, Ordering::Relaxed);
+    }
+
+    /// Record one width-1 equivalence class that fell back to the scalar
+    /// path while batching was on.
+    pub fn record_batch_singleton(&self) {
+        self.batch_singletons.fetch_add(1, Ordering::Relaxed);
+        self.scalar_evals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one genome-at-a-time evaluation (batching off).
+    pub fn record_scalar_eval(&self) {
+        self.scalar_evals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cohort-pipeline counters so far (all zero when the search never
+    /// batched — e.g. `--batch 0`, or an evaluator without a cache).
+    pub fn batch_stats(&self) -> BatchStats {
+        BatchStats {
+            cohorts: self.batch_cohorts.load(Ordering::Relaxed),
+            lanes: self.batch_lanes.load(Ordering::Relaxed),
+            max_width: self.batch_max_width.load(Ordering::Relaxed),
+            singletons: self.batch_singletons.load(Ordering::Relaxed),
+            batched_evals: self.batched_evals.load(Ordering::Relaxed),
+            scalar_evals: self.scalar_evals.load(Ordering::Relaxed),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -601,6 +671,23 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "O3 cache changed bits");
             }
         }
+    }
+
+    #[test]
+    fn batch_stats_accumulate() {
+        let c = ProgramCache::new();
+        assert_eq!(c.batch_stats(), BatchStats::default());
+        c.record_batch_cohort(3);
+        c.record_batch_cohort(8);
+        c.record_batch_singleton();
+        c.record_scalar_eval();
+        let s = c.batch_stats();
+        assert_eq!(s.cohorts, 2);
+        assert_eq!(s.lanes, 11);
+        assert_eq!(s.max_width, 8);
+        assert_eq!(s.singletons, 1);
+        assert_eq!(s.batched_evals, 11);
+        assert_eq!(s.scalar_evals, 2);
     }
 
     #[test]

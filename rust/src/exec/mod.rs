@@ -176,6 +176,36 @@ enum Reg {
     Input(usize),
 }
 
+/// Reusable run state for batched execution ([`Program::run_lanes`]): a
+/// register file of *stacked* buffers (leading batch dimension — lane
+/// `v`'s value lives at `buf[v*numel .. (v+1)*numel]`), the same recycled
+/// buffer arena as [`Scratch`], and the shared `FusedMap` per-element
+/// register file (lane-strided: lanes run back-to-back through one
+/// scratch, so the fused hot loop stays allocation-free).
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    regs: Vec<BReg>,
+    arena: Arena,
+    fuse_regs: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn new() -> BatchScratch {
+        BatchScratch::default()
+    }
+}
+
+/// One batched register: a stacked buffer over all live lanes, or a
+/// zero-copy view shared by every lane (constants) / striped per lane
+/// (entry arguments).
+#[derive(Debug)]
+enum BReg {
+    Empty,
+    Stacked(Vec<f32>),
+    Const(usize),
+    Input(usize),
+}
+
 /// LIFO free list of recycled `f32` buffers.
 #[derive(Debug, Default)]
 struct Arena {
@@ -265,6 +295,61 @@ fn get_reg<'a>(
         Reg::Const(k) => Ok(&consts[*k]),
         Reg::Input(i) => Ok(inputs[*i]),
         Reg::Empty => Err(EvalError::Missing(vids[slot])),
+    }
+}
+
+/// Lane `v`'s data slice of register `slot` during a batched run.
+/// `dims_of[slot]` carries the register's verified dims so stacked
+/// buffers can be striped without storing per-lane tensors.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn lane_slice<'a>(
+    regs: &'a [BReg],
+    consts: &'a [Tensor],
+    lanes: &'a [&'a [&'a Tensor]],
+    valid: &[usize],
+    dims_of: &[&[usize]],
+    vids: &[ValueId],
+    slot: usize,
+    v: usize,
+) -> Result<&'a [f32], EvalError> {
+    match &regs[slot] {
+        BReg::Stacked(buf) => {
+            let numel: usize = dims_of[slot].iter().product();
+            Ok(&buf[v * numel..(v + 1) * numel])
+        }
+        BReg::Const(k) => Ok(consts[*k].data()),
+        BReg::Input(i) => Ok(lanes[valid[v]][*i].data()),
+        BReg::Empty => Err(EvalError::Missing(vids[slot])),
+    }
+}
+
+/// Lane `v`'s value of register `slot` as a whole tensor, borrowing the
+/// original where one exists (constants, entry arguments) and
+/// materializing a lane copy only for stacked buffers — used by the
+/// batched fallback kinds that dispatch to the tensor-shaped kernels.
+#[allow(clippy::too_many_arguments)]
+fn lane_tensor<'a>(
+    regs: &'a [BReg],
+    consts: &'a [Tensor],
+    lanes: &'a [&'a [&'a Tensor]],
+    valid: &[usize],
+    dims_of: &[&[usize]],
+    vids: &[ValueId],
+    slot: usize,
+    v: usize,
+) -> Result<std::borrow::Cow<'a, Tensor>, EvalError> {
+    match &regs[slot] {
+        BReg::Stacked(buf) => {
+            let numel: usize = dims_of[slot].iter().product();
+            Ok(std::borrow::Cow::Owned(Tensor::new(
+                Shape::of(dims_of[slot]),
+                buf[v * numel..(v + 1) * numel].to_vec(),
+            )))
+        }
+        BReg::Const(k) => Ok(std::borrow::Cow::Borrowed(&consts[*k])),
+        BReg::Input(i) => Ok(std::borrow::Cow::Borrowed(lanes[valid[v]][*i])),
+        BReg::Empty => Err(EvalError::Missing(vids[slot])),
     }
 }
 
@@ -518,22 +603,7 @@ impl Program {
         inputs: &[&Tensor],
         scratch: &mut Scratch,
     ) -> Result<Vec<Tensor>, EvalError> {
-        if inputs.len() != self.num_params {
-            return Err(EvalError::ArgCount { got: inputs.len(), want: self.num_params });
-        }
-        // Parameter shape validation, in instruction order (same first
-        // error as the interpreter).
-        for step in &self.steps {
-            if let StepKind::Param { index } = step.kind {
-                if inputs[index].dims() != step.out_dims.as_slice() {
-                    return Err(EvalError::ArgShape {
-                        index,
-                        got: inputs[index].dims().to_vec(),
-                        want: step.out_dims.clone(),
-                    });
-                }
-            }
-        }
+        self.validate_inputs(inputs)?;
 
         // Reset the register file, recycling buffers from the previous run.
         // Registers are indexed by instruction position (`Step::dst`), so
@@ -563,6 +633,356 @@ impl Program {
                     .map(|t| t.clone())
             })
             .collect()
+    }
+
+    /// Shared argument validation for the scalar and batched paths —
+    /// arity first, then parameter shapes in instruction order, so both
+    /// report the same first error as the interpreter.
+    fn validate_inputs(&self, inputs: &[&Tensor]) -> Result<(), EvalError> {
+        if inputs.len() != self.num_params {
+            return Err(EvalError::ArgCount { got: inputs.len(), want: self.num_params });
+        }
+        for step in &self.steps {
+            if let StepKind::Param { index } = step.kind {
+                if inputs[index].dims() != step.out_dims.as_slice() {
+                    return Err(EvalError::ArgShape {
+                        index,
+                        got: inputs[index].dims().to_vec(),
+                        want: step.out_dims.clone(),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute many input sets ("lanes") through this program as one
+    /// stacked batch: each intermediate lives as a single `lanes × numel`
+    /// buffer in the arena, GEMM steps run per-lane over the shared slice
+    /// kernels, and `FusedMap` reuses one lane-strided scratch register
+    /// file. The kernels and per-lane element order are exactly those of
+    /// [`Program::run_refs`], so every lane's outputs are bit-identical
+    /// to a scalar run over the same inputs — batching is a scheduling
+    /// change, not a semantic one.
+    ///
+    /// Lanes are independent for validation errors: a lane whose inputs
+    /// fail [arity/shape] validation gets its own `Err` while the rest
+    /// still execute. An engine error *during* stacked execution (never
+    /// expected after validation) is replicated to all valid lanes.
+    pub fn run_lanes(
+        &self,
+        lanes: &[&[&Tensor]],
+        scratch: &mut BatchScratch,
+    ) -> Vec<Result<Vec<Tensor>, EvalError>> {
+        let mut results: Vec<Result<Vec<Tensor>, EvalError>> = lanes
+            .iter()
+            .map(|inputs| self.validate_inputs(inputs).map(|()| Vec::new()))
+            .collect();
+        let valid: Vec<usize> = (0..lanes.len()).filter(|&i| results[i].is_ok()).collect();
+        if valid.is_empty() {
+            return results;
+        }
+        match self.run_lanes_valid(lanes, &valid, scratch) {
+            Ok(outs) => {
+                for (&v, out) in valid.iter().zip(outs) {
+                    results[v] = Ok(out);
+                }
+            }
+            Err(e) => {
+                for &v in &valid {
+                    results[v] = Err(e.clone());
+                }
+            }
+        }
+        results
+    }
+
+    /// Stacked execution over the pre-validated lanes in `valid` (indices
+    /// into `lanes`). Lane `v` of a stacked register occupies
+    /// `buf[v * numel .. (v + 1) * numel]`.
+    fn run_lanes_valid(
+        &self,
+        lanes: &[&[&Tensor]],
+        valid: &[usize],
+        scratch: &mut BatchScratch,
+    ) -> Result<Vec<Vec<Tensor>>, EvalError> {
+        let l = valid.len();
+        let n = self.slot_vids.len();
+        for reg in scratch.regs.iter_mut() {
+            if let BReg::Stacked(buf) = std::mem::replace(reg, BReg::Empty) {
+                scratch.arena.put(buf);
+            }
+        }
+        scratch.regs.resize_with(n, || BReg::Empty);
+
+        // Result dims per register, for slicing stacked buffers back into
+        // per-lane views.
+        let mut dims_of: Vec<&[usize]> = vec![&[]; n];
+        for step in &self.steps {
+            dims_of[step.dst] = &step.out_dims;
+        }
+
+        for step in &self.steps {
+            match &step.kind {
+                StepKind::Param { index } => {
+                    scratch.regs[step.dst] = BReg::Input(*index);
+                }
+                StepKind::Const { idx } => {
+                    scratch.regs[step.dst] = BReg::Const(*idx);
+                }
+                kind => {
+                    let numel: usize = step.out_dims.iter().product();
+                    let mut out = scratch.arena.take();
+                    out.clear();
+                    out.reserve(l * numel);
+                    {
+                        // `regs` is a disjoint field from `fuse_regs`, so
+                        // the FusedMap arm's split borrow is fine.
+                        let regs = &scratch.regs;
+                        let slice = |slot: usize, v: usize| {
+                            lane_slice(
+                                regs,
+                                &self.consts,
+                                lanes,
+                                valid,
+                                &dims_of,
+                                &self.slot_vids,
+                                slot,
+                                v,
+                            )
+                        };
+                        let tensor = |slot: usize, v: usize| {
+                            lane_tensor(
+                                regs,
+                                &self.consts,
+                                lanes,
+                                valid,
+                                &dims_of,
+                                &self.slot_vids,
+                                slot,
+                                v,
+                            )
+                        };
+                        match kind {
+                            StepKind::Param { .. } | StepKind::Const { .. } => {
+                                unreachable!("handled above")
+                            }
+                            StepKind::Bin(op) => {
+                                let f = op.apply();
+                                for v in 0..l {
+                                    let a = slice(step.args[0], v)?;
+                                    let b = slice(step.args[1], v)?;
+                                    out.extend(
+                                        a.iter().zip(b.iter()).map(|(&x, &y)| f(x, y)),
+                                    );
+                                }
+                            }
+                            StepKind::Un(op) => {
+                                let f = op.apply();
+                                for v in 0..l {
+                                    out.extend(slice(step.args[0], v)?.iter().map(|&x| f(x)));
+                                }
+                            }
+                            StepKind::Select => {
+                                for v in 0..l {
+                                    let p = slice(step.args[0], v)?;
+                                    let t = slice(step.args[1], v)?;
+                                    let fsl = slice(step.args[2], v)?;
+                                    ops::select_append(p, t, fsl, &mut out);
+                                }
+                            }
+                            StepKind::Dot2x2 => {
+                                out.resize(l * numel, 0.0);
+                                let adims = dims_of[step.args[0]];
+                                let (m, k) = (adims[0], adims[1]);
+                                let nn = step.out_dims[1];
+                                for v in 0..l {
+                                    let a = slice(step.args[0], v)?;
+                                    let b = slice(step.args[1], v)?;
+                                    ops::matmul_slices(
+                                        a,
+                                        b,
+                                        m,
+                                        k,
+                                        nn,
+                                        &mut out[v * numel..(v + 1) * numel],
+                                    );
+                                }
+                            }
+                            StepKind::DotBias { bias_first } => {
+                                out.resize(l * numel, 0.0);
+                                let adims = dims_of[step.args[0]];
+                                let (m, k) = (adims[0], adims[1]);
+                                let nn = step.out_dims[1];
+                                for v in 0..l {
+                                    let a = slice(step.args[0], v)?;
+                                    let b = slice(step.args[1], v)?;
+                                    let bias = slice(step.args[2], v)?;
+                                    ops::dot_bias_slices(
+                                        a,
+                                        b,
+                                        bias,
+                                        m,
+                                        k,
+                                        nn,
+                                        *bias_first,
+                                        &mut out[v * numel..(v + 1) * numel],
+                                    );
+                                }
+                            }
+                            StepKind::FusedMap { splats, instrs } => {
+                                let mut ins: Vec<&[f32]> =
+                                    Vec::with_capacity(step.args.len());
+                                for v in 0..l {
+                                    ins.clear();
+                                    for &a in &step.args {
+                                        ins.push(slice(a, v)?);
+                                    }
+                                    ops::fused_map_append(
+                                        &ins,
+                                        splats,
+                                        instrs,
+                                        numel,
+                                        &mut scratch.fuse_regs,
+                                        &mut out,
+                                    );
+                                }
+                            }
+                            StepKind::Reshape => {
+                                for v in 0..l {
+                                    out.extend_from_slice(slice(step.args[0], v)?);
+                                }
+                            }
+                            StepKind::Broadcast { mapping } => {
+                                for v in 0..l {
+                                    ops::broadcast_in_dim_append(
+                                        slice(step.args[0], v)?,
+                                        dims_of[step.args[0]],
+                                        &step.out_dims,
+                                        mapping,
+                                        &mut out,
+                                    );
+                                }
+                            }
+                            // Rare shapes: materialize per-lane tensors and
+                            // reuse the scalar kernels verbatim.
+                            StepKind::DotOther => {
+                                for v in 0..l {
+                                    let a = tensor(step.args[0], v)?;
+                                    let b = tensor(step.args[1], v)?;
+                                    out.extend_from_slice(ops::dot(&a, &b).data());
+                                }
+                            }
+                            StepKind::Transpose { perm } => {
+                                for v in 0..l {
+                                    let a = tensor(step.args[0], v)?;
+                                    out.extend_from_slice(ops::transpose(&a, perm).data());
+                                }
+                            }
+                            StepKind::Pad { low, high, value } => {
+                                for v in 0..l {
+                                    let a = tensor(step.args[0], v)?;
+                                    out.extend_from_slice(
+                                        ops::pad(&a, low, high, *value).data(),
+                                    );
+                                }
+                            }
+                            StepKind::Slice { starts, limits } => {
+                                for v in 0..l {
+                                    let a = tensor(step.args[0], v)?;
+                                    out.extend_from_slice(
+                                        ops::slice(&a, starts, limits).data(),
+                                    );
+                                }
+                            }
+                            StepKind::Concat { dim } => {
+                                for v in 0..l {
+                                    let a = tensor(step.args[0], v)?;
+                                    let b = tensor(step.args[1], v)?;
+                                    out.extend_from_slice(
+                                        ops::concat(&[&*a, &*b], *dim).data(),
+                                    );
+                                }
+                            }
+                            StepKind::Reduce { dims, kind } => {
+                                for v in 0..l {
+                                    let a = tensor(step.args[0], v)?;
+                                    out.extend_from_slice(
+                                        ops::reduce(&a, dims, *kind).data(),
+                                    );
+                                }
+                            }
+                            StepKind::Conv2d { stride, same } => {
+                                for v in 0..l {
+                                    let a = tensor(step.args[0], v)?;
+                                    let b = tensor(step.args[1], v)?;
+                                    out.extend_from_slice(
+                                        ops::conv2d(&a, &b, *stride, *same).data(),
+                                    );
+                                }
+                            }
+                            StepKind::DepthwiseConv2d { stride, same } => {
+                                for v in 0..l {
+                                    let a = tensor(step.args[0], v)?;
+                                    let b = tensor(step.args[1], v)?;
+                                    out.extend_from_slice(
+                                        ops::depthwise_conv2d(&a, &b, *stride, *same).data(),
+                                    );
+                                }
+                            }
+                            StepKind::GlobalAvgPool => {
+                                for v in 0..l {
+                                    let a = tensor(step.args[0], v)?;
+                                    out.extend_from_slice(ops::global_avg_pool(&a).data());
+                                }
+                            }
+                        }
+                    }
+                    debug_assert_eq!(
+                        out.len(),
+                        l * numel,
+                        "batched engine/type-inference disagreement in '{}'",
+                        self.name
+                    );
+                    scratch.regs[step.dst] = BReg::Stacked(out);
+                }
+            }
+            for &k in &step.kills {
+                if let BReg::Stacked(buf) = std::mem::replace(&mut scratch.regs[k], BReg::Empty)
+                {
+                    scratch.arena.put(buf);
+                }
+            }
+        }
+
+        let mut outs: Vec<Vec<Tensor>> = (0..l)
+            .map(|_| Vec::with_capacity(self.outputs.len()))
+            .collect();
+        for &slot in &self.outputs {
+            match &scratch.regs[slot] {
+                BReg::Stacked(buf) => {
+                    let numel: usize = dims_of[slot].iter().product();
+                    for (v, lane_out) in outs.iter_mut().enumerate() {
+                        lane_out.push(Tensor::new(
+                            Shape::of(dims_of[slot]),
+                            buf[v * numel..(v + 1) * numel].to_vec(),
+                        ));
+                    }
+                }
+                BReg::Const(k) => {
+                    for lane_out in outs.iter_mut() {
+                        lane_out.push(self.consts[*k].clone());
+                    }
+                }
+                BReg::Input(i) => {
+                    for (v, lane_out) in outs.iter_mut().enumerate() {
+                        lane_out.push(lanes[valid[v]][*i].clone());
+                    }
+                }
+                BReg::Empty => return Err(EvalError::Missing(self.slot_vids[slot])),
+            }
+        }
+        Ok(outs)
     }
 
     fn exec_step(
@@ -978,5 +1398,116 @@ mod tests {
             let again = p.run_with(&inputs, &mut scratch).unwrap();
             assert!(bits_equal(&first, &again));
         }
+    }
+
+    fn lane_inputs(g: &Graph, seed: u64, lanes: usize) -> Vec<Vec<Tensor>> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..lanes)
+            .map(|_| {
+                g.param_types()
+                    .iter()
+                    .map(|t| Tensor::rand_uniform(&t.dims, 0.0, 1.0, &mut rng))
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn assert_lanes_match_scalar(p: &Program, lane_sets: &[Vec<Tensor>]) {
+        let refs: Vec<Vec<&Tensor>> =
+            lane_sets.iter().map(|set| set.iter().collect()).collect();
+        let lanes: Vec<&[&Tensor]> = refs.iter().map(|r| r.as_slice()).collect();
+        let mut bscratch = BatchScratch::new();
+        // Twice: the second pass exercises a warm (recycled) scratch.
+        for pass in 0..2 {
+            let got = p.run_lanes(&lanes, &mut bscratch);
+            assert_eq!(got.len(), lane_sets.len());
+            let mut scratch = Scratch::new();
+            for (v, set) in lane_sets.iter().enumerate() {
+                let want = p.run_with(set, &mut scratch).unwrap();
+                let batched = got[v].as_ref().unwrap_or_else(|e| {
+                    panic!("pass {pass} lane {v}: batched run failed: {e:?}")
+                });
+                assert!(
+                    bits_equal(&want, batched),
+                    "pass {pass} lane {v}: batched outputs diverged from scalar"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn run_lanes_bit_identical_on_diamond() {
+        let g = diamond();
+        let p = Program::compile(&g).unwrap();
+        assert_lanes_match_scalar(&p, &lane_inputs(&g, 21, 5));
+    }
+
+    #[test]
+    fn run_lanes_bit_identical_on_workload_graphs_fused_and_not() {
+        let spec = crate::models::twofc::TwoFcSpec {
+            batch: 4,
+            input: 9,
+            hidden: 6,
+            classes: 3,
+            lr: 0.1,
+        };
+        for g in [
+            crate::models::twofc::predict_graph(&spec),
+            crate::models::twofc::train_step_graph(&spec),
+        ] {
+            for p in [Program::compile(&g).unwrap(), Program::compile_fused(&g).unwrap()] {
+                assert_lanes_match_scalar(&p, &lane_inputs(&g, 23, 7));
+            }
+        }
+    }
+
+    #[test]
+    fn run_lanes_single_lane_matches_run_refs() {
+        let g = diamond();
+        let p = Program::compile(&g).unwrap();
+        assert_lanes_match_scalar(&p, &lane_inputs(&g, 29, 1));
+    }
+
+    #[test]
+    fn run_lanes_bad_lane_fails_alone_with_scalar_error() {
+        let g = diamond();
+        let p = Program::compile(&g).unwrap();
+        let good = lane_inputs(&g, 31, 3);
+        let bad = Tensor::zeros(&[5, 5]);
+        let bad_arity: Vec<&Tensor> = vec![];
+        let bad_shape: Vec<&Tensor> = vec![&bad];
+        let g0: Vec<&Tensor> = good[0].iter().collect();
+        let g1: Vec<&Tensor> = good[1].iter().collect();
+        let g2: Vec<&Tensor> = good[2].iter().collect();
+        let lanes: Vec<&[&Tensor]> =
+            vec![&g0, &bad_shape, &g1, &bad_arity, &g2];
+        let got = p.run_lanes(&lanes, &mut BatchScratch::new());
+        let mut scratch = Scratch::new();
+        for (v, lane) in lanes.iter().enumerate() {
+            match p.run_refs(lane, &mut scratch) {
+                Ok(want) => assert!(
+                    bits_equal(&want, got[v].as_ref().unwrap()),
+                    "lane {v}: good lane diverged next to failing lanes"
+                ),
+                Err(want) => assert_eq!(
+                    &want,
+                    got[v].as_ref().unwrap_err(),
+                    "lane {v}: error must match the scalar path exactly"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn run_lanes_empty_and_all_invalid() {
+        let g = diamond();
+        let p = Program::compile(&g).unwrap();
+        assert!(p.run_lanes(&[], &mut BatchScratch::new()).is_empty());
+        let empty: Vec<&Tensor> = vec![];
+        let got = p.run_lanes(&[&empty, &empty], &mut BatchScratch::new());
+        assert!(got.iter().all(|r| matches!(
+            r,
+            Err(EvalError::ArgCount { got: 0, want: 1 })
+        )));
     }
 }

@@ -10,7 +10,7 @@ use crate::data::Dataset;
 use crate::evo::nsga2::Objectives;
 use crate::evo::search::Evaluator;
 use crate::exec::cache::ProgramCache;
-use crate::exec::Scratch;
+use crate::exec::{BatchScratch, Scratch};
 use crate::ir::Graph;
 use crate::tensor::Tensor;
 use std::time::Instant;
@@ -126,6 +126,44 @@ impl PredictionWorkload {
         Some((correct as f64 / total.max(1) as f64, t0.elapsed().as_secs_f64()))
     }
 
+    /// Cohort-shaped run over the fitness split: one compile for the
+    /// whole equivalence class, then every fitness batch executes as one
+    /// lane of a stacked [`crate::exec::Program::run_lanes`] batch
+    /// instead of a sequential `run_refs` loop. The stacked engine uses
+    /// the same kernels in the same per-lane element order as the scalar
+    /// path, so the resulting accuracy is bit-identical to
+    /// [`PredictionWorkload::run`]; only wall time (a non-deterministic
+    /// measurement to begin with) is clocked over the stacked execution.
+    fn run_stacked(&self, g: &Graph) -> Option<(f64, f64)> {
+        let prog = self.programs.get_or_compile(g).ok()?;
+        let mut scratch = BatchScratch::new();
+        let lane_inputs: Vec<[&Tensor; 1]> =
+            self.fit_batches.iter().map(|(x, _)| [x]).collect();
+        let lanes: Vec<&[&Tensor]> = lane_inputs.iter().map(|a| a.as_slice()).collect();
+        let t0 = Instant::now();
+        let results = prog.run_lanes(&lanes, &mut scratch);
+        let wall = t0.elapsed().as_secs_f64();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        // Walk lanes in batch order so the first failing / non-finite
+        // batch rejects the variant exactly like the sequential loop.
+        for ((_, labels), res) in self.fit_batches.iter().zip(results) {
+            let out = res.ok()?;
+            let probs = &out[0];
+            if probs.has_non_finite() {
+                return None;
+            }
+            let preds = crate::tensor::ops::argmax_last(probs);
+            for (row, &p) in preds.data().iter().enumerate() {
+                if p as usize == labels[row] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Some((correct as f64 / total.max(1) as f64, wall))
+    }
+
     /// Post-hoc evaluation on the held-out split (§4.3's "evaluated
     /// against a separate dataset unseen to GEVO-ML").
     pub fn post_hoc(&self, g: &Graph) -> Option<Objectives> {
@@ -145,6 +183,26 @@ impl Evaluator for PredictionWorkload {
         let (acc, wall) = self.run(g, false)?;
         let fr = g.total_flops() as f64 / self.baseline_flops;
         Some((combine_runtime(self.metric, fr, wall, self.baseline_wall), 1.0 - acc))
+    }
+
+    /// The whole class compiles to one program, so accuracy (and with it
+    /// the error objective) is class-level: one stacked execution scores
+    /// every member. The runtime objective stays per-member — each
+    /// genome's flops ratio is computed on its own raw graph, exactly as
+    /// [`PredictionWorkload::evaluate`] does.
+    fn evaluate_cohort(&self, graphs: &[&Graph]) -> Vec<Option<Objectives>> {
+        if graphs.len() < 2 {
+            return graphs.iter().map(|&g| self.evaluate(g)).collect();
+        }
+        let shared = self.run_stacked(graphs[0]);
+        graphs
+            .iter()
+            .map(|&g| {
+                let (acc, wall) = shared?;
+                let fr = g.total_flops() as f64 / self.baseline_flops;
+                Some((combine_runtime(self.metric, fr, wall, self.baseline_wall), 1.0 - acc))
+            })
+            .collect()
     }
 
     fn exec_cache_stats(&self) -> Option<(usize, usize)> {
@@ -216,6 +274,19 @@ mod tests {
         let mut g1 = g.clone();
         mobilenet::key_mutations(&mut g1, &[KeyMutation::DropLastConv]);
         assert_eq!(wl0.evaluate(&g1), wl2.evaluate(&g1));
+    }
+
+    #[test]
+    fn cohort_evaluation_is_bit_identical_to_scalar() {
+        let (_, g, wl) = setup();
+        let scalar = wl.evaluate(&g);
+        // A width-2 cohort of canonically-equal members forces the
+        // stacked run_lanes path; objectives must match bit-for-bit.
+        assert_eq!(wl.evaluate_cohort(&[&g, &g]), vec![scalar, scalar]);
+        // Width 1 falls back to the scalar path.
+        let mut g1 = g.clone();
+        mobilenet::key_mutations(&mut g1, &[KeyMutation::DropLastConv]);
+        assert_eq!(wl.evaluate_cohort(&[&g1]), vec![wl.evaluate(&g1)]);
     }
 
     #[test]

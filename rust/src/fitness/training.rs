@@ -136,6 +136,29 @@ impl Evaluator for TrainingWorkload {
         Some((combine_runtime(self.metric, fr, wall, self.baseline_wall), err))
     }
 
+    /// Training is a sequential SGD recurrence — each step consumes the
+    /// previous step's weights — so a class cannot stack its *time* axis
+    /// into lanes the way prediction does. What cohort evaluation buys
+    /// here is amortization: every member compiles to the same program
+    /// (canonically equal by construction), so the class trains **once**
+    /// and each member recombines the shared (error, wall) with its own
+    /// raw-graph flops ratio, exactly as [`TrainingWorkload::evaluate`]
+    /// would compute it.
+    fn evaluate_cohort(&self, graphs: &[&Graph]) -> Vec<Option<Objectives>> {
+        if graphs.len() < 2 {
+            return graphs.iter().map(|&g| self.evaluate(g)).collect();
+        }
+        let shared = self.train_and_score(graphs[0], false);
+        graphs
+            .iter()
+            .map(|&g| {
+                let (err, wall) = shared?;
+                let fr = g.total_flops() as f64 / self.baseline_flops;
+                Some((combine_runtime(self.metric, fr, wall, self.baseline_wall), err))
+            })
+            .collect()
+    }
+
     fn exec_cache_stats(&self) -> Option<(usize, usize)> {
         Some(self.programs.stats())
     }
@@ -208,6 +231,14 @@ mod tests {
         let wl0 = mk(crate::opt::OptLevel::O0);
         let wl2 = mk(crate::opt::OptLevel::O2);
         assert_eq!(wl0.evaluate(&step), wl2.evaluate(&step));
+    }
+
+    #[test]
+    fn cohort_evaluation_is_bit_identical_to_scalar() {
+        let (_, step, wl) = setup(0.2);
+        let scalar = wl.evaluate(&step);
+        assert_eq!(wl.evaluate_cohort(&[&step, &step]), vec![scalar, scalar]);
+        assert_eq!(wl.evaluate_cohort(&[&step]), vec![scalar]);
     }
 
     #[test]

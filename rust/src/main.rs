@@ -44,7 +44,7 @@ USAGE: gevo-ml <subcommand> [flags]
 
   search   --workload 2fcnet|mobilenet [--pop N] [--gens N] [--seed S]
            [--metric flops|wall|blend] [--fit N] [--test N] [--epochs N]
-           [--workers N] [--islands K] [--island-threads T]
+           [--workers N] [--islands K] [--island-threads T] [--batch W]
            [--migration-interval M] [--migrants N] [--checkpoint FILE]
            [--checkpoint-every N]
            [--opt-level 0|1|2|3] [--operators LIST] [--adapt]
@@ -55,6 +55,10 @@ USAGE: gevo-ml <subcommand> [flags]
            OS threads between migration barriers (default 1; any value
            is bit-identical to sequential — use it with --workers 1 to
            parallelize across islands instead of within a population);
+           --batch caps the stacked cohort width for batched evaluation
+           (offspring that compile to the same canonical program execute
+           as one stacked batch; default 32; 0 or 1 disables — any value
+           is bit-identical, batching is scheduling, not semantics);
            --checkpoint saves resumable state every
            --checkpoint-every generations (an existing file is resumed,
            targeting --gens; writes are fsynced and happen on a
@@ -122,6 +126,7 @@ fn search_config(args: &Args) -> SearchConfig {
         migrants: args.usize_or("migrants", 2),
         checkpoint_every: args.usize_or("checkpoint-every", 1),
         island_threads: args.usize_or("island-threads", 1),
+        batch: args.usize_or("batch", 32),
         opt_level: OptLevel::parse(&args.get_or("opt-level", "2"))
             .unwrap_or_else(|| panic!("--opt-level must be 0, 1, 2 or 3")),
         operators: operator_names(args),
@@ -161,8 +166,13 @@ fn experiment_config(args: &Args, minimize_front: bool) -> ExperimentConfig {
     ExperimentConfig {
         kind,
         search: search_config(args),
-        metric: RuntimeMetric::parse(&args.get_or("metric", "flops"))
-            .unwrap_or_else(|| panic!("--metric must be flops|wall|blend")),
+        metric: {
+            let raw = args.get_or("metric", "flops");
+            RuntimeMetric::parse(&raw).unwrap_or_else(|| {
+                eprintln!("error: --metric: unknown metric '{raw}'; known metrics: flops, wall, blend");
+                std::process::exit(2);
+            })
+        },
         fit_samples: args.usize_or("fit", 512),
         test_samples: args.usize_or("test", 160),
         epochs: args.usize_or("epochs", 1),
@@ -232,6 +242,9 @@ fn cmd_search(args: &Args) {
     }
     if let Some(f) = r.search.program_fusion {
         println!("{}", report::fusion_summary(&f));
+    }
+    if let Some(b) = r.search.program_batch {
+        println!("{}", report::batch_summary(&b));
     }
     write_out(args, &r);
 }

@@ -116,13 +116,20 @@ pub fn compare_gt(a: &Tensor, b: &Tensor) -> Tensor {
 pub fn select(pred: &Tensor, on_true: &Tensor, on_false: &Tensor) -> Tensor {
     assert_eq!(pred.shape(), on_true.shape());
     assert_eq!(pred.shape(), on_false.shape());
-    let data = pred
-        .data()
-        .iter()
-        .zip(on_true.data().iter().zip(on_false.data().iter()))
-        .map(|(&p, (&t, &f))| if p != 0.0 { t } else { f })
-        .collect();
+    let mut data = Vec::with_capacity(pred.numel());
+    select_append(pred.data(), on_true.data(), on_false.data(), &mut data);
     Tensor::new(pred.shape().clone(), data)
+}
+
+/// [`select`] over raw slices, appending to `out` (same predicate and
+/// element order). The batched executor runs one lane after another
+/// through this into a single stacked buffer.
+pub fn select_append(pred: &[f32], on_true: &[f32], on_false: &[f32], out: &mut Vec<f32>) {
+    out.extend(
+        pred.iter()
+            .zip(on_true.iter().zip(on_false.iter()))
+            .map(|(&p, (&t, &f))| if p != 0.0 { t } else { f }),
+    );
 }
 
 // ---------------------------------------------------------------------------
@@ -214,6 +221,22 @@ pub fn fused_map_into(
     scratch: &mut Vec<f32>,
     out: &mut Vec<f32>,
 ) {
+    out.clear();
+    fused_map_append(inputs, splats, instrs, numel, scratch, out);
+}
+
+/// [`fused_map_into`] without the clear: appends one lane's region output
+/// to `out`, so the batched executor can run N lanes through a shared
+/// scratch into one stacked buffer with zero per-lane allocation. Same
+/// instruction order and scalar closures, so bits are unchanged.
+pub fn fused_map_append(
+    inputs: &[&[f32]],
+    splats: &[f32],
+    instrs: &[FusedInstr],
+    numel: usize,
+    scratch: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
     assert!(!instrs.is_empty(), "fused_map: empty instruction list");
     for src in inputs {
         assert_eq!(src.len(), numel, "fused_map: input length mismatch");
@@ -222,7 +245,6 @@ pub fn fused_map_into(
     scratch.clear();
     scratch.resize(base + instrs.len(), 0.0);
     scratch[inputs.len()..base].copy_from_slice(splats);
-    out.clear();
     out.reserve(numel);
     for i in 0..numel {
         for (slot, src) in inputs.iter().enumerate() {
@@ -260,13 +282,34 @@ pub fn fused_map_into(
 /// preserves the original `add` operand order (`bias + dot` vs
 /// `dot + bias`) for NaN-payload fidelity.
 pub fn dot_bias_into(a: &Tensor, b: &Tensor, bias: &Tensor, bias_first: bool, out: &mut Vec<f32>) {
-    let n = b.dims()[1];
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul: inner dims {k} vs {k2}");
     assert_eq!(bias.numel(), n, "dot_bias: bias length {} vs n {n}", bias.numel());
-    matmul_into(a, b, out);
-    let bd = bias.data();
-    for row in out.chunks_mut(n) {
-        for (c, &bv) in row.iter_mut().zip(bd.iter()) {
-            *c = if bias_first { bv + *c } else { *c + bv };
+    out.clear();
+    out.resize(m * n, 0.0);
+    dot_bias_slices(a.data(), b.data(), bias.data(), m, k, n, bias_first, out);
+}
+
+/// [`dot_bias_into`] over raw slices: `c` must be pre-zeroed `m*n`. One
+/// lane of a batched `DotBias` step writes through this into its stride
+/// of the stacked buffer; same GEMM core and bias element order, so the
+/// lane's bits equal the scalar path exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn dot_bias_slices(
+    ad: &[f32],
+    bd: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias_first: bool,
+    c: &mut [f32],
+) {
+    matmul_slices(ad, bd, m, k, n, c);
+    for row in c.chunks_mut(n) {
+        for (cv, &bv) in row.iter_mut().zip(bias.iter()) {
+            *cv = if bias_first { bv + *cv } else { *cv + bv };
         }
     }
 }
@@ -334,10 +377,16 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Vec<f32>) {
     assert_eq!(k, k2, "matmul: inner dims {k} vs {k2}");
     c.clear();
     c.resize(m * n, 0.0);
+    matmul_slices(a.data(), b.data(), m, k, n, c);
+}
+
+/// The GEMM core over raw slices: `c` must be pre-zeroed `m*n`. This is
+/// the single accumulation-order authority — [`matmul_into`] and the
+/// batched executor's per-lane strides both call it, which is what makes
+/// batched `Dot` bit-identical to the sequential kernel.
+pub fn matmul_slices(ad: &[f32], bd: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
     const KB: usize = 64;
     const NB: usize = 256;
-    let ad = a.data();
-    let bd = b.data();
     for nb in (0..n).step_by(NB) {
         let ne = (nb + NB).min(n);
         for kb in (0..k).step_by(KB) {
@@ -408,59 +457,72 @@ pub fn broadcast_in_dim(a: &Tensor, out_dims: &[usize], mapping: &[usize]) -> Te
 /// [`broadcast_in_dim`] into a recycled buffer (cleared first); same fast
 /// paths and element order, so results are bit-identical.
 pub fn broadcast_in_dim_into(a: &Tensor, out_dims: &[usize], mapping: &[usize], out: &mut Vec<f32>) {
-    assert_eq!(mapping.len(), a.rank(), "broadcast_in_dim: mapping rank");
+    out.clear();
+    broadcast_in_dim_append(a.data(), a.dims(), out_dims, mapping, out);
+}
+
+/// [`broadcast_in_dim_into`] over a raw slice + dims, appending one
+/// broadcast image to `out` (the batched executor stacks lanes this way).
+/// Same fast paths and element order, so results are bit-identical.
+pub fn broadcast_in_dim_append(
+    data: &[f32],
+    in_dims: &[usize],
+    out_dims: &[usize],
+    mapping: &[usize],
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(mapping.len(), in_dims.len(), "broadcast_in_dim: mapping rank");
     for w in mapping.windows(2) {
         assert!(w[0] < w[1], "broadcast_in_dim: mapping must be increasing");
     }
     for (i, &m) in mapping.iter().enumerate() {
         assert!(m < out_dims.len(), "broadcast_in_dim: mapping out of range");
         assert!(
-            a.dims()[i] == out_dims[m] || a.dims()[i] == 1,
+            in_dims[i] == out_dims[m] || in_dims[i] == 1,
             "broadcast_in_dim: input dim {i} ({}) incompatible with output dim {m} ({})",
-            a.dims()[i],
+            in_dims[i],
             out_dims[m]
         );
     }
     let n: usize = out_dims.iter().product();
-    out.clear();
+    let start = out.len();
 
     // fast path: single-element source
-    if a.numel() == 1 {
-        out.resize(n, a.data()[0]);
+    if data.len() == 1 {
+        out.resize(start + n, data[0]);
         return;
     }
 
     // fast path: source occupies the trailing output dims contiguously
     // with exact sizes (e.g. [c] -> [b,h,w,c], [h,w] -> [b,h,w]).
     let r_out = out_dims.len();
-    let r_in = a.rank();
+    let r_in = in_dims.len();
     let trailing = mapping
         .iter()
         .enumerate()
-        .all(|(i, &m)| m == r_out - r_in + i && a.dims()[i] == out_dims[m]);
+        .all(|(i, &m)| m == r_out - r_in + i && in_dims[i] == out_dims[m]);
     if trailing {
-        let chunk = a.numel();
+        let chunk = data.len();
         out.reserve(n);
         for _ in 0..n / chunk {
-            out.extend_from_slice(a.data());
+            out.extend_from_slice(data);
         }
         return;
     }
 
     // general case: odometer walk over the output index space.
-    out.resize(n, 0.0);
-    let in_strides = a.shape().strides();
+    out.resize(start + n, 0.0);
+    let in_strides = Shape::of(in_dims).strides();
     // per-output-dim source stride (0 where replicated or size-1 input)
     let mut src_stride = vec![0usize; r_out];
     for (i, &m) in mapping.iter().enumerate() {
-        if a.dims()[i] != 1 {
+        if in_dims[i] != 1 {
             src_stride[m] = in_strides[i];
         }
     }
     let mut idx = vec![0usize; r_out];
     let mut src = 0usize;
-    let data = a.data();
-    for slot in out.iter_mut() {
+    for slot in out[start..].iter_mut() {
         *slot = data[src];
         // increment the odometer, updating src incrementally
         for d in (0..r_out).rev() {

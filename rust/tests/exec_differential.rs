@@ -138,6 +138,257 @@ fn error_classes_agree_on_both_workloads() {
     }
 }
 
+/// Tentpole contract: stacked-lane execution ([`Program::run_lanes`]) is
+/// bit-identical to the scalar path, lane by lane, at every optimizer
+/// level and on both workload graph families — batching is scheduling,
+/// not semantics.
+#[test]
+fn batched_lanes_bit_identical_to_scalar_at_every_opt_level() {
+    use gevo_ml::exec::cache::ProgramCache;
+    use gevo_ml::exec::BatchScratch;
+    use gevo_ml::opt::OptLevel;
+
+    for level in [OptLevel::O0, OptLevel::O2, OptLevel::O3] {
+        for base in [twofc_base(), mobilenet_base()] {
+            let cache = ProgramCache::with_opt(level);
+            let mut scratch = BatchScratch::new();
+            run_prop(25, 0xBA7C, |rng| {
+                let g = mutate_chain(&base, rng);
+                let prog =
+                    cache.get_or_compile(&g).map_err(|e| format!("compile: {e}"))?;
+                let lane_inputs: Vec<Vec<Tensor>> =
+                    (0..4).map(|_| random_inputs(&g, rng)).collect();
+                let lane_refs: Vec<Vec<&Tensor>> =
+                    lane_inputs.iter().map(|l| l.iter().collect()).collect();
+                let lanes: Vec<&[&Tensor]> =
+                    lane_refs.iter().map(|l| l.as_slice()).collect();
+                let got = prog.run_lanes(&lanes, &mut scratch);
+                if got.len() != lanes.len() {
+                    return Err(format!("{} lanes in, {} results out", lanes.len(), got.len()));
+                }
+                for (v, inputs) in lane_inputs.iter().enumerate() {
+                    let want = prog
+                        .run(inputs)
+                        .map_err(|e| format!("scalar lane {v} failed: {e}"))?;
+                    let gotv = got[v]
+                        .as_ref()
+                        .map_err(|e| format!("batched lane {v} failed: {e:?}"))?;
+                    assert_bit_identical(&want, gotv)
+                        .map_err(|e| format!("level {level} lane {v}: {e}"))?;
+                }
+                Ok(())
+            });
+        }
+    }
+}
+
+/// EvalError parity when one lane of a stacked batch is broken: the bad
+/// lane must fail with exactly the scalar path's error, and the healthy
+/// lanes must stay bit-identical — one sick genome cannot poison its
+/// cohort.
+#[test]
+fn bad_lane_fails_with_scalar_error_and_leaves_cohort_intact() {
+    use gevo_ml::exec::BatchScratch;
+
+    for base in [twofc_base(), mobilenet_base()] {
+        run_prop(20, 0xBAD1, |rng| {
+            let g = mutate_chain(&base, rng);
+            let prog = Program::compile(&g).map_err(|e| format!("compile: {e}"))?;
+            let good_a = random_inputs(&g, rng);
+            let good_b = random_inputs(&g, rng);
+            let mut bad = random_inputs(&g, rng);
+            let k = rng.below(bad.len());
+            let mut dims = bad[k].dims().to_vec();
+            if dims.is_empty() {
+                dims.push(2);
+            } else {
+                dims[0] += 1;
+            }
+            bad[k] = Tensor::zeros(&dims);
+
+            let lane_sets: [&Vec<Tensor>; 3] = [&good_a, &bad, &good_b];
+            let lane_refs: Vec<Vec<&Tensor>> =
+                lane_sets.iter().map(|l| l.iter().collect()).collect();
+            let lanes: Vec<&[&Tensor]> = lane_refs.iter().map(|l| l.as_slice()).collect();
+            let mut scratch = BatchScratch::new();
+            let got = prog.run_lanes(&lanes, &mut scratch);
+
+            let want_err = prog.run(&bad).expect_err("scalar must reject the bad shape");
+            match &got[1] {
+                Err(e) if *e == want_err => {}
+                other => {
+                    return Err(format!("bad lane: want Err({want_err:?}), got {other:?}"))
+                }
+            }
+            for (v, inputs) in [(0usize, &good_a), (2usize, &good_b)] {
+                let want =
+                    prog.run(inputs).map_err(|e| format!("scalar lane {v}: {e}"))?;
+                let gotv = got[v]
+                    .as_ref()
+                    .map_err(|e| format!("healthy lane {v} failed in batch: {e:?}"))?;
+                assert_bit_identical(&want, gotv).map_err(|e| format!("lane {v}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+}
+
+/// End-to-end tentpole pin: a search with cohort batching on (`batch`
+/// 32) reproduces the genome-at-a-time path (`batch` 0) bit for bit —
+/// Pareto front, per-generation history, evaluation and cache counters —
+/// at O0, O2 and O3. The only thing allowed to differ is the
+/// [`BatchStats`] observables themselves.
+#[test]
+fn batched_search_front_history_and_counters_match_scalar_path() {
+    use gevo_ml::data::digits;
+    use gevo_ml::evo::search::{self, SearchConfig};
+    use gevo_ml::fitness::training::TrainingWorkload;
+    use gevo_ml::fitness::RuntimeMetric;
+    use gevo_ml::opt::OptLevel;
+
+    let spec = twofc::TwoFcSpec { batch: 8, input: 16, hidden: 8, classes: 4, lr: 0.1 };
+    let base = twofc::train_step_graph(&spec);
+    for level in [OptLevel::O0, OptLevel::O2, OptLevel::O3] {
+        let run_once = |batch: usize| {
+            let data = digits::generate(96, spec.side(), 7);
+            let (fit, test) = data.split(64);
+            let wl = TrainingWorkload::new_with_opt(
+                spec,
+                &base,
+                fit,
+                test,
+                1,
+                1,
+                RuntimeMetric::Flops,
+                level,
+            );
+            let cfg = SearchConfig {
+                pop_size: 8,
+                generations: 3,
+                elites: 4,
+                workers: 3,
+                seed: 11,
+                batch,
+                opt_level: level,
+                verbose: false,
+                ..Default::default()
+            };
+            let r = search::run(&base, &wl, &cfg);
+            (
+                r.pareto
+                    .iter()
+                    .map(|(_, o)| (o.0.to_bits(), o.1.to_bits()))
+                    .collect::<Vec<_>>(),
+                r.pareto_islands.clone(),
+                format!("{:?}", r.history),
+                r.total_evaluations,
+                r.cache_hits,
+                r.program_batch,
+            )
+        };
+        let scalar = run_once(0);
+        let batched = run_once(32);
+        assert!(!batched.0.is_empty(), "search must produce a front at {level}");
+        assert_eq!(scalar.0, batched.0, "front bits must match at {level}");
+        assert_eq!(scalar.1, batched.1, "front islands must match at {level}");
+        assert_eq!(scalar.2, batched.2, "history must match at {level}");
+        assert_eq!(scalar.3, batched.3, "total_evaluations must match at {level}");
+        assert_eq!(scalar.4, batched.4, "cache_hits must match at {level}");
+        // The batch observables are the one legitimate difference:
+        // `--batch 0` never forms a cohort.
+        let b = scalar.5.expect("workload reports batch stats");
+        assert_eq!(b.cohorts, 0, "scalar path must not form cohorts");
+        assert_eq!(b.batched_evals, 0);
+    }
+}
+
+/// Same end-to-end pin for the prediction workload, whose cohorts
+/// actually stack the fitness mini-batches into lanes of one
+/// [`Program::run_lanes`] call.
+#[test]
+fn batched_prediction_search_matches_scalar_path() {
+    use gevo_ml::data::patterns;
+    use gevo_ml::evo::search::{self, SearchConfig};
+    use gevo_ml::fitness::prediction::PredictionWorkload;
+    use gevo_ml::fitness::RuntimeMetric;
+
+    let spec =
+        mobilenet::MobileNetSpec { batch: 2, side: 8, classes: 4, width: 4, blocks: 2 };
+    let w = mobilenet::random_weights(&spec, 3);
+    let base = mobilenet::predict_graph(&spec, &w);
+    let run_once = |batch: usize| {
+        let data = patterns::generate(48, spec.side, 7);
+        let (fit, test) = data.split(32);
+        let wl =
+            PredictionWorkload::new(&base, spec.batch, &fit, &test, 8, RuntimeMetric::Flops);
+        let cfg = SearchConfig {
+            pop_size: 6,
+            generations: 2,
+            elites: 3,
+            workers: 2,
+            seed: 5,
+            batch,
+            verbose: false,
+            ..Default::default()
+        };
+        let r = search::run(&base, &wl, &cfg);
+        (
+            r.pareto
+                .iter()
+                .map(|(_, o)| (o.0.to_bits(), o.1.to_bits()))
+                .collect::<Vec<_>>(),
+            r.total_evaluations,
+            r.cache_hits,
+        )
+    };
+    let scalar = run_once(0);
+    let batched = run_once(32);
+    assert!(!batched.0.is_empty());
+    assert_eq!(scalar, batched, "prediction search must be batch-invariant");
+}
+
+/// The deepest fingerprint: the final checkpoint — population genomes,
+/// archives, per-island RNG states, operator weights — must be
+/// byte-identical whether evaluation batched or not. `batch` is
+/// scheduling only and is excluded from the checkpoint's config echo.
+#[test]
+fn checkpoint_bytes_identical_regardless_of_batch_width() {
+    use gevo_ml::data::digits;
+    use gevo_ml::evo::island;
+    use gevo_ml::evo::search::SearchConfig;
+    use gevo_ml::fitness::training::TrainingWorkload;
+    use gevo_ml::fitness::RuntimeMetric;
+
+    let spec = twofc::TwoFcSpec { batch: 8, input: 16, hidden: 8, classes: 4, lr: 0.1 };
+    let base = twofc::train_step_graph(&spec);
+    let dir = std::env::temp_dir().join(format!("gevo_batch_ck_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let run_once = |batch: usize, name: &str| -> Vec<u8> {
+        let ck = dir.join(name);
+        let data = digits::generate(96, spec.side(), 7);
+        let (fit, test) = data.split(64);
+        let wl = TrainingWorkload::new(spec, &base, fit, test, 1, 1, RuntimeMetric::Flops);
+        let cfg = SearchConfig {
+            pop_size: 6,
+            generations: 3,
+            elites: 3,
+            workers: 2,
+            islands: 2,
+            migration_interval: 2,
+            seed: 17,
+            batch,
+            verbose: false,
+            ..Default::default()
+        };
+        island::run_with_checkpoint(&base, &wl, &cfg, Some(&ck));
+        std::fs::read(&ck).unwrap()
+    };
+    let a = run_once(0, "scalar.json");
+    let b = run_once(32, "batched.json");
+    assert_eq!(a, b, "checkpoints diverged: batching leaked into search state");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Satellite regression: two `search::run` invocations with the same seed
 /// and `RuntimeMetric::Flops` must produce identical Pareto fronts when
 /// every fitness evaluation goes through the compiled engine.
