@@ -1,9 +1,11 @@
 //! §Perf L3: evolutionary-machinery micro-benchmarks — mutation+repair
 //! throughput, crossover, NSGA-II sorting, a full evaluated generation
 //! (the end-to-end unit of search cost), the threaded island
-//! runtime's generations/sec scaling at 1 vs N island threads, and the
-//! batched cohort engine's evals/sec at stacked widths 1/8/32 (summary
-//! committed as `BENCH_evo.json`).
+//! runtime's generations/sec scaling at 1 vs N island threads, the
+//! batched cohort engine's evals/sec at stacked widths 1/8/32, and the
+//! telemetry subsystem's cost: the clock noise floor and the per-event
+//! overhead of a `--trace` JSONL stream (summary committed as
+//! `BENCH_evo.json`).
 
 use gevo_ml::evo::crossover::messy_one_point;
 use gevo_ml::evo::island::run_with_checkpoint;
@@ -216,11 +218,66 @@ fn main() {
         ]));
     }
 
+    // --- telemetry: clock noise floor + per-event trace overhead --------------
+    // The noise floor bounds what a phase span can resolve; the trace
+    // row prices `--trace` against the sequential island run above
+    // (p50_at_one is the identical untraced configuration).
+    let noise = gevo_ml::telemetry::timing_noise();
+    b.note(&format!(
+        "timing noise floor: median {:.0} ns, IQR {:.0} ns over {} empty spans",
+        noise.median_ns, noise.iqr_ns, noise.samples
+    ));
+    let trace_path =
+        std::env::temp_dir().join(format!("gevo_bench_trace_{}.jsonl", std::process::id()));
+    let traced_cfg = SearchConfig {
+        island_threads: 1,
+        trace: Some(trace_path.clone()),
+        ..island_cfg.clone()
+    };
+    let p50_traced = b.case_with_work(
+        "island search (K=4, gens=6, --trace JSONL)",
+        Some(gens_total),
+        || {
+            // the stream appends; start every iteration from an empty file
+            let _ = std::fs::remove_file(&trace_path);
+            black_box(run_with_checkpoint(&ig, &ieval, &traced_cfg, None));
+        },
+    );
+    let trace_events = std::fs::read_to_string(&trace_path)
+        .map(|t| t.lines().filter(|l| !l.trim().is_empty()).count())
+        .unwrap_or(0);
+    let _ = std::fs::remove_file(&trace_path);
+    let ns_per_event = if trace_events > 0 {
+        (p50_traced - p50_at_one).max(0.0) * 1e9 / trace_events as f64
+    } else {
+        0.0
+    };
+    b.note(&format!(
+        "trace overhead: {trace_events} events/run, ~{ns_per_event:.0} ns/event (p50 delta vs untraced)"
+    ));
+
     let summary = Json::obj(vec![
         ("suite", Json::str("perf_evo")),
-        ("section", Json::str("threaded-island-runtime+batched-eval")),
+        ("section", Json::str("threaded-island-runtime+batched-eval+telemetry")),
         ("island_scaling", Json::Arr(rows)),
         ("batch_scaling", Json::Arr(batch_rows)),
+        (
+            "timing_noise",
+            Json::obj(vec![
+                ("samples", Json::num(noise.samples as f64)),
+                ("median_ns", Json::num(noise.median_ns)),
+                ("iqr_ns", Json::num(noise.iqr_ns)),
+            ]),
+        ),
+        (
+            "trace_overhead",
+            Json::obj(vec![
+                ("events_per_run", Json::num(trace_events as f64)),
+                ("seconds_p50_untraced", Json::num(p50_at_one)),
+                ("seconds_p50_traced", Json::num(p50_traced)),
+                ("ns_per_event", Json::num(ns_per_event)),
+            ]),
+        ),
         (
             "provenance",
             Json::str(

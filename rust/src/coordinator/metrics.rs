@@ -1,95 +1,9 @@
-//! Lightweight counters/timers shared across the coordinator — the
-//! operational metrics a deployed search service would export.
+//! Compatibility shim — the counter/timer registry moved to
+//! [`crate::telemetry::metrics`] when the telemetry subsystem landed,
+//! gaining poison-recovering locks on the way. Import [`Metrics`] from
+//! `telemetry` in new code; this re-export keeps old paths compiling.
+//! (The old global `EVALS` counter was never wired to the eval pool
+//! and was removed rather than shimmed — per-run evaluation counts
+//! live in `SearchResult::total_evaluations`.)
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
-
-/// A named set of monotonically-increasing counters and duration sums.
-#[derive(Default)]
-pub struct Metrics {
-    counters: Mutex<BTreeMap<String, u64>>,
-    durations_us: Mutex<BTreeMap<String, u64>>,
-    start: Option<Instant>,
-}
-
-/// Global evaluation counter (cheap, lock-free, used by the eval pool).
-pub static EVALS: AtomicU64 = AtomicU64::new(0);
-
-impl Metrics {
-    pub fn new() -> Metrics {
-        Metrics { start: Some(Instant::now()), ..Default::default() }
-    }
-
-    pub fn inc(&self, name: &str, by: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
-    }
-
-    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
-        let t0 = Instant::now();
-        let out = f();
-        let us = t0.elapsed().as_micros() as u64;
-        *self
-            .durations_us
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_insert(0) += us;
-        out
-    }
-
-    pub fn counter(&self, name: &str) -> u64 {
-        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
-    }
-
-    pub fn duration_secs(&self, name: &str) -> f64 {
-        *self.durations_us.lock().unwrap().get(name).unwrap_or(&0) as f64 / 1e6
-    }
-
-    /// One-line-per-metric report.
-    pub fn report(&self) -> String {
-        let mut s = String::new();
-        if let Some(start) = self.start {
-            s.push_str(&format!("uptime_secs: {:.3}\n", start.elapsed().as_secs_f64()));
-        }
-        for (k, v) in self.counters.lock().unwrap().iter() {
-            s.push_str(&format!("{k}: {v}\n"));
-        }
-        for (k, v) in self.durations_us.lock().unwrap().iter() {
-            s.push_str(&format!("{k}_secs: {:.3}\n", *v as f64 / 1e6));
-        }
-        s
-    }
-}
-
-/// Bump the global eval counter.
-pub fn record_eval() {
-    EVALS.fetch_add(1, Ordering::Relaxed);
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn counters_and_timers() {
-        let m = Metrics::new();
-        m.inc("evals", 3);
-        m.inc("evals", 2);
-        assert_eq!(m.counter("evals"), 5);
-        let out = m.time("work", || 7);
-        assert_eq!(out, 7);
-        assert!(m.duration_secs("work") >= 0.0);
-        let rep = m.report();
-        assert!(rep.contains("evals: 5"));
-        assert!(rep.contains("work_secs:"));
-    }
-
-    #[test]
-    fn global_counter() {
-        let before = EVALS.load(Ordering::Relaxed);
-        record_eval();
-        assert!(EVALS.load(Ordering::Relaxed) > before);
-    }
-}
+pub use crate::telemetry::metrics::Metrics;

@@ -8,7 +8,7 @@ pub mod metrics;
 
 use crate::data::{digits, patterns};
 use crate::evo::nsga2::Objectives;
-use crate::evo::search::{SearchConfig, SearchResult};
+use crate::evo::search::{Lineage, SearchConfig, SearchResult};
 use crate::fitness::prediction::PredictionWorkload;
 use crate::fitness::training::TrainingWorkload;
 use crate::fitness::RuntimeMetric;
@@ -91,6 +91,11 @@ pub struct FrontPoint {
     /// Patch-minimization outcome ([`ExperimentConfig::minimize_front`]);
     /// `None` when minimization was off or the point failed to re-evaluate.
     pub minimized: Option<MinimizedPoint>,
+    /// Mutation genealogy ([`SearchResult::pareto_lineage`]): the
+    /// operator chain that first produced this genome, its parent's
+    /// fingerprint and its newest edit. `None` only for fronts restored
+    /// from pre-telemetry checkpoints.
+    pub lineage: Option<Lineage>,
 }
 
 /// Minimization summary for one front point (see [`crate::opt::minimize`]).
@@ -227,13 +232,19 @@ fn finish(
     // front are often reached by many distinct genomes. Provenance rides
     // along so per-island contributions stay visible in reports.
     let mut seen = std::collections::HashSet::new();
-    let mut rows: Vec<(&crate::evo::patch::Individual, Objectives, usize)> = Vec::new();
+    let mut rows: Vec<(&crate::evo::patch::Individual, Objectives, usize, Option<Lineage>)> =
+        Vec::new();
     let q = |x: f64| crate::evo::search::quantize_at(x, 1e4);
-    for ((ind, fit), &island) in res.pareto.iter().zip(res.pareto_islands.iter()) {
+    for (((ind, fit), &island), lineage) in res
+        .pareto
+        .iter()
+        .zip(res.pareto_islands.iter())
+        .zip(res.pareto_lineage.iter())
+    {
         if !seen.insert((q(fit.0), q(fit.1))) {
             continue;
         }
-        rows.push((ind, *fit, island));
+        rows.push((ind, *fit, island, lineage.clone()));
     }
     // Per-point delta-debug loops are independent, so they fan out over
     // the evaluation worker pool; results land by index, which keeps
@@ -243,7 +254,7 @@ fn finish(
     // held-out evaluation would be discarded anyway.
     let minimized: Vec<Option<MinimizedPoint>> = if minimize_front {
         let inds: Vec<&crate::evo::patch::Individual> =
-            rows.iter().map(|(ind, _, _)| *ind).collect();
+            rows.iter().map(|(ind, _, _, _)| *ind).collect();
         parallel_minimize(baseline, &inds, &eval_fit, workers)
             .into_iter()
             .map(|m| {
@@ -267,7 +278,7 @@ fn finish(
     let front = rows
         .into_iter()
         .zip(minimized)
-        .map(|((ind, fit, island), minimized)| {
+        .map(|((ind, fit, island, lineage), minimized)| {
             let post_hoc = ind.materialize(baseline).ok().and_then(|g| eval_post(&g));
             FrontPoint {
                 edits: ind.edits.len(),
@@ -275,6 +286,7 @@ fn finish(
                 fit,
                 post_hoc,
                 minimized,
+                lineage,
             }
         })
         .collect();
@@ -366,6 +378,11 @@ mod tests {
         assert!(!r.front.is_empty());
         assert!((r.baseline_fit.0 - 1.0).abs() < 1e-9, "flops baseline = 1");
         assert!(r.search.total_evaluations > 0);
+        // every front row carries its mutation genealogy
+        for p in &r.front {
+            let l = p.lineage.as_ref().expect("front point without lineage");
+            assert!(!l.op.is_empty());
+        }
     }
 
     #[test]

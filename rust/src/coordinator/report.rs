@@ -174,6 +174,26 @@ pub fn to_json(r: &ExperimentResult) -> Json {
                             ("fit", pt(p.fit)),
                             ("post_hoc", p.post_hoc.map_or(Json::Null, pt)),
                             (
+                                "lineage",
+                                p.lineage.as_ref().map_or(Json::Null, |l| {
+                                    Json::obj(vec![
+                                        ("op", Json::str(l.op.clone())),
+                                        (
+                                            "parent",
+                                            l.parent.map_or(Json::Null, |k| {
+                                                Json::Str(format!("{k:016x}"))
+                                            }),
+                                        ),
+                                        (
+                                            "edit",
+                                            l.edit.as_ref().map_or(Json::Null, |e| {
+                                                Json::str(e.clone())
+                                            }),
+                                        ),
+                                    ])
+                                }),
+                            ),
+                            (
                                 "minimized",
                                 p.minimized.as_ref().map_or(Json::Null, |m| {
                                     Json::obj(vec![
@@ -299,6 +319,23 @@ pub fn to_json(r: &ExperimentResult) -> Json {
                     .collect(),
             ),
         ),
+        (
+            "phases",
+            Json::Arr(
+                r.search
+                    .phases
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("phase", Json::str(p.phase)),
+                            ("count", Json::num(p.count as f64)),
+                            ("total_ns", Json::num(p.total_ns as f64)),
+                            ("max_ns", Json::num(p.max_ns as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         ("wall_seconds", Json::num(r.wall_seconds)),
     ])
 }
@@ -314,6 +351,14 @@ pub fn fusion_summary(f: &crate::exec::cache::FusionTotals) -> String {
         "fusion: {} regions across {} compiled programs, steps {} -> {} ({reduction:.1}% fewer), peak buffers {} -> {}",
         f.regions, f.programs, f.steps_before, f.steps_after, f.peak_before, f.peak_after
     )
+}
+
+/// One-line phase-time summary for terminal output (top phases by share
+/// of instrumented wall time); delegates to
+/// [`crate::telemetry::phase_summary`] so the search summary and
+/// `gevo-ml report` agree on formatting.
+pub fn phase_summary(r: &ExperimentResult) -> String {
+    crate::telemetry::phase_summary(&r.search.phases)
 }
 
 /// One-line cohort-batching summary for terminal output. `mean/max`
@@ -394,6 +439,11 @@ mod tests {
                             ("copy(%2 after %4)".into(), None),
                         ],
                     }),
+                    lineage: Some(crate::evo::search::Lineage {
+                        op: "crossover+delete".into(),
+                        parent: Some(0xdead_beef),
+                        edit: Some("delete(%3)".into()),
+                    }),
                 },
                 FrontPoint {
                     edits: 1,
@@ -401,6 +451,7 @@ mod tests {
                     fit: (1.0, 0.05),
                     post_hoc: None,
                     minimized: None,
+                    lineage: None,
                 },
             ],
             search: SearchResult {
@@ -480,6 +531,39 @@ mod tests {
                         evals: 17,
                         non_neutral: 4,
                         inserts: 2,
+                    },
+                ],
+                pareto_lineage: vec![],
+                phases: vec![
+                    crate::telemetry::PhaseRow {
+                        phase: "propose",
+                        count: 4,
+                        total_ns: 1_000_000,
+                        max_ns: 400_000,
+                    },
+                    crate::telemetry::PhaseRow {
+                        phase: "evaluate",
+                        count: 4,
+                        total_ns: 8_000_000,
+                        max_ns: 3_000_000,
+                    },
+                    crate::telemetry::PhaseRow {
+                        phase: "select",
+                        count: 4,
+                        total_ns: 500_000,
+                        max_ns: 200_000,
+                    },
+                    crate::telemetry::PhaseRow {
+                        phase: "migrate",
+                        count: 2,
+                        total_ns: 500_000,
+                        max_ns: 300_000,
+                    },
+                    crate::telemetry::PhaseRow {
+                        phase: "checkpoint",
+                        count: 0,
+                        total_ns: 0,
+                        max_ns: 0,
                     },
                 ],
             },
@@ -607,5 +691,28 @@ mod tests {
         let s = ascii_scatter(&fake(), 40, 10);
         assert!(s.contains('#'));
         assert!(s.contains('o'));
+    }
+
+    #[test]
+    fn phase_summary_line_has_grep_stable_prefix() {
+        let s = phase_summary(&fake());
+        assert!(s.starts_with("phases: "), "CI greps the line prefix: {s}");
+        assert!(s.contains("evaluate 80.0%"), "dominant phase leads: {s}");
+        assert!(s.contains("of 0.010s instrumented"), "{s}");
+    }
+
+    #[test]
+    fn json_carries_lineage_and_phases() {
+        let j = Json::parse(&to_json(&fake()).to_pretty()).unwrap();
+        let front = j.get("front").unwrap().as_arr().unwrap();
+        let l = front[0].get("lineage").unwrap();
+        assert_eq!(l.get("op").unwrap().as_str().unwrap(), "crossover+delete");
+        assert_eq!(l.get("parent").unwrap().as_str().unwrap(), "00000000deadbeef");
+        assert_eq!(l.get("edit").unwrap().as_str().unwrap(), "delete(%3)");
+        assert_eq!(*front[1].get("lineage").unwrap(), Json::Null);
+        let phases = j.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), 5);
+        assert_eq!(phases[1].get("phase").unwrap().as_str().unwrap(), "evaluate");
+        assert_eq!(phases[1].get("total_ns").unwrap().as_usize().unwrap(), 8_000_000);
     }
 }

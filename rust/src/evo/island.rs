@@ -42,9 +42,10 @@ use super::operators::{
     harvest_hints, OpCounters, OperatorSet, OperatorStats, OpHints, OpSchedState,
 };
 use super::patch::{Edit, EditKind, Individual};
-use super::search::{Engine, Evaluator, GenStats, SearchConfig, SearchResult};
+use super::search::{Engine, Evaluator, GenStats, Lineage, SearchConfig, SearchResult};
 use crate::ir::types::ValueId;
 use crate::ir::Graph;
+use crate::telemetry::{event, GenSpans, Phase, SpanRecorder, TraceError, TraceWriter};
 use crate::util::json::{Json, JsonError};
 use crate::util::rng::Rng;
 use std::collections::{BTreeMap, HashSet};
@@ -52,6 +53,7 @@ use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
+use std::time::Instant;
 
 /// In-flight search state: what a checkpoint captures.
 pub(crate) struct RunState {
@@ -76,6 +78,27 @@ impl std::fmt::Display for CheckpointError {
 }
 
 impl std::error::Error for CheckpointError {}
+
+/// Trace I/O failures surface through the same error channel as
+/// checkpoint failures: both are run-fatal file problems reported to the
+/// same caller, and [`try_run_with_checkpoint`] is the only place either
+/// occurs.
+impl From<TraceError> for CheckpointError {
+    fn from(e: TraceError) -> CheckpointError {
+        CheckpointError(e.to_string())
+    }
+}
+
+/// Objective values can be `f64::INFINITY` when an island's archive holds
+/// no valid point yet; JSON has no such literal, so trace events carry
+/// `null` there.
+fn fin(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
 
 /// Run the (possibly multi-island) search, checkpointing after every
 /// generation when `checkpoint` is given. If the file already exists the
@@ -148,6 +171,7 @@ pub fn try_run_with_checkpoint(
         Some(p) => Some(CheckpointWriter::spawn(p)?),
         None => None,
     };
+    let resumed = matches!(checkpoint, Some(p) if p.exists());
     let mut st = match checkpoint {
         Some(p) if p.exists() => {
             let text = std::fs::read_to_string(p)
@@ -167,7 +191,39 @@ pub fn try_run_with_checkpoint(
         }
     };
 
-    drive(&mut st, original, eval, cfg, &ops, ghash, writer.as_mut())?;
+    // The trace stream appends (a resumed run extends its own trace); the
+    // opening marker carries the run shape so the analyzer needs no other
+    // context. A `resume` marker instead of `run_start` makes a resumed
+    // trace self-describing.
+    let mut tracer = match cfg.trace.as_deref() {
+        Some(p) => Some(TraceWriter::spawn(p)?),
+        None => None,
+    };
+    if let Some(t) = tracer.as_mut() {
+        t.submit(event(
+            if resumed { "resume" } else { "run_start" },
+            vec![
+                ("completed", Json::num(st.completed as f64)),
+                ("generations", Json::num(cfg.generations as f64)),
+                ("islands", Json::num(k as f64)),
+                ("pop_size", Json::num(cfg.pop_size as f64)),
+                ("seed", Json::Str(format!("{:016x}", cfg.seed))),
+                ("opt_level", Json::num(cfg.opt_level.as_u8() as f64)),
+                (
+                    "operators",
+                    Json::Arr(cfg.operators.iter().map(|s| Json::str(s.as_str())).collect()),
+                ),
+                ("batch", Json::num(cfg.batch as f64)),
+                ("island_threads", Json::num(cfg.island_threads as f64)),
+                ("workers", Json::num(cfg.workers as f64)),
+            ],
+        ))?;
+    }
+
+    // Driver-thread phase spans (migrate / checkpoint); the per-island
+    // recorders cover propose / evaluate / select.
+    let mut driver_spans = SpanRecorder::new();
+    drive(&mut st, original, eval, cfg, &ops, ghash, writer.as_mut(), tracer.as_mut(), &mut driver_spans)?;
     if let Some(mut w) = writer {
         w.drain()?;
     }
@@ -193,9 +249,91 @@ pub fn try_run_with_checkpoint(
             .then(a.0.cache_key().cmp(&b.0.cache_key()))
     });
 
+    // Genealogy per front point: prefer the lowest-id island holding a
+    // *non-migrant* record (the island that actually produced the genome)
+    // so provenance names the real operator, not the transfer; migrated
+    // elites that originated elsewhere fall back to the "migrant" tag
+    // only when no producer recorded them (a resumed legacy checkpoint).
+    let lineage_of = |key: u64| -> Option<Lineage> {
+        let mut any: Option<Lineage> = None;
+        for e in &st.engines {
+            if let Some(l) = e.lineage.get(&key) {
+                if l.op != "migrant" {
+                    return Some(l.clone());
+                }
+                if any.is_none() {
+                    any = Some(l.clone());
+                }
+            }
+        }
+        any
+    };
+    let pareto_lineage: Vec<Option<Lineage>> =
+        front.iter().map(|(ind, _, _)| lineage_of(ind.cache_key())).collect();
+
+    // Merge island + driver phase spans into the end-of-run breakdown.
+    let mut all_spans = driver_spans;
+    for e in &st.engines {
+        all_spans.merge(&e.spans);
+    }
+    let phases = all_spans.rows();
+
+    if let Some(t) = tracer.as_mut() {
+        let points: Vec<Json> = front
+            .iter()
+            .zip(pareto_lineage.iter())
+            .map(|((ind, (time, err), island), lin)| {
+                let lj = match lin {
+                    Some(l) => Json::obj(vec![
+                        ("op", Json::str(l.op.as_str())),
+                        ("parent", l.parent.map_or(Json::Null, hex_u64)),
+                        ("edit", l.edit.as_ref().map_or(Json::Null, |e| Json::str(e.as_str()))),
+                    ]),
+                    None => Json::Null,
+                };
+                Json::obj(vec![
+                    ("time", fin(*time)),
+                    ("error", fin(*err)),
+                    ("island", Json::num(*island as f64)),
+                    ("edits", Json::num(ind.edits.len() as f64)),
+                    ("lineage", lj),
+                ])
+            })
+            .collect();
+        t.submit(event("front", vec![("points", Json::Arr(points))]))?;
+        t.submit(event(
+            "run_end",
+            vec![
+                ("completed", Json::num(st.completed as f64)),
+                (
+                    "evaluations",
+                    Json::num(st.engines.iter().map(|e| e.evals).sum::<usize>() as f64),
+                ),
+                (
+                    "cache_hits",
+                    Json::num(st.engines.iter().map(|e| e.cache_hits).sum::<usize>() as f64),
+                ),
+                ("migrations", Json::num(st.migrations as f64)),
+                (
+                    "phases",
+                    Json::obj(
+                        phases
+                            .iter()
+                            .map(|r| (r.phase, Json::num(r.total_ns as f64)))
+                            .collect(),
+                    ),
+                ),
+            ],
+        ))?;
+    }
+    if let Some(mut t) = tracer {
+        t.drain()?;
+    }
+
     Ok(SearchResult {
         pareto_islands: front.iter().map(|&(_, _, i)| i).collect(),
         pareto: front.into_iter().map(|(ind, o, _)| (ind, o)).collect(),
+        pareto_lineage,
         history: st.history,
         total_evaluations: st.engines.iter().map(|e| e.evals).sum(),
         cache_hits: st.engines.iter().map(|e| e.cache_hits).sum(),
@@ -206,6 +344,7 @@ pub fn try_run_with_checkpoint(
         program_opt: eval.program_cache().map(|c| c.opt_stats()),
         program_batch: eval.program_cache().map(|c| c.batch_stats()),
         operators: operator_rows(&ops, &st.engines),
+        phases,
     })
 }
 
@@ -218,6 +357,7 @@ pub fn try_run_with_checkpoint(
 /// splicing and the checkpoint snapshot all happen there, on the driver
 /// thread, so the schedule of events is identical to the historical
 /// one-generation-at-a-time loop.
+#[allow(clippy::too_many_arguments)]
 fn drive(
     st: &mut RunState,
     original: &Graph,
@@ -226,10 +366,16 @@ fn drive(
     ops: &OperatorSet,
     ghash: u128,
     mut writer: Option<&mut CheckpointWriter>,
+    mut tracer: Option<&mut TraceWriter>,
+    driver_spans: &mut SpanRecorder,
 ) -> Result<(), CheckpointError> {
     let k = st.engines.len();
     let every = cfg.checkpoint_every.max(1);
     let mi = cfg.migration_interval;
+    // Last-emitted program-cache counter values, so each `cache` trace
+    // event carries deltas for the segment just finished rather than
+    // run-cumulative totals.
+    let mut last_cache = CacheSnapshot::take(eval);
     while st.completed < cfg.generations {
         let start = st.completed;
         // Next sync point: the earliest of the next migration event, the
@@ -243,24 +389,168 @@ fn drive(
             end = end.min((start / every + 1) * every);
         }
         let stats = step_block(&mut st.engines, original, eval, cfg, start..end, ops);
+        // Drain the staged per-generation span rows at every barrier —
+        // tracing or not — so the staging vectors stay bounded. The rows
+        // are joined with this segment's stat rows by (island, gen).
+        let mut spans: std::collections::HashMap<(usize, usize), GenSpans> =
+            std::collections::HashMap::new();
+        for e in st.engines.iter_mut() {
+            for gs in e.gen_spans.drain(..) {
+                spans.insert((e.id, gs.gen), gs);
+            }
+        }
+        if let Some(t) = tracer.as_mut() {
+            for s in &stats {
+                let (phase_ns, weights) = match spans.get(&(s.island, s.gen)) {
+                    Some(gs) => (
+                        Json::obj(vec![
+                            ("propose", Json::num(gs.propose_ns as f64)),
+                            ("evaluate", Json::num(gs.evaluate_ns as f64)),
+                            ("select", Json::num(gs.select_ns as f64)),
+                        ]),
+                        Json::Arr(gs.weights.iter().map(|&w| Json::num(w)).collect()),
+                    ),
+                    // A degenerate generation (reseed early-return)
+                    // records no spans; the row still streams.
+                    None => (Json::Null, Json::Null),
+                };
+                t.submit(event(
+                    "gen",
+                    vec![
+                        ("gen", Json::num(s.gen as f64)),
+                        ("island", Json::num(s.island as f64)),
+                        ("evaluated", Json::num(s.evaluated as f64)),
+                        ("valid", Json::num(s.valid as f64)),
+                        ("front_size", Json::num(s.front_size as f64)),
+                        ("best_time", fin(s.best_time)),
+                        ("best_error", fin(s.best_error)),
+                        ("phase_ns", phase_ns),
+                        ("weights", weights),
+                    ],
+                ))?;
+            }
+            let now = CacheSnapshot::take(eval);
+            if let Some(ev) = now.delta_event(&last_cache, end) {
+                t.submit(ev)?;
+            }
+            last_cache = now;
+        }
         st.history.extend(stats);
         // ---- migration barrier ------------------------------------------
         if k > 1 && mi > 0 && end % mi == 0 {
+            let t0 = Instant::now();
             let minimize_with =
                 if cfg.reseed_minimized { Some((original, eval)) } else { None };
             st.migrations += migrate(&mut st.engines, cfg.migrants, minimize_with);
+            let ns = t0.elapsed().as_nanos() as u64;
+            driver_spans.record(Phase::Migrate, ns);
+            if let Some(t) = tracer.as_mut() {
+                t.submit(event(
+                    "migration",
+                    vec![
+                        ("gen", Json::num(end as f64)),
+                        ("ns", Json::num(ns as f64)),
+                        ("total", Json::num(st.migrations as f64)),
+                    ],
+                ))?;
+            }
         }
         st.completed = end;
         if let Some(w) = writer.as_mut() {
             if st.completed % every == 0 || st.completed >= cfg.generations {
                 // The snapshot (the JSON tree) is built here, at the
                 // barrier; rendering and the durable write happen on the
-                // writer thread.
+                // writer thread. The span covers snapshot construction
+                // plus any wait for the previous write to clear the
+                // bounded queue — the driver-visible checkpoint cost.
+                let t0 = Instant::now();
                 w.submit(checkpoint_json(cfg, ghash, st))?;
+                let ns = t0.elapsed().as_nanos() as u64;
+                driver_spans.record(Phase::Checkpoint, ns);
+                if let Some(t) = tracer.as_mut() {
+                    t.submit(event(
+                        "checkpoint",
+                        vec![
+                            ("gen", Json::num(st.completed as f64)),
+                            ("ns", Json::num(ns as f64)),
+                        ],
+                    ))?;
+                }
             }
         }
     }
     Ok(())
+}
+
+/// Program-cache counter snapshot for `cache` trace events; deltas
+/// between consecutive snapshots give per-segment figures. All zeros
+/// (and no events) for evaluators without a program cache.
+#[derive(Default, Clone, Copy, PartialEq, Eq)]
+struct CacheSnapshot {
+    present: bool,
+    pc_hits: usize,
+    pc_misses: usize,
+    memo_hits: usize,
+    memo_misses: usize,
+    filtered_neutral: usize,
+    lock_contended: usize,
+    compile_ns: u64,
+    batch_cohorts: usize,
+    batched_evals: usize,
+    scalar_evals: usize,
+}
+
+impl CacheSnapshot {
+    fn take(eval: &dyn Evaluator) -> CacheSnapshot {
+        let mut s = CacheSnapshot::default();
+        if let Some((h, m)) = eval.exec_cache_stats() {
+            s.present = true;
+            s.pc_hits = h;
+            s.pc_misses = m;
+        }
+        if let Some(c) = eval.program_cache() {
+            s.present = true;
+            let o = c.opt_stats();
+            s.memo_hits = o.memo_hits;
+            s.memo_misses = o.memo_misses;
+            s.filtered_neutral = o.filtered_neutral;
+            s.lock_contended = o.lock_contended;
+            s.compile_ns = c.compile_ns();
+            let b = c.batch_stats();
+            s.batch_cohorts = b.cohorts;
+            s.batched_evals = b.batched_evals;
+            s.scalar_evals = b.scalar_evals;
+        }
+        s
+    }
+
+    /// The `cache` event for the segment ending at `thru_gen`, or `None`
+    /// when there is no program cache or nothing changed.
+    fn delta_event(&self, prev: &CacheSnapshot, thru_gen: usize) -> Option<Json> {
+        if !self.present || self == prev {
+            return None;
+        }
+        let d = |a: usize, b: usize| Json::num(a.saturating_sub(b) as f64);
+        Some(event(
+            "cache",
+            vec![
+                ("thru_gen", Json::num(thru_gen as f64)),
+                ("pc_hits", d(self.pc_hits, prev.pc_hits)),
+                ("pc_misses", d(self.pc_misses, prev.pc_misses)),
+                ("memo_hits", d(self.memo_hits, prev.memo_hits)),
+                ("memo_misses", d(self.memo_misses, prev.memo_misses)),
+                ("filtered_neutral", d(self.filtered_neutral, prev.filtered_neutral)),
+                ("lock_contended", d(self.lock_contended, prev.lock_contended)),
+                (
+                    "compile_ns",
+                    Json::num(self.compile_ns.saturating_sub(prev.compile_ns) as f64),
+                ),
+                ("batch_cohorts", d(self.batch_cohorts, prev.batch_cohorts)),
+                ("batched_evals", d(self.batched_evals, prev.batched_evals)),
+                ("scalar_evals", d(self.scalar_evals, prev.scalar_evals)),
+            ],
+        ))
+    }
 }
 
 /// Step every engine through `gens`. With `cfg.island_threads <= 1` this
@@ -454,7 +744,17 @@ pub(crate) fn migrate(
             let mut placed = 0;
             for (m, &slot) in incoming.iter().zip(slots.iter()) {
                 if let Some(obj) = m.objectives {
-                    e.archive.entry(m.cache_key()).or_insert_with(|| ((*m).clone(), obj));
+                    let key = m.cache_key();
+                    e.archive.entry(key).or_insert_with(|| ((*m).clone(), obj));
+                    // Genealogy on the receiving island: the genome
+                    // arrived by transfer, not by an operator here. (The
+                    // global front merge prefers the producing island's
+                    // record over this tag.) RNG-free, deterministic.
+                    e.lineage.entry(key).or_insert_with(|| Lineage {
+                        op: "migrant".to_string(),
+                        parent: None,
+                        edit: None,
+                    });
                 }
                 if minimize_with.is_some() {
                     // the migrant arrives pre-minimized: its edits are
@@ -696,6 +996,8 @@ fn engine_json(e: &Engine) -> Json {
     archive.sort_by_key(|(k, _)| **k);
     let mut cache: Vec<(&u64, &Option<Objectives>)> = e.cache.iter().collect();
     cache.sort_by_key(|(k, _)| **k);
+    let mut lineage: Vec<(&u64, &Lineage)> = e.lineage.iter().collect();
+    lineage.sort_by_key(|(k, _)| **k);
     Json::obj(vec![
         ("id", Json::num(e.id as f64)),
         ("rng", Json::Arr(e.rng.state().iter().map(|&w| hex_u64(w)).collect())),
@@ -716,6 +1018,32 @@ fn engine_json(e: &Engine) -> Json {
                 cache
                     .iter()
                     .map(|(k, v)| Json::arr([hex_u64(**k), obj_json(**v)]))
+                    .collect(),
+            ),
+        ),
+        // Genealogy, sorted by key like the archive, so resumed runs
+        // report bit-identical provenance (pinned by the lineage
+        // roundtrip test in tests/telemetry_trace.rs).
+        (
+            "lineage",
+            Json::Arr(
+                lineage
+                    .iter()
+                    .map(|(k, l)| {
+                        Json::arr([
+                            hex_u64(**k),
+                            Json::obj(vec![
+                                ("op", Json::str(l.op.as_str())),
+                                ("parent", l.parent.map_or(Json::Null, hex_u64)),
+                                (
+                                    "edit",
+                                    l.edit
+                                        .as_ref()
+                                        .map_or(Json::Null, |s| Json::str(s.as_str())),
+                                ),
+                            ]),
+                        ])
+                    })
                     .collect(),
             ),
         ),
@@ -761,6 +1089,35 @@ fn parse_engine(j: &Json, n_ops: usize) -> Result<Engine, String> {
         Ok(hj) => parse_hints(hj)?,
         Err(_) => OpHints::default(),
     };
+    // Checkpoints written before the telemetry subsystem carry no
+    // genealogy; those archives restore with an empty lineage map (front
+    // points from such runs report `None`).
+    let mut lineage = std::collections::HashMap::new();
+    if let Ok(lj) = j.get("lineage") {
+        for pair in jerr(lj.as_arr())? {
+            let pair = jerr(pair.as_arr())?;
+            if pair.len() != 2 {
+                return Err("lineage entry is not a [key, record] pair".into());
+            }
+            let rec = &pair[1];
+            let parent = match jerr(rec.get("parent"))? {
+                Json::Null => None,
+                p => Some(parse_u64(p)?),
+            };
+            let edit = match jerr(rec.get("edit"))? {
+                Json::Null => None,
+                s => Some(jerr(s.as_str())?.to_string()),
+            };
+            lineage.insert(
+                parse_u64(&pair[0])?,
+                Lineage {
+                    op: jerr(rec.get("op").and_then(|v| v.as_str()))?.to_string(),
+                    parent,
+                    edit,
+                },
+            );
+        }
+    }
     Ok(Engine {
         id: u("id")?,
         rng: Rng::from_state(state),
@@ -773,6 +1130,9 @@ fn parse_engine(j: &Json, n_ops: usize) -> Result<Engine, String> {
         migrants_received: u("received")?,
         sched,
         hints,
+        lineage,
+        spans: SpanRecorder::new(),
+        gen_spans: Vec::new(),
     })
 }
 
@@ -781,8 +1141,9 @@ fn parse_engine(j: &Json, n_ops: usize) -> Result<Engine, String> {
 /// are echoed into the checkpoint and verified on load. `generations` is
 /// deliberately absent (resume may extend the run), as are `workers`,
 /// `island_threads`, `batch` and `checkpoint_every` (scheduling only —
-/// any value yields the same bits, so a resume may change them freely)
-/// and `verbose`.
+/// any value yields the same bits, so a resume may change them freely),
+/// `verbose`, and `trace` (strictly observational: attaching or dropping
+/// a trace stream on resume is always safe).
 fn config_json(cfg: &SearchConfig) -> Json {
     Json::obj(vec![
         ("seed", hex_u64(cfg.seed)),
@@ -1462,7 +1823,8 @@ mod tests {
                 completed: 0,
                 migrations: 0,
             };
-            drive(&mut seq, &g, &eval, &cfg, &ops, ghash, None).unwrap();
+            drive(&mut seq, &g, &eval, &cfg, &ops, ghash, None, None, &mut SpanRecorder::new())
+                .unwrap();
             let want = checkpoint_json(&cfg, ghash, &seq);
             for threads in [2usize, 4] {
                 let tcfg = SearchConfig { island_threads: threads, ..cfg.clone() };
@@ -1472,7 +1834,8 @@ mod tests {
                     completed: 0,
                     migrations: 0,
                 };
-                drive(&mut thr, &g, &eval, &tcfg, &ops, ghash, None).unwrap();
+                drive(&mut thr, &g, &eval, &tcfg, &ops, ghash, None, None, &mut SpanRecorder::new())
+                    .unwrap();
                 // serialize the threaded state under the sequential cfg so
                 // only the *state* is compared, not the config echo
                 assert_eq!(
@@ -1543,6 +1906,92 @@ mod tests {
             err.to_string().contains("checkpoint"),
             "error must name the checkpoint: {err}"
         );
+    }
+
+    #[test]
+    fn front_points_carry_lineage_and_phases_are_populated() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 6,
+            generations: 3,
+            elites: 2,
+            workers: 1,
+            seed: 13,
+            islands: 2,
+            migration_interval: 1,
+            migrants: 1,
+            ..Default::default()
+        };
+        let r = super::super::search::run(&g, &eval, &cfg);
+        assert_eq!(r.pareto.len(), r.pareto_lineage.len());
+        assert!(!r.pareto.is_empty());
+        for lin in &r.pareto_lineage {
+            let l = lin.as_ref().expect("every front point must carry lineage");
+            assert!(!l.op.is_empty());
+            // the merged front prefers the producing island's record
+            assert_ne!(l.op, "migrant", "front lineage must name the producer");
+        }
+        // the unmutated original survives on the front of this toy
+        // workload and must be tagged as such
+        assert!(
+            r.pareto
+                .iter()
+                .zip(r.pareto_lineage.iter())
+                .any(|((ind, _), l)| ind.edits.is_empty()
+                    && l.as_ref().map_or(false, |l| l.op == "original")),
+            "baseline front point should carry the 'original' tag"
+        );
+        // phase spans: propose/evaluate/select ran on every island each
+        // generation, so their rows must have nonzero counts
+        for want in ["propose", "evaluate", "select"] {
+            let row = r.phases.iter().find(|p| p.phase == want).unwrap();
+            assert!(row.count > 0, "phase {want} recorded no spans");
+        }
+        // migrate ran (2 islands, interval 1); checkpoint did not
+        assert!(r.phases.iter().find(|p| p.phase == "migrate").unwrap().count > 0);
+        assert_eq!(r.phases.iter().find(|p| p.phase == "checkpoint").unwrap().count, 0);
+    }
+
+    #[test]
+    fn lineage_roundtrips_and_legacy_checkpoints_restore_empty() {
+        let (g, eval) = toy();
+        let cfg = SearchConfig {
+            pop_size: 6,
+            generations: 0,
+            elites: 2,
+            workers: 1,
+            seed: 17,
+            ..Default::default()
+        };
+        let ops = OperatorSet::classic();
+        let mut engines = vec![Engine::new(0, &g, &eval, &cfg, &ops)];
+        for gen in 0..2 {
+            engines[0].step(&g, &eval, &cfg, gen, &ops);
+        }
+        assert!(!engines[0].lineage.is_empty(), "seeding must record origin lineage");
+        // every archive key has a lineage record
+        for k in engines[0].archive.keys() {
+            assert!(engines[0].lineage.contains_key(k), "archive key without lineage");
+        }
+        let ghash = crate::ir::canon::graph_hash(&g);
+        let st = RunState { engines, history: Vec::new(), completed: 2, migrations: 0 };
+        let j = checkpoint_json(&cfg, ghash, &st);
+        let restored =
+            restore_checkpoint(&Json::parse(&j.to_string()).unwrap(), &cfg, ghash).unwrap();
+        assert_eq!(restored.engines[0].lineage, st.engines[0].lineage);
+        // a pre-telemetry checkpoint (no "lineage" key) restores empty
+        let mut legacy = j.clone();
+        if let Json::Obj(ref mut top) = legacy {
+            if let Some(Json::Arr(ref mut engines)) = top.get_mut("engines") {
+                for e in engines.iter_mut() {
+                    if let Json::Obj(em) = e {
+                        em.remove("lineage");
+                    }
+                }
+            }
+        }
+        let restored = restore_checkpoint(&legacy, &cfg, ghash).unwrap();
+        assert!(restored.engines[0].lineage.is_empty());
     }
 
     #[test]

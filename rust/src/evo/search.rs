@@ -22,10 +22,12 @@ use super::operators::{
 use super::patch::Individual;
 use crate::exec::cache::ProgramCache;
 use crate::ir::Graph;
+use crate::telemetry::{GenSpans, Phase, SpanRecorder};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Evaluates a materialized variant against the workload's test cases,
 /// returning `(runtime, error)` to minimize, or `None` when the variant
@@ -182,6 +184,15 @@ pub struct SearchConfig {
     /// reductions feeds [`OpHints`] (crossover protects load-bearing
     /// edits; `delete` avoids known-neutral targets). Off by default.
     pub reseed_minimized: bool,
+    /// Append a JSONL telemetry stream to this path
+    /// ([`crate::telemetry::trace`]): one event per generation /
+    /// migration / checkpoint / cache sample plus run boundary markers,
+    /// written by a background thread. Strictly observational — no RNG
+    /// draws, no behavior change — so like `workers` and `batch` it is
+    /// excluded from the checkpoint's config echo, and trace-on vs
+    /// trace-off runs are bit-identical (pinned by
+    /// `tests/telemetry_trace.rs`).
+    pub trace: Option<std::path::PathBuf>,
     pub verbose: bool,
 }
 
@@ -209,6 +220,7 @@ impl Default for SearchConfig {
             adapt: false,
             filter_neutral: false,
             reseed_minimized: false,
+            trace: None,
             verbose: false,
         }
     }
@@ -240,6 +252,25 @@ pub struct IslandStats {
     pub front_size: usize,
     pub migrants_sent: usize,
     pub migrants_received: usize,
+}
+
+/// Mutation genealogy of one archived genome: how it was first produced.
+/// `op` is the operator chain that created it ("crossover+perturb",
+/// "delete", ... — crossover first when both fired; "clone" for an
+/// unmodified tournament copy) or an origin tag ("original", "seed",
+/// "reseed", "migrant") for individuals that never went through an
+/// offspring pass on the recording island. `parent` is the
+/// [`Individual::cache_key`] of the tournament parent the genome was
+/// derived from (absent for origin tags), and `edit` is the newest edit's
+/// display form when a mutation operator contributed. Recorded as a pure
+/// function of per-island search state — no RNG draws — so lineage is
+/// identical across `--workers` / `--island-threads` / `--batch`
+/// schedules and checkpoint resume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lineage {
+    pub op: String,
+    pub parent: Option<u64>,
+    pub edit: Option<String>,
 }
 
 /// Search outcome: the final Pareto archive plus bookkeeping.
@@ -281,6 +312,16 @@ pub struct SearchResult {
     /// `None` for the crossover row). One row per enabled mutation
     /// operator followed by the crossover row.
     pub operators: Vec<OperatorStats>,
+    /// Mutation genealogy for each [`SearchResult::pareto`] entry, taken
+    /// from the lowest-id island holding a non-migrant record for the
+    /// genome (falling back to any island's record). `None` only when no
+    /// island recorded the key — which current bookkeeping never
+    /// produces.
+    pub pareto_lineage: Vec<Option<Lineage>>,
+    /// Wall-time phase breakdown (propose / evaluate / select / migrate /
+    /// checkpoint) merged across islands and the driver thread. Purely
+    /// observational: never checkpointed, never compared bitwise.
+    pub phases: Vec<crate::telemetry::PhaseRow>,
 }
 
 /// Run the search. `original` is the unmutated program (the paper's
@@ -332,6 +373,15 @@ pub(crate) struct Engine {
     /// Attribution hints harvested from `opt::minimize` runs
     /// (`cfg.reseed_minimized`). Checkpointed; empty otherwise.
     pub(crate) hints: OpHints,
+    /// Mutation genealogy per archive key ([`Lineage`]). Checkpointed
+    /// (sorted), so resumed runs report identical provenance.
+    pub(crate) lineage: HashMap<u64, Lineage>,
+    /// Phase-span aggregates for this island (telemetry only — never
+    /// checkpointed, merged into [`SearchResult::phases`] at the end).
+    pub(crate) spans: SpanRecorder,
+    /// Per-generation span rows staged for the `--trace` stream; the
+    /// driver drains these at each barrier. Never checkpointed.
+    pub(crate) gen_spans: Vec<GenSpans>,
 }
 
 /// The program cache handed to operator proposals, when the neutral
@@ -356,6 +406,9 @@ struct OffMeta {
     /// Objectives of the tournament parent the offspring was derived
     /// from — the baseline for the non-neutral test.
     parent_obj: Option<Objectives>,
+    /// Cache key of that parent, recorded into [`Lineage::parent`] when
+    /// the offspring first enters the archive.
+    parent_key: u64,
 }
 
 /// Minimized archive elites injected into a degenerate-generation reseed
@@ -400,9 +453,15 @@ impl Engine {
             migrants_received: 0,
             sched,
             hints,
+            lineage: HashMap::new(),
+            spans: SpanRecorder::new(),
+            gen_spans: Vec::new(),
         };
+        let t0 = Instant::now();
         e.evaluate_pop(original, eval, cfg);
+        e.spans.record(Phase::Evaluate, t0.elapsed().as_nanos() as u64);
         e.absorb_pop();
+        e.record_origin_lineage("seed");
         e
     }
 
@@ -463,6 +522,25 @@ impl Engine {
         }
         self.evaluate_pop(original, eval, cfg);
         self.absorb_pop();
+        self.record_origin_lineage("reseed");
+    }
+
+    /// Tag archive entries that lack genealogy — initial seeds, reseeds
+    /// and the unmutated original never pass through `assign_credit`.
+    /// A pure function of archive + lineage state (no RNG draws, order-
+    /// independent inserts), so it cannot perturb the search stream.
+    fn record_origin_lineage(&mut self, tag: &str) {
+        let keys: Vec<u64> = self
+            .archive
+            .keys()
+            .filter(|k| !self.lineage.contains_key(k))
+            .copied()
+            .collect();
+        for k in keys {
+            let original = self.archive.get(&k).map_or(false, |(ind, _)| ind.edits.is_empty());
+            let op = if original { "original" } else { tag };
+            self.lineage.insert(k, Lineage { op: op.to_string(), parent: None, edit: None });
+        }
     }
 
     /// Advance one generation: rank, recombine, mutate, evaluate, assign
@@ -476,6 +554,9 @@ impl Engine {
         ops: &OperatorSet,
     ) -> GenStats {
         let evals_before = self.evals;
+        // Phase spans are observational only: `Instant` reads never feed
+        // back into the search (degenerate early returns skip recording).
+        let t_propose = Instant::now();
         // Generation-start counter snapshot: the adaptive update works on
         // this generation's deltas only.
         let sched_snap = self.sched.mutation.clone();
@@ -559,15 +640,27 @@ impl Engine {
                 c.objectives = None;
                 if kept {
                     offspring.push(c.clone());
-                    meta.push(OffMeta { credit, parent_obj: self.pop[parent].objectives });
+                    meta.push(OffMeta {
+                        credit,
+                        parent_obj: self.pop[parent].objectives,
+                        parent_key: self.pop[parent].cache_key(),
+                    });
                 }
             }
         }
 
+        let propose_ns = t_propose.elapsed().as_nanos() as u64;
+        self.spans.record(Phase::Propose, propose_ns);
+
+        let t_eval = Instant::now();
         let (evals, hits) = evaluate_all(original, eval, &mut offspring, cfg, &mut self.cache);
+        let evaluate_ns = t_eval.elapsed().as_nanos() as u64;
+        self.spans.record(Phase::Evaluate, evaluate_ns);
         self.evals += evals;
         self.cache_hits += hits;
-        self.assign_credit(&offspring, &meta);
+
+        let t_select = Instant::now();
+        self.assign_credit(&offspring, &meta, ops);
         absorb(&mut self.archive, &offspring);
 
         // ---- environmental selection: elites + tournament (§4.4) ----------
@@ -610,6 +703,15 @@ impl Engine {
         if cfg.adapt {
             self.sched.adapt(&sched_snap);
         }
+        let select_ns = t_select.elapsed().as_nanos() as u64;
+        self.spans.record(Phase::Select, select_ns);
+        self.gen_spans.push(GenSpans {
+            gen,
+            propose_ns,
+            evaluate_ns,
+            select_ns,
+            weights: self.sched.weights.clone(),
+        });
 
         self.stats(gen, evals_before)
     }
@@ -618,14 +720,36 @@ impl Engine {
     /// that produced them: valid evaluation, non-neutral movement against
     /// the tournament parent, and first-sight Pareto-archive insertions.
     /// Must run after `evaluate_all` and *before* `absorb` (insertion
-    /// novelty is judged against the pre-absorb archive).
-    fn assign_credit(&mut self, offspring: &[Individual], meta: &[OffMeta]) {
+    /// novelty is judged against the pre-absorb archive). First-sight
+    /// offspring also record their [`Lineage`] here — operator chain,
+    /// parent key, newest edit — keyed by cache key.
+    fn assign_credit(&mut self, offspring: &[Individual], meta: &[OffMeta], ops: &OperatorSet) {
         debug_assert_eq!(offspring.len(), meta.len());
         let mut counted: std::collections::HashSet<u64> = std::collections::HashSet::new();
         for (ind, m) in offspring.iter().zip(meta.iter()) {
             let Some(o) = ind.objectives else { continue };
             let key = ind.cache_key();
             let fresh = !self.archive.contains_key(&key) && counted.insert(key);
+            if fresh {
+                let op = if m.credit.is_empty() {
+                    "clone".to_string()
+                } else {
+                    m.credit
+                        .iter()
+                        .map(|c| match c {
+                            Credit::Crossover => "crossover",
+                            Credit::Mutation(i) => ops.names()[*i],
+                        })
+                        .collect::<Vec<&str>>()
+                        .join("+")
+                };
+                let mutated = m.credit.iter().any(|c| matches!(c, Credit::Mutation(_)));
+                let edit =
+                    if mutated { ind.edits.last().map(|e| e.to_string()) } else { None };
+                self.lineage
+                    .entry(key)
+                    .or_insert(Lineage { op, parent: Some(m.parent_key), edit });
+            }
             let neutral = m
                 .parent_obj
                 .map_or(false, |p| p.0.to_bits() == o.0.to_bits() && p.1.to_bits() == o.1.to_bits());

@@ -44,7 +44,7 @@ use crate::ir::types::IrError;
 use crate::ir::Graph;
 use crate::opt::OptLevel;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Cap on resident entries. Most mutants are evaluated once and never
@@ -175,6 +175,10 @@ pub struct ProgramCache {
     batch_singletons: AtomicUsize,
     batched_evals: AtomicUsize,
     scalar_evals: AtomicUsize,
+    /// Nanoseconds spent in the compile pipeline (optimizer passes +
+    /// program lowering), summed across threads. A telemetry
+    /// observable only — never read on the search trajectory.
+    compile_ns: AtomicU64,
 }
 
 impl Default for ProgramCache {
@@ -219,6 +223,7 @@ impl ProgramCache {
             batch_singletons: AtomicUsize::new(0),
             batched_evals: AtomicUsize::new(0),
             scalar_evals: AtomicUsize::new(0),
+            compile_ns: AtomicU64::new(0),
         }
     }
 
@@ -286,7 +291,9 @@ impl ProgramCache {
     /// same genome skips the pipeline (the [`ProgramCache::canonical_key`]
     /// probe path). Shared by the compile path and the probe.
     fn run_pipeline_and_memo(&self, raw_key: u128, g: &Graph, retain: bool) -> (u128, Graph) {
+        let t0 = std::time::Instant::now();
         let (og, _) = crate::opt::optimize(g, self.opt_level);
+        self.compile_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.opt_insts_in.fetch_add(g.len(), Ordering::Relaxed);
         self.opt_insts_out.fetch_add(og.len(), Ordering::Relaxed);
         let key = crate::ir::canon::graph_hash(&og);
@@ -341,11 +348,13 @@ impl ProgramCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
         }
+        let t0 = std::time::Instant::now();
         let compiled = Arc::new(if self.opt_level >= OptLevel::O3 {
             Program::compile_fused(target)?
         } else {
             Program::compile(target)?
         });
+        self.compile_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         if let Some(f) = compiled.fusion_stats() {
             self.fuse_programs.fetch_add(1, Ordering::Relaxed);
             self.fuse_regions.fetch_add(f.regions, Ordering::Relaxed);
@@ -361,6 +370,14 @@ impl ProgramCache {
         }
         let entry = map.entry(key).or_insert(compiled);
         Ok(Arc::clone(entry))
+    }
+
+    /// Nanoseconds spent lowering so far (optimizer pipeline + program
+    /// compilation), summed across threads. Telemetry only: it nests
+    /// inside the `evaluate` phase span, so it is reported alongside —
+    /// not as — a search phase.
+    pub fn compile_ns(&self) -> u64 {
+        self.compile_ns.load(Ordering::Relaxed)
     }
 
     /// `(hits, misses)` so far. `misses` counts actual compilations.

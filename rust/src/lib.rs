@@ -32,6 +32,9 @@
 //!   for the paper's MNIST/CIFAR10; see DESIGN.md §3).
 //! * [`models`] — IR builders for the two paper workloads.
 //! * [`coordinator`] — the parallel evaluation pool, metrics and reports.
+//! * [`telemetry`] — strictly-observational search telemetry: phase
+//!   spans, the `--trace` JSONL event stream, elite-lineage provenance,
+//!   the `gevo-ml report` analyzer, and timing-noise characterization.
 //! * [`util`] — infra substrates (RNG, JSON, CLI, stats, bench harness)
 //!   written in-tree because the offline registry carries no such crates.
 
@@ -47,3 +50,4 @@ pub mod data;
 pub mod models;
 pub mod runtime;
 pub mod coordinator;
+pub mod telemetry;

@@ -9,6 +9,8 @@
 //! * `show`     — print a model's IR (textual dialect) or emitted HLO.
 //! * `validate` — cross-check interpreter vs real XLA (PJRT) on the
 //!   models and on random mutants; also smoke-loads the AOT artifacts.
+//! * `report`   — analyze a `--trace` JSONL stream offline: phase
+//!   breakdown, cache trajectory, operator weights, elite lineage.
 //!
 //! Run `gevo-ml help` for flags.
 
@@ -27,6 +29,7 @@ fn main() {
         Some("analyze") => cmd_analyze(&args),
         Some("show") => cmd_show(&args),
         Some("validate") => cmd_validate(&args),
+        Some("report") => cmd_report(&args),
         Some("help") | None => print_help(),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
@@ -49,7 +52,7 @@ USAGE: gevo-ml <subcommand> [flags]
            [--checkpoint-every N]
            [--opt-level 0|1|2|3] [--operators LIST] [--adapt]
            [--filter-neutral] [--reseed-minimized] [--list-operators]
-           [--out PREFIX] [--quiet]
+           [--trace FILE] [--out PREFIX] [--quiet]
            --islands shards the population into K ring-connected
            subpopulations; --island-threads steps islands on T parallel
            OS threads between migration barriers (default 1; any value
@@ -78,7 +81,13 @@ USAGE: gevo-ml <subcommand> [flags]
            provably erases (needs --opt-level 1+; counted in opt_stats);
            --reseed-minimized makes island migration/reseeds carry
            delta-debugged elites and feeds their attribution back into
-           the operators; --list-operators prints the registry and exits
+           the operators; --list-operators prints the registry and exits.
+           --trace FILE appends a JSONL telemetry stream (one event per
+           line: run_start/resume, gen, cache, migration, checkpoint,
+           front, run_end) written on a background thread; tracing is
+           strictly observational — fronts, checkpoints and RNG state
+           are bit-identical with or without it, and attaching or
+           dropping a trace on checkpoint resume is always safe
   minimize same flags as search; after the search (or checkpoint resume)
            delta-debugs every Pareto-front edit list down to the edits
            that matter and prints the per-edit attribution table; never
@@ -86,7 +95,10 @@ USAGE: gevo-ml <subcommand> [flags]
   table1   print the paper's Table 1 (model layer composition)
   analyze  --model mobilenet|2fcnet   (§6.1 / §6.2 mutation analysis)
   show     --workload 2fcnet|mobilenet [--hlo]   print IR or emitted HLO
-  validate [--mutants N]   interpreter vs XLA-PJRT cross-check"
+  validate [--mutants N]   interpreter vs XLA-PJRT cross-check
+  report   TRACE.jsonl [--csv]   analyze a --trace stream: phase
+           breakdown, cache hit-rate and operator-weight trajectories,
+           elite lineage table (markdown, or machine-readable --csv)"
     );
 }
 
@@ -133,6 +145,7 @@ fn search_config(args: &Args) -> SearchConfig {
         adapt: args.flag("adapt"),
         filter_neutral: args.flag("filter-neutral"),
         reseed_minimized: args.flag("reseed-minimized"),
+        trace: args.get("trace").map(std::path::PathBuf::from),
         verbose: !args.flag("quiet"),
     }
 }
@@ -246,7 +259,43 @@ fn cmd_search(args: &Args) {
     if let Some(b) = r.search.program_batch {
         println!("{}", report::batch_summary(&b));
     }
+    println!("{}", report::phase_summary(&r));
     write_out(args, &r);
+}
+
+/// `gevo-ml report <trace.jsonl> [--csv]`: offline analyzer for the
+/// `--trace` stream. Every line must parse as JSON; any malformed line
+/// or unknown event kind is a hard error (exit 1), so a truncated or
+/// corrupted trace is caught rather than silently summarized.
+fn cmd_report(args: &Args) {
+    let Some(path) = args.positional.first() else {
+        eprintln!("usage: gevo-ml report <trace.jsonl> [--csv]");
+        std::process::exit(2);
+    };
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("error: trace: {path}: {e}");
+        std::process::exit(1);
+    });
+    let mut lines = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match gevo_ml::util::json::Json::parse(line) {
+            Ok(j) => lines.push(j),
+            Err(e) => {
+                eprintln!("error: trace: {path}:{}: {e:?}", i + 1);
+                std::process::exit(1);
+            }
+        }
+    }
+    match gevo_ml::telemetry::analyze::render(&lines, args.flag("csv")) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: trace: {path}: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn cmd_minimize(args: &Args) {

@@ -1,0 +1,540 @@
+//! §Telemetry L3: trace-stream analysis — the aggregation behind
+//! `gevo-ml report <trace.jsonl>`. Re-derives phase-time breakdowns,
+//! cache-behavior and operator-weight trajectories, and the elite
+//! lineage table from the JSONL event stream, rendered as markdown
+//! (default) or CSV (`--csv`). Tolerant of partial traces: a killed
+//! run's prefix (no `run_end`) still renders everything it recorded.
+
+use crate::util::json::Json;
+
+/// Render a parsed trace (one [`Json`] value per line, in file order)
+/// as a markdown report, or as CSV sections with `csv = true`.
+pub fn render(lines: &[Json], csv: bool) -> Result<String, String> {
+    let t = Trace::gather(lines)?;
+    Ok(if csv { t.to_csv() } else { t.to_markdown() })
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+}
+
+fn int(j: &Json, key: &str) -> usize {
+    num(j, key) as usize
+}
+
+struct GenRow {
+    gen: usize,
+    island: usize,
+    evaluated: usize,
+    valid: usize,
+    front_size: usize,
+    best_time: f64,
+    best_error: f64,
+    propose_ns: f64,
+    evaluate_ns: f64,
+    select_ns: f64,
+    weights: Vec<f64>,
+}
+
+struct CacheRow {
+    thru_gen: usize,
+    pc_hits: f64,
+    pc_misses: f64,
+    memo_hits: f64,
+    memo_misses: f64,
+    filtered: f64,
+    contended: f64,
+    compile_ns: f64,
+    batched: f64,
+    scalar: f64,
+}
+
+struct FrontRow {
+    time: f64,
+    error: f64,
+    island: usize,
+    edits: usize,
+    op: String,
+    parent: String,
+    edit: String,
+}
+
+struct Trace {
+    operators: Vec<String>,
+    islands: usize,
+    resumes: usize,
+    completed: usize,
+    gens: Vec<GenRow>,
+    caches: Vec<CacheRow>,
+    migrations: Vec<(usize, f64)>,
+    checkpoints: Vec<(usize, f64)>,
+    front: Vec<FrontRow>,
+    ended: bool,
+}
+
+impl Trace {
+    fn gather(lines: &[Json]) -> Result<Trace, String> {
+        if lines.is_empty() {
+            return Err("empty trace (no events)".to_string());
+        }
+        let mut t = Trace {
+            operators: Vec::new(),
+            islands: 0,
+            resumes: 0,
+            completed: 0,
+            gens: Vec::new(),
+            caches: Vec::new(),
+            migrations: Vec::new(),
+            checkpoints: Vec::new(),
+            front: Vec::new(),
+            ended: false,
+        };
+        for (i, ev) in lines.iter().enumerate() {
+            let kind = ev
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .map_err(|e| format!("event {}: {e}", i + 1))?
+                .to_string();
+            match kind.as_str() {
+                "run_start" | "resume" => {
+                    if kind == "resume" {
+                        t.resumes += 1;
+                    }
+                    t.islands = t.islands.max(int(ev, "islands"));
+                    if t.operators.is_empty() {
+                        if let Some(ops) = ev.opt("operators").and_then(|o| o.as_arr().ok()) {
+                            t.operators = ops
+                                .iter()
+                                .filter_map(|o| o.as_str().ok())
+                                .map(str::to_string)
+                                .collect();
+                        }
+                    }
+                }
+                "gen" => {
+                    let ph = ev.opt("phase_ns");
+                    let pick = |k: &str| ph.map(|p| num(p, k)).unwrap_or(0.0);
+                    let weights = ev
+                        .opt("weights")
+                        .and_then(|w| w.as_arr().ok())
+                        .map(|w| w.iter().filter_map(|x| x.as_f64().ok()).collect())
+                        .unwrap_or_default();
+                    t.gens.push(GenRow {
+                        gen: int(ev, "gen"),
+                        island: int(ev, "island"),
+                        evaluated: int(ev, "evaluated"),
+                        valid: int(ev, "valid"),
+                        front_size: int(ev, "front_size"),
+                        best_time: num(ev, "best_time"),
+                        best_error: num(ev, "best_error"),
+                        propose_ns: pick("propose"),
+                        evaluate_ns: pick("evaluate"),
+                        select_ns: pick("select"),
+                        weights,
+                    });
+                }
+                "cache" => t.caches.push(CacheRow {
+                    thru_gen: int(ev, "thru_gen"),
+                    pc_hits: num(ev, "pc_hits"),
+                    pc_misses: num(ev, "pc_misses"),
+                    memo_hits: num(ev, "memo_hits"),
+                    memo_misses: num(ev, "memo_misses"),
+                    filtered: num(ev, "filtered_neutral"),
+                    contended: num(ev, "lock_contended"),
+                    compile_ns: num(ev, "compile_ns"),
+                    batched: num(ev, "batched_evals"),
+                    scalar: num(ev, "scalar_evals"),
+                }),
+                "migration" => t.migrations.push((int(ev, "gen"), num(ev, "ns"))),
+                "checkpoint" => t.checkpoints.push((int(ev, "gen"), num(ev, "ns"))),
+                "front" => {
+                    // the last front event wins (a resumed run re-emits it)
+                    t.front.clear();
+                    if let Some(pts) = ev.opt("points").and_then(|p| p.as_arr().ok()) {
+                        for p in pts {
+                            let lin = p.opt("lineage").filter(|l| !matches!(l, Json::Null));
+                            let lstr = |k: &str| {
+                                lin.and_then(|l| l.opt(k))
+                                    .and_then(|v| v.as_str().ok())
+                                    .unwrap_or("-")
+                                    .to_string()
+                            };
+                            t.front.push(FrontRow {
+                                time: num(p, "time"),
+                                error: num(p, "error"),
+                                island: int(p, "island"),
+                                edits: int(p, "edits"),
+                                op: lstr("op"),
+                                parent: lstr("parent"),
+                                edit: lstr("edit"),
+                            });
+                        }
+                    }
+                }
+                "run_end" => {
+                    t.ended = true;
+                    t.completed = t.completed.max(int(ev, "completed"));
+                }
+                other => return Err(format!("event {}: unknown kind '{other}'", i + 1)),
+            }
+        }
+        Ok(t)
+    }
+
+    /// Phase rows rebuilt from the stream: (name, events, total_ns, max_ns).
+    fn phase_rows(&self) -> Vec<(&'static str, u64, f64, f64)> {
+        let fold = |f: fn(&GenRow) -> f64| -> (f64, f64) {
+            self.gens.iter().map(f).fold((0.0, 0.0f64), |(s, m), x| (s + x, m.max(x)))
+        };
+        let (pt, pm) = fold(|g| g.propose_ns);
+        let (et, em) = fold(|g| g.evaluate_ns);
+        let (st, sm) = fold(|g| g.select_ns);
+        let agg = |v: &[(usize, f64)]| -> (f64, f64) {
+            v.iter().map(|&(_, ns)| ns).fold((0.0, 0.0f64), |(s, m), x| (s + x, m.max(x)))
+        };
+        let (mt, mm) = agg(&self.migrations);
+        let (ct, cm) = agg(&self.checkpoints);
+        let n = self.gens.len() as u64;
+        vec![
+            ("propose", n, pt, pm),
+            ("evaluate", n, et, em),
+            ("select", n, st, sm),
+            ("migrate", self.migrations.len() as u64, mt, mm),
+            ("checkpoint", self.checkpoints.len() as u64, ct, cm),
+        ]
+    }
+
+    fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# gevo-ml trace report\n\n");
+        s.push_str(&format!(
+            "- events: {} gen, {} cache, {} migration, {} checkpoint, {} resume\n",
+            self.gens.len(),
+            self.caches.len(),
+            self.migrations.len(),
+            self.checkpoints.len(),
+            self.resumes
+        ));
+        s.push_str(&format!(
+            "- run: {} islands, {}\n\n",
+            self.islands.max(1),
+            if self.ended {
+                format!("complete through generation {}", self.completed)
+            } else {
+                "no run_end event (killed or still running)".to_string()
+            }
+        ));
+
+        // --- phases ---------------------------------------------------
+        s.push_str("## phases\n\n");
+        let rows = self.phase_rows();
+        let total: f64 = rows.iter().map(|r| r.2).sum();
+        s.push_str("| phase | events | total (ms) | mean (µs) | max (µs) | share |\n");
+        s.push_str("|---|---|---|---|---|---|\n");
+        for (name, n, tot, max) in &rows {
+            let mean = if *n > 0 { tot / *n as f64 } else { 0.0 };
+            let share = if total > 0.0 { 100.0 * tot / total } else { 0.0 };
+            s.push_str(&format!(
+                "| {name} | {n} | {:.3} | {:.1} | {:.1} | {share:.1}% |\n",
+                tot / 1e6,
+                mean / 1e3,
+                max / 1e3
+            ));
+        }
+        let prows: Vec<crate::telemetry::PhaseRow> = rows
+            .iter()
+            .map(|&(name, n, tot, max)| crate::telemetry::PhaseRow {
+                phase: name,
+                count: n,
+                total_ns: tot as u64,
+                max_ns: max as u64,
+            })
+            .collect();
+        s.push_str(&format!("\n{}\n\n", crate::telemetry::phase_summary(&prows)));
+
+        // --- cache ----------------------------------------------------
+        s.push_str("## cache\n\n");
+        if self.caches.is_empty() {
+            s.push_str("no cache events recorded.\n\n");
+        } else {
+            s.push_str(
+                "| thru gen | pc hits Δ | lowerings Δ | hit rate | memo hits Δ | \
+                 memo misses Δ | filtered Δ | contended Δ | compile (ms) Δ | \
+                 batched Δ | scalar Δ |\n",
+            );
+            s.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+            for c in &self.caches {
+                let probes = c.pc_hits + c.pc_misses;
+                let rate = if probes > 0.0 { 100.0 * c.pc_hits / probes } else { 0.0 };
+                s.push_str(&format!(
+                    "| {} | {} | {} | {rate:.1}% | {} | {} | {} | {} | {:.3} | {} | {} |\n",
+                    c.thru_gen,
+                    c.pc_hits,
+                    c.pc_misses,
+                    c.memo_hits,
+                    c.memo_misses,
+                    c.filtered,
+                    c.contended,
+                    c.compile_ns / 1e6,
+                    c.batched,
+                    c.scalar
+                ));
+            }
+            s.push('\n');
+        }
+
+        // --- operator weights ----------------------------------------
+        s.push_str("## operator weights\n\n");
+        let with_weights: Vec<&GenRow> = self.gens.iter().filter(|g| !g.weights.is_empty()).collect();
+        if with_weights.is_empty() {
+            s.push_str("no operator-weight snapshots recorded.\n\n");
+        } else {
+            let nops =
+                with_weights.iter().map(|g| g.weights.len()).max().unwrap_or(0);
+            let names: Vec<String> = (0..nops)
+                .map(|i| {
+                    self.operators.get(i).cloned().unwrap_or_else(|| format!("op{i}"))
+                })
+                .collect();
+            const MAX_ROWS: usize = 48;
+            let mut shown = 0usize;
+            let mut elided = 0usize;
+            s.push_str(&format!("| island | gen | {} |\n", names.join(" | ")));
+            s.push_str(&format!("|---|---|{}\n", "---|".repeat(nops)));
+            for island in 0..self.islands.max(1) {
+                // emit only rows where the weight vector moved
+                let mut last: Option<&Vec<f64>> = None;
+                for g in with_weights.iter().filter(|g| g.island == island) {
+                    if last.map_or(false, |w| w == &g.weights) {
+                        continue;
+                    }
+                    last = Some(&g.weights);
+                    if shown >= MAX_ROWS {
+                        elided += 1;
+                        continue;
+                    }
+                    shown += 1;
+                    let ws: Vec<String> =
+                        (0..nops).map(|i| match g.weights.get(i) {
+                            Some(w) => format!("{w:.3}"),
+                            None => "-".to_string(),
+                        }).collect();
+                    s.push_str(&format!(
+                        "| {island} | {} | {} |\n",
+                        g.gen,
+                        ws.join(" | ")
+                    ));
+                }
+            }
+            if elided > 0 {
+                s.push_str(&format!("\n({elided} further weight changes elided)\n"));
+            }
+            s.push('\n');
+        }
+
+        // --- lineage --------------------------------------------------
+        s.push_str("## lineage\n\n");
+        if self.front.is_empty() {
+            s.push_str("no front event recorded (run killed before completion?).\n");
+        } else {
+            s.push_str(
+                "| runtime | error | island | edits | operator | parent | newest edit |\n",
+            );
+            s.push_str("|---|---|---|---|---|---|---|\n");
+            for p in &self.front {
+                s.push_str(&format!(
+                    "| {:.4} | {:.4} | {} | {} | {} | {} | {} |\n",
+                    p.time, p.error, p.island, p.edits, p.op, p.parent, p.edit
+                ));
+            }
+        }
+        s
+    }
+
+    fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str("phase,events,total_ns,max_ns\n");
+        for (name, n, tot, max) in self.phase_rows() {
+            s.push_str(&format!("{name},{n},{tot:.0},{max:.0}\n"));
+        }
+        s.push('\n');
+        s.push_str(
+            "gen,island,evaluated,valid,front_size,best_time,best_error,\
+             propose_ns,evaluate_ns,select_ns\n",
+        );
+        for g in &self.gens {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{:.0},{:.0},{:.0}\n",
+                g.gen,
+                g.island,
+                g.evaluated,
+                g.valid,
+                g.front_size,
+                g.best_time,
+                g.best_error,
+                g.propose_ns,
+                g.evaluate_ns,
+                g.select_ns
+            ));
+        }
+        s.push('\n');
+        s.push_str("front_time,front_error,island,edits,operator,parent,newest_edit\n");
+        for p in &self.front {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},\"{}\"\n",
+                p.time, p.error, p.island, p.edits, p.op, p.parent, p.edit
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::event;
+
+    fn synthetic() -> Vec<Json> {
+        vec![
+            event(
+                "run_start",
+                vec![
+                    ("islands", Json::num(2.0)),
+                    ("generations", Json::num(2.0)),
+                    (
+                        "operators",
+                        Json::arr(vec![Json::str("copy"), Json::str("delete")]),
+                    ),
+                ],
+            ),
+            event(
+                "gen",
+                vec![
+                    ("gen", Json::num(0.0)),
+                    ("island", Json::num(0.0)),
+                    ("evaluated", Json::num(6.0)),
+                    ("valid", Json::num(5.0)),
+                    ("front_size", Json::num(2.0)),
+                    ("best_time", Json::num(1.0)),
+                    ("best_error", Json::num(0.0)),
+                    (
+                        "phase_ns",
+                        Json::obj(vec![
+                            ("propose", Json::num(1000.0)),
+                            ("evaluate", Json::num(8000.0)),
+                            ("select", Json::num(500.0)),
+                        ]),
+                    ),
+                    ("weights", Json::arr(vec![Json::num(0.5), Json::num(0.5)])),
+                ],
+            ),
+            event(
+                "gen",
+                vec![
+                    ("gen", Json::num(1.0)),
+                    ("island", Json::num(0.0)),
+                    ("evaluated", Json::num(6.0)),
+                    ("valid", Json::num(6.0)),
+                    ("front_size", Json::num(3.0)),
+                    ("best_time", Json::num(0.9)),
+                    ("best_error", Json::num(0.0)),
+                    (
+                        "phase_ns",
+                        Json::obj(vec![
+                            ("propose", Json::num(1200.0)),
+                            ("evaluate", Json::num(7000.0)),
+                            ("select", Json::num(600.0)),
+                        ]),
+                    ),
+                    ("weights", Json::arr(vec![Json::num(0.7), Json::num(0.3)])),
+                ],
+            ),
+            event(
+                "cache",
+                vec![
+                    ("thru_gen", Json::num(2.0)),
+                    ("pc_hits", Json::num(10.0)),
+                    ("pc_misses", Json::num(2.0)),
+                    ("compile_ns", Json::num(5e6)),
+                ],
+            ),
+            event("migration", vec![("gen", Json::num(2.0)), ("ns", Json::num(4000.0))]),
+            event("checkpoint", vec![("gen", Json::num(2.0)), ("ns", Json::num(9000.0))]),
+            event(
+                "front",
+                vec![(
+                    "points",
+                    Json::arr(vec![Json::obj(vec![
+                        ("time", Json::num(0.9)),
+                        ("error", Json::num(0.0)),
+                        ("island", Json::num(0.0)),
+                        ("edits", Json::num(1.0)),
+                        (
+                            "lineage",
+                            Json::obj(vec![
+                                ("op", Json::str("delete")),
+                                ("parent", Json::str("00000000deadbeef")),
+                                ("edit", Json::str("del(%5)")),
+                            ]),
+                        ),
+                    ])]),
+                )],
+            ),
+            event("run_end", vec![("completed", Json::num(2.0))]),
+        ]
+    }
+
+    #[test]
+    fn markdown_renders_every_section() {
+        let md = render(&synthetic(), false).unwrap();
+        assert!(md.contains("# gevo-ml trace report"), "{md}");
+        assert!(md.contains("## phases"), "{md}");
+        assert!(md.contains("## cache"), "{md}");
+        assert!(md.contains("## operator weights"), "{md}");
+        assert!(md.contains("## lineage"), "{md}");
+        assert!(md.contains("phases: evaluate"), "top phase must lead: {md}");
+        assert!(md.contains("| delete |"), "operator column: {md}");
+        assert!(md.contains("00000000deadbeef"), "parent fingerprint: {md}");
+    }
+
+    #[test]
+    fn weight_trajectory_skips_unchanged_rows() {
+        let mut lines = synthetic();
+        // duplicate the last gen event with identical weights — the
+        // trajectory table must not grow a row for it
+        let dup = lines[2].clone();
+        lines.insert(3, dup);
+        let md = render(&lines, false).unwrap();
+        let weight_rows =
+            md.lines().filter(|l| l.starts_with("| 0 |")).count();
+        assert_eq!(weight_rows, 2, "{md}");
+    }
+
+    #[test]
+    fn csv_mode_emits_phase_and_gen_sections() {
+        let csv = render(&synthetic(), true).unwrap();
+        assert!(csv.starts_with("phase,events,total_ns,max_ns\n"), "{csv}");
+        assert!(csv.contains("\ngen,island,"), "{csv}");
+        assert!(csv.contains("\nfront_time,"), "{csv}");
+        assert!(csv.contains("evaluate,2,15000,8000"), "{csv}");
+    }
+
+    #[test]
+    fn empty_and_malformed_traces_are_clean_errors() {
+        assert!(render(&[], false).is_err());
+        let bogus = vec![Json::obj(vec![("kind", Json::str("nonsense"))])];
+        let e = render(&bogus, false).err().unwrap();
+        assert!(e.contains("unknown kind"), "{e}");
+        let missing = vec![Json::obj(vec![("gen", Json::num(1.0))])];
+        assert!(render(&missing, false).is_err());
+    }
+
+    #[test]
+    fn partial_trace_without_run_end_still_renders() {
+        let mut lines = synthetic();
+        lines.truncate(3); // run_start + two gens, killed before the end
+        let md = render(&lines, false).unwrap();
+        assert!(md.contains("no run_end event"), "{md}");
+        assert!(md.contains("no front event"), "{md}");
+    }
+}

@@ -1,0 +1,105 @@
+//! §Telemetry L2: the counter/timer registry — the operational metrics
+//! a deployed search service would export. Moved here from
+//! `coordinator::metrics` (a thin re-export remains there); the lock
+//! sites now recover from poisoning with the same discipline as
+//! `exec::ProgramCache` — a panicking holder can only leave a counter
+//! map mid-update, never structurally broken, so continuing with the
+//! recovered guard is strictly better than cascading the panic. The
+//! old free-floating global `EVALS` counter was never wired to the
+//! eval pool and has been removed; per-run evaluation counts flow
+//! through `SearchResult::total_evaluations` instead.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+fn unpoisoned<'a, T>(
+    r: Result<MutexGuard<'a, T>, PoisonError<MutexGuard<'a, T>>>,
+) -> MutexGuard<'a, T> {
+    r.unwrap_or_else(|p| p.into_inner())
+}
+
+/// A named set of monotonically-increasing counters and duration sums.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    durations_us: Mutex<BTreeMap<String, u64>>,
+    start: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { start: Some(Instant::now()), ..Default::default() }
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *unpoisoned(self.counters.lock()).entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let us = t0.elapsed().as_micros() as u64;
+        *unpoisoned(self.durations_us.lock()).entry(name.to_string()).or_insert(0) += us;
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        *unpoisoned(self.counters.lock()).get(name).unwrap_or(&0)
+    }
+
+    pub fn duration_secs(&self, name: &str) -> f64 {
+        *unpoisoned(self.durations_us.lock()).get(name).unwrap_or(&0) as f64 / 1e6
+    }
+
+    /// One-line-per-metric report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        if let Some(start) = self.start {
+            s.push_str(&format!("uptime_secs: {:.3}\n", start.elapsed().as_secs_f64()));
+        }
+        for (k, v) in unpoisoned(self.counters.lock()).iter() {
+            s.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, v) in unpoisoned(self.durations_us.lock()).iter() {
+            s.push_str(&format!("{k}_secs: {:.3}\n", *v as f64 / 1e6));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let m = Metrics::new();
+        m.inc("evals", 3);
+        m.inc("evals", 2);
+        assert_eq!(m.counter("evals"), 5);
+        let out = m.time("work", || 7);
+        assert_eq!(out, 7);
+        assert!(m.duration_secs("work") >= 0.0);
+        let rep = m.report();
+        assert!(rep.contains("evals: 5"));
+        assert!(rep.contains("work_secs:"));
+    }
+
+    #[test]
+    fn poisoned_registry_keeps_counting() {
+        // a panicking closure inside `time` poisons nothing structural:
+        // both maps stay usable afterwards
+        let m = std::sync::Arc::new(Metrics::new());
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            // poison the counters mutex by panicking while it is held
+            let _guard = m2.counters.lock().unwrap();
+            panic!("injected panic while holding the counters lock");
+        })
+        .join();
+        m.inc("after", 1);
+        assert_eq!(m.counter("after"), 1);
+        assert!(m.report().contains("after: 1"));
+    }
+}

@@ -1,0 +1,82 @@
+//! §Telemetry L1: zero-dependency observability for the search stack.
+//!
+//! Three strictly *observational* facilities — none of them draws from
+//! the search RNG or alters control flow, so trace-on and trace-off
+//! runs are bit-identical (pinned by `tests/telemetry_trace.rs`):
+//!
+//! * [`spans`] — monotonic phase timers (propose / evaluate / select /
+//!   migrate / checkpoint) aggregated per island with count / total /
+//!   max and a log-bucketed streaming histogram. Recording is
+//!   allocation-free: a fixed bucket array and a handful of integer
+//!   adds per span.
+//! * [`trace`] — the `--trace <path>.jsonl` event stream: one compact
+//!   [`crate::util::json::Json`] record per generation / migration /
+//!   checkpoint / cache sample, written by a dedicated writer thread
+//!   behind a bounded channel (mirroring the durable checkpoint
+//!   writer) so emitting an event never blocks an island barrier.
+//! * [`analyze`] — the aggregation behind `gevo-ml report
+//!   <trace.jsonl>`: phase-time breakdowns, cache and operator-weight
+//!   trajectories, and elite lineage tables in markdown or CSV.
+//!
+//! [`metrics`] holds the counter/timer registry that previously lived
+//! in `coordinator::metrics`, now with poison-recovering locks, and
+//! [`timing_noise`] characterizes the clock's noise floor (median/IQR
+//! of back-to-back empty spans) so the future measured-wall-clock
+//! metric has a documented resolution baseline (`perf_evo` reports it
+//! into `BENCH_evo.json`).
+
+pub mod analyze;
+pub mod metrics;
+pub mod spans;
+pub mod trace;
+
+pub use metrics::Metrics;
+pub use spans::{phase_summary, GenSpans, Phase, PhaseAgg, PhaseRow, SpanRecorder};
+pub use trace::{event, TraceError, TraceWriter};
+
+use std::time::Instant;
+
+/// The clock's empirical noise floor: summary statistics over
+/// back-to-back empty-span measurements (`Instant::now()` followed
+/// immediately by `elapsed()`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingNoise {
+    /// Number of empty spans measured.
+    pub samples: usize,
+    /// Median empty-span duration in nanoseconds.
+    pub median_ns: f64,
+    /// Interquartile range (p75 − p25) in nanoseconds.
+    pub iqr_ns: f64,
+}
+
+/// Measure the timing noise floor: the median and IQR of many
+/// back-to-back empty spans. Any phase measurement below a few multiples
+/// of `median_ns` is dominated by clock overhead, not work — the
+/// wall-clock fitness metric (ROADMAP) must budget against this.
+pub fn timing_noise() -> TimingNoise {
+    const N: usize = 2048;
+    let mut d = [0u64; N];
+    for slot in d.iter_mut() {
+        let t = Instant::now();
+        *slot = t.elapsed().as_nanos() as u64;
+    }
+    d.sort_unstable();
+    let q = |p: f64| d[((p * (N - 1) as f64).round() as usize).min(N - 1)] as f64;
+    TimingNoise { samples: N, median_ns: q(0.5), iqr_ns: q(0.75) - q(0.25) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_noise_is_well_formed() {
+        let n = timing_noise();
+        assert_eq!(n.samples, 2048);
+        assert!(n.median_ns >= 0.0 && n.median_ns.is_finite());
+        assert!(n.iqr_ns >= 0.0 && n.iqr_ns.is_finite());
+        // an empty span should resolve well under a millisecond on any
+        // host this runs on; the bound is deliberately loose
+        assert!(n.median_ns < 1e6, "empty span median {} ns", n.median_ns);
+    }
+}

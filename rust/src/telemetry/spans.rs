@@ -1,0 +1,286 @@
+//! §Telemetry L2: phase spans — fixed-cost aggregation of monotonic
+//! timings around the search's phases. Recording a span is a handful of
+//! integer adds into a fixed-size struct: no allocation, no locking, no
+//! RNG — safe to leave on unconditionally in the hot path.
+
+/// The instrumented phases of one search run. `Propose`, `Evaluate`
+/// and `Select` are recorded per island per generation inside
+/// `Engine::step`; `Migrate` and `Checkpoint` happen on the driver
+/// thread at segment barriers. Compile time is tracked separately by
+/// `exec::ProgramCache::compile_ns` (it nests *inside* `Evaluate`, so
+/// it is not a disjoint phase).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Propose,
+    Evaluate,
+    Select,
+    Migrate,
+    Checkpoint,
+}
+
+impl Phase {
+    /// Every phase, in reporting order.
+    pub const ALL: [Phase; 5] =
+        [Phase::Propose, Phase::Evaluate, Phase::Select, Phase::Migrate, Phase::Checkpoint];
+
+    /// Stable lowercase name used in traces, reports and summaries.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Propose => "propose",
+            Phase::Evaluate => "evaluate",
+            Phase::Select => "select",
+            Phase::Migrate => "migrate",
+            Phase::Checkpoint => "checkpoint",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Number of log₂ histogram buckets: bucket `b ≥ 1` holds spans in
+/// `[2^(b−1), 2^b)` ns, bucket 0 holds zero-length spans, and the last
+/// bucket absorbs everything ≥ 2^38 ns (~4.6 min — far beyond any
+/// single phase span).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Which histogram bucket a span of `ns` nanoseconds lands in.
+pub fn bucket_of(ns: u64) -> usize {
+    (64 - ns.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Streaming aggregate for one phase: count / total / max plus a
+/// log-bucketed duration histogram. Fixed size, `Copy`-free but
+/// allocation-free; merging two aggregates is element-wise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseAgg {
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for PhaseAgg {
+    fn default() -> Self {
+        PhaseAgg { count: 0, total_ns: 0, max_ns: 0, buckets: [0; HIST_BUCKETS] }
+    }
+}
+
+impl PhaseAgg {
+    /// Fold one span of `ns` nanoseconds into the aggregate.
+    pub fn record(&mut self, ns: u64) {
+        self.count += 1;
+        self.total_ns = self.total_ns.saturating_add(ns);
+        if ns > self.max_ns {
+            self.max_ns = ns;
+        }
+        self.buckets[bucket_of(ns)] += 1;
+    }
+
+    /// Element-wise merge of another aggregate (for cross-island sums).
+    pub fn merge(&mut self, other: &PhaseAgg) {
+        self.count += other.count;
+        self.total_ns = self.total_ns.saturating_add(other.total_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// A flattened summary row for one phase — what flows into
+/// `SearchResult::phases`, the JSON report, and the `phases:` line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseRow {
+    pub phase: &'static str,
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+/// One engine generation's phase timings plus the operator-weight
+/// snapshot taken at the end of the step — staged by each engine and
+/// drained by the island driver at the next barrier to build `"gen"`
+/// trace events. Purely observational.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenSpans {
+    pub gen: usize,
+    pub propose_ns: u64,
+    pub evaluate_ns: u64,
+    pub select_ns: u64,
+    pub weights: Vec<f64>,
+}
+
+/// Per-owner span store: one [`PhaseAgg`] per [`Phase`]. Engines own
+/// one each (propose/evaluate/select); the island driver owns one for
+/// migrate/checkpoint; they merge into the run total at the end.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecorder {
+    aggs: [PhaseAgg; 5],
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        SpanRecorder {
+            aggs: [
+                PhaseAgg::default(),
+                PhaseAgg::default(),
+                PhaseAgg::default(),
+                PhaseAgg::default(),
+                PhaseAgg::default(),
+            ],
+        }
+    }
+}
+
+impl SpanRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one span into the given phase's aggregate.
+    pub fn record(&mut self, phase: Phase, ns: u64) {
+        self.aggs[phase.index()].record(ns);
+    }
+
+    /// The aggregate for one phase.
+    pub fn get(&self, phase: Phase) -> &PhaseAgg {
+        &self.aggs[phase.index()]
+    }
+
+    /// Merge another recorder (element-wise across phases).
+    pub fn merge(&mut self, other: &SpanRecorder) {
+        for (a, b) in self.aggs.iter_mut().zip(other.aggs.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// Total instrumented nanoseconds across all phases.
+    pub fn total_ns(&self) -> u64 {
+        self.aggs.iter().map(|a| a.total_ns).sum()
+    }
+
+    /// Flatten into reporting rows, one per phase in [`Phase::ALL`]
+    /// order (rows with zero events are included so the schema is
+    /// stable).
+    pub fn rows(&self) -> Vec<PhaseRow> {
+        Phase::ALL
+            .iter()
+            .map(|&p| {
+                let a = self.get(p);
+                PhaseRow {
+                    phase: p.name(),
+                    count: a.count,
+                    total_ns: a.total_ns,
+                    max_ns: a.max_ns,
+                }
+            })
+            .collect()
+    }
+}
+
+/// The `phases:` one-liner printed by `gevo-ml search` (mirroring the
+/// `batch:` line): the top-3 phases by share of total instrumented
+/// time. CI greps the `phases: ` prefix.
+pub fn phase_summary(rows: &[PhaseRow]) -> String {
+    let total: u64 = rows.iter().map(|r| r.total_ns).sum();
+    if total == 0 {
+        return "phases: no span data recorded".to_string();
+    }
+    let mut busy: Vec<&PhaseRow> = rows.iter().filter(|r| r.count > 0).collect();
+    busy.sort_by(|a, b| b.total_ns.cmp(&a.total_ns).then(a.phase.cmp(b.phase)));
+    let parts: Vec<String> = busy
+        .iter()
+        .take(3)
+        .map(|r| {
+            format!(
+                "{} {:.1}% ({:.3}s)",
+                r.phase,
+                100.0 * r.total_ns as f64 / total as f64,
+                r.total_ns as f64 / 1e9
+            )
+        })
+        .collect();
+    format!("phases: {} of {:.3}s instrumented", parts.join(", "), total as f64 / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2_and_clamped() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn record_tracks_count_total_max_and_histogram() {
+        let mut a = PhaseAgg::default();
+        a.record(10);
+        a.record(1000);
+        a.record(3);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.total_ns, 1013);
+        assert_eq!(a.max_ns, 1000);
+        assert_eq!(a.buckets.iter().sum::<u64>(), 3);
+        assert_eq!(a.buckets[bucket_of(10)] + a.buckets[bucket_of(3)], 2);
+    }
+
+    #[test]
+    fn merge_is_elementwise() {
+        let mut a = PhaseAgg::default();
+        a.record(5);
+        let mut b = PhaseAgg::default();
+        b.record(7);
+        b.record(9000);
+        a.merge(&b);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.total_ns, 5 + 7 + 9000);
+        assert_eq!(a.max_ns, 9000);
+        assert_eq!(a.buckets.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn recorder_rows_cover_every_phase_in_order() {
+        let mut r = SpanRecorder::new();
+        r.record(Phase::Evaluate, 100);
+        r.record(Phase::Propose, 10);
+        let rows = r.rows();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].phase, "propose");
+        assert_eq!(rows[1].phase, "evaluate");
+        assert_eq!(rows[1].total_ns, 100);
+        assert_eq!(rows[4].phase, "checkpoint");
+        assert_eq!(r.total_ns(), 110);
+    }
+
+    #[test]
+    fn phase_summary_lists_top_shares() {
+        let mut r = SpanRecorder::new();
+        r.record(Phase::Evaluate, 8_000);
+        r.record(Phase::Propose, 1_000);
+        r.record(Phase::Select, 500);
+        r.record(Phase::Migrate, 400);
+        r.record(Phase::Checkpoint, 100);
+        let s = phase_summary(&r.rows());
+        assert!(s.starts_with("phases: "), "{s}");
+        assert!(s.contains("evaluate 80.0%"), "{s}");
+        // only the top three phases appear
+        assert!(s.contains("propose") && s.contains("select"), "{s}");
+        assert!(!s.contains("checkpoint"), "{s}");
+    }
+
+    #[test]
+    fn phase_summary_handles_empty_recorder() {
+        let s = phase_summary(&SpanRecorder::new().rows());
+        assert!(s.starts_with("phases: "), "{s}");
+    }
+}

@@ -1,0 +1,190 @@
+//! §Telemetry L2: the JSONL trace stream. A dedicated writer thread
+//! behind a bounded channel (the same shape as the island runtime's
+//! durable checkpoint writer) appends one compact JSON record per
+//! event, so emitting never blocks a migration/checkpoint barrier for
+//! file I/O. The file is opened at spawn time: a bogus `--trace` path
+//! fails fast with a clean error instead of panicking mid-run.
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// How many events may queue before a submit blocks. Events are small
+/// (one generation each); a deep queue keeps barriers from ever waiting
+/// on disk under normal operation.
+const TRACE_QUEUE: usize = 256;
+
+/// A trace-stream failure: opening the file, writing a record, or a
+/// dead writer thread. Stringly-typed like the island runtime's
+/// checkpoint errors; the CLI maps it to a clean `error:` exit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceError(String);
+
+impl TraceError {
+    fn new(msg: impl Into<String>) -> Self {
+        TraceError(msg.into())
+    }
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "trace: {}", self.0)
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Build a trace event: a JSON object with the mandatory `"kind"`
+/// discriminator plus the given fields. Compact-serialized, one per
+/// line — CI greps for `"kind":"gen"` etc.
+pub fn event(kind: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("kind", Json::str(kind))];
+    all.extend(fields);
+    Json::obj(all)
+}
+
+/// Asynchronous JSONL appender. Events submitted here are serialized
+/// and written by a background thread; `drain` joins it and surfaces
+/// any deferred I/O error. Dropping the writer drains best-effort.
+///
+/// The file is opened in append mode so a resumed run extends the
+/// trace of the run it continues (the `"resume"` event marks the
+/// boundary).
+pub struct TraceWriter {
+    tx: Option<mpsc::SyncSender<Json>>,
+    handle: Option<JoinHandle<Result<(), TraceError>>>,
+}
+
+impl TraceWriter {
+    /// Open `path` for appending and start the writer thread. Fails
+    /// immediately (no thread spawned) if the file cannot be opened.
+    pub fn spawn(path: &Path) -> Result<TraceWriter, TraceError> {
+        let shown = path.display().to_string();
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| TraceError::new(format!("{shown}: {e}")))?;
+        let (tx, rx) = mpsc::sync_channel::<Json>(TRACE_QUEUE);
+        let handle = std::thread::Builder::new()
+            .name("gevo-trace-writer".to_string())
+            .spawn(move || -> Result<(), TraceError> {
+                let mut w = std::io::BufWriter::new(file);
+                while let Ok(ev) = rx.recv() {
+                    // line-buffered: a killed run leaves a well-formed
+                    // prefix of complete records
+                    writeln!(w, "{}", ev.to_string())
+                        .and_then(|_| w.flush())
+                        .map_err(|e| TraceError::new(format!("{shown}: {e}")))?;
+                }
+                let file = w
+                    .into_inner()
+                    .map_err(|e| TraceError::new(format!("{shown}: {e}")))?;
+                file.sync_all()
+                    .map_err(|e| TraceError::new(format!("{shown}: {e}")))?;
+                Ok(())
+            })
+            .map_err(|e| TraceError::new(format!("writer thread: {e}")))?;
+        Ok(TraceWriter { tx: Some(tx), handle: Some(handle) })
+    }
+
+    /// Queue one event. A send failure means the writer thread died on
+    /// an earlier record; the deferred error is joined and returned.
+    pub fn submit(&mut self, ev: Json) -> Result<(), TraceError> {
+        let alive = match &self.tx {
+            Some(tx) => tx.send(ev).is_ok(),
+            None => false,
+        };
+        if alive {
+            return Ok(());
+        }
+        match self.drain() {
+            Err(e) => Err(e),
+            Ok(()) => Err(TraceError::new("writer thread exited early")),
+        }
+    }
+
+    /// Close the channel, join the writer, and surface any I/O error.
+    /// Idempotent: a second drain is a no-op `Ok`.
+    pub fn drain(&mut self) -> Result<(), TraceError> {
+        self.tx = None; // close the channel so the thread's recv loop ends
+        match self.handle.take() {
+            None => Ok(()),
+            Some(h) => match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(TraceError::new("writer thread panicked")),
+            },
+        }
+    }
+}
+
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        let _ = self.drain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gevo_trace_unit_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn writes_one_parseable_record_per_line() {
+        let p = tmp("lines");
+        let _ = std::fs::remove_file(&p);
+        let mut w = TraceWriter::spawn(&p).unwrap();
+        w.submit(event("gen", vec![("gen", Json::num(0.0)), ("island", Json::num(1.0))]))
+            .unwrap();
+        w.submit(event("run_end", vec![("completed", Json::num(3.0))])).unwrap();
+        w.drain().unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("kind").unwrap().as_str().unwrap(), "gen");
+        assert!(lines[0].contains("\"kind\":\"gen\""), "compact kind field: {}", lines[0]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn append_mode_extends_an_existing_trace() {
+        let p = tmp("append");
+        let _ = std::fs::remove_file(&p);
+        for kind in ["run_start", "resume"] {
+            let mut w = TraceWriter::spawn(&p).unwrap();
+            w.submit(event(kind, vec![])).unwrap();
+            w.drain().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("\"kind\":\"run_start\""));
+        assert!(text.contains("\"kind\":\"resume\""));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn bogus_path_fails_at_spawn_not_at_submit() {
+        let p = std::path::Path::new("/nonexistent_gevo_dir/deeper/trace.jsonl");
+        let err = TraceWriter::spawn(p);
+        assert!(err.is_err(), "spawning onto an unwritable path must fail fast");
+        let msg = format!("{}", err.err().unwrap());
+        assert!(msg.contains("trace:"), "{msg}");
+    }
+
+    #[test]
+    fn drain_is_idempotent() {
+        let p = tmp("drain");
+        let _ = std::fs::remove_file(&p);
+        let mut w = TraceWriter::spawn(&p).unwrap();
+        w.submit(event("run_start", vec![])).unwrap();
+        w.drain().unwrap();
+        w.drain().unwrap();
+        let _ = std::fs::remove_file(&p);
+    }
+}

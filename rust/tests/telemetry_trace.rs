@@ -1,0 +1,241 @@
+//! Integration: the `--trace` telemetry stream over the public API.
+//!
+//! Pins the subsystem's core guarantee — tracing is *observational*:
+//! a run with a trace attached produces bit-identical fronts, history,
+//! lineage and checkpoint bytes to the same run without one, across
+//! opt levels, island counts, island threads and batch widths. Also
+//! covers kill/resume trace well-formedness, lineage surviving a
+//! checkpoint roundtrip, and fail-fast on an unwritable trace path.
+
+use gevo_ml::evo::island::{run_with_checkpoint, try_run_with_checkpoint};
+use gevo_ml::evo::nsga2::Objectives;
+use gevo_ml::evo::search::{Evaluator, SearchConfig, SearchResult};
+use gevo_ml::ir::op::{OpKind, ReduceKind};
+use gevo_ml::ir::types::TType;
+use gevo_ml::ir::Graph;
+use gevo_ml::opt::OptLevel;
+use gevo_ml::util::json::Json;
+use std::path::PathBuf;
+
+/// The toy workload from the island tests: runtime = normalized FLOPs,
+/// error = |output − baseline| on one input.
+fn toy() -> (Graph, impl Evaluator) {
+    let mut g = Graph::new("toy");
+    let x = g.param(TType::of(&[4, 4]));
+    let e1 = g.push(OpKind::Exponential, &[x]).unwrap();
+    let t = g.push(OpKind::Tanh, &[e1]).unwrap();
+    let a = g.push(OpKind::Add, &[t, x]).unwrap();
+    let r = g
+        .push(OpKind::Reduce { dims: vec![0, 1], kind: ReduceKind::Sum }, &[a])
+        .unwrap();
+    g.set_outputs(&[r]);
+    let base_flops = g.total_flops() as f64;
+    let input = gevo_ml::tensor::Tensor::iota(&[4, 4]);
+    let baseline = gevo_ml::interp::eval(&g, &[input.clone()]).unwrap()[0].item() as f64;
+    let eval = move |vg: &Graph| -> Option<Objectives> {
+        let out = gevo_ml::interp::eval(vg, &[input.clone()]).ok()?;
+        if out[0].has_non_finite() {
+            return None;
+        }
+        let err = (out[0].item() as f64 - baseline).abs() / baseline.abs().max(1e-9);
+        let time = vg.total_flops() as f64 / base_flops;
+        Some((time, err))
+    };
+    (g, eval)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gevo_trace_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Everything a trace must not perturb, as exact bit patterns.
+fn fingerprint(r: &SearchResult) -> Vec<(u64, u64)> {
+    r.pareto.iter().map(|(_, o)| (o.0.to_bits(), o.1.to_bits())).collect()
+}
+
+fn assert_same_outcome(a: &SearchResult, b: &SearchResult, label: &str) {
+    assert_eq!(fingerprint(a), fingerprint(b), "{label}: front bits diverged");
+    assert_eq!(a.pareto_islands, b.pareto_islands, "{label}: front islands");
+    assert_eq!(a.pareto_lineage, b.pareto_lineage, "{label}: front lineage");
+    assert_eq!(a.total_evaluations, b.total_evaluations, "{label}: evaluations");
+    assert_eq!(a.migrations, b.migrations, "{label}: migrations");
+    assert_eq!(a.history.len(), b.history.len(), "{label}: history length");
+    for (x, y) in a.history.iter().zip(b.history.iter()) {
+        assert_eq!(
+            (x.gen, x.island, x.evaluated, x.valid, x.front_size),
+            (y.gen, y.island, y.evaluated, y.valid, y.front_size),
+            "{label}: history row diverged"
+        );
+        assert_eq!(x.best_time.to_bits(), y.best_time.to_bits(), "{label}: best_time bits");
+        assert_eq!(x.best_error.to_bits(), y.best_error.to_bits(), "{label}: best_error bits");
+    }
+}
+
+/// Parse every line of a trace file; panics (with the offending line)
+/// on anything that is not a one-object JSON record.
+fn parse_trace(path: &std::path::Path) -> Vec<Json> {
+    let text = std::fs::read_to_string(path).unwrap();
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad trace line {l:?}: {e:?}")))
+        .collect()
+}
+
+fn kinds(events: &[Json]) -> Vec<String> {
+    events
+        .iter()
+        .map(|e| e.get("kind").unwrap().as_str().unwrap().to_string())
+        .collect()
+}
+
+#[test]
+fn tracing_is_observational_across_schedules_and_opt_levels() {
+    let (g, eval) = toy();
+    let dir = tmp_dir("bitid");
+    let mut case = 0usize;
+    for (opt, islands, threads, batch) in [
+        (OptLevel::parse("0").unwrap(), 1usize, 1usize, 0usize),
+        (OptLevel::parse("2").unwrap(), 2, 1, 32),
+        (OptLevel::parse("3").unwrap(), 3, 3, 4),
+    ] {
+        case += 1;
+        let base = SearchConfig {
+            pop_size: 6,
+            generations: 4,
+            elites: 3,
+            workers: 1,
+            seed: 19,
+            islands,
+            migration_interval: 2,
+            migrants: 1,
+            island_threads: threads,
+            batch,
+            opt_level: opt,
+            checkpoint_every: 2,
+            ..Default::default()
+        };
+        let label = format!("opt={opt} islands={islands} threads={threads} batch={batch}");
+        let ck_off = dir.join(format!("off_{case}.json"));
+        let ck_on = dir.join(format!("on_{case}.json"));
+        let trace = dir.join(format!("trace_{case}.jsonl"));
+        let off = run_with_checkpoint(&g, &eval, &base, Some(&ck_off));
+        let on = run_with_checkpoint(
+            &g,
+            &eval,
+            &SearchConfig { trace: Some(trace.clone()), ..base.clone() },
+            Some(&ck_on),
+        );
+        assert_same_outcome(&off, &on, &label);
+        // The checkpoint the writer installed must be byte-identical:
+        // tracing may not leak into persisted state.
+        let a = std::fs::read(&ck_off).unwrap();
+        let b = std::fs::read(&ck_on).unwrap();
+        assert_eq!(a, b, "{label}: checkpoint bytes diverged under tracing");
+        // And the stream itself is well-formed with the lifecycle kinds.
+        let ks = kinds(&parse_trace(&trace));
+        assert_eq!(ks.first().map(|s| s.as_str()), Some("run_start"), "{label}");
+        assert_eq!(ks.last().map(|s| s.as_str()), Some("run_end"), "{label}");
+        for want in ["gen", "checkpoint", "front"] {
+            assert!(ks.iter().any(|k| k == want), "{label}: no '{want}' event");
+        }
+        if islands > 1 {
+            assert!(ks.iter().any(|k| k == "migration"), "{label}: no migration event");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_resume_trace_is_well_formed_and_outcome_identical() {
+    let (g, eval) = toy();
+    let dir = tmp_dir("resume");
+    let ck = dir.join("ck.json");
+    let trace = dir.join("trace.jsonl");
+    let cfg = SearchConfig {
+        pop_size: 6,
+        generations: 5,
+        elites: 3,
+        workers: 1,
+        seed: 29,
+        islands: 3,
+        migration_interval: 2,
+        migrants: 1,
+        island_threads: 3,
+        checkpoint_every: 2,
+        trace: Some(trace.clone()),
+        ..Default::default()
+    };
+    let uninterrupted =
+        run_with_checkpoint(&g, &eval, &SearchConfig { trace: None, ..cfg.clone() }, None);
+
+    // "kill" after three generations, then resume to the full target;
+    // both stages append to the same trace file.
+    let partial_cfg = SearchConfig { generations: 3, ..cfg.clone() };
+    let _partial = run_with_checkpoint(&g, &eval, &partial_cfg, Some(&ck));
+    let resumed = run_with_checkpoint(&g, &eval, &cfg, Some(&ck));
+    assert_same_outcome(&uninterrupted, &resumed, "traced resume");
+    assert!(
+        uninterrupted.pareto_lineage.iter().all(|l| l.is_some()),
+        "every front point must carry lineage"
+    );
+
+    let events = parse_trace(&trace);
+    let ks = kinds(&events);
+    assert_eq!(ks.iter().filter(|k| *k == "run_start").count(), 1, "one cold start");
+    assert_eq!(ks.iter().filter(|k| *k == "resume").count(), 1, "one resume");
+    assert_eq!(ks.iter().filter(|k| *k == "run_end").count(), 2, "both stages ended");
+    let resume = events.iter().find(|e| e.get("kind").unwrap().as_str().unwrap() == "resume");
+    let completed = resume.unwrap().get("completed").unwrap().as_usize().unwrap();
+    assert!(completed > 0, "resume event must report completed generations");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lineage_survives_checkpoint_roundtrip() {
+    let (g, eval) = toy();
+    let dir = tmp_dir("lineage");
+    let ck = dir.join("ck.json");
+    let cfg = SearchConfig {
+        pop_size: 6,
+        generations: 4,
+        elites: 3,
+        workers: 1,
+        seed: 13,
+        islands: 2,
+        migration_interval: 1,
+        migrants: 1,
+        checkpoint_every: 1,
+        ..Default::default()
+    };
+    let uninterrupted = run_with_checkpoint(&g, &eval, &cfg, None);
+    let partial_cfg = SearchConfig { generations: 2, ..cfg.clone() };
+    let _partial = run_with_checkpoint(&g, &eval, &partial_cfg, Some(&ck));
+    let resumed = run_with_checkpoint(&g, &eval, &cfg, Some(&ck));
+    assert_eq!(
+        uninterrupted.pareto_lineage, resumed.pareto_lineage,
+        "pareto lineage must be resume-exact"
+    );
+    assert!(uninterrupted.pareto_lineage.iter().all(|l| l.is_some()));
+    assert_eq!(uninterrupted.pareto_lineage.len(), uninterrupted.pareto.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unwritable_trace_path_fails_fast() {
+    let (g, eval) = toy();
+    let cfg = SearchConfig {
+        pop_size: 4,
+        generations: 1,
+        elites: 2,
+        workers: 1,
+        seed: 7,
+        trace: Some(PathBuf::from("/nonexistent-gevo-dir/trace.jsonl")),
+        ..Default::default()
+    };
+    let err = try_run_with_checkpoint(&g, &eval, &cfg, None);
+    assert!(err.is_err(), "a bogus --trace path must error before searching");
+    let msg = format!("{}", err.err().unwrap());
+    assert!(msg.contains("trace"), "error should name the trace stream: {msg}");
+}
