@@ -3,8 +3,10 @@
 //! (the end-to-end unit of search cost), the threaded island
 //! runtime's generations/sec scaling at 1 vs N island threads, the
 //! batched cohort engine's evals/sec at stacked widths 1/8/32, and the
-//! telemetry subsystem's cost: the clock noise floor and the per-event
-//! overhead of a `--trace` JSONL stream (summary committed as
+//! telemetry subsystem's cost: the clock noise floor, the per-event
+//! overhead of a `--trace` JSONL stream, the per-kernel-step price of
+//! `--profile` hooks, and the spread reduction the noise-robust timing
+//! harness buys for measured-time search (summary committed as
 //! `BENCH_evo.json`).
 
 use gevo_ml::evo::crossover::messy_one_point;
@@ -256,6 +258,69 @@ fn main() {
         "trace overhead: {trace_events} events/run, ~{ns_per_event:.0} ns/event (p50 delta vs untraced)"
     ));
 
+    // --- profiler: per-step hook cost, on vs off -------------------------------
+    // One probe run counts the kernel steps per execution; the same
+    // 64-execution loop then runs through the plain and the profiled
+    // entry points, so the p50 delta divided by total steps prices the
+    // two clock reads per step that `--profile` adds.
+    let mut probe_sink = gevo_ml::telemetry::ProfileSink::new();
+    let mut probe_scratch = Scratch::new();
+    black_box(prog.run_refs_profiled(&input_refs, &mut probe_scratch, &mut probe_sink).unwrap());
+    let steps_per_run: f64 = probe_sink.rows().iter().map(|r| r.count).sum::<u64>() as f64;
+    let mut off_scratch = Scratch::new();
+    let p50_off = b.case_with_work("exec train step, profile hooks off (x64)", Some(64.0), || {
+        for _ in 0..64 {
+            black_box(prog.run_refs(&input_refs, &mut off_scratch).unwrap());
+        }
+    });
+    let mut on_scratch = Scratch::new();
+    let mut on_sink = gevo_ml::telemetry::ProfileSink::new();
+    let p50_on = b.case_with_work("exec train step, profile hooks on (x64)", Some(64.0), || {
+        for _ in 0..64 {
+            black_box(
+                prog.run_refs_profiled(&input_refs, &mut on_scratch, &mut on_sink).unwrap(),
+            );
+        }
+    });
+    let ns_per_step = (p50_on - p50_off).max(0.0) * 1e9 / (64.0 * steps_per_run.max(1.0));
+    b.note(&format!(
+        "profiler overhead: {steps_per_run:.0} kernel steps/run, ~{ns_per_step:.1} ns/step (p50 delta, hooks on vs off)"
+    ));
+
+    // --- timing harness: robust median vs single-shot spread -------------------
+    // The same execution timed two ways: N raw one-shot spans (the old
+    // `--metric wall` behavior) vs N harness measurements (warmup +
+    // MAD-filtered median). The max-min spread ratio is the noise the
+    // harness removes from measured-time search.
+    let harness = gevo_ml::telemetry::TimingHarness::monotonic();
+    let hreps = 12usize;
+    let mut raw = Vec::with_capacity(hreps);
+    let mut robust = Vec::with_capacity(hreps);
+    let mut h_scratch = Scratch::new();
+    for _ in 0..hreps {
+        let t0 = std::time::Instant::now();
+        black_box(prog.run_refs(&input_refs, &mut h_scratch).unwrap());
+        raw.push(t0.elapsed().as_secs_f64());
+    }
+    for _ in 0..hreps {
+        let m = harness
+            .measure(|| prog.run_refs(&input_refs, &mut h_scratch).is_ok())
+            .unwrap_or(0.0);
+        robust.push(m);
+    }
+    let spread_ns = |xs: &[f64]| -> f64 {
+        let mn = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        ((mx - mn) * 1e9).max(0.0)
+    };
+    let raw_spread = spread_ns(&raw);
+    let robust_spread = spread_ns(&robust);
+    let spread_reduction = if robust_spread > 0.0 { raw_spread / robust_spread } else { 0.0 };
+    b.note(&format!(
+        "timing harness: single-shot spread {raw_spread:.0} ns vs robust-median spread \
+         {robust_spread:.0} ns over {hreps} measurements ({spread_reduction:.1}x tighter)"
+    ));
+
     let summary = Json::obj(vec![
         ("suite", Json::str("perf_evo")),
         ("section", Json::str("threaded-island-runtime+batched-eval+telemetry")),
@@ -276,6 +341,26 @@ fn main() {
                 ("seconds_p50_untraced", Json::num(p50_at_one)),
                 ("seconds_p50_traced", Json::num(p50_traced)),
                 ("ns_per_event", Json::num(ns_per_event)),
+            ]),
+        ),
+        (
+            "profiler_overhead",
+            Json::obj(vec![
+                ("steps_per_run", Json::num(steps_per_run)),
+                ("seconds_p50_off", Json::num(p50_off)),
+                ("seconds_p50_on", Json::num(p50_on)),
+                ("ns_per_step", Json::num(ns_per_step)),
+            ]),
+        ),
+        (
+            "timing_harness",
+            Json::obj(vec![
+                ("measurements", Json::num(hreps as f64)),
+                ("warmup", Json::num(harness.warmup as f64)),
+                ("samples_per_measurement", Json::num(harness.samples as f64)),
+                ("single_shot_spread_ns", Json::num(raw_spread)),
+                ("robust_median_spread_ns", Json::num(robust_spread)),
+                ("spread_reduction", Json::num(spread_reduction)),
             ]),
         ),
         (

@@ -336,6 +336,23 @@ pub fn to_json(r: &ExperimentResult) -> Json {
                     .collect(),
             ),
         ),
+        (
+            "profile",
+            r.search.profile.as_ref().map_or(Json::Null, |rows| {
+                Json::Arr(
+                    rows.iter()
+                        .map(|k| {
+                            Json::obj(vec![
+                                ("kernel", Json::str(k.kernel)),
+                                ("count", Json::num(k.count as f64)),
+                                ("total_ns", Json::num(k.total_ns as f64)),
+                                ("max_ns", Json::num(k.max_ns as f64)),
+                            ])
+                        })
+                        .collect(),
+                )
+            }),
+        ),
         ("wall_seconds", Json::num(r.wall_seconds)),
     ])
 }
@@ -359,6 +376,14 @@ pub fn fusion_summary(f: &crate::exec::cache::FusionTotals) -> String {
 /// `gevo-ml report` agree on formatting.
 pub fn phase_summary(r: &ExperimentResult) -> String {
     crate::telemetry::phase_summary(&r.search.phases)
+}
+
+/// One-line per-kernel profile summary for terminal output (`--profile`
+/// runs); `None` when the run did not profile. Delegates to
+/// [`crate::telemetry::profile_summary`] so the search summary and the
+/// trace-report hot-kernel table agree on naming.
+pub fn profile_summary(r: &ExperimentResult) -> Option<String> {
+    r.search.profile.as_ref().map(|rows| crate::telemetry::profile_summary(rows))
 }
 
 /// One-line cohort-batching summary for terminal output. `mean/max`
@@ -566,6 +591,20 @@ mod tests {
                         max_ns: 0,
                     },
                 ],
+                profile: Some(vec![
+                    crate::telemetry::ProfileRow {
+                        kernel: "dot",
+                        count: 128,
+                        total_ns: 9_000_000,
+                        max_ns: 80_000,
+                    },
+                    crate::telemetry::ProfileRow {
+                        kernel: "map_bin",
+                        count: 256,
+                        total_ns: 1_000_000,
+                        max_ns: 10_000,
+                    },
+                ]),
             },
             wall_seconds: 1.5,
         }
@@ -699,6 +738,28 @@ mod tests {
         assert!(s.starts_with("phases: "), "CI greps the line prefix: {s}");
         assert!(s.contains("evaluate 80.0%"), "dominant phase leads: {s}");
         assert!(s.contains("of 0.010s instrumented"), "{s}");
+    }
+
+    #[test]
+    fn json_and_summary_carry_profile() {
+        let r = fake();
+        let line = profile_summary(&r).unwrap();
+        assert!(line.starts_with("profile: "), "CI greps the line prefix: {line}");
+        assert!(line.contains("dot 90.0% (0.009s)"), "{line}");
+        assert!(line.contains("across 384 kernel steps"), "{line}");
+        let j = Json::parse(&to_json(&r).to_pretty()).unwrap();
+        let rows = j.get("profile").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("kernel").unwrap().as_str().unwrap(), "dot");
+        assert_eq!(rows[0].get("count").unwrap().as_usize().unwrap(), 128);
+        assert_eq!(rows[0].get("total_ns").unwrap().as_usize().unwrap(), 9_000_000);
+        assert_eq!(rows[1].get("max_ns").unwrap().as_usize().unwrap(), 10_000);
+        // unprofiled runs serialize the section as null and print nothing
+        let mut r2 = fake();
+        r2.search.profile = None;
+        let j2 = Json::parse(&to_json(&r2).to_pretty()).unwrap();
+        assert_eq!(*j2.get("profile").unwrap(), Json::Null);
+        assert!(profile_summary(&r2).is_none());
     }
 
     #[test]

@@ -163,6 +163,15 @@ pub fn try_run_with_checkpoint(
              could never fire"
         );
     }
+    // Per-kernel profiling rides on the workload's program cache; a
+    // cacheless evaluator (closure fixtures) just never aggregates —
+    // the flag stays inert rather than being an error, so profiled and
+    // unprofiled configs run identically everywhere.
+    if cfg.profile {
+        if let Some(c) = eval.program_cache() {
+            c.enable_profiling();
+        }
+    }
     // Identity of the baseline program: resuming against a different
     // workload graph would silently reinterpret cached objectives, so the
     // canonical graph hash is echoed into the checkpoint and verified.
@@ -345,6 +354,7 @@ pub fn try_run_with_checkpoint(
         program_batch: eval.program_cache().map(|c| c.batch_stats()),
         operators: operator_rows(&ops, &st.engines),
         phases,
+        profile: eval.program_cache().and_then(|c| c.profile_rows()),
     })
 }
 
@@ -376,6 +386,7 @@ fn drive(
     // event carries deltas for the segment just finished rather than
     // run-cumulative totals.
     let mut last_cache = CacheSnapshot::take(eval);
+    let mut last_profile = ProfileSnapshot::take(eval);
     while st.completed < cfg.generations {
         let start = st.completed;
         // Next sync point: the earliest of the next migration event, the
@@ -434,6 +445,11 @@ fn drive(
                 t.submit(ev)?;
             }
             last_cache = now;
+            let pnow = ProfileSnapshot::take(eval);
+            if let Some(ev) = pnow.cumulative_event(&last_profile, end) {
+                t.submit(ev)?;
+            }
+            last_profile = pnow;
         }
         st.history.extend(stats);
         // ---- migration barrier ------------------------------------------
@@ -548,6 +564,50 @@ impl CacheSnapshot {
                 ("batch_cohorts", d(self.batch_cohorts, prev.batch_cohorts)),
                 ("batched_evals", d(self.batched_evals, prev.batched_evals)),
                 ("scalar_evals", d(self.scalar_evals, prev.scalar_evals)),
+            ],
+        ))
+    }
+}
+
+/// Per-kernel profile snapshot for `profile` trace events
+/// (`--profile --trace`). Unlike [`CacheSnapshot`], the emitted event
+/// carries *run-cumulative* kernel rows — the analyzer keeps the latest
+/// one, like `front` — and the previous snapshot only suppresses
+/// emission for segments in which no profiled step ran.
+#[derive(Default, Clone, PartialEq, Eq)]
+struct ProfileSnapshot {
+    rows: Option<Vec<crate::telemetry::ProfileRow>>,
+}
+
+impl ProfileSnapshot {
+    fn take(eval: &dyn Evaluator) -> ProfileSnapshot {
+        ProfileSnapshot { rows: eval.program_cache().and_then(|c| c.profile_rows()) }
+    }
+
+    /// The `profile` event for the segment ending at `thru_gen`, or
+    /// `None` when profiling is off, nothing has been recorded, or
+    /// nothing changed since `prev`.
+    fn cumulative_event(&self, prev: &ProfileSnapshot, thru_gen: usize) -> Option<Json> {
+        let rows = self.rows.as_ref()?;
+        if rows.is_empty() || self == prev {
+            return None;
+        }
+        let kernels: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("kernel", Json::str(r.kernel)),
+                    ("count", Json::num(r.count as f64)),
+                    ("total_ns", Json::num(r.total_ns as f64)),
+                    ("max_ns", Json::num(r.max_ns as f64)),
+                ])
+            })
+            .collect();
+        Some(event(
+            "profile",
+            vec![
+                ("thru_gen", Json::num(thru_gen as f64)),
+                ("kernels", Json::Arr(kernels)),
             ],
         ))
     }

@@ -193,6 +193,15 @@ pub struct SearchConfig {
     /// trace-off runs are bit-identical (pinned by
     /// `tests/telemetry_trace.rs`).
     pub trace: Option<std::path::PathBuf>,
+    /// Time every kernel step inside compiled-program runs
+    /// ([`crate::telemetry::profile`]) and aggregate per-kernel totals
+    /// population-wide. Strictly observational — the profiled execution
+    /// paths compute exactly what the unprofiled ones do and no RNG is
+    /// drawn — so like `trace` it is excluded from the checkpoint's
+    /// config echo, and profile-on vs profile-off runs are bit-identical
+    /// (pinned by `tests/telemetry_trace.rs` and
+    /// `tests/measured_time.rs`).
+    pub profile: bool,
     pub verbose: bool,
 }
 
@@ -221,6 +230,7 @@ impl Default for SearchConfig {
             filter_neutral: false,
             reseed_minimized: false,
             trace: None,
+            profile: false,
             verbose: false,
         }
     }
@@ -322,6 +332,12 @@ pub struct SearchResult {
     /// checkpoint) merged across islands and the driver thread. Purely
     /// observational: never checkpointed, never compared bitwise.
     pub phases: Vec<crate::telemetry::PhaseRow>,
+    /// Population-wide per-kernel execution profile
+    /// (`SearchConfig::profile`): one row per kernel kind that ran, in
+    /// stable declaration order. `None` when profiling was off or the
+    /// evaluator has no program cache to aggregate on (e.g. closure
+    /// evaluators). Purely observational, like `phases`.
+    pub profile: Option<Vec<crate::telemetry::ProfileRow>>,
 }
 
 /// Run the search. `original` is the unmutated program (the paper's

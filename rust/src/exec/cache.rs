@@ -43,8 +43,9 @@ use super::Program;
 use crate::ir::types::IrError;
 use crate::ir::Graph;
 use crate::opt::OptLevel;
+use crate::telemetry::profile::{ProfileRow, ProfileSink};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Cap on resident entries. Most mutants are evaluated once and never
@@ -179,6 +180,15 @@ pub struct ProgramCache {
     /// program lowering), summed across threads. A telemetry
     /// observable only — never read on the search trajectory.
     compile_ns: AtomicU64,
+    /// Whether `--profile` asked the workloads to time kernel steps.
+    /// Like `compile_ns`, telemetry-only: nothing on the search
+    /// trajectory ever reads it.
+    profile_enabled: AtomicBool,
+    /// Population-wide per-kernel profile: run-local
+    /// [`ProfileSink`]s are merged here once per evaluated run
+    /// ([`ProgramCache::merge_profile`]), so the step loop itself never
+    /// locks.
+    profile: Mutex<ProfileSink>,
 }
 
 impl Default for ProgramCache {
@@ -224,6 +234,8 @@ impl ProgramCache {
             batched_evals: AtomicUsize::new(0),
             scalar_evals: AtomicUsize::new(0),
             compile_ns: AtomicU64::new(0),
+            profile_enabled: AtomicBool::new(false),
+            profile: Mutex::new(ProfileSink::new()),
         }
     }
 
@@ -448,6 +460,35 @@ impl ProgramCache {
             batched_evals: self.batched_evals.load(Ordering::Relaxed),
             scalar_evals: self.scalar_evals.load(Ordering::Relaxed),
         }
+    }
+
+    /// Turn on per-kernel profiling (`--profile`). One-way for the
+    /// cache's lifetime: the workloads check
+    /// [`ProgramCache::profiling_enabled`] per evaluated run and only
+    /// then pay for a run-local [`ProfileSink`] and the per-step clock
+    /// reads.
+    pub fn enable_profiling(&self) {
+        self.profile_enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether [`ProgramCache::enable_profiling`] was called.
+    pub fn profiling_enabled(&self) -> bool {
+        self.profile_enabled.load(Ordering::Relaxed)
+    }
+
+    /// Fold one run's local sink into the population-wide profile.
+    pub fn merge_profile(&self, sink: &ProfileSink) {
+        self.lock(&self.profile).merge(sink);
+    }
+
+    /// The population-wide per-kernel rows so far, or `None` when
+    /// profiling was never enabled (so reports can distinguish "off"
+    /// from "on but nothing ran yet").
+    pub fn profile_rows(&self) -> Option<Vec<ProfileRow>> {
+        if !self.profiling_enabled() {
+            return None;
+        }
+        Some(self.lock(&self.profile).rows())
     }
 
     pub fn len(&self) -> usize {
@@ -705,6 +746,33 @@ mod tests {
         assert_eq!(s.singletons, 1);
         assert_eq!(s.batched_evals, 11);
         assert_eq!(s.scalar_evals, 2);
+    }
+
+    #[test]
+    fn profile_rows_none_until_enabled_then_accumulate() {
+        let c = ProgramCache::new();
+        assert!(!c.profiling_enabled());
+        assert_eq!(c.profile_rows(), None, "off ⇒ no rows, not an empty table");
+        // merging while disabled is allowed (a racing run that started
+        // before a hypothetical toggle) and simply parks the data
+        let mut sink = ProfileSink::new();
+        sink.record(6, 100); // "dot"
+        c.merge_profile(&sink);
+        c.enable_profiling();
+        assert!(c.profiling_enabled());
+        let rows = c.profile_rows().expect("on ⇒ rows");
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].kernel, "dot");
+        assert_eq!(rows[0].count, 1);
+        let mut sink2 = ProfileSink::new();
+        sink2.record(6, 50);
+        sink2.record(2, 10); // "map_bin"
+        c.merge_profile(&sink2);
+        let rows = c.profile_rows().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].kernel, "map_bin");
+        assert_eq!(rows[1].count, 2);
+        assert_eq!(rows[1].total_ns, 150);
     }
 
     #[test]

@@ -47,6 +47,7 @@ use crate::ir::graph::Graph;
 use crate::ir::op::OpKind;
 use crate::ir::types::{IrError, ValueId};
 use crate::opt::fuse::{FusionPlan, StepFusion};
+use crate::telemetry::profile::ProfileSink;
 use crate::tensor::ops::{self, ReduceKind};
 use crate::tensor::{Shape, Tensor};
 
@@ -87,6 +88,33 @@ enum StepKind {
     /// `dot(a, b) + broadcast(bias)` folded into one kernel
     /// ([`ops::dot_bias_into`]); args are `[a, b, bias]`.
     DotBias { bias_first: bool },
+}
+
+/// The [`crate::telemetry::profile::KERNEL_NAMES`] slot for a step —
+/// `StepKind` declaration order. The correspondence is pinned by the
+/// `kind_index_matches_kernel_names` unit test below.
+fn kind_index(kind: &StepKind) -> usize {
+    match kind {
+        StepKind::Param { .. } => 0,
+        StepKind::Const { .. } => 1,
+        StepKind::Bin(_) => 2,
+        StepKind::Un(_) => 3,
+        StepKind::Select => 4,
+        StepKind::Dot2x2 => 5,
+        StepKind::DotOther => 6,
+        StepKind::Reshape => 7,
+        StepKind::Broadcast { .. } => 8,
+        StepKind::Transpose { .. } => 9,
+        StepKind::Pad { .. } => 10,
+        StepKind::Slice { .. } => 11,
+        StepKind::Concat { .. } => 12,
+        StepKind::Reduce { .. } => 13,
+        StepKind::Conv2d { .. } => 14,
+        StepKind::DepthwiseConv2d { .. } => 15,
+        StepKind::GlobalAvgPool => 16,
+        StepKind::FusedMap { .. } => 17,
+        StepKind::DotBias { .. } => 18,
+    }
 }
 
 /// One lowered instruction.
@@ -603,6 +631,30 @@ impl Program {
         inputs: &[&Tensor],
         scratch: &mut Scratch,
     ) -> Result<Vec<Tensor>, EvalError> {
+        self.run_refs_inner(inputs, scratch, None)
+    }
+
+    /// [`Program::run_refs`] with per-step timings folded into `sink`
+    /// (keyed by step kind — see
+    /// [`crate::telemetry::profile::KERNEL_NAMES`]). The profiled path
+    /// executes exactly the same kernels in the same order as the
+    /// unprofiled one; only clock reads and sink counters are added, so
+    /// the outputs are bit-identical.
+    pub fn run_refs_profiled(
+        &self,
+        inputs: &[&Tensor],
+        scratch: &mut Scratch,
+        sink: &mut ProfileSink,
+    ) -> Result<Vec<Tensor>, EvalError> {
+        self.run_refs_inner(inputs, scratch, Some(sink))
+    }
+
+    fn run_refs_inner(
+        &self,
+        inputs: &[&Tensor],
+        scratch: &mut Scratch,
+        mut profile: Option<&mut ProfileSink>,
+    ) -> Result<Vec<Tensor>, EvalError> {
         self.validate_inputs(inputs)?;
 
         // Reset the register file, recycling buffers from the previous run.
@@ -618,7 +670,14 @@ impl Program {
         scratch.regs.resize_with(n, || Reg::Empty);
 
         for step in &self.steps {
-            self.exec_step(step, inputs, scratch)?;
+            match profile.as_deref_mut() {
+                Some(sink) => {
+                    let t0 = std::time::Instant::now();
+                    self.exec_step(step, inputs, scratch)?;
+                    sink.record(kind_index(&step.kind), t0.elapsed().as_nanos() as u64);
+                }
+                None => self.exec_step(step, inputs, scratch)?,
+            }
             for &k in &step.kills {
                 if let Reg::Owned(t) = std::mem::replace(&mut scratch.regs[k], Reg::Empty) {
                     scratch.arena.put(t.into_data());
@@ -674,6 +733,28 @@ impl Program {
         lanes: &[&[&Tensor]],
         scratch: &mut BatchScratch,
     ) -> Vec<Result<Vec<Tensor>, EvalError>> {
+        self.run_lanes_inner(lanes, scratch, None)
+    }
+
+    /// [`Program::run_lanes`] with per-step timings folded into `sink`.
+    /// A stacked step covers every lane at once, so one recorded span is
+    /// the cost of that kernel across the whole batch — same keying as
+    /// [`Program::run_refs_profiled`], same bit-identical outputs.
+    pub fn run_lanes_profiled(
+        &self,
+        lanes: &[&[&Tensor]],
+        scratch: &mut BatchScratch,
+        sink: &mut ProfileSink,
+    ) -> Vec<Result<Vec<Tensor>, EvalError>> {
+        self.run_lanes_inner(lanes, scratch, Some(sink))
+    }
+
+    fn run_lanes_inner(
+        &self,
+        lanes: &[&[&Tensor]],
+        scratch: &mut BatchScratch,
+        profile: Option<&mut ProfileSink>,
+    ) -> Vec<Result<Vec<Tensor>, EvalError>> {
         let mut results: Vec<Result<Vec<Tensor>, EvalError>> = lanes
             .iter()
             .map(|inputs| self.validate_inputs(inputs).map(|()| Vec::new()))
@@ -682,7 +763,7 @@ impl Program {
         if valid.is_empty() {
             return results;
         }
-        match self.run_lanes_valid(lanes, &valid, scratch) {
+        match self.run_lanes_valid(lanes, &valid, scratch, profile) {
             Ok(outs) => {
                 for (&v, out) in valid.iter().zip(outs) {
                     results[v] = Ok(out);
@@ -705,6 +786,7 @@ impl Program {
         lanes: &[&[&Tensor]],
         valid: &[usize],
         scratch: &mut BatchScratch,
+        mut profile: Option<&mut ProfileSink>,
     ) -> Result<Vec<Vec<Tensor>>, EvalError> {
         let l = valid.len();
         let n = self.slot_vids.len();
@@ -723,6 +805,10 @@ impl Program {
         }
 
         for step in &self.steps {
+            // Span the whole stacked step (binding or kernel over every
+            // lane) — the same coverage the scalar path gets by timing
+            // `exec_step`.
+            let t0 = profile.is_some().then(std::time::Instant::now);
             match &step.kind {
                 StepKind::Param { index } => {
                     scratch.regs[step.dst] = BReg::Input(*index);
@@ -946,6 +1032,9 @@ impl Program {
                     );
                     scratch.regs[step.dst] = BReg::Stacked(out);
                 }
+            }
+            if let (Some(sink), Some(t0)) = (profile.as_deref_mut(), t0) {
+                sink.record(kind_index(&step.kind), t0.elapsed().as_nanos() as u64);
             }
             for &k in &step.kills {
                 if let BReg::Stacked(buf) = std::mem::replace(&mut scratch.regs[k], BReg::Empty)
@@ -1509,5 +1598,92 @@ mod tests {
             r,
             Err(EvalError::ArgCount { got: 0, want: 1 })
         )));
+    }
+
+    #[test]
+    fn kind_index_matches_kernel_names() {
+        use crate::telemetry::profile::{KERNEL_KINDS, KERNEL_NAMES};
+        // Pin the StepKind ↔ KERNEL_NAMES correspondence on representative
+        // values of every variant, in declaration order.
+        let reps: Vec<(StepKind, &str)> = vec![
+            (StepKind::Param { index: 0 }, "param"),
+            (StepKind::Const { idx: 0 }, "const"),
+            (StepKind::Bin(BinOp::Add), "map_bin"),
+            (StepKind::Un(UnOp::Exp), "map_un"),
+            (StepKind::Select, "select"),
+            (StepKind::Dot2x2, "dot2x2"),
+            (StepKind::DotOther, "dot"),
+            (StepKind::Reshape, "reshape"),
+            (StepKind::Broadcast { mapping: vec![] }, "broadcast"),
+            (StepKind::Transpose { perm: vec![] }, "transpose"),
+            (
+                StepKind::Pad { low: vec![], high: vec![], value: 0.0 },
+                "pad",
+            ),
+            (StepKind::Slice { starts: vec![], limits: vec![] }, "slice"),
+            (StepKind::Concat { dim: 0 }, "concat"),
+            (
+                StepKind::Reduce { dims: vec![], kind: ReduceKind::Sum },
+                "reduce",
+            ),
+            (StepKind::Conv2d { stride: 1, same: false }, "conv2d"),
+            (
+                StepKind::DepthwiseConv2d { stride: 1, same: false },
+                "depthwise_conv2d",
+            ),
+            (StepKind::GlobalAvgPool, "global_avg_pool"),
+            (
+                StepKind::FusedMap { splats: vec![], instrs: vec![] },
+                "fused_map",
+            ),
+            (StepKind::DotBias { bias_first: false }, "dot_bias"),
+        ];
+        assert_eq!(reps.len(), KERNEL_KINDS, "one representative per variant");
+        for (pos, (kind, name)) in reps.iter().enumerate() {
+            let idx = kind_index(kind);
+            assert_eq!(idx, pos, "{kind:?} out of declaration order");
+            assert_eq!(KERNEL_NAMES[idx], *name, "{kind:?} reports the wrong name");
+        }
+    }
+
+    #[test]
+    fn profiled_runs_are_bit_identical_and_fill_the_sink() {
+        use crate::telemetry::profile::ProfileSink;
+        let spec = crate::models::twofc::TwoFcSpec {
+            batch: 4,
+            input: 9,
+            hidden: 6,
+            classes: 3,
+            lr: 0.1,
+        };
+        let g = crate::models::twofc::train_step_graph(&spec);
+        for p in [Program::compile(&g).unwrap(), Program::compile_fused(&g).unwrap()] {
+            let lane_sets = lane_inputs(&g, 37, 3);
+            let mut sink = ProfileSink::new();
+            // scalar: profiled outputs == unprofiled outputs, bit for bit
+            let refs: Vec<&Tensor> = lane_sets[0].iter().collect();
+            let want = p.run_refs(&refs, &mut Scratch::new()).unwrap();
+            let got = p
+                .run_refs_profiled(&refs, &mut Scratch::new(), &mut sink)
+                .unwrap();
+            assert!(bits_equal(&want, &got), "profiled scalar run diverged");
+            // every emitted step recorded exactly once
+            assert_eq!(sink.total_count(), p.num_slots() as u64);
+            // batched: same invariants, one span per step across all lanes
+            let lane_refs: Vec<Vec<&Tensor>> =
+                lane_sets.iter().map(|s| s.iter().collect()).collect();
+            let lanes: Vec<&[&Tensor]> = lane_refs.iter().map(|r| r.as_slice()).collect();
+            let want_b = p.run_lanes(&lanes, &mut BatchScratch::new());
+            let mut bsink = ProfileSink::new();
+            let got_b =
+                p.run_lanes_profiled(&lanes, &mut BatchScratch::new(), &mut bsink);
+            for (v, (w, g2)) in want_b.iter().zip(got_b.iter()).enumerate() {
+                assert!(
+                    bits_equal(w.as_ref().unwrap(), g2.as_ref().unwrap()),
+                    "profiled batched lane {v} diverged"
+                );
+            }
+            assert_eq!(bsink.total_count(), p.num_slots() as u64);
+        }
     }
 }

@@ -52,7 +52,7 @@ USAGE: gevo-ml <subcommand> [flags]
            [--checkpoint-every N]
            [--opt-level 0|1|2|3] [--operators LIST] [--adapt]
            [--filter-neutral] [--reseed-minimized] [--list-operators]
-           [--trace FILE] [--out PREFIX] [--quiet]
+           [--trace FILE] [--profile] [--out PREFIX] [--quiet]
            --islands shards the population into K ring-connected
            subpopulations; --island-threads steps islands on T parallel
            OS threads between migration barriers (default 1; any value
@@ -87,7 +87,13 @@ USAGE: gevo-ml <subcommand> [flags]
            front, run_end) written on a background thread; tracing is
            strictly observational — fronts, checkpoints and RNG state
            are bit-identical with or without it, and attaching or
-           dropping a trace on checkpoint resume is always safe
+           dropping a trace on checkpoint resume is always safe;
+           --profile accumulates per-kernel execution timings on the
+           compiled-program cache (a `profile:` summary line, a `profile`
+           section in --out JSON, and `\"profile\"` trace events when
+           combined with --trace) — like --trace it is strictly
+           observational: fronts, checkpoints and RNG state are
+           bit-identical with it on or off
   minimize same flags as search; after the search (or checkpoint resume)
            delta-debugs every Pareto-front edit list down to the edits
            that matter and prints the per-edit attribution table; never
@@ -98,7 +104,8 @@ USAGE: gevo-ml <subcommand> [flags]
   validate [--mutants N]   interpreter vs XLA-PJRT cross-check
   report   TRACE.jsonl [--csv]   analyze a --trace stream: phase
            breakdown, cache hit-rate and operator-weight trajectories,
-           elite lineage table (markdown, or machine-readable --csv)"
+           per-kernel hot spots (--profile runs), elite lineage table
+           (markdown, or machine-readable --csv)"
     );
 }
 
@@ -146,6 +153,7 @@ fn search_config(args: &Args) -> SearchConfig {
         filter_neutral: args.flag("filter-neutral"),
         reseed_minimized: args.flag("reseed-minimized"),
         trace: args.get("trace").map(std::path::PathBuf::from),
+        profile: args.flag("profile"),
         verbose: !args.flag("quiet"),
     }
 }
@@ -260,6 +268,9 @@ fn cmd_search(args: &Args) {
         println!("{}", report::batch_summary(&b));
     }
     println!("{}", report::phase_summary(&r));
+    if let Some(line) = report::profile_summary(&r) {
+        println!("{line}");
+    }
     write_out(args, &r);
 }
 

@@ -296,13 +296,29 @@ pub fn run_training_prog(
     batches: &[(Tensor, Tensor)],
     epochs: usize,
 ) -> Option<(TwoFcWeights, f64)> {
+    run_training_prog_profiled(step, init, batches, epochs, None)
+}
+
+/// [`run_training_prog`] with per-kernel timings folded into `sink` when
+/// one is supplied (`--profile`). The profiled path runs the same steps
+/// in the same order — outputs are bit-identical either way.
+pub fn run_training_prog_profiled(
+    step: &crate::exec::Program,
+    init: &TwoFcWeights,
+    batches: &[(Tensor, Tensor)],
+    epochs: usize,
+    mut sink: Option<&mut crate::telemetry::ProfileSink>,
+) -> Option<(TwoFcWeights, f64)> {
     let mut w = init.clone();
     let mut last_loss = f64::NAN;
     let mut scratch = crate::exec::Scratch::new();
     for _ in 0..epochs {
         for (x, y) in batches {
             let inputs = [x, y, &w.w1, &w.b1, &w.w2, &w.b2];
-            let mut out = step.run_refs(&inputs, &mut scratch).ok()?;
+            let mut out = match sink.as_deref_mut() {
+                Some(s) => step.run_refs_profiled(&inputs, &mut scratch, s).ok()?,
+                None => step.run_refs(&inputs, &mut scratch).ok()?,
+            };
             if out.iter().take(4).any(|t| t.has_non_finite()) {
                 return None;
             }

@@ -49,6 +49,13 @@ struct CacheRow {
     scalar: f64,
 }
 
+struct KernelRow {
+    kernel: String,
+    count: f64,
+    total_ns: f64,
+    max_ns: f64,
+}
+
 struct FrontRow {
     time: f64,
     error: f64,
@@ -69,6 +76,7 @@ struct Trace {
     migrations: Vec<(usize, f64)>,
     checkpoints: Vec<(usize, f64)>,
     front: Vec<FrontRow>,
+    profile: Vec<KernelRow>,
     ended: bool,
 }
 
@@ -87,6 +95,7 @@ impl Trace {
             migrations: Vec::new(),
             checkpoints: Vec::new(),
             front: Vec::new(),
+            profile: Vec::new(),
             ended: false,
         };
         for (i, ev) in lines.iter().enumerate() {
@@ -167,6 +176,25 @@ impl Trace {
                                 op: lstr("op"),
                                 parent: lstr("parent"),
                                 edit: lstr("edit"),
+                            });
+                        }
+                    }
+                }
+                "profile" => {
+                    // rows are run-cumulative — the last event wins (a
+                    // resumed or multi-segment run re-emits the totals)
+                    t.profile.clear();
+                    if let Some(ks) = ev.opt("kernels").and_then(|k| k.as_arr().ok()) {
+                        for k in ks {
+                            t.profile.push(KernelRow {
+                                kernel: k
+                                    .opt("kernel")
+                                    .and_then(|v| v.as_str().ok())
+                                    .unwrap_or("-")
+                                    .to_string(),
+                                count: num(k, "count"),
+                                total_ns: num(k, "total_ns"),
+                                max_ns: num(k, "max_ns"),
                             });
                         }
                     }
@@ -283,6 +311,36 @@ impl Trace {
             s.push('\n');
         }
 
+        // --- hot kernels ----------------------------------------------
+        s.push_str("## hot kernels\n\n");
+        if self.profile.is_empty() {
+            s.push_str("no profile events recorded (run with --profile --trace).\n\n");
+        } else {
+            let total: f64 = self.profile.iter().map(|k| k.total_ns).sum();
+            let mut rows: Vec<&KernelRow> = self.profile.iter().collect();
+            rows.sort_by(|a, b| {
+                b.total_ns
+                    .partial_cmp(&a.total_ns)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| a.kernel.cmp(&b.kernel))
+            });
+            s.push_str("| kernel | steps | total (ms) | mean (µs) | max (µs) | share |\n");
+            s.push_str("|---|---|---|---|---|---|\n");
+            for k in rows {
+                let mean = if k.count > 0.0 { k.total_ns / k.count } else { 0.0 };
+                let share = if total > 0.0 { 100.0 * k.total_ns / total } else { 0.0 };
+                s.push_str(&format!(
+                    "| {} | {:.0} | {:.3} | {:.1} | {:.1} | {share:.1}% |\n",
+                    k.kernel,
+                    k.count,
+                    k.total_ns / 1e6,
+                    mean / 1e3,
+                    k.max_ns / 1e3
+                ));
+            }
+            s.push('\n');
+        }
+
         // --- operator weights ----------------------------------------
         s.push_str("## operator weights\n\n");
         let with_weights: Vec<&GenRow> = self.gens.iter().filter(|g| !g.weights.is_empty()).collect();
@@ -385,6 +443,14 @@ impl Trace {
                 p.time, p.error, p.island, p.edits, p.op, p.parent, p.edit
             ));
         }
+        s.push('\n');
+        s.push_str("kernel,count,total_ns,max_ns\n");
+        for k in &self.profile {
+            s.push_str(&format!(
+                "{},{:.0},{:.0},{:.0}\n",
+                k.kernel, k.count, k.total_ns, k.max_ns
+            ));
+        }
         s
     }
 }
@@ -480,6 +546,29 @@ mod tests {
                     ])]),
                 )],
             ),
+            event(
+                "profile",
+                vec![
+                    ("thru_gen", Json::num(2.0)),
+                    (
+                        "kernels",
+                        Json::arr(vec![
+                            Json::obj(vec![
+                                ("kernel", Json::str("dot")),
+                                ("count", Json::num(128.0)),
+                                ("total_ns", Json::num(9e6)),
+                                ("max_ns", Json::num(80000.0)),
+                            ]),
+                            Json::obj(vec![
+                                ("kernel", Json::str("map_bin")),
+                                ("count", Json::num(256.0)),
+                                ("total_ns", Json::num(1e6)),
+                                ("max_ns", Json::num(10000.0)),
+                            ]),
+                        ]),
+                    ),
+                ],
+            ),
             event("run_end", vec![("completed", Json::num(2.0))]),
         ]
     }
@@ -490,11 +579,42 @@ mod tests {
         assert!(md.contains("# gevo-ml trace report"), "{md}");
         assert!(md.contains("## phases"), "{md}");
         assert!(md.contains("## cache"), "{md}");
+        assert!(md.contains("## hot kernels"), "{md}");
         assert!(md.contains("## operator weights"), "{md}");
         assert!(md.contains("## lineage"), "{md}");
         assert!(md.contains("phases: evaluate"), "top phase must lead: {md}");
+        assert!(md.contains("| dot | 128 | 9.000 |"), "hot-kernel row: {md}");
+        assert!(md.contains("90.0%"), "dominant kernel share: {md}");
         assert!(md.contains("| delete |"), "operator column: {md}");
         assert!(md.contains("00000000deadbeef"), "parent fingerprint: {md}");
+    }
+
+    #[test]
+    fn later_profile_event_replaces_earlier() {
+        // profile rows are run-cumulative snapshots, so only the latest
+        // event should survive — mirroring the "front" semantics.
+        let mut lines = synthetic();
+        let end = lines.pop().unwrap(); // keep run_end last
+        lines.push(event(
+            "profile",
+            vec![
+                ("thru_gen", Json::num(4.0)),
+                (
+                    "kernels",
+                    Json::arr(vec![Json::obj(vec![
+                        ("kernel", Json::str("dot")),
+                        ("count", Json::num(999.0)),
+                        ("total_ns", Json::num(2e7)),
+                        ("max_ns", Json::num(90000.0)),
+                    ])]),
+                ),
+            ],
+        ));
+        lines.push(end);
+        let csv = render(&lines, true).unwrap();
+        assert!(csv.contains("dot,999,20000000,90000"), "{csv}");
+        assert!(!csv.contains("dot,128,"), "{csv}");
+        assert!(!csv.contains("map_bin"), "latest snapshot wins wholesale: {csv}");
     }
 
     #[test]
@@ -517,6 +637,9 @@ mod tests {
         assert!(csv.contains("\ngen,island,"), "{csv}");
         assert!(csv.contains("\nfront_time,"), "{csv}");
         assert!(csv.contains("evaluate,2,15000,8000"), "{csv}");
+        assert!(csv.contains("\nkernel,count,total_ns,max_ns\n"), "{csv}");
+        assert!(csv.contains("dot,128,9000000,80000"), "{csv}");
+        assert!(csv.contains("map_bin,256,1000000,10000"), "{csv}");
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! §Telemetry L2c: the noise-robust wall-clock harness behind
+//! `--metric wall|blend`.
+//!
+//! A single unwarmed `Instant` shot — the historical measured-time path
+//! — is noisy enough that [`super::timing_noise`] exists to document
+//! how noisy. This harness applies the standard discipline (GEVO and
+//! KernelFoundry both search on measured runtime, PAPERS.md): warmup
+//! iterations to populate caches and branch predictors, median-of-k
+//! sampling with MAD outlier rejection, and interleaved A/B ordering so
+//! a baseline/candidate comparison cancels slow clock drift (thermal
+//! ramps, background load) instead of attributing it to whichever side
+//! ran second.
+//!
+//! The clock is injected through the [`Clock`] trait: production code
+//! uses [`MonotonicClock`] (a monotonic `Instant` origin), tests use
+//! [`FixedStepClock`] to make every measured duration — and therefore
+//! every `--metric wall` objective — a deterministic function of clock
+//! call counts (pinned by `tests/measured_time.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A nanosecond clock the harness samples around closures. `Send +
+/// Sync` because workloads (which hold a harness) are shared across the
+/// evaluation worker pool.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since an arbitrary fixed origin; must never go
+    /// backwards between two calls on the same thread.
+    fn now_ns(&self) -> u64;
+}
+
+/// The production clock: nanoseconds since construction, monotonic.
+#[derive(Debug)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// A deterministic test clock: every `now_ns` call advances time by a
+/// fixed step, so any span measured around a closure is exactly
+/// `step_ns` regardless of real elapsed time. With single-threaded
+/// search settings this makes measured-time objectives reproducible
+/// bit-for-bit.
+#[derive(Debug)]
+pub struct FixedStepClock {
+    calls: AtomicU64,
+    step_ns: u64,
+}
+
+impl FixedStepClock {
+    pub fn new(step_ns: u64) -> FixedStepClock {
+        FixedStepClock { calls: AtomicU64::new(0), step_ns }
+    }
+
+    /// How many times the clock has been read (test observability).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+impl Clock for FixedStepClock {
+    fn now_ns(&self) -> u64 {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        (n + 1).saturating_mul(self.step_ns)
+    }
+}
+
+/// Noise-robust measurement of closures. `measure` times one closure;
+/// `measure_ab` times a baseline/candidate pair in strict interleaved
+/// order. Both return the MAD-filtered median over `samples` timed
+/// repetitions after `warmup` untimed ones, or `None` if the closure
+/// ever reports failure.
+#[derive(Clone)]
+pub struct TimingHarness {
+    clock: Arc<dyn Clock>,
+    /// Untimed runs before sampling starts (cache/branch warmup).
+    pub warmup: usize,
+    /// Timed repetitions per measurement; the reported value is their
+    /// robust median. Treated as at least 1.
+    pub samples: usize,
+    /// MAD outlier threshold: samples farther than `mad_k ×
+    /// median-absolute-deviation` from the median are discarded before
+    /// the final median. 3.5 is the conventional cutoff.
+    pub mad_k: f64,
+}
+
+impl std::fmt::Debug for TimingHarness {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TimingHarness")
+            .field("warmup", &self.warmup)
+            .field("samples", &self.samples)
+            .field("mad_k", &self.mad_k)
+            .finish()
+    }
+}
+
+impl TimingHarness {
+    /// The production configuration: monotonic clock, 1 warmup run,
+    /// median of 5 samples, 3.5×MAD rejection.
+    pub fn monotonic() -> TimingHarness {
+        TimingHarness::with_clock(Arc::new(MonotonicClock::new()))
+    }
+
+    /// Same defaults over an injected clock (deterministic in tests).
+    pub fn with_clock(clock: Arc<dyn Clock>) -> TimingHarness {
+        TimingHarness { clock, warmup: 1, samples: 5, mad_k: 3.5 }
+    }
+
+    fn time_once<F: FnMut() -> bool>(&self, f: &mut F) -> Option<f64> {
+        let t0 = self.clock.now_ns();
+        if !f() {
+            return None;
+        }
+        let t1 = self.clock.now_ns();
+        Some(t1.saturating_sub(t0) as f64 / 1e9)
+    }
+
+    /// Robust wall-clock seconds of `f`: warmup, then the MAD-filtered
+    /// median of `samples` timed runs. `None` as soon as `f` reports
+    /// failure (a failing variant has no meaningful runtime).
+    pub fn measure<F: FnMut() -> bool>(&self, mut f: F) -> Option<f64> {
+        for _ in 0..self.warmup {
+            if !f() {
+                return None;
+            }
+        }
+        let n = self.samples.max(1);
+        let mut xs = Vec::with_capacity(n);
+        for _ in 0..n {
+            xs.push(self.time_once(&mut f)?);
+        }
+        Some(robust_median(&mut xs, self.mad_k))
+    }
+
+    /// Paired measurement in strict interleaved order — warmup runs
+    /// a,b,a,b,…, then each timed round times `a` then `b` — so slow
+    /// drift over the measurement window hits both sides equally and
+    /// cancels out of their ratio. Returns `(median_a, median_b)`.
+    pub fn measure_ab<A, B>(&self, mut a: A, mut b: B) -> Option<(f64, f64)>
+    where
+        A: FnMut() -> bool,
+        B: FnMut() -> bool,
+    {
+        for _ in 0..self.warmup {
+            if !a() || !b() {
+                return None;
+            }
+        }
+        let n = self.samples.max(1);
+        let mut xa = Vec::with_capacity(n);
+        let mut xb = Vec::with_capacity(n);
+        for _ in 0..n {
+            xa.push(self.time_once(&mut a)?);
+            xb.push(self.time_once(&mut b)?);
+        }
+        Some((robust_median(&mut xa, self.mad_k), robust_median(&mut xb, self.mad_k)))
+    }
+}
+
+/// Median after MAD outlier rejection: discard samples farther than
+/// `mad_k × MAD` from the raw median, then take the median of what
+/// survives. The raw median always survives its own filter, so the kept
+/// set is never empty; a zero MAD (at least half the samples identical)
+/// keeps the raw median. Sorts `xs` in place.
+pub fn robust_median(xs: &mut [f64], mad_k: f64) -> f64 {
+    assert!(!xs.is_empty(), "robust_median of no samples");
+    xs.sort_unstable_by(f64::total_cmp);
+    let med = median_of_sorted(xs);
+    let mut devs: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    devs.sort_unstable_by(f64::total_cmp);
+    let mad = median_of_sorted(&devs);
+    if !(mad > 0.0) {
+        return med;
+    }
+    let kept: Vec<f64> = xs.iter().copied().filter(|x| (x - med).abs() <= mad_k * mad).collect();
+    median_of_sorted(&kept)
+}
+
+fn median_of_sorted(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        (xs[n / 2 - 1] + xs[n / 2]) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+
+    #[test]
+    fn monotonic_clock_never_goes_backwards() {
+        let c = MonotonicClock::new();
+        let mut last = 0u64;
+        for _ in 0..100 {
+            let t = c.now_ns();
+            assert!(t >= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn fixed_clock_makes_measurements_exact_and_reproducible() {
+        for _ in 0..2 {
+            let clock = Arc::new(FixedStepClock::new(1_000));
+            let h = TimingHarness::with_clock(clock.clone());
+            let w = h.measure(|| true).unwrap();
+            // each timed sample spans exactly one clock step
+            assert_eq!(w.to_bits(), (1_000.0f64 / 1e9).to_bits());
+            // warmup draws no clock reads; each of the 5 samples draws 2
+            assert_eq!(clock.calls(), 10);
+        }
+    }
+
+    #[test]
+    fn failing_closure_yields_none_in_warmup_and_in_samples() {
+        let h = TimingHarness::with_clock(Arc::new(FixedStepClock::new(10)));
+        assert_eq!(h.measure(|| false), None);
+        let mut n = 0;
+        // succeed through warmup (1 run), fail on the third timed sample
+        assert_eq!(
+            h.measure(|| {
+                n += 1;
+                n != 4
+            }),
+            None
+        );
+        assert_eq!(h.measure_ab(|| true, || false), None);
+        assert_eq!(h.measure_ab(|| false, || true), None);
+    }
+
+    #[test]
+    fn robust_median_rejects_outliers_plain_median_keeps() {
+        // plain median of [1,2,3,1000] is 2.5; the 1000 outlier is
+        // MAD-rejected, leaving median(1,2,3) = 2
+        let mut xs = [1.0, 2.0, 3.0, 1000.0];
+        assert_eq!(robust_median(&mut xs, 3.5), 2.0);
+    }
+
+    #[test]
+    fn robust_median_with_zero_mad_keeps_the_median() {
+        let mut xs = [10.0, 10.0, 10.0, 10.0, 9999.0];
+        assert_eq!(robust_median(&mut xs, 3.5), 10.0);
+        let mut one = [42.0];
+        assert_eq!(robust_median(&mut one, 3.5), 42.0);
+    }
+
+    #[test]
+    fn measure_ab_interleaves_strictly() {
+        let log = RefCell::new(String::new());
+        let mut h = TimingHarness::with_clock(Arc::new(FixedStepClock::new(7)));
+        h.warmup = 1;
+        h.samples = 2;
+        let (wa, wb) = h
+            .measure_ab(
+                || {
+                    log.borrow_mut().push('a');
+                    true
+                },
+                || {
+                    log.borrow_mut().push('b');
+                    true
+                },
+            )
+            .unwrap();
+        assert_eq!(*log.borrow(), "ababab", "warmup pair then two timed rounds");
+        assert_eq!(wa.to_bits(), (7.0f64 / 1e9).to_bits());
+        assert_eq!(wb.to_bits(), (7.0f64 / 1e9).to_bits());
+    }
+
+    #[test]
+    fn zero_samples_is_treated_as_one() {
+        let mut h = TimingHarness::with_clock(Arc::new(FixedStepClock::new(5)));
+        h.samples = 0;
+        h.warmup = 0;
+        assert!(h.measure(|| true).is_some());
+    }
+}

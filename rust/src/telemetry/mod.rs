@@ -1,8 +1,9 @@
 //! §Telemetry L1: zero-dependency observability for the search stack.
 //!
-//! Three strictly *observational* facilities — none of them draws from
+//! Strictly *observational* facilities — none of them draws from
 //! the search RNG or alters control flow, so trace-on and trace-off
-//! runs are bit-identical (pinned by `tests/telemetry_trace.rs`):
+//! (and profile-on and profile-off) runs are bit-identical (pinned by
+//! `tests/telemetry_trace.rs` and `tests/measured_time.rs`):
 //!
 //! * [`spans`] — monotonic phase timers (propose / evaluate / select /
 //!   migrate / checkpoint) aggregated per island with count / total /
@@ -14,9 +15,20 @@
 //!   checkpoint / cache sample, written by a dedicated writer thread
 //!   behind a bounded channel (mirroring the durable checkpoint
 //!   writer) so emitting an event never blocks an island barrier.
+//! * [`profile`] — per-kernel execution profiles (`--profile`): the
+//!   same count / total / max / log₂-bucket aggregation one layer down,
+//!   keyed by compiled-program step kind, accumulated run-locally in
+//!   the `exec` step loop and merged population-wide onto the
+//!   `ProgramCache`.
 //! * [`analyze`] — the aggregation behind `gevo-ml report
 //!   <trace.jsonl>`: phase-time breakdowns, cache and operator-weight
-//!   trajectories, and elite lineage tables in markdown or CSV.
+//!   trajectories, hot-kernel tables and elite lineage tables in
+//!   markdown or CSV.
+//!
+//! [`harness`] is the *measurement* sibling: the warmup + interleaved
+//! A/B + MAD-filtered median-of-k wall-clock harness that `--metric
+//! wall|blend` evaluation times candidates with, over an injectable
+//! [`harness::Clock`].
 //!
 //! [`metrics`] holds the counter/timer registry that previously lived
 //! in `coordinator::metrics`, now with poison-recovering locks, and
@@ -26,11 +38,15 @@
 //! into `BENCH_evo.json`).
 
 pub mod analyze;
+pub mod harness;
 pub mod metrics;
+pub mod profile;
 pub mod spans;
 pub mod trace;
 
+pub use harness::{Clock, FixedStepClock, MonotonicClock, TimingHarness};
 pub use metrics::Metrics;
+pub use profile::{profile_summary, ProfileRow, ProfileSink, StepProfile};
 pub use spans::{phase_summary, GenSpans, Phase, PhaseAgg, PhaseRow, SpanRecorder};
 pub use trace::{event, TraceError, TraceWriter};
 

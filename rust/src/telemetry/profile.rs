@@ -1,0 +1,291 @@
+//! §Telemetry L2b: per-kernel execution profiles — fixed-cost
+//! aggregation of per-step timings inside compiled
+//! [`crate::exec::Program`] runs, keyed by step kind. The shape mirrors
+//! [`super::spans::PhaseAgg`] (count / total / max + log₂ buckets) one
+//! layer down: spans say *where a generation's wall time went*, a step
+//! profile says *which kernels inside evaluation cost what*.
+//!
+//! Recording is allocation-free — a fixed array of [`StepProfile`]s and
+//! a handful of integer adds per step — and strictly observational: the
+//! profiled execution paths compute exactly what the unprofiled ones
+//! do, no RNG is drawn, and the `--profile` flag is excluded from the
+//! checkpoint config echo, so profiled and unprofiled runs are
+//! bit-identical in fronts, history, lineage and checkpoint bytes
+//! (pinned by `tests/telemetry_trace.rs` and `tests/measured_time.rs`).
+
+use super::spans::{bucket_of, HIST_BUCKETS};
+
+/// Number of distinct step kinds a compiled program can execute — one
+/// slot per `exec` `StepKind` variant. `exec::kind_index` maps a step
+/// onto this array and has a unit test pinning the correspondence.
+pub const KERNEL_KINDS: usize = 19;
+
+/// Stable reporting names, in `exec` `StepKind` declaration order (the
+/// order `exec::kind_index` indexes by).
+pub const KERNEL_NAMES: [&str; KERNEL_KINDS] = [
+    "param",
+    "const",
+    "map_bin",
+    "map_un",
+    "select",
+    "dot2x2",
+    "dot",
+    "reshape",
+    "broadcast",
+    "transpose",
+    "pad",
+    "slice",
+    "concat",
+    "reduce",
+    "conv2d",
+    "depthwise_conv2d",
+    "global_avg_pool",
+    "fused_map",
+    "dot_bias",
+];
+
+/// Streaming aggregate for one kernel kind: count / total / max plus a
+/// log-bucketed duration histogram — [`super::spans::PhaseAgg`]'s shape,
+/// made `Copy` so a [`ProfileSink`] is one flat array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepProfile {
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl StepProfile {
+    pub const ZERO: StepProfile =
+        StepProfile { count: 0, total_ns: 0, max_ns: 0, buckets: [0; HIST_BUCKETS] };
+
+    /// Fold one step execution of `ns` nanoseconds into the aggregate.
+    pub fn record(&mut self, ns: u64) {
+        self.count += 1;
+        self.total_ns = self.total_ns.saturating_add(ns);
+        if ns > self.max_ns {
+            self.max_ns = ns;
+        }
+        self.buckets[bucket_of(ns)] += 1;
+    }
+
+    /// Element-wise merge (for folding thread-local sinks together).
+    pub fn merge(&mut self, other: &StepProfile) {
+        self.count += other.count;
+        self.total_ns = self.total_ns.saturating_add(other.total_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+}
+
+impl Default for StepProfile {
+    fn default() -> Self {
+        StepProfile::ZERO
+    }
+}
+
+/// One profiling accumulator: a [`StepProfile`] per kernel kind.
+/// Execution paths record into a run-local sink (no locking in the step
+/// loop); the workload merges the sink into its
+/// [`crate::exec::cache::ProgramCache`] once per evaluated run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProfileSink {
+    kinds: [StepProfile; KERNEL_KINDS],
+}
+
+impl Default for ProfileSink {
+    fn default() -> Self {
+        ProfileSink { kinds: [StepProfile::ZERO; KERNEL_KINDS] }
+    }
+}
+
+impl ProfileSink {
+    pub fn new() -> ProfileSink {
+        ProfileSink::default()
+    }
+
+    /// Fold one step of kind `kind` (an `exec::kind_index` value) taking
+    /// `ns` nanoseconds.
+    pub fn record(&mut self, kind: usize, ns: u64) {
+        self.kinds[kind].record(ns);
+    }
+
+    /// Element-wise merge of another sink.
+    pub fn merge(&mut self, other: &ProfileSink) {
+        for (a, b) in self.kinds.iter_mut().zip(other.kinds.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// The aggregate for one kernel kind.
+    pub fn get(&self, kind: usize) -> &StepProfile {
+        &self.kinds[kind]
+    }
+
+    /// Total steps recorded across every kind.
+    pub fn total_count(&self) -> u64 {
+        self.kinds.iter().map(|k| k.count).sum()
+    }
+
+    /// Total nanoseconds recorded across every kind.
+    pub fn total_ns(&self) -> u64 {
+        let mut total = 0u64;
+        for k in &self.kinds {
+            total = total.saturating_add(k.total_ns);
+        }
+        total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_count() == 0
+    }
+
+    /// Flatten into reporting rows — one per kernel kind that recorded
+    /// at least one step, in [`KERNEL_NAMES`] order (stable across runs
+    /// so trace deltas and report tables diff cleanly).
+    pub fn rows(&self) -> Vec<ProfileRow> {
+        self.kinds
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.count > 0)
+            .map(|(i, k)| ProfileRow {
+                kernel: KERNEL_NAMES[i],
+                count: k.count,
+                total_ns: k.total_ns,
+                max_ns: k.max_ns,
+            })
+            .collect()
+    }
+}
+
+/// A flattened summary row for one kernel kind — what flows into
+/// `SearchResult::profile`, the JSON report's `profile` section, the
+/// `"profile"` trace event and the `gevo-ml report` hot-kernel table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProfileRow {
+    pub kernel: &'static str,
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+/// The `profile:` one-liner printed by `gevo-ml search --profile`
+/// (mirroring the `phases:` line): the top-3 kernel kinds by share of
+/// total profiled time. CI greps the `profile: ` prefix.
+pub fn profile_summary(rows: &[ProfileRow]) -> String {
+    let total: u64 = rows.iter().map(|r| r.total_ns).sum();
+    let steps: u64 = rows.iter().map(|r| r.count).sum();
+    if steps == 0 {
+        return "profile: no kernel steps recorded".to_string();
+    }
+    let mut busy: Vec<&ProfileRow> = rows.iter().filter(|r| r.count > 0).collect();
+    busy.sort_by(|a, b| b.total_ns.cmp(&a.total_ns).then(a.kernel.cmp(b.kernel)));
+    let parts: Vec<String> = busy
+        .iter()
+        .take(3)
+        .map(|r| {
+            format!(
+                "{} {:.1}% ({:.3}s)",
+                r.kernel,
+                100.0 * r.total_ns as f64 / (total.max(1)) as f64,
+                r.total_ns as f64 / 1e9
+            )
+        })
+        .collect();
+    format!(
+        "profile: {} of {:.3}s across {} kernel steps",
+        parts.join(", "),
+        total as f64 / 1e9,
+        steps
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_profile_mirrors_phase_agg_semantics() {
+        let mut p = StepProfile::ZERO;
+        p.record(10);
+        p.record(1000);
+        p.record(3);
+        assert_eq!(p.count, 3);
+        assert_eq!(p.total_ns, 1013);
+        assert_eq!(p.max_ns, 1000);
+        assert_eq!(p.buckets.iter().sum::<u64>(), 3);
+        let mut q = StepProfile::ZERO;
+        q.record(7);
+        p.merge(&q);
+        assert_eq!(p.count, 4);
+        assert_eq!(p.total_ns, 1020);
+    }
+
+    #[test]
+    fn sink_rows_skip_idle_kinds_and_keep_declaration_order() {
+        let mut s = ProfileSink::new();
+        s.record(6, 500); // "dot"
+        s.record(2, 100); // "map_bin"
+        s.record(6, 300);
+        let rows = s.rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].kernel, "map_bin");
+        assert_eq!(rows[1].kernel, "dot");
+        assert_eq!(rows[1].count, 2);
+        assert_eq!(rows[1].total_ns, 800);
+        assert_eq!(rows[1].max_ns, 500);
+        assert_eq!(s.total_count(), 3);
+        assert_eq!(s.total_ns(), 900);
+        assert!(!s.is_empty());
+        assert!(ProfileSink::new().is_empty());
+    }
+
+    #[test]
+    fn sink_merge_is_elementwise() {
+        let mut a = ProfileSink::new();
+        a.record(6, 10);
+        let mut b = ProfileSink::new();
+        b.record(6, 20);
+        b.record(13, 5); // "reduce"
+        a.merge(&b);
+        assert_eq!(a.get(6).count, 2);
+        assert_eq!(a.get(6).total_ns, 30);
+        assert_eq!(a.get(13).count, 1);
+        assert_eq!(a.rows().len(), 2);
+    }
+
+    #[test]
+    fn kernel_names_cover_every_slot_uniquely() {
+        assert_eq!(KERNEL_NAMES.len(), KERNEL_KINDS);
+        let mut seen = std::collections::HashSet::new();
+        for n in KERNEL_NAMES {
+            assert!(seen.insert(n), "duplicate kernel name {n}");
+            assert!(!n.is_empty());
+        }
+    }
+
+    #[test]
+    fn profile_summary_lists_top_shares_with_grep_stable_prefix() {
+        let mut s = ProfileSink::new();
+        s.record(6, 8_000); // dot
+        s.record(2, 1_000); // map_bin
+        s.record(13, 500); // reduce
+        s.record(7, 400); // reshape
+        s.record(4, 100); // select
+        let line = profile_summary(&s.rows());
+        assert!(line.starts_with("profile: "), "{line}");
+        assert!(line.contains("dot 80.0%"), "{line}");
+        assert!(line.contains("map_bin") && line.contains("reduce"), "{line}");
+        assert!(!line.contains("select"), "only the top three appear: {line}");
+        assert!(line.contains("5 kernel steps"), "{line}");
+    }
+
+    #[test]
+    fn profile_summary_handles_empty_rows() {
+        let line = profile_summary(&ProfileSink::new().rows());
+        assert!(line.starts_with("profile: "), "{line}");
+        assert!(line.contains("no kernel steps"), "{line}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration: per-kernel profiling and the noise-robust timing
+//! harness over a *real compiled workload* (the 2fcNet training
+//! evaluator). Pins the two ISSUE acceptance properties:
+//!
+//! * `--profile` is strictly observational — fronts, history and
+//!   checkpoint bytes are bit-identical with it on or off, while the
+//!   profiled run additionally surfaces non-empty per-kernel rows and
+//!   `"profile"` trace events;
+//! * `--metric wall` (and `blend`) under an injected deterministic
+//!   [`FixedStepClock`] reproduces the same front bit-for-bit across
+//!   independent runs, because every harness measurement collapses to
+//!   exactly one clock step.
+
+use gevo_ml::data::digits;
+use gevo_ml::evo::island::run_with_checkpoint;
+use gevo_ml::evo::search::{SearchConfig, SearchResult};
+use gevo_ml::fitness::training::TrainingWorkload;
+use gevo_ml::fitness::RuntimeMetric;
+use gevo_ml::ir::Graph;
+use gevo_ml::models::twofc::{self, TwoFcSpec};
+use gevo_ml::telemetry::{FixedStepClock, TimingHarness};
+use gevo_ml::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn workload(metric: RuntimeMetric) -> (Graph, TrainingWorkload) {
+    let spec = TwoFcSpec { batch: 8, input: 36, hidden: 8, classes: 10, lr: 0.2 };
+    let step = twofc::train_step_graph(&spec);
+    let data = digits::generate(96, spec.side(), 7);
+    let (fit, test) = data.split(64);
+    let wl = TrainingWorkload::new(spec, &step, fit, test, 1, 1, metric);
+    (step, wl)
+}
+
+fn cfg(seed: u64) -> SearchConfig {
+    SearchConfig {
+        pop_size: 6,
+        generations: 3,
+        elites: 3,
+        workers: 1,
+        seed,
+        islands: 2,
+        migration_interval: 2,
+        migrants: 1,
+        island_threads: 1,
+        checkpoint_every: 1,
+        ..Default::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gevo_measured_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn fingerprint(r: &SearchResult) -> Vec<(u64, u64)> {
+    r.pareto.iter().map(|(_, o)| (o.0.to_bits(), o.1.to_bits())).collect()
+}
+
+fn assert_history_bits_equal(a: &SearchResult, b: &SearchResult, label: &str) {
+    assert_eq!(a.history.len(), b.history.len(), "{label}: history length");
+    for (x, y) in a.history.iter().zip(b.history.iter()) {
+        assert_eq!(x.best_time.to_bits(), y.best_time.to_bits(), "{label}: best_time bits");
+        assert_eq!(x.best_error.to_bits(), y.best_error.to_bits(), "{label}: best_error bits");
+    }
+}
+
+#[test]
+fn profiling_a_compiled_workload_is_observational_and_fills_rows() {
+    let dir = tmp_dir("profwl");
+    let ck_off = dir.join("off.json");
+    let ck_on = dir.join("on.json");
+    let trace = dir.join("trace.jsonl");
+    let (step, wl_off) = workload(RuntimeMetric::Flops);
+    let (_, wl_on) = workload(RuntimeMetric::Flops);
+    let base = cfg(23);
+    let off = run_with_checkpoint(&step, &wl_off, &base, Some(&ck_off));
+    let on = run_with_checkpoint(
+        &step,
+        &wl_on,
+        &SearchConfig { profile: true, trace: Some(trace.clone()), ..base.clone() },
+        Some(&ck_on),
+    );
+    assert_eq!(fingerprint(&off), fingerprint(&on), "front bits diverged under --profile");
+    assert_eq!(off.total_evaluations, on.total_evaluations, "evaluations");
+    assert_history_bits_equal(&off, &on, "--profile");
+    assert_eq!(
+        std::fs::read(&ck_off).unwrap(),
+        std::fs::read(&ck_on).unwrap(),
+        "checkpoint bytes diverged under --profile"
+    );
+
+    // The unprofiled run reports nothing; the profiled run reports
+    // per-kernel rows with real accumulated time, dot among them (the
+    // train step is dominated by matmuls).
+    assert!(off.profile.is_none(), "profile rows must be opt-in");
+    let rows = on.profile.expect("profiled compiled workload must report rows");
+    assert!(!rows.is_empty(), "profiled run recorded no kernel steps");
+    assert!(rows.iter().any(|r| r.kernel == "dot" && r.count > 0), "{rows:?}");
+    let total: u64 = rows.iter().map(|r| r.total_ns).sum();
+    assert!(total > 0, "profiled time must accumulate");
+
+    // And the trace stream carries "profile" events for the analyzer.
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let has_profile_event = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .any(|e| e.get("kind").unwrap().as_str().unwrap() == "profile");
+    assert!(has_profile_event, "no profile event in the trace stream");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wall_and_blend_search_under_fixed_clock_reproduces_fronts_bitwise() {
+    for metric in [RuntimeMetric::WallClock, RuntimeMetric::Blend] {
+        let mk = || {
+            let (step, wl) = workload(metric);
+            let wl = wl.with_timing(
+                TimingHarness::with_clock(Arc::new(FixedStepClock::new(1_000))),
+                &step,
+            );
+            (step, wl)
+        };
+        let base = cfg(31);
+        let (step, wl_a) = mk();
+        let (_, wl_b) = mk();
+        let a = run_with_checkpoint(&step, &wl_a, &base, None);
+        let b = run_with_checkpoint(&step, &wl_b, &base, None);
+        assert_eq!(fingerprint(&a), fingerprint(&b), "{metric:?}: front bits diverged");
+        assert_eq!(a.total_evaluations, b.total_evaluations, "{metric:?}: evaluations");
+        assert_history_bits_equal(&a, &b, "fixed clock");
+        if metric == RuntimeMetric::WallClock {
+            // Every measured span is exactly one 1000ns clock step, so
+            // every surviving front point has the same exact runtime.
+            let want = (1_000.0f64 / 1e9).to_bits();
+            assert!(
+                a.pareto.iter().all(|(_, o)| o.0.to_bits() == want),
+                "wall objectives must all be exactly one clock step"
+            );
+        }
+    }
+}

@@ -148,6 +148,58 @@ fn tracing_is_observational_across_schedules_and_opt_levels() {
 }
 
 #[test]
+fn profiling_is_observational_across_schedules_and_opt_levels() {
+    // Same matrix as the tracing test, for `--profile`: per-kernel
+    // profiling only reads clocks and writes telemetry-only state, so
+    // fronts, history, lineage and checkpoint bytes must be bit-exact
+    // with it on or off. (The toy closure evaluator has no program
+    // cache, so `profile` stays `None` either way — the flag pathway
+    // through config, islands and checkpointing is what's pinned here;
+    // tests/measured_time.rs covers a real compiled workload.)
+    let (g, eval) = toy();
+    let dir = tmp_dir("profbitid");
+    let mut case = 0usize;
+    for (opt, islands, threads, batch) in [
+        (OptLevel::parse("0").unwrap(), 1usize, 1usize, 0usize),
+        (OptLevel::parse("2").unwrap(), 2, 1, 32),
+        (OptLevel::parse("3").unwrap(), 3, 3, 4),
+    ] {
+        case += 1;
+        let base = SearchConfig {
+            pop_size: 6,
+            generations: 4,
+            elites: 3,
+            workers: 1,
+            seed: 19,
+            islands,
+            migration_interval: 2,
+            migrants: 1,
+            island_threads: threads,
+            batch,
+            opt_level: opt,
+            checkpoint_every: 2,
+            ..Default::default()
+        };
+        let label = format!("opt={opt} islands={islands} threads={threads} batch={batch}");
+        let ck_off = dir.join(format!("off_{case}.json"));
+        let ck_on = dir.join(format!("on_{case}.json"));
+        let off = run_with_checkpoint(&g, &eval, &base, Some(&ck_off));
+        let on = run_with_checkpoint(
+            &g,
+            &eval,
+            &SearchConfig { profile: true, ..base.clone() },
+            Some(&ck_on),
+        );
+        assert_same_outcome(&off, &on, &label);
+        assert!(off.profile.is_none() && on.profile.is_none(), "{label}: no program cache");
+        let a = std::fs::read(&ck_off).unwrap();
+        let b = std::fs::read(&ck_on).unwrap();
+        assert_eq!(a, b, "{label}: checkpoint bytes diverged under profiling");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn kill_resume_trace_is_well_formed_and_outcome_identical() {
     let (g, eval) = toy();
     let dir = tmp_dir("resume");
