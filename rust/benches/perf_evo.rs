@@ -6,8 +6,9 @@
 //! telemetry subsystem's cost: the clock noise floor, the per-event
 //! overhead of a `--trace` JSONL stream, the per-kernel-step price of
 //! `--profile` hooks, and the spread reduction the noise-robust timing
-//! harness buys for measured-time search (summary committed as
-//! `BENCH_evo.json`).
+//! harness buys for measured-time search, plus the serve daemon's
+//! request-dispatch and submit-to-first-generation latency (summary
+//! committed as `BENCH_evo.json`).
 
 use gevo_ml::evo::crossover::messy_one_point;
 use gevo_ml::evo::island::run_with_checkpoint;
@@ -321,9 +322,84 @@ fn main() {
          {robust_spread:.0} ns over {hreps} measurements ({spread_reduction:.1}x tighter)"
     ));
 
+    // --- serve: request dispatch + submit-to-first-gen latency -----------------
+    // The daemon must be cheap enough that polling a job's status never
+    // competes with the search for meaningful time. Dispatch is a full
+    // in-process round-trip (connect, parse, route, respond); the
+    // latency row is wall clock from POST /jobs to the first published
+    // generation of a deliberately tiny job.
+    let serve_dir =
+        std::env::temp_dir().join(format!("gevo_bench_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&serve_dir);
+    let handle = gevo_ml::serve::spawn(&gevo_ml::serve::ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        state_dir: serve_dir.clone(),
+        runners: 1,
+        verbose: false,
+    })
+    .expect("serve daemon spawns");
+    let addr = handle.addr;
+    let roundtrip = move |method: &str, path: &str, body: &str| -> (u16, Json) {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).expect("connect");
+        s.write_all(
+            format!(
+                "{method} {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .expect("send");
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).expect("recv");
+        let status = buf
+            .strip_prefix("HTTP/1.1 ")
+            .and_then(|r| r.split(' ').next())
+            .and_then(|c| c.parse().ok())
+            .unwrap_or(0);
+        let body = Json::parse(buf.split("\r\n\r\n").nth(1).unwrap_or("")).unwrap_or(Json::Null);
+        (status, body)
+    };
+    let p50_dispatch = b.case_with_work("serve GET /healthz round-trip (x16)", Some(16.0), || {
+        for _ in 0..16 {
+            black_box(roundtrip("GET", "/healthz", ""));
+        }
+    });
+    let dispatch_ns = p50_dispatch * 1e9 / 16.0;
+    b.note(&format!("serve dispatch: ~{dispatch_ns:.0} ns per request round-trip"));
+    let t0 = std::time::Instant::now();
+    let (status, resp) = roundtrip(
+        "POST",
+        "/jobs",
+        r#"{"workload":"2fcnet","generations":1,"fit":32,"test":16,"workers":1,
+            "config":{"pop_size":4,"elites":2,"init_mutations":1,"max_tries":5}}"#,
+    );
+    assert_eq!(status, 201, "bench job submit failed: {resp:?}");
+    let job_id = resp.get("id").unwrap().as_usize().unwrap();
+    let submit_to_first_gen = loop {
+        let (_, st) = roundtrip("GET", &format!("/jobs/{job_id}"), "");
+        let completed = st.opt("completed").and_then(|c| c.as_usize().ok()).unwrap_or(0);
+        let done = st.opt("state").and_then(|s| s.as_str().ok().map(str::to_string))
+            == Some("done".into());
+        if completed >= 1 || done {
+            break t0.elapsed().as_secs_f64();
+        }
+        assert!(
+            t0.elapsed().as_secs() < 60,
+            "bench job never reached its first generation: {st:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    };
+    b.note(&format!(
+        "serve submit-to-first-gen: {:.1} ms (pop=4, fit=32 2fcNet job)",
+        submit_to_first_gen * 1e3
+    ));
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&serve_dir);
+
     let summary = Json::obj(vec![
         ("suite", Json::str("perf_evo")),
-        ("section", Json::str("threaded-island-runtime+batched-eval+telemetry")),
+        ("section", Json::str("threaded-island-runtime+batched-eval+telemetry+serve")),
         ("island_scaling", Json::Arr(rows)),
         ("batch_scaling", Json::Arr(batch_rows)),
         (
@@ -361,6 +437,13 @@ fn main() {
                 ("single_shot_spread_ns", Json::num(raw_spread)),
                 ("robust_median_spread_ns", Json::num(robust_spread)),
                 ("spread_reduction", Json::num(spread_reduction)),
+            ]),
+        ),
+        (
+            "serve_overhead",
+            Json::obj(vec![
+                ("dispatch_ns", Json::num(dispatch_ns)),
+                ("submit_to_first_gen_seconds", Json::num(submit_to_first_gen)),
             ]),
         ),
         (

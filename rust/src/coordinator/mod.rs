@@ -4,9 +4,11 @@
 //! examples drive.
 
 pub mod report;
-pub mod metrics;
 
 use crate::data::{digits, patterns};
+use crate::evo::island::RunControl;
+use crate::exec::cache::ProgramCache;
+use std::sync::Arc;
 use crate::evo::nsga2::Objectives;
 use crate::evo::search::{Lineage, SearchConfig, SearchResult};
 use crate::fitness::prediction::PredictionWorkload;
@@ -140,6 +142,34 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
 pub fn try_run_experiment(
     cfg: &ExperimentConfig,
 ) -> Result<ExperimentResult, crate::evo::island::CheckpointError> {
+    try_run_experiment_with(cfg, &RunHooks::default())
+}
+
+/// Service hooks for [`try_run_experiment_with`] — what `gevo-ml serve`
+/// attaches per job on top of a plain [`ExperimentConfig`]:
+///
+/// * `control` — a cooperative stop/progress handle
+///   ([`RunControl`]): the driver publishes generation progress and
+///   telemetry snapshots at every barrier and honors stop requests there
+///   (checkpoint written, bit-exact resume).
+/// * `shared_cache` — a daemon-wide [`ProgramCache`] for the workload to
+///   use instead of building a private one. Must have been built at
+///   `cfg.search.opt_level` (the search entry point cross-checks).
+///
+/// Both default to off, which makes [`try_run_experiment`] exactly the
+/// historical single-shot path.
+#[derive(Default)]
+pub struct RunHooks<'a> {
+    pub control: Option<&'a RunControl>,
+    pub shared_cache: Option<Arc<ProgramCache>>,
+}
+
+/// [`try_run_experiment`] with [`RunHooks`] attached. With default hooks
+/// the two are the same run, bit for bit.
+pub fn try_run_experiment_with(
+    cfg: &ExperimentConfig,
+    hooks: &RunHooks<'_>,
+) -> Result<ExperimentResult, crate::evo::island::CheckpointError> {
     let t0 = std::time::Instant::now();
     match cfg.kind {
         WorkloadKind::MobilenetPrediction => {
@@ -152,20 +182,33 @@ pub fn try_run_experiment(
                 cfg.data_seed,
             );
             let (fit, test) = data.split(cfg.fit_samples);
-            let wl = PredictionWorkload::new_with_opt(
-                &baseline,
-                spec.batch,
-                &fit,
-                &test,
-                (cfg.fit_samples / spec.batch).min(32),
-                cfg.metric,
-                cfg.search.opt_level,
-            );
-            let res = crate::evo::island::try_run_with_checkpoint(
+            let fit_batches = (cfg.fit_samples / spec.batch).min(32);
+            let wl = match hooks.shared_cache.clone() {
+                Some(cache) => PredictionWorkload::new_with_cache(
+                    &baseline,
+                    spec.batch,
+                    &fit,
+                    &test,
+                    fit_batches,
+                    cfg.metric,
+                    cache,
+                ),
+                None => PredictionWorkload::new_with_opt(
+                    &baseline,
+                    spec.batch,
+                    &fit,
+                    &test,
+                    fit_batches,
+                    cfg.metric,
+                    cfg.search.opt_level,
+                ),
+            };
+            let res = crate::evo::island::try_run_with_checkpoint_controlled(
                 &baseline,
                 &wl,
                 &cfg.search,
                 cfg.checkpoint.as_deref(),
+                hooks.control,
             )?;
             use crate::evo::search::Evaluator;
             Ok(finish(
@@ -187,21 +230,34 @@ pub fn try_run_experiment(
                 cfg.data_seed,
             );
             let (fit, test) = data.split(cfg.fit_samples);
-            let wl = TrainingWorkload::new_with_opt(
-                spec,
-                &baseline,
-                fit,
-                test,
-                cfg.epochs,
-                cfg.weight_seed,
-                cfg.metric,
-                cfg.search.opt_level,
-            );
-            let res = crate::evo::island::try_run_with_checkpoint(
+            let wl = match hooks.shared_cache.clone() {
+                Some(cache) => TrainingWorkload::new_with_cache(
+                    spec,
+                    &baseline,
+                    fit,
+                    test,
+                    cfg.epochs,
+                    cfg.weight_seed,
+                    cfg.metric,
+                    cache,
+                ),
+                None => TrainingWorkload::new_with_opt(
+                    spec,
+                    &baseline,
+                    fit,
+                    test,
+                    cfg.epochs,
+                    cfg.weight_seed,
+                    cfg.metric,
+                    cfg.search.opt_level,
+                ),
+            };
+            let res = crate::evo::island::try_run_with_checkpoint_controlled(
                 &baseline,
                 &wl,
                 &cfg.search,
                 cfg.checkpoint.as_deref(),
+                hooks.control,
             )?;
             use crate::evo::search::Evaluator;
             Ok(finish(

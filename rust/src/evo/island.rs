@@ -51,8 +51,8 @@ use crate::util::rng::Rng;
 use std::collections::{BTreeMap, HashSet};
 use std::io;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
 /// In-flight search state: what a checkpoint captures.
@@ -63,6 +63,64 @@ pub(crate) struct RunState {
     pub(crate) completed: usize,
     /// Individuals moved between islands so far.
     pub(crate) migrations: usize,
+}
+
+/// Cooperative control and observation handle for a driven search
+/// ([`try_run_with_checkpoint_controlled`]). Long-running callers (the
+/// `gevo-ml serve` job scheduler) share one per run:
+///
+/// * [`RunControl::request_stop`] asks the driver to stop **at the next
+///   barrier** — the same sync point where migration and checkpointing
+///   already happen — after submitting a checkpoint snapshot of the
+///   stopped state. A graceful stop is therefore indistinguishable from
+///   a kill-at-the-barrier: resuming from the written checkpoint is
+///   bit-exact, by the same argument as kill/resume.
+/// * [`RunControl::completed`] and [`RunControl::snapshot`] expose
+///   generation progress and a telemetry snapshot (phases / batch /
+///   profile, the report-section shapes), refreshed at every barrier.
+///
+/// Strictly observational on the search itself: the driver only *reads*
+/// atomics and *writes* the snapshot at barriers — no RNG is drawn and
+/// no control flow changes until a stop is requested, so controlled and
+/// uncontrolled runs are bit-identical in fronts, history, lineage and
+/// checkpoint bytes.
+#[derive(Default)]
+pub struct RunControl {
+    stop: AtomicBool,
+    completed: AtomicUsize,
+    snapshot: Mutex<Option<Json>>,
+}
+
+impl RunControl {
+    pub fn new() -> RunControl {
+        RunControl::default()
+    }
+
+    /// Ask the driver to stop at the next migration/checkpoint barrier.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Generations fully completed, as of the last barrier.
+    pub fn completed(&self) -> usize {
+        self.completed.load(Ordering::SeqCst)
+    }
+
+    /// The latest barrier telemetry snapshot (`None` before the first
+    /// barrier). Poison-tolerant like the cache locks: a panicked
+    /// publisher leaves the previous whole snapshot in place.
+    pub fn snapshot(&self) -> Option<Json> {
+        self.snapshot.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    fn publish(&self, completed: usize, snap: Json) {
+        *self.snapshot.lock().unwrap_or_else(|p| p.into_inner()) = Some(snap);
+        self.completed.store(completed, Ordering::SeqCst);
+    }
 }
 
 /// A checkpoint I/O failure: reading, parsing or validating an existing
@@ -128,6 +186,23 @@ pub fn try_run_with_checkpoint(
     eval: &dyn Evaluator,
     cfg: &SearchConfig,
     checkpoint: Option<&Path>,
+) -> Result<SearchResult, CheckpointError> {
+    try_run_with_checkpoint_controlled(original, eval, cfg, checkpoint, None)
+}
+
+/// [`try_run_with_checkpoint`] with an optional [`RunControl`] attached:
+/// progress and telemetry snapshots are published at every barrier, and
+/// a requested stop ends the run at the next barrier with the stopped
+/// state checkpointed (when a checkpoint path is attached). The returned
+/// [`SearchResult`] then describes the partial run — the merged front of
+/// everything archived so far — exactly what a resume would continue
+/// from. With `control = None` this *is* [`try_run_with_checkpoint`].
+pub fn try_run_with_checkpoint_controlled(
+    original: &Graph,
+    eval: &dyn Evaluator,
+    cfg: &SearchConfig,
+    checkpoint: Option<&Path>,
+    control: Option<&RunControl>,
 ) -> Result<SearchResult, CheckpointError> {
     let k = cfg.islands.max(1);
     // The operator registry for this run. Resolution failures are caller
@@ -232,7 +307,18 @@ pub fn try_run_with_checkpoint(
     // Driver-thread phase spans (migrate / checkpoint); the per-island
     // recorders cover propose / evaluate / select.
     let mut driver_spans = SpanRecorder::new();
-    drive(&mut st, original, eval, cfg, &ops, ghash, writer.as_mut(), tracer.as_mut(), &mut driver_spans)?;
+    drive(
+        &mut st,
+        original,
+        eval,
+        cfg,
+        &ops,
+        ghash,
+        writer.as_mut(),
+        tracer.as_mut(),
+        &mut driver_spans,
+        control,
+    )?;
     if let Some(mut w) = writer {
         w.drain()?;
     }
@@ -378,6 +464,7 @@ fn drive(
     mut writer: Option<&mut CheckpointWriter>,
     mut tracer: Option<&mut TraceWriter>,
     driver_spans: &mut SpanRecorder,
+    control: Option<&RunControl>,
 ) -> Result<(), CheckpointError> {
     let k = st.engines.len();
     let every = cfg.checkpoint_every.max(1);
@@ -494,8 +581,106 @@ fn drive(
                 }
             }
         }
+        // ---- cooperative control hook -----------------------------------
+        // Runs after the checkpoint submit so the published progress never
+        // gets ahead of what is durably resumable. Atomic reads and the
+        // snapshot write draw no RNG and touch no search state, so an
+        // attached-but-idle control leaves the run bit-identical.
+        if let Some(c) = control {
+            c.publish(st.completed, status_snapshot(st, eval, cfg, driver_spans));
+            if c.stop_requested() && st.completed < cfg.generations {
+                // Graceful stop at the barrier. The segment scheduler
+                // aligns barriers with checkpoint dues whenever a writer
+                // is attached, so the stopped state was just submitted
+                // above; the guard re-submits only if a future scheduler
+                // change ever lands a barrier off-cadence.
+                if let Some(w) = writer.as_mut() {
+                    if st.completed % every != 0 {
+                        w.submit(checkpoint_json(cfg, ghash, st))?;
+                    }
+                }
+                break;
+            }
+        }
     }
     Ok(())
+}
+
+/// The per-barrier telemetry snapshot published through [`RunControl`]:
+/// generation progress plus the `phases` / `batch` / `profile` sections
+/// in the same shapes the JSON report uses, so a job-status API can
+/// stream them without reshaping. Read-only over the run state and the
+/// program cache's counters.
+fn status_snapshot(
+    st: &RunState,
+    eval: &dyn Evaluator,
+    cfg: &SearchConfig,
+    driver_spans: &SpanRecorder,
+) -> Json {
+    let mut all = SpanRecorder::new();
+    all.merge(driver_spans);
+    for e in &st.engines {
+        all.merge(&e.spans);
+    }
+    let phases = Json::Arr(
+        all.rows()
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("phase", Json::str(p.phase)),
+                    ("count", Json::num(p.count as f64)),
+                    ("total_ns", Json::num(p.total_ns as f64)),
+                    ("max_ns", Json::num(p.max_ns as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let batch = eval.program_cache().map_or(Json::Null, |c| {
+        let b = c.batch_stats();
+        let mean = if b.cohorts > 0 { b.lanes as f64 / b.cohorts as f64 } else { 0.0 };
+        Json::obj(vec![
+            ("cohorts", Json::num(b.cohorts as f64)),
+            ("lanes", Json::num(b.lanes as f64)),
+            ("mean_width", Json::num(mean)),
+            ("max_width", Json::num(b.max_width as f64)),
+            ("singletons", Json::num(b.singletons as f64)),
+            ("batched_evals", Json::num(b.batched_evals as f64)),
+            ("scalar_evals", Json::num(b.scalar_evals as f64)),
+        ])
+    });
+    let profile = eval
+        .program_cache()
+        .and_then(|c| c.profile_rows())
+        .map_or(Json::Null, |rows| {
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("kernel", Json::str(r.kernel)),
+                            ("count", Json::num(r.count as f64)),
+                            ("total_ns", Json::num(r.total_ns as f64)),
+                            ("max_ns", Json::num(r.max_ns as f64)),
+                        ])
+                    })
+                    .collect(),
+            )
+        });
+    Json::obj(vec![
+        ("completed", Json::num(st.completed as f64)),
+        ("target", Json::num(cfg.generations as f64)),
+        (
+            "evaluations",
+            Json::num(st.engines.iter().map(|e| e.evals).sum::<usize>() as f64),
+        ),
+        (
+            "cache_hits",
+            Json::num(st.engines.iter().map(|e| e.cache_hits).sum::<usize>() as f64),
+        ),
+        ("migrations", Json::num(st.migrations as f64)),
+        ("phases", phases),
+        ("batch", batch),
+        ("profile", profile),
+    ])
 }
 
 /// Program-cache counter snapshot for `cache` trace events; deltas

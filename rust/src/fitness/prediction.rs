@@ -31,7 +31,13 @@ pub struct PredictionWorkload {
     baseline_flops: f64,
     baseline_wall: f64,
     pub metric: RuntimeMetric,
-    programs: ProgramCache,
+    /// Shared-ownership program cache: normally private to this workload
+    /// (one [`Arc`] holder), but `gevo-ml serve` hands concurrent jobs of
+    /// the same workload kind and opt level one daemon-wide cache
+    /// ([`PredictionWorkload::new_with_cache`]). Entries are
+    /// canonical-hash-keyed and insert-only, so sharing never changes what
+    /// any job executes.
+    programs: Arc<ProgramCache>,
     /// Noise-robust wall-clock harness behind `--metric wall|blend`
     /// measurements and `baseline_wall` calibration.
     timing: TimingHarness,
@@ -79,6 +85,30 @@ impl PredictionWorkload {
         metric: RuntimeMetric,
         opt: crate::opt::OptLevel,
     ) -> PredictionWorkload {
+        Self::new_with_cache(
+            baseline,
+            batch,
+            fit,
+            test,
+            fit_batches,
+            metric,
+            Arc::new(ProgramCache::with_opt(opt)),
+        )
+    }
+
+    /// [`PredictionWorkload::new_with_opt`] over an externally shared
+    /// program cache (the cache's level takes the place of the `opt`
+    /// argument); see [`TrainingWorkload::new_with_cache`]
+    /// (`crate::fitness::training`) for the sharing contract.
+    pub fn new_with_cache(
+        baseline: &Graph,
+        batch: usize,
+        fit: &Dataset,
+        test: &Dataset,
+        fit_batches: usize,
+        metric: RuntimeMetric,
+        programs: Arc<ProgramCache>,
+    ) -> PredictionWorkload {
         let mk = |d: &Dataset, cap: usize| -> Vec<(Tensor, Vec<usize>)> {
             d.batches(batch)
                 .into_iter()
@@ -98,7 +128,7 @@ impl PredictionWorkload {
             baseline_flops: baseline.total_flops() as f64,
             baseline_wall: 1.0,
             metric,
-            programs: ProgramCache::with_opt(opt),
+            programs,
             timing: TimingHarness::monotonic(),
             baseline_prog: None,
         };
@@ -356,7 +386,7 @@ impl Evaluator for PredictionWorkload {
     }
 
     fn program_cache(&self) -> Option<&ProgramCache> {
-        Some(&self.programs)
+        Some(self.programs.as_ref())
     }
 }
 

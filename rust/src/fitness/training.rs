@@ -38,7 +38,13 @@ pub struct TrainingWorkload {
     baseline_flops: f64,
     baseline_wall: f64,
     pub metric: RuntimeMetric,
-    programs: ProgramCache,
+    /// Shared-ownership program cache: normally private to this workload
+    /// (one [`Arc`] holder), but `gevo-ml serve` hands concurrent jobs of
+    /// the same workload kind and opt level one daemon-wide cache
+    /// ([`TrainingWorkload::new_with_cache`]). Safe for bit-identity:
+    /// entries are keyed by canonical graph hash and insert-only, so *who*
+    /// compiled a program never changes *what* any job executes.
+    programs: Arc<ProgramCache>,
     /// Noise-robust wall-clock harness behind `--metric wall|blend`
     /// measurements and `baseline_wall` calibration.
     timing: TimingHarness,
@@ -86,6 +92,36 @@ impl TrainingWorkload {
         metric: RuntimeMetric,
         opt: crate::opt::OptLevel,
     ) -> TrainingWorkload {
+        Self::new_with_cache(
+            spec,
+            baseline_step,
+            fit,
+            test,
+            epochs,
+            weight_seed,
+            metric,
+            Arc::new(ProgramCache::with_opt(opt)),
+        )
+    }
+
+    /// [`TrainingWorkload::new_with_opt`] over an externally shared
+    /// program cache (the cache's level takes the place of the `opt`
+    /// argument). `gevo-ml serve` uses this to let concurrent jobs of the
+    /// same workload kind and opt level share compiled programs; cache
+    /// entries are canonical-hash-keyed and insert-only, so sharing is
+    /// scheduling, not semantics — every job's trajectory is bit-identical
+    /// to one run against a private cache.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with_cache(
+        spec: TwoFcSpec,
+        baseline_step: &Graph,
+        fit: Dataset,
+        test: Dataset,
+        epochs: usize,
+        weight_seed: u64,
+        metric: RuntimeMetric,
+        programs: Arc<ProgramCache>,
+    ) -> TrainingWorkload {
         let fit_batches = fit.batches(spec.batch);
         let mut w = TrainingWorkload {
             spec,
@@ -98,7 +134,7 @@ impl TrainingWorkload {
             baseline_flops: baseline_step.total_flops() as f64,
             baseline_wall: 1.0,
             metric,
-            programs: ProgramCache::with_opt(opt),
+            programs,
             timing: TimingHarness::monotonic(),
             baseline_prog: None,
         };
@@ -256,7 +292,7 @@ impl Evaluator for TrainingWorkload {
     }
 
     fn program_cache(&self) -> Option<&ProgramCache> {
-        Some(&self.programs)
+        Some(self.programs.as_ref())
     }
 }
 

@@ -35,6 +35,10 @@
 //! * [`telemetry`] — strictly-observational search telemetry: phase
 //!   spans, the `--trace` JSONL event stream, elite-lineage provenance,
 //!   the `gevo-ml report` analyzer, and timing-noise characterization.
+//! * [`serve`] — `gevo-ml serve`: the search-as-a-service daemon — a
+//!   hand-rolled HTTP/1.1 job API over a durable job store, multiplexing
+//!   concurrent searches (each checkpoint-resumable, bit-identically)
+//!   over shared runner threads and program caches.
 //! * [`util`] — infra substrates (RNG, JSON, CLI, stats, bench harness)
 //!   written in-tree because the offline registry carries no such crates.
 
@@ -51,3 +55,4 @@ pub mod models;
 pub mod runtime;
 pub mod coordinator;
 pub mod telemetry;
+pub mod serve;

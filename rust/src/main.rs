@@ -11,6 +11,12 @@
 //!   models and on random mutants; also smoke-loads the AOT artifacts.
 //! * `report`   — analyze a `--trace` JSONL stream offline: phase
 //!   breakdown, cache trajectory, operator weights, elite lineage.
+//! * `serve`    — search-as-a-service daemon: submit, monitor and cancel
+//!   search jobs over a local HTTP API, with durable per-job checkpoints
+//!   so a killed daemon resumes its jobs bit-identically on restart.
+//!
+//! Unknown subcommands and unknown flags both exit 2 with usage; typos
+//! never fall back to defaults.
 //!
 //! Run `gevo-ml help` for flags.
 
@@ -20,19 +26,75 @@ use gevo_ml::fitness::RuntimeMetric;
 use gevo_ml::opt::OptLevel;
 use gevo_ml::util::cli::Args;
 
+/// One line naming every subcommand — printed on both the
+/// unknown-subcommand and unknown-flag exits (the CI usage check greps
+/// it), so a typo always shows the full menu.
+const SUBCOMMANDS: &str =
+    "subcommands: search, minimize, serve, table1, analyze, show, validate, report, help";
+
+/// Flags shared by `search` and `minimize`.
+const SEARCH_FLAGS: &[&str] = &[
+    "workload", "pop", "gens", "elites", "init-mutations", "crossover", "mutation",
+    "tournament", "max-tries", "seed", "metric", "fit", "test", "epochs", "data-seed",
+    "weight-seed", "workers", "islands", "island-threads", "batch", "migration-interval",
+    "migrants", "checkpoint", "checkpoint-every", "opt-level", "operators", "adapt",
+    "filter-neutral", "reseed-minimized", "list-operators", "trace", "profile", "out", "quiet",
+];
+
+/// Exit 2 on any flag the subcommand does not define. A misspelled flag
+/// silently taking its default would burn a long run (or, for `serve`,
+/// a daemon's lifetime) on the wrong parameters.
+fn check_flags(args: &Args, sub: &str, known: &[&str]) {
+    let unknown = args.unknown_keys(known);
+    if unknown.is_empty() {
+        return;
+    }
+    let list: Vec<String> = unknown.iter().map(|k| format!("--{k}")).collect();
+    eprintln!("error: unknown flag(s) for '{sub}': {}", list.join(", "));
+    eprintln!("{SUBCOMMANDS}");
+    eprintln!("run `gevo-ml help` for the flags each subcommand takes");
+    std::process::exit(2);
+}
+
 fn main() {
     let args = Args::parse_env(true);
     match args.subcommand.as_deref() {
-        Some("search") => cmd_search(&args),
-        Some("minimize") => cmd_minimize(&args),
-        Some("table1") => cmd_table1(),
-        Some("analyze") => cmd_analyze(&args),
-        Some("show") => cmd_show(&args),
-        Some("validate") => cmd_validate(&args),
-        Some("report") => cmd_report(&args),
+        Some("search") => {
+            check_flags(&args, "search", SEARCH_FLAGS);
+            cmd_search(&args)
+        }
+        Some("minimize") => {
+            check_flags(&args, "minimize", SEARCH_FLAGS);
+            cmd_minimize(&args)
+        }
+        Some("serve") => {
+            check_flags(&args, "serve", &["addr", "state-dir", "runners", "quiet"]);
+            cmd_serve(&args)
+        }
+        Some("table1") => {
+            check_flags(&args, "table1", &[]);
+            cmd_table1()
+        }
+        Some("analyze") => {
+            check_flags(&args, "analyze", &["model"]);
+            cmd_analyze(&args)
+        }
+        Some("show") => {
+            check_flags(&args, "show", &["workload", "hlo"]);
+            cmd_show(&args)
+        }
+        Some("validate") => {
+            check_flags(&args, "validate", &["mutants", "seed"]);
+            cmd_validate(&args)
+        }
+        Some("report") => {
+            check_flags(&args, "report", &["csv"]);
+            cmd_report(&args)
+        }
         Some("help") | None => print_help(),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
+            eprintln!("{SUBCOMMANDS}");
             print_help();
             std::process::exit(2);
         }
@@ -98,6 +160,20 @@ USAGE: gevo-ml <subcommand> [flags]
            delta-debugs every Pareto-front edit list down to the edits
            that matter and prints the per-edit attribution table; never
            degrades a front point's objective vector
+  serve    --state-dir DIR [--addr HOST:PORT] [--runners N] [--quiet]
+           search-as-a-service daemon (default addr 127.0.0.1:7745):
+           POST /jobs submits a search job (JSON spec: workload,
+           generations, metric, fit/test/epochs, workers, batch, profile,
+           and a config object whose keys mirror the checkpoint
+           config-echo — seed, pop_size, crossover_prob, ...);
+           GET /jobs lists jobs, GET /jobs/:id shows live generation
+           progress, GET /jobs/:id/front returns a finished job's Pareto
+           front (front.csv for the CSV render), POST /jobs/:id/cancel
+           stops a job gracefully at its next barrier, GET /healthz is
+           liveness. --runners N runs up to N jobs concurrently over a
+           shared program cache. Every job checkpoints into --state-dir;
+           killing the daemon and restarting on the same directory
+           resumes interrupted jobs bit-identically
   table1   print the paper's Table 1 (model layer composition)
   analyze  --model mobilenet|2fcnet   (§6.1 / §6.2 mutation analysis)
   show     --workload 2fcnet|mobilenet [--hlo]   print IR or emitted HLO
@@ -351,6 +427,25 @@ fn cmd_minimize(args: &Args) {
         "minimize: objectives preserved: OK ({points} front points, {removed} edits removed, {evals} re-evaluations)"
     );
     write_out(args, &r);
+}
+
+fn cmd_serve(args: &Args) {
+    let Some(state_dir) = args.get("state-dir") else {
+        eprintln!(
+            "error: serve requires --state-dir DIR (durable job records and checkpoints live there)"
+        );
+        std::process::exit(2);
+    };
+    let cfg = gevo_ml::serve::ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7745"),
+        state_dir: std::path::PathBuf::from(state_dir),
+        runners: args.usize_or("runners", 2).max(1),
+        verbose: !args.flag("quiet"),
+    };
+    if let Err(e) = gevo_ml::serve::run(&cfg) {
+        eprintln!("error: serve: {e}");
+        std::process::exit(1);
+    }
 }
 
 fn cmd_table1() {

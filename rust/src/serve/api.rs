@@ -1,0 +1,225 @@
+//! §Serve L4: the job API — pure routing from parsed [`Request`]s to
+//! `(status, content-type, body)` triples over a [`JobStore`].
+//!
+//! No sockets here: the accept loop feeds requests in and writes the
+//! triple out, so every route is unit-testable without binding a port.
+//!
+//! | Route                     | Meaning                                        |
+//! |---------------------------|------------------------------------------------|
+//! | `GET  /healthz`           | liveness + job count                           |
+//! | `POST /jobs`              | submit a spec → `201 {"id", "state"}`          |
+//! | `GET  /jobs`              | all jobs, summary rows                         |
+//! | `GET  /jobs/:id`          | one job + live generation progress             |
+//! | `GET  /jobs/:id/front`    | finished Pareto front (report JSON shape)      |
+//! | `GET  /jobs/:id/front.csv`| finished front as CSV (diffable vs `--out`)    |
+//! | `POST /jobs/:id/cancel`   | cancel queued now / running at next barrier    |
+//!
+//! Errors: `400` malformed body or spec, `404` unknown id or route,
+//! `405` wrong method on a known route, `409` front requested before
+//! the job finished. Every body is JSON except `front.csv`.
+
+use super::jobs::{JobStore, Lookup};
+use crate::util::json::Json;
+
+/// A response the transport layer writes verbatim.
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+const JSON: &str = "application/json";
+const CSV: &str = "text/csv";
+
+fn json_response(status: u16, body: Json) -> Response {
+    Response { status, content_type: JSON, body: body.to_string().into_bytes() }
+}
+
+fn error_response(status: u16, message: impl Into<String>) -> Response {
+    json_response(status, Json::obj(vec![("error", Json::Str(message.into()))]))
+}
+
+/// Route one request. Never panics on malformed input — every path out
+/// is a well-formed response.
+pub fn handle(store: &JobStore, method: &str, path: &str, body: &[u8]) -> Response {
+    let segments: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match (method, segments.as_slice()) {
+        ("GET", ["healthz"]) => json_response(
+            200,
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("jobs", Json::num(store.job_count() as f64)),
+            ]),
+        ),
+        ("POST", ["jobs"]) => submit(store, body),
+        ("GET", ["jobs"]) => json_response(200, store.list_json()),
+        ("GET", ["jobs", id]) => match parse_id(id) {
+            None => error_response(404, format!("no such job {id:?}")),
+            Some(id) => match store.status_json(id) {
+                Some(status) => json_response(200, status),
+                None => error_response(404, format!("no such job {id}")),
+            },
+        },
+        ("GET", ["jobs", id, "front"]) => finished(store, id, |s, id| s.front_json(id)),
+        ("GET", ["jobs", id, "front.csv"]) => match parse_id(id) {
+            None => error_response(404, format!("no such job {id:?}")),
+            Some(id) => match store.front_csv(id) {
+                Lookup::NotFound => error_response(404, format!("no such job {id}")),
+                Lookup::NotReady(state) => error_response(
+                    409,
+                    format!("job {id} is {}; front is available once it finishes", state.as_str()),
+                ),
+                Lookup::Ready(Json::Str(csv)) => {
+                    Response { status: 200, content_type: CSV, body: csv.into_bytes() }
+                }
+                Lookup::Ready(_) => error_response(500, "front_csv record is not a string"),
+            },
+        },
+        ("POST", ["jobs", id, "cancel"]) => match parse_id(id) {
+            None => error_response(404, format!("no such job {id:?}")),
+            Some(id) => match store.cancel(id) {
+                None => error_response(404, format!("no such job {id}")),
+                Some(state) => json_response(
+                    200,
+                    Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("state", Json::str(state.as_str())),
+                    ]),
+                ),
+            },
+        },
+        // known paths, wrong verb → 405 so clients see the method is the
+        // problem, not the route
+        (_, ["healthz"]) | (_, ["jobs"]) | (_, ["jobs", _]) | (_, ["jobs", _, "front"])
+        | (_, ["jobs", _, "front.csv"]) | (_, ["jobs", _, "cancel"]) => {
+            error_response(405, format!("method {method} not allowed here"))
+        }
+        _ => error_response(404, format!("no such route {path:?}")),
+    }
+}
+
+fn parse_id(s: &str) -> Option<u64> {
+    s.parse().ok()
+}
+
+fn submit(store: &JobStore, body: &[u8]) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return error_response(400, "body is not UTF-8"),
+    };
+    let spec = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return error_response(400, format!("body is not valid JSON: {e:?}")),
+    };
+    match store.submit(spec) {
+        Ok(id) => json_response(
+            201,
+            Json::obj(vec![("id", Json::num(id as f64)), ("state", Json::str("queued"))]),
+        ),
+        Err(e) => error_response(400, e),
+    }
+}
+
+fn finished(store: &JobStore, id: &str, f: impl Fn(&JobStore, u64) -> Lookup) -> Response {
+    let Some(id) = parse_id(id) else {
+        return error_response(404, format!("no such job {id:?}"));
+    };
+    match f(store, id) {
+        Lookup::NotFound => error_response(404, format!("no such job {id}")),
+        Lookup::NotReady(state) => error_response(
+            409,
+            format!("job {id} is {}; front is available once it finishes", state.as_str()),
+        ),
+        Lookup::Ready(body) => json_response(200, body),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> (JobStore, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "gevo-serve-api-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        (JobStore::open(&dir).unwrap(), dir)
+    }
+
+    fn body_json(r: &Response) -> Json {
+        Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn healthz_reports_job_count() {
+        let (store, dir) = store();
+        let r = handle(&store, "GET", "/healthz", b"");
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        assert_eq!(j.get("ok").unwrap().as_bool().unwrap(), true);
+        assert_eq!(j.get("jobs").unwrap().as_usize().unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn submit_poll_cancel_lifecycle() {
+        let (store, dir) = store();
+        let r = handle(&store, "POST", "/jobs", br#"{"workload":"2fcnet","generations":2}"#);
+        assert_eq!(r.status, 201);
+        let id = body_json(&r).get("id").unwrap().as_usize().unwrap();
+        assert_eq!(id, 1);
+
+        let r = handle(&store, "GET", "/jobs/1", b"");
+        assert_eq!(r.status, 200);
+        assert_eq!(body_json(&r).get("state").unwrap().as_str().unwrap(), "queued");
+
+        let r = handle(&store, "GET", "/jobs", b"");
+        assert_eq!(body_json(&r).get("jobs").unwrap().as_arr().unwrap().len(), 1);
+
+        // front before the job ran → 409
+        assert_eq!(handle(&store, "GET", "/jobs/1/front", b"").status, 409);
+        assert_eq!(handle(&store, "GET", "/jobs/1/front.csv", b"").status, 409);
+
+        let r = handle(&store, "POST", "/jobs/1/cancel", b"");
+        assert_eq!(r.status, 200);
+        assert_eq!(body_json(&r).get("state").unwrap().as_str().unwrap(), "cancelled");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_submit_leaves_no_residue() {
+        let (store, dir) = store();
+        for body in [
+            &b"not json"[..],
+            br#"{"workload":"2fcnet","bogus":true}"#,
+            br#"{"generations":3}"#,
+            &[0xff, 0xfe][..],
+        ] {
+            assert_eq!(handle(&store, "POST", "/jobs", body).status, 400);
+        }
+        assert_eq!(store.job_count(), 0);
+        let residue: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(residue.is_empty(), "rejected submits left files: {residue:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_routes_ids_and_methods() {
+        let (store, dir) = store();
+        assert_eq!(handle(&store, "GET", "/nope", b"").status, 404);
+        assert_eq!(handle(&store, "GET", "/jobs/99", b"").status, 404);
+        assert_eq!(handle(&store, "GET", "/jobs/abc", b"").status, 404);
+        assert_eq!(handle(&store, "GET", "/jobs/99/front", b"").status, 404);
+        assert_eq!(handle(&store, "POST", "/jobs/99/cancel", b"").status, 404);
+        assert_eq!(handle(&store, "DELETE", "/jobs", b"").status, 405);
+        assert_eq!(handle(&store, "POST", "/healthz", b"").status, 405);
+        assert_eq!(handle(&store, "GET", "/jobs/1/cancel", b"").status, 405);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,264 @@
+//! §Serve L2: a minimal HTTP/1.1 server-side protocol reader/writer.
+//!
+//! Just enough of RFC 9112 for the job API, hand-rolled over any
+//! `Read`/`Write` pair so unit tests can drive it with in-memory
+//! cursors and the daemon with `TcpStream`s. Deliberately strict and
+//! bounded:
+//!
+//! * request head capped at [`MAX_HEAD_BYTES`], body at
+//!   [`MAX_BODY_BYTES`] — oversized input is a protocol error, never an
+//!   allocation;
+//! * only `Content-Length` bodies (no chunked transfer coding — a
+//!   request advertising `Transfer-Encoding` is rejected);
+//! * any malformed request line or header is an error the caller maps
+//!   to `400 Bad Request` (pinned by `tests/serve_jobs.rs`);
+//! * every response carries `Connection: close` — one exchange per
+//!   connection keeps the accept loop stateless.
+
+use std::io::{Read, Write};
+
+/// Upper bound on the request line + headers, bytes.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Upper bound on a request body, bytes. Job specs are a few hundred
+/// bytes; a megabyte is generous.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// A parsed request: method, path (query string stripped), body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be parsed; maps to an HTTP status.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HttpError {
+    /// Malformed request line, header, or unsupported framing → 400.
+    Bad(String),
+    /// Head or body over the size caps → 413.
+    TooLarge(String),
+    /// Socket error mid-read; no response is owed.
+    Io(String),
+}
+
+impl HttpError {
+    /// The status code a handler should answer with (Io gets none).
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::Bad(_) => 400,
+            HttpError::TooLarge(_) => 413,
+            HttpError::Io(_) => 400,
+        }
+    }
+
+    pub fn message(&self) -> &str {
+        match self {
+            HttpError::Bad(m) | HttpError::TooLarge(m) | HttpError::Io(m) => m,
+        }
+    }
+}
+
+/// Read one request from `r`. Reads byte-at-a-time until the blank line
+/// (the head is tiny and `TcpStream` reads are buffered by the kernel;
+/// simplicity beats a user-space buffer that could over-read the body).
+pub fn read_request(r: &mut impl Read) -> Result<Request, HttpError> {
+    let head = read_head(r)?;
+    let text = std::str::from_utf8(&head)
+        .map_err(|_| HttpError::Bad("request head is not UTF-8".into()))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => {
+            return Err(HttpError::Bad(format!(
+                "malformed request line: {request_line:?}"
+            )))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Bad(format!("unsupported version {version:?}")));
+    }
+    if !target.starts_with('/') {
+        return Err(HttpError::Bad(format!("request target must be absolute path, got {target:?}")));
+    }
+    let mut content_length: usize = 0;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Bad(format!("malformed header line: {line:?}")))?;
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse()
+                    .map_err(|_| HttpError::Bad(format!("bad Content-Length: {value:?}")))?;
+            }
+            "transfer-encoding" => {
+                return Err(HttpError::Bad(
+                    "Transfer-Encoding is not supported; send Content-Length".into(),
+                ));
+            }
+            _ => {}
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError::TooLarge(format!(
+            "body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        )));
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)
+        .map_err(|e| HttpError::Io(format!("reading body: {e}")))?;
+    // strip the query string: routing is path-only
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    Ok(Request { method: method.to_string(), path, body })
+}
+
+fn read_head(r: &mut impl Read) -> Result<Vec<u8>, HttpError> {
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => return Err(HttpError::Io("connection closed mid-head".into())),
+            Ok(_) => head.push(byte[0]),
+            Err(e) => return Err(HttpError::Io(format!("reading head: {e}"))),
+        }
+        if head.ends_with(b"\r\n\r\n") {
+            head.truncate(head.len() - 4);
+            return Ok(head);
+        }
+        if head.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::TooLarge(format!(
+                "request head exceeds the {MAX_HEAD_BYTES}-byte cap"
+            )));
+        }
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write one response and flush. `Connection: close` always: the peer
+/// reads to EOF and the accept loop never tracks keep-alive state.
+pub fn respond(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len()
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse("GET /jobs/3 HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/jobs/3");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_content_length_body() {
+        let req = parse(
+            "POST /jobs HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 7\r\n\r\n{\"a\":1}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{\"a\":1}");
+    }
+
+    #[test]
+    fn strips_query_string() {
+        let req = parse("GET /jobs?verbose=1 HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.path, "/jobs");
+    }
+
+    #[test]
+    fn rejects_malformed_request_line() {
+        for raw in [
+            "GARBAGE\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+            "GET /x SPDY/3\r\n\r\n",
+            "GET relative HTTP/1.1\r\n\r\n",
+        ] {
+            let err = parse(raw).unwrap_err();
+            assert_eq!(err.status(), 400, "{raw:?} -> {err:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_header_and_transfer_encoding() {
+        assert_eq!(parse("GET / HTTP/1.1\r\nnocolon\r\n\r\n").unwrap_err().status(), 400);
+        assert_eq!(
+            parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err().status(),
+            400
+        );
+        assert_eq!(
+            parse("POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n").unwrap_err().status(),
+            400
+        );
+    }
+
+    #[test]
+    fn rejects_oversized_head_and_body() {
+        let huge_header = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES));
+        assert!(matches!(parse(&huge_header).unwrap_err(), HttpError::TooLarge(_)));
+        let huge_body = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(matches!(parse(&huge_body).unwrap_err(), HttpError::TooLarge(_)));
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").unwrap_err(),
+            HttpError::Io(_)
+        ));
+    }
+
+    #[test]
+    fn response_bytes_are_well_formed() {
+        let mut out = Vec::new();
+        respond(&mut out, 201, "application/json", b"{\"id\":\"1\"}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 201 Created\r\n"));
+        assert!(text.contains("Content-Length: 10\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"id\":\"1\"}"));
+    }
+}

@@ -1,0 +1,786 @@
+//! §Serve L3: the durable job store.
+//!
+//! A job is one full experiment ([`ExperimentConfig`]) owned by the
+//! daemon: submitted as JSON, queued, claimed by a runner thread, driven
+//! through [`crate::coordinator::try_run_experiment_with`] with a
+//! per-job checkpoint file, and finished as done / failed / cancelled.
+//!
+//! Durability contract (pinned by `tests/serve_jobs.rs`):
+//!
+//! * every state transition that must survive a crash is persisted with
+//!   the same fsync-rename discipline as search checkpoints
+//!   ([`crate::evo::island`]'s durable writer) — `job-<id>.json` record
+//!   plus `job-<id>.ck.json` checkpoint in the state dir;
+//! * a record persisted as `running` whose daemon died is rescanned as
+//!   `queued` on restart; re-running it resumes from its checkpoint, so
+//!   the finished Pareto front is bit-identical to an uninterrupted run
+//!   (the checkpoint config-echo guards against spec drift);
+//! * a spec is parsed and validated *before* anything touches the state
+//!   dir — a malformed submit leaves zero residue.
+//!
+//! Spec schema (`POST /jobs` body): top-level execution knobs that a
+//! resume may legally change (`workers`, `batch`, `generations`, …) sit
+//! beside a `config` object whose keys mirror the checkpoint
+//! config-echo exactly (`seed`, `pop_size`, `crossover_prob`, …), with
+//! the same number-or-hex-bit-pattern encodings, so a spec can be
+//! written by copying values straight out of a checkpoint file.
+
+use crate::coordinator::{ExperimentConfig, WorkloadKind};
+use crate::evo::island::{write_durable, RunControl};
+use crate::fitness::RuntimeMetric;
+use crate::opt::OptLevel;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+fn unpoisoned<'a, T>(
+    r: Result<MutexGuard<'a, T>, PoisonError<MutexGuard<'a, T>>>,
+) -> MutexGuard<'a, T> {
+    r.unwrap_or_else(|p| p.into_inner())
+}
+
+/// Lifecycle of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    fn parse(s: &str) -> Option<JobState> {
+        match s {
+            "queued" => Some(JobState::Queued),
+            "running" => Some(JobState::Running),
+            "done" => Some(JobState::Done),
+            "failed" => Some(JobState::Failed),
+            "cancelled" => Some(JobState::Cancelled),
+            _ => None,
+        }
+    }
+}
+
+pub(crate) struct Job {
+    pub id: u64,
+    pub cfg: ExperimentConfig,
+    /// The submitted spec, verbatim — persisted so a restart re-parses
+    /// the exact same configuration.
+    pub spec: Json,
+    pub state: JobState,
+    pub error: Option<String>,
+    /// Full report (`coordinator::report::to_json` shape) once finished.
+    pub report: Option<Json>,
+    /// `front_csv` render of the finished result, for CI diffing.
+    pub front_csv: Option<String>,
+    pub control: Arc<RunControl>,
+    pub cancel_requested: bool,
+}
+
+struct Inner {
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+/// The daemon's set of jobs: durable records under `state_dir`, an
+/// in-memory queue runners block on, and per-job [`RunControl`]s.
+pub struct JobStore {
+    state_dir: PathBuf,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+/// What a runner got from [`JobStore::claim_next`].
+pub struct Claim {
+    pub id: u64,
+    pub cfg: ExperimentConfig,
+    pub control: Arc<RunControl>,
+}
+
+/// Outcome of a front/status lookup.
+pub enum Lookup {
+    /// Unknown job id → 404.
+    NotFound,
+    /// Known but not finished → 409 with the current state.
+    NotReady(JobState),
+    Ready(Json),
+}
+
+impl JobStore {
+    /// Open (or create) a state dir and rescan its records. Jobs that
+    /// were `running` when the previous daemon died come back `queued`;
+    /// their checkpoint files make the re-run a resume.
+    pub fn open(state_dir: &Path) -> Result<JobStore, String> {
+        std::fs::create_dir_all(state_dir)
+            .map_err(|e| format!("creating state dir {}: {e}", state_dir.display()))?;
+        let mut jobs = BTreeMap::new();
+        let mut next_id = 1u64;
+        let entries = std::fs::read_dir(state_dir)
+            .map_err(|e| format!("reading state dir {}: {e}", state_dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("reading state dir entry: {e}"))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(id) = name
+                .strip_prefix("job-")
+                .and_then(|s| s.strip_suffix(".json"))
+                .filter(|s| !s.ends_with(".ck"))
+                .and_then(|s| s.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            let text = std::fs::read_to_string(entry.path())
+                .map_err(|e| format!("reading {}: {e}", name))?;
+            let job = restore_record(id, &text, state_dir)
+                .map_err(|e| format!("corrupt job record {}: {e}", name))?;
+            next_id = next_id.max(id + 1);
+            jobs.insert(id, job);
+        }
+        Ok(JobStore {
+            state_dir: state_dir.to_path_buf(),
+            inner: Mutex::new(Inner { jobs, next_id, shutdown: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn state_dir(&self) -> &Path {
+        &self.state_dir
+    }
+
+    /// Validate and enqueue a spec. Parse failures return `Err` before
+    /// any file is written.
+    pub fn submit(&self, spec: Json) -> Result<u64, String> {
+        let mut cfg = parse_spec(&spec)?;
+        let mut inner = unpoisoned(self.inner.lock());
+        if inner.shutdown {
+            return Err("daemon is shutting down".into());
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        cfg.checkpoint = Some(self.state_dir.join(format!("job-{id}.ck.json")));
+        let job = Job {
+            id,
+            cfg,
+            spec,
+            state: JobState::Queued,
+            error: None,
+            report: None,
+            front_csv: None,
+            control: Arc::new(RunControl::new()),
+            cancel_requested: false,
+        };
+        self.persist(&job)?;
+        inner.jobs.insert(id, job);
+        drop(inner);
+        self.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Block until a queued job exists (claim it, mark it running) or
+    /// shutdown is requested (return `None`).
+    pub fn claim_next(&self) -> Option<Claim> {
+        let mut inner = unpoisoned(self.inner.lock());
+        loop {
+            if inner.shutdown {
+                return None;
+            }
+            let next = inner
+                .jobs
+                .values()
+                .find(|j| j.state == JobState::Queued && !j.cancel_requested)
+                .map(|j| j.id);
+            if let Some(id) = next {
+                let job = inner.jobs.get_mut(&id).expect("job just found");
+                job.state = JobState::Running;
+                let claim = Claim {
+                    id,
+                    cfg: job.cfg.clone(),
+                    control: Arc::clone(&job.control),
+                };
+                let _ = self.persist(job); // best-effort; the run proceeds regardless
+                return Some(claim);
+            }
+            inner = unpoisoned(self.cv.wait(inner));
+        }
+    }
+
+    /// Runner outcome: the job ran to its generation target.
+    pub fn finish_done(&self, id: u64, report: Json, front_csv: String) {
+        self.finish(id, JobState::Done, None, Some(report), Some(front_csv));
+    }
+
+    /// Runner outcome: the job stopped early at a barrier because cancel
+    /// was requested. The partial front is still a valid report.
+    pub fn finish_cancelled(&self, id: u64, report: Json, front_csv: String) {
+        self.finish(id, JobState::Cancelled, None, Some(report), Some(front_csv));
+    }
+
+    /// Runner outcome: the run returned a checkpoint error or panicked.
+    pub fn finish_failed(&self, id: u64, error: String) {
+        self.finish(id, JobState::Failed, Some(error), None, None);
+    }
+
+    /// Runner outcome: the run stopped early at a barrier. Whether that
+    /// was a user cancel (→ cancelled, partial artifacts persisted) or a
+    /// daemon shutdown (→ left resumable) is the store's call — only it
+    /// knows if cancel was requested for this job.
+    pub fn finish_stopped(&self, id: u64, report: Json, front_csv: String) {
+        let cancelled = {
+            let inner = unpoisoned(self.inner.lock());
+            inner.jobs.get(&id).map(|j| j.cancel_requested).unwrap_or(false)
+        };
+        if cancelled {
+            self.finish_cancelled(id, report, front_csv);
+        } else {
+            self.finish_interrupted(id);
+        }
+    }
+
+    /// Runner outcome: the daemon is shutting down and the run stopped
+    /// at a barrier with its checkpoint written. Deliberately NOT
+    /// persisted — the durable record still says `running`, which the
+    /// next daemon rescans as `queued` and resumes.
+    pub fn finish_interrupted(&self, id: u64) {
+        let mut inner = unpoisoned(self.inner.lock());
+        if let Some(job) = inner.jobs.get_mut(&id) {
+            job.state = JobState::Queued;
+        }
+    }
+
+    fn finish(
+        &self,
+        id: u64,
+        state: JobState,
+        error: Option<String>,
+        report: Option<Json>,
+        front_csv: Option<String>,
+    ) {
+        let mut inner = unpoisoned(self.inner.lock());
+        if let Some(job) = inner.jobs.get_mut(&id) {
+            job.state = state;
+            job.error = error;
+            job.report = report;
+            job.front_csv = front_csv;
+            let _ = self.persist(job);
+        }
+    }
+
+    /// Request cancellation. A queued job cancels immediately; a running
+    /// job stops gracefully at its next barrier (checkpoint written).
+    /// Returns the resulting state, `None` for unknown ids.
+    pub fn cancel(&self, id: u64) -> Option<JobState> {
+        let mut inner = unpoisoned(self.inner.lock());
+        let job = inner.jobs.get_mut(&id)?;
+        match job.state {
+            JobState::Queued => {
+                job.state = JobState::Cancelled;
+                job.cancel_requested = true;
+                let _ = self.persist(job);
+            }
+            JobState::Running => {
+                job.cancel_requested = true;
+                job.control.request_stop();
+            }
+            // terminal states: cancel is a no-op
+            JobState::Done | JobState::Failed | JobState::Cancelled => {}
+        }
+        Some(job.state)
+    }
+
+    /// Wake every blocked runner with "no more work" and ask running
+    /// jobs to stop at their next barrier.
+    pub fn request_shutdown(&self) {
+        let mut inner = unpoisoned(self.inner.lock());
+        inner.shutdown = true;
+        for job in inner.jobs.values() {
+            if job.state == JobState::Running {
+                job.control.request_stop();
+            }
+        }
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    pub fn job_count(&self) -> usize {
+        unpoisoned(self.inner.lock()).jobs.len()
+    }
+
+    /// `GET /jobs` body: one summary row per job.
+    pub fn list_json(&self) -> Json {
+        let inner = unpoisoned(self.inner.lock());
+        Json::obj(vec![(
+            "jobs",
+            Json::arr(inner.jobs.values().map(summary_json)),
+        )])
+    }
+
+    /// `GET /jobs/:id` body: the summary row plus live progress.
+    pub fn status_json(&self, id: u64) -> Option<Json> {
+        let inner = unpoisoned(self.inner.lock());
+        let job = inner.jobs.get(&id)?;
+        let Json::Obj(mut m) = summary_json(job) else { unreachable!() };
+        if let Some(snap) = job.control.snapshot() {
+            if let Json::Obj(s) = snap {
+                for (k, v) in s {
+                    m.insert(k, v);
+                }
+            }
+        }
+        Some(Json::Obj(m))
+    }
+
+    /// `GET /jobs/:id/front`: the finished report's front section.
+    pub fn front_json(&self, id: u64) -> Lookup {
+        self.finished(id, |job| {
+            let report = job.report.as_ref()?;
+            let mut pairs = vec![
+                ("id", Json::num(job.id as f64)),
+                ("workload", Json::str(workload_name(job.cfg.kind))),
+            ];
+            for key in ["baseline_fit", "baseline_post_hoc", "front"] {
+                if let Some(v) = report.opt(key) {
+                    pairs.push((key, v.clone()));
+                }
+            }
+            Some(Json::obj(pairs))
+        })
+    }
+
+    /// `GET /jobs/:id/front.csv`: the CSV render, for diffing against a
+    /// CLI run's `--out` artifact.
+    pub fn front_csv(&self, id: u64) -> Lookup {
+        self.finished(id, |job| job.front_csv.clone().map(Json::Str))
+    }
+
+    fn finished(&self, id: u64, f: impl Fn(&Job) -> Option<Json>) -> Lookup {
+        let inner = unpoisoned(self.inner.lock());
+        match inner.jobs.get(&id) {
+            None => Lookup::NotFound,
+            Some(job) => match job.state {
+                JobState::Done | JobState::Cancelled => {
+                    f(job).map(Lookup::Ready).unwrap_or(Lookup::NotReady(job.state))
+                }
+                other => Lookup::NotReady(other),
+            },
+        }
+    }
+
+    fn persist(&self, job: &Job) -> Result<(), String> {
+        let path = self.state_dir.join(format!("job-{}.json", job.id));
+        let record = record_json(job);
+        write_durable(&path, record.to_string().as_bytes())
+            .map_err(|e| format!("persisting {}: {e}", path.display()))
+    }
+}
+
+fn summary_json(job: &Job) -> Json {
+    let mut pairs = vec![
+        ("id", Json::num(job.id as f64)),
+        ("state", Json::str(job.state.as_str())),
+        ("workload", Json::str(workload_name(job.cfg.kind))),
+        ("generations", Json::num(job.cfg.search.generations as f64)),
+        ("completed", Json::num(job.control.completed() as f64)),
+    ];
+    if let Some(e) = &job.error {
+        pairs.push(("error", Json::str(e.clone())));
+    }
+    Json::obj(pairs)
+}
+
+fn record_json(job: &Job) -> Json {
+    let mut pairs = vec![
+        ("id", Json::num(job.id as f64)),
+        ("state", Json::str(job.state.as_str())),
+        ("spec", job.spec.clone()),
+    ];
+    if let Some(e) = &job.error {
+        pairs.push(("error", Json::str(e.clone())));
+    }
+    if let Some(r) = &job.report {
+        pairs.push(("report", r.clone()));
+    }
+    if let Some(c) = &job.front_csv {
+        pairs.push(("front_csv", Json::str(c.clone())));
+    }
+    Json::obj(pairs)
+}
+
+fn restore_record(id: u64, text: &str, state_dir: &Path) -> Result<Job, String> {
+    let record = Json::parse(text).map_err(|e| format!("{e:?}"))?;
+    let spec = record.get("spec").map_err(|e| format!("{e:?}"))?.clone();
+    let mut cfg = parse_spec(&spec)?;
+    cfg.checkpoint = Some(state_dir.join(format!("job-{id}.ck.json")));
+    let state_name = record
+        .get("state")
+        .and_then(|s| s.as_str().map(str::to_string))
+        .map_err(|e| format!("{e:?}"))?;
+    let state = JobState::parse(&state_name).ok_or(format!("unknown state {state_name:?}"))?;
+    // a record caught mid-run resumes: back to the queue, checkpoint intact
+    let state = if state == JobState::Running { JobState::Queued } else { state };
+    Ok(Job {
+        id,
+        cfg,
+        spec,
+        state,
+        error: record.opt("error").and_then(|e| e.as_str().ok().map(str::to_string)),
+        report: record.opt("report").cloned(),
+        front_csv: record.opt("front_csv").and_then(|c| c.as_str().ok().map(str::to_string)),
+        control: Arc::new(RunControl::new()),
+        cancel_requested: false,
+    })
+}
+
+pub(crate) fn workload_name(kind: WorkloadKind) -> &'static str {
+    match kind {
+        WorkloadKind::TwoFcTraining => "2fcnet",
+        WorkloadKind::MobilenetPrediction => "mobilenet",
+    }
+}
+
+// ---- spec parsing ------------------------------------------------------
+
+/// `u64` field: a plain JSON number, or a 16-hex-digit string carrying
+/// the exact bit pattern (the checkpoint config-echo encoding).
+fn u64_field(j: &Json, key: &str) -> Result<u64, String> {
+    match j {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as u64),
+        Json::Str(s) if s.len() == 16 => {
+            u64::from_str_radix(s, 16).map_err(|_| format!("{key}: bad hex string {s:?}"))
+        }
+        _ => Err(format!("{key}: expected a non-negative integer or 16-hex-digit string")),
+    }
+}
+
+/// `f64` field: a plain JSON number, or a 16-hex-digit string carrying
+/// the `to_bits` pattern (the checkpoint config-echo encoding).
+fn f64_field(j: &Json, key: &str) -> Result<f64, String> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) if s.len() == 16 => u64::from_str_radix(s, 16)
+            .map(f64::from_bits)
+            .map_err(|_| format!("{key}: bad hex string {s:?}")),
+        _ => Err(format!("{key}: expected a number or 16-hex-digit bit-pattern string")),
+    }
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    match j {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as usize),
+        _ => Err(format!("{key}: expected a non-negative integer")),
+    }
+}
+
+fn bool_field(j: &Json, key: &str) -> Result<bool, String> {
+    j.as_bool().map_err(|_| format!("{key}: expected a boolean"))
+}
+
+fn obj_keys<'a>(j: &'a Json, what: &str) -> Result<&'a BTreeMap<String, Json>, String> {
+    match j {
+        Json::Obj(m) => Ok(m),
+        _ => Err(format!("{what} must be a JSON object")),
+    }
+}
+
+const TOP_KEYS: &[&str] = &[
+    "workload", "generations", "metric", "fit", "test", "epochs", "data_seed", "weight_seed",
+    "workers", "island_threads", "batch", "checkpoint_every", "profile", "minimize", "config",
+];
+
+const CONFIG_KEYS: &[&str] = &[
+    "seed", "pop_size", "islands", "elites", "init_mutations", "crossover_prob", "mutation_prob",
+    "tournament_size", "max_tries", "migration_interval", "migrants", "opt_level", "operators",
+    "adapt", "filter_neutral", "reseed_minimized",
+];
+
+/// Parse and validate a job spec into a ready-to-run
+/// [`ExperimentConfig`] (checkpoint path left for the store to fill).
+/// Strict: unknown keys anywhere are errors, so a typo cannot silently
+/// fall back to a default and burn a long run on the wrong parameters.
+pub fn parse_spec(spec: &Json) -> Result<ExperimentConfig, String> {
+    let top = obj_keys(spec, "job spec")?;
+    if let Some(k) = top.keys().find(|k| !TOP_KEYS.contains(&k.as_str())) {
+        return Err(format!("unknown key {k:?}; known keys: {}", TOP_KEYS.join(", ")));
+    }
+
+    let workload = top
+        .get("workload")
+        .ok_or("missing required key \"workload\"")?
+        .as_str()
+        .map_err(|_| "workload: expected a string".to_string())?;
+    let kind = WorkloadKind::parse(workload)
+        .ok_or(format!("workload: unknown workload {workload:?} (try \"2fcnet\" or \"mobilenet\")"))?;
+
+    let mut cfg = ExperimentConfig {
+        kind,
+        // serve mirrors the CLI defaults, not the library defaults:
+        // test split 160 and -O2 are what `gevo-ml search` runs with.
+        test_samples: 160,
+        ..ExperimentConfig::default()
+    };
+    cfg.search.opt_level = OptLevel::O2;
+
+    for (key, value) in top {
+        match key.as_str() {
+            "workload" | "config" => {}
+            "generations" => cfg.search.generations = usize_field(value, key)?,
+            "metric" => {
+                let m = value.as_str().map_err(|_| "metric: expected a string".to_string())?;
+                cfg.metric = RuntimeMetric::parse(m)
+                    .ok_or(format!("metric: unknown metric {m:?} (flops | wall | blend)"))?;
+            }
+            "fit" => cfg.fit_samples = usize_field(value, key)?,
+            "test" => cfg.test_samples = usize_field(value, key)?,
+            "epochs" => cfg.epochs = usize_field(value, key)?,
+            "data_seed" => cfg.data_seed = u64_field(value, key)?,
+            "weight_seed" => cfg.weight_seed = u64_field(value, key)?,
+            "workers" => cfg.search.workers = usize_field(value, key)?.max(1),
+            "island_threads" => cfg.search.island_threads = usize_field(value, key)?.max(1),
+            "batch" => cfg.search.batch = usize_field(value, key)?,
+            "checkpoint_every" => cfg.search.checkpoint_every = usize_field(value, key)?,
+            "profile" => cfg.search.profile = bool_field(value, key)?,
+            "minimize" => cfg.minimize_front = bool_field(value, key)?,
+            _ => unreachable!("unknown keys rejected above"),
+        }
+    }
+
+    if let Some(config) = top.get("config") {
+        let config = obj_keys(config, "config")?;
+        if let Some(k) = config.keys().find(|k| !CONFIG_KEYS.contains(&k.as_str())) {
+            return Err(format!(
+                "config: unknown key {k:?}; known keys: {}",
+                CONFIG_KEYS.join(", ")
+            ));
+        }
+        for (key, value) in config {
+            match key.as_str() {
+                "seed" => cfg.search.seed = u64_field(value, key)?,
+                "pop_size" => cfg.search.pop_size = usize_field(value, key)?,
+                "islands" => cfg.search.islands = usize_field(value, key)?,
+                "elites" => cfg.search.elites = usize_field(value, key)?,
+                "init_mutations" => cfg.search.init_mutations = usize_field(value, key)?,
+                "crossover_prob" => cfg.search.crossover_prob = f64_field(value, key)?,
+                "mutation_prob" => cfg.search.mutation_prob = f64_field(value, key)?,
+                "tournament_size" => cfg.search.tournament_size = usize_field(value, key)?,
+                "max_tries" => cfg.search.max_tries = usize_field(value, key)?,
+                "migration_interval" => cfg.search.migration_interval = usize_field(value, key)?,
+                "migrants" => cfg.search.migrants = usize_field(value, key)?,
+                "opt_level" => {
+                    let v = usize_field(value, key)?;
+                    cfg.search.opt_level = u8::try_from(v)
+                        .ok()
+                        .and_then(OptLevel::from_u8)
+                        .ok_or(format!("opt_level: expected 0..=3, got {v}"))?;
+                }
+                "operators" => {
+                    let names: Vec<String> = match value {
+                        Json::Str(s) => s.split(',').map(|p| p.trim().to_string()).collect(),
+                        Json::Arr(items) => items
+                            .iter()
+                            .map(|i| i.as_str().map(str::to_string))
+                            .collect::<Result<_, _>>()
+                            .map_err(|_| "operators: expected strings".to_string())?,
+                        _ => {
+                            return Err(
+                                "operators: expected a comma-separated string or array".into()
+                            )
+                        }
+                    };
+                    cfg.search.operators =
+                        crate::evo::operators::canonicalize_names(&names)
+                            .map_err(|e| format!("operators: {e}"))?;
+                }
+                "adapt" => cfg.search.adapt = bool_field(value, key)?,
+                "filter_neutral" => cfg.search.filter_neutral = bool_field(value, key)?,
+                "reseed_minimized" => cfg.search.reseed_minimized = bool_field(value, key)?,
+                _ => unreachable!("unknown keys rejected above"),
+            }
+        }
+    }
+
+    // the daemon owns telemetry surfaces; a job cannot open trace files
+    // or print to the daemon's stdout
+    cfg.search.trace = None;
+    cfg.search.verbose = false;
+
+    if cfg.search.pop_size < 2 {
+        return Err("pop_size must be at least 2".into());
+    }
+    if cfg.search.generations < 1 {
+        return Err("generations must be at least 1".into());
+    }
+    if cfg.search.islands < 1 {
+        return Err("islands must be at least 1".into());
+    }
+    if cfg.fit_samples == 0 || cfg.test_samples == 0 {
+        return Err("fit and test sample counts must be positive".into());
+    }
+    if cfg.search.filter_neutral && cfg.search.opt_level == OptLevel::O0 {
+        return Err("filter_neutral requires opt_level >= 1".into());
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(text: &str) -> Json {
+        Json::parse(text).unwrap()
+    }
+
+    #[test]
+    fn minimal_spec_mirrors_cli_defaults() {
+        let cfg = parse_spec(&spec(r#"{"workload":"2fcnet"}"#)).unwrap();
+        assert_eq!(cfg.kind, WorkloadKind::TwoFcTraining);
+        assert_eq!(cfg.search.opt_level, OptLevel::O2);
+        assert_eq!(cfg.fit_samples, 512);
+        assert_eq!(cfg.test_samples, 160);
+        assert_eq!(cfg.search.pop_size, 32);
+        assert_eq!(cfg.search.seed, 42);
+        assert!(cfg.search.trace.is_none());
+        assert!(!cfg.search.verbose);
+        assert!(cfg.checkpoint.is_none()); // the store fills this
+    }
+
+    #[test]
+    fn full_spec_round_trips_values() {
+        let cfg = parse_spec(&spec(
+            r#"{"workload":"mobilenet","generations":4,"metric":"blend","fit":128,"test":64,
+                "workers":3,"batch":16,"checkpoint_every":2,"profile":true,
+                "config":{"seed":7,"pop_size":8,"elites":4,"crossover_prob":0.25,
+                          "opt_level":1,"operators":"copy,delete","adapt":true}}"#,
+        ))
+        .unwrap();
+        assert_eq!(cfg.kind, WorkloadKind::MobilenetPrediction);
+        assert_eq!(cfg.search.generations, 4);
+        assert_eq!(cfg.metric, RuntimeMetric::Blend);
+        assert_eq!(cfg.fit_samples, 128);
+        assert_eq!(cfg.search.workers, 3);
+        assert_eq!(cfg.search.seed, 7);
+        assert_eq!(cfg.search.pop_size, 8);
+        assert_eq!(cfg.search.crossover_prob, 0.25);
+        assert_eq!(cfg.search.opt_level, OptLevel::O1);
+        assert!(cfg.search.adapt);
+        assert!(cfg.search.profile);
+    }
+
+    #[test]
+    fn hex_bit_patterns_match_checkpoint_encoding() {
+        // the config-echo encodes seed as 16 hex digits and probabilities
+        // as f64 bit patterns — a spec can copy those verbatim
+        let bits = format!("{:016x}", 0.6f64.to_bits());
+        let cfg = parse_spec(&spec(&format!(
+            r#"{{"workload":"2fcnet","config":{{"seed":"000000000000002a","crossover_prob":"{bits}"}}}}"#
+        )))
+        .unwrap();
+        assert_eq!(cfg.search.seed, 42);
+        assert_eq!(cfg.search.crossover_prob, 0.6);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        assert!(parse_spec(&spec(r#"{"workload":"2fcnet","bogus":1}"#))
+            .unwrap_err()
+            .contains("bogus"));
+        assert!(parse_spec(&spec(r#"{"workload":"2fcnet","config":{"pop":8}}"#))
+            .unwrap_err()
+            .contains("pop"));
+    }
+
+    #[test]
+    fn invalid_values_are_rejected() {
+        assert!(parse_spec(&spec(r#"{}"#)).is_err());
+        assert!(parse_spec(&spec(r#"{"workload":"resnet"}"#)).is_err());
+        assert!(parse_spec(&spec(r#"{"workload":"2fcnet","metric":"speed"}"#)).is_err());
+        assert!(parse_spec(&spec(r#"{"workload":"2fcnet","config":{"pop_size":1}}"#)).is_err());
+        assert!(parse_spec(&spec(r#"{"workload":"2fcnet","generations":0}"#)).is_err());
+        assert!(parse_spec(&spec(r#"{"workload":"2fcnet","config":{"opt_level":9}}"#)).is_err());
+        assert!(parse_spec(
+            &spec(r#"{"workload":"2fcnet","config":{"opt_level":0,"filter_neutral":true}}"#)
+        )
+        .is_err());
+        assert!(parse_spec(&spec(r#"[1,2]"#)).is_err());
+    }
+
+    #[test]
+    fn store_submit_claim_finish_and_rescan() {
+        let dir = std::env::temp_dir().join(format!("gevo-serve-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store = JobStore::open(&dir).unwrap();
+            let id = store
+                .submit(spec(r#"{"workload":"2fcnet","generations":3}"#))
+                .unwrap();
+            assert_eq!(id, 1);
+            // malformed spec: rejected before touching the state dir
+            assert!(store.submit(spec(r#"{"workload":"nope"}"#)).is_err());
+            assert_eq!(store.job_count(), 1);
+
+            let claim = store.claim_next().unwrap();
+            assert_eq!(claim.id, 1);
+            assert_eq!(
+                claim.cfg.checkpoint.as_deref(),
+                Some(dir.join("job-1.ck.json").as_path())
+            );
+            // daemon "dies" here: record still says running on disk
+        }
+        {
+            // restart: the running job is rescanned as queued
+            let store = JobStore::open(&dir).unwrap();
+            assert_eq!(store.job_count(), 1);
+            let status = store.status_json(1).unwrap();
+            assert_eq!(status.get("state").unwrap().as_str().unwrap(), "queued");
+            let claim = store.claim_next().unwrap();
+            store.finish_done(claim.id, Json::obj(vec![("front", Json::arr(vec![]))]), "csv".into());
+            assert!(matches!(store.front_json(1), Lookup::Ready(_)));
+            // a fresh submit gets a fresh id, monotonic past the rescan
+            let id2 = store
+                .submit(spec(r#"{"workload":"2fcnet","generations":1}"#))
+                .unwrap();
+            assert_eq!(id2, 2);
+        }
+        {
+            // terminal states survive restart with their artifacts
+            let store = JobStore::open(&dir).unwrap();
+            assert_eq!(store.job_count(), 2);
+            let status = store.status_json(1).unwrap();
+            assert_eq!(status.get("state").unwrap().as_str().unwrap(), "done");
+            match store.front_csv(1) {
+                Lookup::Ready(Json::Str(s)) => assert_eq!(s, "csv"),
+                _ => panic!("front_csv should survive a restart"),
+            }
+            assert!(matches!(store.front_json(2), Lookup::NotReady(JobState::Queued)));
+            assert!(matches!(store.front_json(99), Lookup::NotFound));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cancel_and_shutdown_semantics() {
+        let dir =
+            std::env::temp_dir().join(format!("gevo-serve-cancel-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = JobStore::open(&dir).unwrap();
+        let id = store.submit(spec(r#"{"workload":"2fcnet"}"#)).unwrap();
+        // queued → cancelled immediately, and never claimed
+        assert_eq!(store.cancel(id), Some(JobState::Cancelled));
+        assert!(store.cancel(999).is_none());
+        store.request_shutdown();
+        assert!(store.claim_next().is_none());
+        assert!(store.submit(spec(r#"{"workload":"2fcnet"}"#)).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

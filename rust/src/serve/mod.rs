@@ -1,0 +1,319 @@
+//! §Serve L1: `gevo-ml serve` — search-as-a-service.
+//!
+//! A zero-dependency daemon that owns N concurrent search jobs behind a
+//! hand-rolled HTTP/1.1 API (`std::net` only — no hyper, no tokio):
+//!
+//! * [`http`] — bounded, strict request reader / response writer;
+//! * [`jobs`] — the durable [`jobs::JobStore`]: spec parsing, fsynced
+//!   `job-<id>.json` records, per-job checkpoints, the runner queue;
+//! * [`api`] — socket-free routing from requests to responses.
+//!
+//! This module wires them together: a threaded accept loop (one short-
+//! lived thread per connection — exchanges are single-request), a pool
+//! of runner threads multiplexing queued jobs through
+//! [`crate::coordinator::try_run_experiment_with`], and a shared
+//! [`ProgramCache`] per (workload, opt-level) so concurrent jobs reuse
+//! each other's lowered programs. Cache sharing is pure scheduling:
+//! entries are keyed by canonical graph hash, so a hit returns exactly
+//! the program a private cache would have compiled.
+//!
+//! Durability is the point (ISSUE 10 acceptance): kill the daemon
+//! mid-run, restart it on the same `--state-dir`, and the resumed job's
+//! finished front is bit-identical to an uninterrupted run — the job
+//! record rescans as queued and the search resumes from its checkpoint
+//! through the same config-echo-guarded path `gevo-ml search` uses
+//! (pinned by `tests/serve_jobs.rs` and the CI serve smoke).
+
+pub mod api;
+pub mod http;
+pub mod jobs;
+
+use crate::coordinator::{report, try_run_experiment_with, RunHooks, WorkloadKind};
+use crate::exec::cache::ProgramCache;
+use crate::opt::OptLevel;
+use jobs::JobStore;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Daemon configuration (the `serve` subcommand's flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7745` (port 0 for tests).
+    pub addr: String,
+    /// Directory for job records and checkpoints.
+    pub state_dir: PathBuf,
+    /// Concurrent runner threads (jobs run in parallel up to this).
+    pub runners: usize,
+    pub verbose: bool,
+}
+
+/// Shared compiled-program caches, one per (workload, opt-level).
+/// Workloads never share graphs, so partitioning by kind costs no hits
+/// and keeps per-cache stats meaningful.
+struct CacheMap {
+    inner: Mutex<BTreeMap<(u8, u8), Arc<ProgramCache>>>,
+}
+
+impl CacheMap {
+    fn new() -> CacheMap {
+        CacheMap { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn get(&self, kind: WorkloadKind, opt: OptLevel) -> Arc<ProgramCache> {
+        let tag = match kind {
+            WorkloadKind::TwoFcTraining => 0u8,
+            WorkloadKind::MobilenetPrediction => 1u8,
+        };
+        let mut map = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        Arc::clone(
+            map.entry((tag, opt.as_u8()))
+                .or_insert_with(|| Arc::new(ProgramCache::with_opt(opt))),
+        )
+    }
+}
+
+/// A running daemon: bound address, its store, and the threads to join
+/// on [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    pub store: Arc<JobStore>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    runners: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Graceful shutdown: stop accepting, ask running jobs to stop at
+    /// their next barrier (checkpoint written), join everything. Jobs
+    /// interrupted this way stay `running` on disk and resume on the
+    /// next daemon start.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.store.request_shutdown();
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.runners.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind, rescan the state dir, start runner threads and the accept
+/// loop. Returns once the daemon is serving.
+pub fn spawn(cfg: &ServeConfig) -> Result<ServerHandle, String> {
+    let store = Arc::new(JobStore::open(&cfg.state_dir)?);
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| format!("binding {}: {e}", cfg.addr))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("resolving bound address: {e}"))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let caches = Arc::new(CacheMap::new());
+
+    let mut runners = Vec::new();
+    for i in 0..cfg.runners.max(1) {
+        let store = Arc::clone(&store);
+        let caches = Arc::clone(&caches);
+        let verbose = cfg.verbose;
+        runners.push(
+            std::thread::Builder::new()
+                .name(format!("gevo-serve-runner-{i}"))
+                .spawn(move || runner_loop(&store, &caches, verbose))
+                .map_err(|e| format!("spawning runner thread: {e}"))?,
+        );
+    }
+
+    let accept = {
+        let store = Arc::clone(&store);
+        let stop = Arc::clone(&stop);
+        let verbose = cfg.verbose;
+        std::thread::Builder::new()
+            .name("gevo-serve-accept".into())
+            .spawn(move || accept_loop(&listener, &store, &stop, verbose))
+            .map_err(|e| format!("spawning accept thread: {e}"))?
+    };
+
+    if cfg.verbose {
+        eprintln!("serve: listening on {addr}, state dir {}", cfg.state_dir.display());
+    }
+    Ok(ServerHandle { addr, store, stop, accept: Some(accept), runners })
+}
+
+/// [`spawn`] and then serve until the process is killed — the `gevo-ml
+/// serve` entry point.
+pub fn run(cfg: &ServeConfig) -> Result<(), String> {
+    let mut handle = spawn(cfg)?;
+    println!("gevo-ml serve: listening on http://{}", handle.addr);
+    if let Some(h) = handle.accept.take() {
+        let _ = h.join(); // blocks for the life of the daemon
+    }
+    Ok(())
+}
+
+fn accept_loop(listener: &TcpListener, store: &Arc<JobStore>, stop: &AtomicBool, verbose: bool) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let store = Arc::clone(store);
+        // one short-lived thread per exchange: requests are a handful of
+        // bytes and responses close the connection, so a thread outlives
+        // its socket by microseconds
+        let _ = std::thread::Builder::new()
+            .name("gevo-serve-conn".into())
+            .spawn(move || handle_connection(stream, &store, verbose));
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, store: &JobStore, verbose: bool) {
+    // a stalled client must not pin a connection thread forever
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    match http::read_request(&mut stream) {
+        Ok(req) => {
+            let resp = api::handle(store, &req.method, &req.path, &req.body);
+            if verbose {
+                eprintln!("serve: {} {} -> {}", req.method, req.path, resp.status);
+            }
+            let _ = http::respond(&mut stream, resp.status, resp.content_type, &resp.body);
+        }
+        Err(e) => {
+            if verbose {
+                eprintln!("serve: bad request: {}", e.message());
+            }
+            let body = crate::util::json::Json::obj(vec![(
+                "error",
+                crate::util::json::Json::str(e.message()),
+            )]);
+            let _ = http::respond(
+                &mut stream,
+                e.status(),
+                "application/json",
+                body.to_string().as_bytes(),
+            );
+        }
+    }
+    let _ = stream.flush();
+}
+
+fn runner_loop(store: &JobStore, caches: &CacheMap, verbose: bool) {
+    while let Some(claim) = store.claim_next() {
+        if verbose {
+            eprintln!("serve: job {} starting ({} gens)", claim.id, claim.cfg.search.generations);
+        }
+        // profiling merges per-kernel rows onto the cache, so a
+        // profiled job gets a private cache to keep its rows its own
+        let shared = if claim.cfg.search.profile {
+            None
+        } else {
+            Some(caches.get(claim.cfg.kind, claim.cfg.search.opt_level))
+        };
+        let hooks = RunHooks { control: Some(&claim.control), shared_cache: shared };
+        let outcome =
+            catch_unwind(AssertUnwindSafe(|| try_run_experiment_with(&claim.cfg, &hooks)));
+        match outcome {
+            Err(panic) => {
+                let text = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "search panicked".into());
+                if verbose {
+                    eprintln!("serve: job {} failed: {text}", claim.id);
+                }
+                store.finish_failed(claim.id, text);
+            }
+            Ok(Err(e)) => {
+                if verbose {
+                    eprintln!("serve: job {} failed: {e}", claim.id);
+                }
+                store.finish_failed(claim.id, e.to_string());
+            }
+            Ok(Ok(result)) => {
+                let report_json = report::to_json(&result);
+                let csv = report::front_csv(&result);
+                // stop never requested → the run went the distance (a
+                // resume of an already-complete checkpoint publishes no
+                // progress, so the completed counter alone can't tell)
+                let finished_all = !claim.control.stop_requested()
+                    || claim.control.completed() >= claim.cfg.search.generations;
+                if verbose {
+                    eprintln!(
+                        "serve: job {} {} at gen {}",
+                        claim.id,
+                        if finished_all { "done" } else { "stopped" },
+                        claim.control.completed()
+                    );
+                }
+                if finished_all {
+                    store.finish_done(claim.id, report_json, csv);
+                } else {
+                    store.finish_stopped(claim.id, report_json, csv);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn request(addr: std::net::SocketAddr, raw: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let status = buf
+            .strip_prefix("HTTP/1.1 ")
+            .and_then(|r| r.split(' ').next())
+            .and_then(|c| c.parse().ok())
+            .unwrap_or(0);
+        let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (status, body)
+    }
+
+    #[test]
+    fn daemon_serves_healthz_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("gevo-serve-mod-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let handle = spawn(&ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            state_dir: dir.clone(),
+            runners: 1,
+            verbose: false,
+        })
+        .unwrap();
+        let addr = handle.addr;
+
+        let (status, body) = request(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        assert!(body.contains("\"ok\":true"), "{body}");
+
+        let (status, _) = request(addr, "NOT-HTTP\r\n\r\n");
+        assert_eq!(status, 400);
+
+        let (status, _) = request(addr, "GET /jobs/1/front HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 404);
+
+        handle.shutdown();
+        // after shutdown the port no longer answers
+        assert!(TcpStream::connect_timeout(&addr, Duration::from_millis(200)).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,7 +1,7 @@
 //! §Telemetry L2: the counter/timer registry — the operational metrics
-//! a deployed search service would export. Moved here from
-//! `coordinator::metrics` (a thin re-export remains there); the lock
-//! sites now recover from poisoning with the same discipline as
+//! a deployed search service would export. This module is the canonical
+//! home (the historical `coordinator::metrics` shim is gone); the lock
+//! sites recover from poisoning with the same discipline as
 //! `exec::ProgramCache` — a panicking holder can only leave a counter
 //! map mid-update, never structurally broken, so continuing with the
 //! recovered guard is strictly better than cascading the panic. The

@@ -30,8 +30,8 @@
 //! wall|blend` evaluation times candidates with, over an injectable
 //! [`harness::Clock`].
 //!
-//! [`metrics`] holds the counter/timer registry that previously lived
-//! in `coordinator::metrics`, now with poison-recovering locks, and
+//! [`metrics`] holds the counter/timer registry (the operational
+//! metrics a deployed search service exports), and
 //! [`timing_noise`] characterizes the clock's noise floor (median/IQR
 //! of back-to-back empty spans) so the future measured-wall-clock
 //! metric has a documented resolution baseline (`perf_evo` reports it

@@ -97,6 +97,25 @@ impl Args {
         }
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Every `--key` on the command line (option or bare flag) that is
+    /// *not* in `known`, sorted and deduplicated. Binaries use this to
+    /// reject typo'd flags with exit 2 instead of silently falling back
+    /// to defaults — the same UX as an unknown `--metric` or
+    /// `--operators` value.
+    pub fn unknown_keys(&self, known: &[&str]) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .opts
+            .keys()
+            .map(|k| k.as_str())
+            .chain(self.flags.iter().map(|f| f.as_str()))
+            .filter(|k| !known.contains(k))
+            .map(str::to_string)
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +152,15 @@ mod tests {
     fn flag_last_token() {
         let a = parse("--verbose", false);
         assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_keys_reports_stray_flags_and_options() {
+        let a = parse("search --pop 8 --bogus 3 --quiet --also-bogus", true);
+        assert_eq!(a.unknown_keys(&["pop", "quiet"]), vec!["also-bogus", "bogus"]);
+        assert!(a.unknown_keys(&["pop", "quiet", "bogus", "also-bogus"]).is_empty());
+        let none = parse("table1", true);
+        assert!(none.unknown_keys(&[]).is_empty());
     }
 
     #[test]

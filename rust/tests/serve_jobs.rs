@@ -1,0 +1,229 @@
+//! Integration: the `gevo-ml serve` daemon end to end, over real
+//! sockets (ISSUE 10 acceptance).
+//!
+//! * a job submitted over HTTP finishes with a Pareto front
+//!   bit-identical to a direct `run_experiment` of the same config;
+//! * kill the daemon mid-run, restart it on the same state dir, and the
+//!   resumed job's front AND final checkpoint bytes match an
+//!   uninterrupted run;
+//! * two jobs running concurrently on shared runners don't
+//!   cross-contaminate;
+//! * a malformed submit is a 400 and leaves zero residue in the state
+//!   dir.
+
+use gevo_ml::coordinator::{report, run_experiment};
+use gevo_ml::serve::jobs::parse_spec;
+use gevo_ml::serve::{spawn, ServeConfig};
+use gevo_ml::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// State dir that cleans up after itself (and before, if a previous
+/// aborted run left debris).
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let dir =
+            std::env::temp_dir().join(format!("gevo_serve_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn daemon(dir: &Path, runners: usize) -> gevo_ml::serve::ServerHandle {
+    spawn(&ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        state_dir: dir.to_path_buf(),
+        runners,
+        verbose: false,
+    })
+    .expect("daemon spawns")
+}
+
+/// One HTTP exchange: returns (status, parsed JSON body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(raw.as_bytes()).expect("send");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("recv");
+    let status: u16 = buf
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.split(' ').next())
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response: {buf:?}"));
+    let text = buf.split("\r\n\r\n").nth(1).unwrap_or("");
+    let json = Json::parse(text).unwrap_or(Json::Null);
+    (status, json)
+}
+
+fn submit(addr: SocketAddr, spec: &str) -> u64 {
+    let (status, body) = http(addr, "POST", "/jobs", spec);
+    assert_eq!(status, 201, "submit failed: {body:?}");
+    body.get("id").unwrap().as_usize().unwrap() as u64
+}
+
+/// Poll until the job reaches a terminal state; panic on `failed` or
+/// after the deadline.
+fn wait_done(addr: SocketAddr, id: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, body) = http(addr, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(status, 200, "status poll failed: {body:?}");
+        match body.get("state").unwrap().as_str().unwrap() {
+            "done" => return body,
+            "failed" => panic!("job {id} failed: {body:?}"),
+            _ => {}
+        }
+        assert!(Instant::now() < deadline, "job {id} did not finish: {body:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Poll until the job has completed at least `gens` generations.
+fn wait_progress(addr: SocketAddr, id: u64, gens: usize) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (_, body) = http(addr, "GET", &format!("/jobs/{id}"), "");
+        let completed = body.get("completed").unwrap().as_usize().unwrap();
+        let state = body.get("state").unwrap().as_str().unwrap().to_string();
+        if completed >= gens || state == "done" {
+            return;
+        }
+        assert_ne!(state, "failed", "job {id} failed: {body:?}");
+        assert!(Instant::now() < deadline, "job {id} stalled at {completed}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// A small-but-real 2fcNet spec; `seed` varies per scenario so tests
+/// never share checkpoint-compatible configs by accident.
+fn spec(generations: usize, seed: u64) -> String {
+    format!(
+        r#"{{"workload":"2fcnet","generations":{generations},"fit":64,"test":32,"workers":2,
+            "config":{{"seed":{seed},"pop_size":6,"elites":3,"init_mutations":2,"max_tries":10}}}}"#
+    )
+}
+
+/// The bit-identity oracle: run the exact same config through the
+/// plain coordinator path.
+fn direct_front(spec_text: &str, checkpoint: Option<&Path>) -> (Json, Json) {
+    let mut cfg = parse_spec(&Json::parse(spec_text).unwrap()).unwrap();
+    cfg.checkpoint = checkpoint.map(Path::to_path_buf);
+    let r = run_experiment(&cfg);
+    let j = report::to_json(&r);
+    (j.get("front").unwrap().clone(), j.get("baseline_fit").unwrap().clone())
+}
+
+#[test]
+fn served_front_is_bit_identical_to_direct_run() {
+    let dir = TempDir::new("direct");
+    let handle = daemon(&dir.0, 1);
+    let spec_text = spec(3, 101);
+    let id = submit(handle.addr, &spec_text);
+    wait_done(handle.addr, id);
+
+    let (status, served) = http(handle.addr, "GET", &format!("/jobs/{id}/front"), "");
+    assert_eq!(status, 200);
+    let (front, baseline) = direct_front(&spec_text, None);
+    assert_eq!(served.get("front").unwrap(), &front, "served front must be bit-identical");
+    assert_eq!(served.get("baseline_fit").unwrap(), &baseline);
+    assert_eq!(served.get("workload").unwrap().as_str().unwrap(), "2fcnet");
+    handle.shutdown();
+}
+
+#[test]
+fn killed_daemon_resumes_job_bit_identically() {
+    let dir = TempDir::new("resume");
+    let spec_text = spec(8, 202);
+
+    // first daemon: get the job at least one generation in, then shut
+    // down — the stop lands at a barrier with the checkpoint written and
+    // the durable record still saying "running"
+    let first = daemon(&dir.0, 1);
+    let id = submit(first.addr, &spec_text);
+    wait_progress(first.addr, id, 1);
+    first.shutdown();
+
+    // second daemon on the same state dir: the job rescans as queued
+    // (or finished, if the stop raced past the last generation) and
+    // resumes from its checkpoint
+    let second = daemon(&dir.0, 1);
+    wait_done(second.addr, id);
+    let (_, served) = http(second.addr, "GET", &format!("/jobs/{id}/front"), "");
+    second.shutdown();
+
+    // oracle: the same config run uninterrupted, with a checkpoint of
+    // its own for byte comparison
+    let oracle_ck = dir.0.join("oracle.ck.json");
+    let (front, _) = direct_front(&spec_text, Some(&oracle_ck));
+    assert_eq!(
+        served.get("front").unwrap(),
+        &front,
+        "front after kill+resume must equal the uninterrupted run"
+    );
+    let job_ck = std::fs::read(dir.0.join(format!("job-{id}.ck.json"))).unwrap();
+    let oracle_bytes = std::fs::read(&oracle_ck).unwrap();
+    assert_eq!(
+        job_ck, oracle_bytes,
+        "final checkpoint bytes must equal the uninterrupted run's"
+    );
+}
+
+#[test]
+fn concurrent_jobs_do_not_cross_contaminate() {
+    let dir = TempDir::new("pair");
+    let handle = daemon(&dir.0, 2);
+    let spec_a = spec(3, 303);
+    let spec_b = spec(3, 404);
+    let a = submit(handle.addr, &spec_a);
+    let b = submit(handle.addr, &spec_b);
+    wait_done(handle.addr, a);
+    wait_done(handle.addr, b);
+    let (_, front_a) = http(handle.addr, "GET", &format!("/jobs/{a}/front"), "");
+    let (_, front_b) = http(handle.addr, "GET", &format!("/jobs/{b}/front"), "");
+    handle.shutdown();
+
+    let (want_a, _) = direct_front(&spec_a, None);
+    let (want_b, _) = direct_front(&spec_b, None);
+    assert_eq!(front_a.get("front").unwrap(), &want_a, "job A contaminated");
+    assert_eq!(front_b.get("front").unwrap(), &want_b, "job B contaminated");
+}
+
+#[test]
+fn malformed_submit_is_rejected_without_residue() {
+    let dir = TempDir::new("reject");
+    let handle = daemon(&dir.0, 1);
+    for bad in [
+        "this is not json",
+        r#"{"workload":"resnet"}"#,
+        r#"{"workload":"2fcnet","bogus_knob":1}"#,
+        r#"{"workload":"2fcnet","config":{"pop":8}}"#,
+        r#"{"generations":3}"#,
+    ] {
+        let (status, body) = http(handle.addr, "POST", "/jobs", bad);
+        assert_eq!(status, 400, "{bad:?} should be rejected, got {body:?}");
+        assert!(body.get("error").is_ok(), "400 body should carry an error message");
+    }
+    let (_, listing) = http(handle.addr, "GET", "/jobs", "");
+    assert!(listing.get("jobs").unwrap().as_arr().unwrap().is_empty());
+    let residue: Vec<String> = std::fs::read_dir(&dir.0)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    assert!(residue.is_empty(), "rejected submits left files: {residue:?}");
+    handle.shutdown();
+}
